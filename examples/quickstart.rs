@@ -1,0 +1,73 @@
+//! Quickstart: run one quantized inference through the SECDA stack.
+//!
+//! Walks the paper's Fig. 2 runtime flow: the TFLite-like framework
+//! executes MobileNetV1; its conv layers are intercepted at the GEMM
+//! seam and offloaded to the SA accelerator via the co-designed
+//! driver; everything else runs on the (modeled) CPU. Prints the
+//! resulting Table-II-style row and the per-layer breakdown.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use secda::accel::SaDesign;
+use secda::driver::{AccelBackend, DriverConfig};
+use secda::framework::backend::CpuBackend;
+use secda::framework::interpreter::Session;
+use secda::framework::models;
+use secda::framework::ops::TimeBucket;
+use secda::framework::tensor::Tensor;
+
+fn main() {
+    let model = "mobilenet_v1";
+    let g = models::by_name(model).expect("model");
+    println!(
+        "{}: {} nodes, {} conv layers, {:.1} MB of int8 weights",
+        model,
+        g.nodes.len(),
+        g.conv_layer_count(),
+        g.weight_bytes() as f64 / 1e6
+    );
+
+    // a synthetic 224x224 image
+    let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+
+    // 1) CPU-only baseline (1 thread)
+    let mut cpu = CpuBackend::new(1);
+    let (out_cpu, rep_cpu) = Session::new(&g, &mut cpu, 1).run(&input);
+    println!("\n{}", rep_cpu.row());
+
+    // 2) CPU + SA accelerator (the paper's best design)
+    let mut sa = AccelBackend::new(SaDesign::paper(), DriverConfig::with_threads(1));
+    let (out_sa, rep_sa) = Session::new(&g, &mut sa, 1).run(&input);
+    println!("{}", rep_sa.row());
+
+    // functional equivalence: the accelerator is bit-exact
+    assert_eq!(out_cpu.data, out_sa.data, "accelerator must be bit-exact");
+    println!(
+        "\noutputs bit-identical; speedup {:.2}x, energy {:.2}x lower",
+        rep_cpu.overall().as_secs_f64() / rep_sa.overall().as_secs_f64(),
+        rep_cpu.energy_j / rep_sa.energy_j
+    );
+    println!(
+        "driver: {} offloads, {} CPU fallbacks, {:.1} MB to accel, {:.1} MB back",
+        sa.stats.offloads,
+        sa.stats.cpu_fallbacks,
+        sa.stats.bytes_to_accel as f64 / 1e6,
+        sa.stats.bytes_from_accel as f64 / 1e6
+    );
+
+    // per-layer breakdown (top 8 by time)
+    println!("\nslowest layers (accelerated run):");
+    let mut layers = rep_sa.layers.clone();
+    layers.sort_by_key(|(_, _, t)| std::cmp::Reverse(t.as_ps()));
+    for (name, bucket, t) in layers.iter().take(8) {
+        println!(
+            "  {:<18} {:>9.2} ms  [{}]",
+            name,
+            t.as_ms_f64(),
+            match bucket {
+                TimeBucket::Conv => "CONV",
+                TimeBucket::NonConv => "non-conv",
+            }
+        );
+    }
+}

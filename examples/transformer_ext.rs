@@ -1,0 +1,83 @@
+//! §VII future-work extension: Transformer-class models through the
+//! SECDA stack.
+//!
+//! The paper closes with "as future work, we plan to ... support other
+//! ... DNN classes (e.g., Transformer models)". This example shows the
+//! methodology carries over unchanged: a quantized single-head
+//! self-attention encoder block routes its Q/K/V/O projections through
+//! the SAME gemmlowp seam the convolutions use, so the VM/SA
+//! accelerators serve them with zero design changes, while the
+//! dynamic-by-dynamic attention matmuls stay on the CPU (like the
+//! depthwise convolutions did).
+//!
+//! Run: `cargo run --release --example transformer_ext`
+
+use secda::accel::{SaDesign, VmDesign};
+use secda::driver::{AccelBackend, DriverConfig};
+use secda::framework::backend::CpuBackend;
+use secda::framework::models::WeightGen;
+use secda::framework::ops::{OpCtx, SelfAttention};
+use secda::framework::quant::QParams;
+use secda::framework::tensor::Tensor;
+use secda::perf::CpuModel;
+
+fn block(name: &str, seq: usize, d: usize) -> SelfAttention {
+    let mut gen = WeightGen::for_layer("transformer_ext", name);
+    SelfAttention {
+        name: name.to_string(),
+        seq,
+        d,
+        wq: gen.i8s(d * d),
+        wk: gen.i8s(d * d),
+        wv: gen.i8s(d * d),
+        wo: gen.i8s(d * d),
+        w_scale: 0.3 / (d as f32).sqrt() / 25.0,
+        out_qp: QParams::new(0.05, -4),
+    }
+}
+
+fn main() {
+    let (seq, d, n_blocks) = (64, 128, 4);
+    println!("transformer encoder: {n_blocks} attention blocks, seq={seq}, d={d}\n");
+
+    let mut gen = WeightGen::for_layer("transformer_ext", "tokens");
+    let input = Tensor::new(vec![1, seq, d], gen.i8s(seq * d), QParams::new(0.05, -4));
+    let cpu = CpuModel::pynq_a9();
+
+    let mut results = Vec::new();
+    for backend_name in ["cpu", "vm", "sa"] {
+        let mut cpu_b;
+        let mut vm_b;
+        let mut sa_b;
+        let backend: &mut dyn secda::framework::backend::GemmBackend = match backend_name {
+            "cpu" => {
+                cpu_b = CpuBackend::new(1);
+                &mut cpu_b
+            }
+            "vm" => {
+                vm_b = AccelBackend::new(VmDesign::paper(), DriverConfig::with_threads(1));
+                &mut vm_b
+            }
+            _ => {
+                sa_b = AccelBackend::new(SaDesign::paper(), DriverConfig::with_threads(1));
+                &mut sa_b
+            }
+        };
+        let mut ctx = OpCtx::new(backend, &cpu, 1);
+        let mut x = input.clone();
+        for b in 0..n_blocks {
+            x = block(&format!("blk{b}"), seq, d).eval(&x, &mut ctx);
+        }
+        println!(
+            "{backend_name:<4} backend: projections(GEMM seam) {:>7.2} ms | attention(CPU) {:>7.2} ms | total {:>7.2} ms",
+            ctx.conv_time.as_ms_f64(),
+            ctx.nonconv_time.as_ms_f64(),
+            (ctx.conv_time + ctx.nonconv_time).as_ms_f64()
+        );
+        results.push(x.data);
+    }
+    assert_eq!(results[0], results[1], "VM must be bit-exact");
+    assert_eq!(results[0], results[2], "SA must be bit-exact");
+    println!("\nall three backends produced bit-identical encodings —");
+    println!("the SECDA designs serve Transformer projections with zero changes.");
+}

@@ -1,0 +1,115 @@
+"""AOT compile path: lower the Layer-2 gemm_ppu to HLO text artifacts.
+
+One artifact per GEMM shape bucket (see model.bucket_shape). The
+interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Outputs (under --out-dir, default ../artifacts):
+    qgemm_m{M}_k{K}_n{N}.hlo.txt    one per bucket
+    manifest.json                   bucket index + entry signature,
+                                    consumed by rust/src/runtime/
+
+Python runs only here, at build time (`make artifacts`); the rust binary
+never imports it.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(m: int, k: int, n: int) -> str:
+    specs = (
+        jax.ShapeDtypeStruct((m, k), jnp.int8),    # W
+        jax.ShapeDtypeStruct((k, n), jnp.int8),    # X (im2col)
+        jax.ShapeDtypeStruct((m,), jnp.int32),     # bias (x_zp folded)
+        jax.ShapeDtypeStruct((m,), jnp.int32),     # multiplier
+        jax.ShapeDtypeStruct((m,), jnp.int32),     # shift
+        jax.ShapeDtypeStruct((4,), jnp.int32),     # [out_zp, act_min, act_max, 0]
+    )
+    lowered = jax.jit(model.gemm_ppu).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated M,K,N to lower a single bucket (debug)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.only:
+        m, k, n = (int(v) for v in args.only.split(","))
+        buckets = {model.bucket_shape(m, k, n): ["cli"]}
+    else:
+        buckets = model.all_buckets()
+
+    manifest = {
+        "format": "hlo-text",
+        "entry": "gemm_ppu",
+        "params": ["w_i8[M,K]", "x_i8[K,N]", "bias_i32[M]", "mult_i32[M]",
+                   "shift_i32[M]", "qparams_i32[4]"],
+        "result": "tuple(out_i8[M,N])",
+        "buckets": [],
+    }
+    t0 = time.time()
+    for i, ((m, k, n), users) in enumerate(sorted(buckets.items())):
+        fname = f"qgemm_m{m}_k{k}_n{n}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        t1 = time.time()
+        text = lower_bucket(m, k, n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append({
+            "m": m, "k": k, "n": n,
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "users": sorted(set(users)),
+        })
+        print(f"[{i + 1}/{len(buckets)}] {fname}  ({time.time() - t1:.2f}s, "
+              f"{len(text) / 1024:.0f} KiB, users={len(users)})", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # TSV twin of the manifest for the rust runtime (no JSON dep there):
+    # one bucket per line, "m\tk\tn\tfile".
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for b in manifest["buckets"]:
+            f.write(f"{b['m']}\t{b['k']}\t{b['n']}\t{b['file']}\n")
+    # Golden requantization vectors for cross-language bit-exactness
+    # (consumed by rust/tests/quant_golden.rs; TSV: acc mult shift out).
+    from .kernels import ref as _ref
+    cases = _ref.golden_cases()
+    with open(os.path.join(out_dir, "requant_golden.json"), "w") as f:
+        json.dump(cases, f)
+    with open(os.path.join(out_dir, "requant_golden.tsv"), "w") as f:
+        for c in cases:
+            f.write(f"{c['acc']}\t{c['mult']}\t{c['shift']}\t{c['out']}\n")
+    print(f"wrote {len(buckets)} buckets + manifest to {out_dir} "
+          f"in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for the SECDA reproduction.
+
+`qgemm` is the output-stationary int8 GEMM with a fused PPU
+(post-processing unit) epilogue — the TPU re-think of the paper's
+systolic-array / vector-MAC compute core. `ref` is the pure-jnp oracle
+used by the pytest suite.
+"""
+
+from . import qgemm, ref  # noqa: F401

@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernel: output-stationary int8 GEMM with fused PPU.
+
+TPU adaptation of the paper's accelerator compute core (DESIGN.md
+§Hardware-Adaptation):
+
+* The paper's 16x16 output-stationary systolic array (SA) / 4x(4x4)
+  vector-MAC tiles (VM) become 128x128 output tiles mapped onto the MXU
+  (int8 matmul, int32 accumulate).
+* The paper's BRAM double-buffering + DMA tiling becomes the HBM->VMEM
+  `BlockSpec` schedule: grid over (M/bm, N/bn) output tiles with the
+  full (padded) K dimension resident per tile — output-stationary, each
+  accumulator is produced exactly once and never revisited.
+* The paper's PPU (bias add, gemmlowp fixed-point requantization,
+  activation clamp, narrowing to 8 bits) is fused into the kernel
+  epilogue, so int32 accumulators never leave VMEM — the kernel-level
+  analogue of the paper's "PPU cuts output transfer cost by 4x".
+
+The kernel must be lowered with `interpret=True` (CPU PJRT cannot run
+Mosaic custom-calls); real-TPU performance is estimated analytically in
+DESIGN.md / EXPERIMENTS.md §Perf from VMEM footprint + MXU utilization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import multiply_by_quantized_multiplier
+
+jax.config.update("jax_enable_x64", True)
+
+# Default output-tile block. 128 is the MXU native dimension; buckets
+# produced by aot.py are always multiples of these.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _qgemm_kernel(w_ref, x_ref, bias_ref, mult_ref, shift_ref, qp_ref, o_ref):
+    """One (bm, bn) output-stationary tile: GEMM + PPU epilogue."""
+    # --- systolic-array analogue: int8 x int8 -> int32 on the MXU ------
+    acc = jax.lax.dot_general(
+        w_ref[...].astype(jnp.int32),
+        x_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # --- PPU: bias add, requantize, activation clamp, narrow ----------
+    acc = acc + bias_ref[...][:, None]
+    scaled = multiply_by_quantized_multiplier(
+        acc, mult_ref[...][:, None], shift_ref[...][:, None]
+    )
+    out_zp = qp_ref[0]
+    act_min = qp_ref[1]
+    act_max = qp_ref[2]
+    o_ref[...] = jnp.clip(scaled + out_zp, act_min, act_max).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def qgemm_ppu(w, x, bias, mult, shift, qparams, *, block_m=None, block_n=None):
+    """Quantized GEMM + PPU via Pallas. Same contract as ref.qgemm_ppu.
+
+    w       : int8[M, K]  weights (zero-point 0, per-channel scales)
+    x       : int8[K, N]  im2col activations (x_zp folded into bias)
+    bias    : int32[M]
+    mult    : int32[M]    quantized multiplier mantissas
+    shift   : int32[M]    TFLite-convention shifts (+left / -right)
+    qparams : int32[4]    [out_zp, act_min, act_max, 0]
+    """
+    m, k = w.shape
+    k2, n = x.shape
+    assert k == k2, (w.shape, x.shape)
+    bm = block_m or (BLOCK_M if m % BLOCK_M == 0 else m)
+    bn = block_n or (BLOCK_N if n % BLOCK_N == 0 else n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _qgemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # weight rows
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),   # activation cols
+            pl.BlockSpec((bm,), lambda i, j: (i,)),       # bias
+            pl.BlockSpec((bm,), lambda i, j: (i,)),       # multiplier
+            pl.BlockSpec((bm,), lambda i, j: (i,)),       # shift
+            pl.BlockSpec((4,), lambda i, j: (0,)),        # [zp, min, max, _]
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(w, x, bias, mult, shift, qparams)
+
+
+def vmem_footprint_bytes(m, k, n, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Analytic VMEM footprint of one grid step (single-buffered), used by
+    the §Perf analysis: W tile + X tile + int32 accumulator + epilogue
+    vectors. Double buffering doubles the W/X terms."""
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    w_tile = bm * k            # int8
+    x_tile = k * bn            # int8
+    acc = bm * bn * 4          # int32
+    vectors = 3 * bm * 4 + 16  # bias/mult/shift + qparams
+    return w_tile + x_tile + acc + vectors
+
+
+def mxu_utilization(m, k, n, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Fraction of MXU lanes doing useful work for a (possibly padded)
+    bucket executing a logical (m, k, n) GEMM: the padded dims waste
+    lanes. Used for the §Perf real-TPU estimate."""
+    pad = lambda v, b: ((v + b - 1) // b) * b
+    mp, np_ = pad(m, block_m), pad(n, block_n)
+    kp = pad(k, 32)
+    return (m * k * n) / float(mp * kp * np_)

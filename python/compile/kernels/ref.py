@@ -1,0 +1,165 @@
+"""Pure-jnp (and exact-integer numpy) oracle for the qGEMM + PPU kernel.
+
+This is the correctness contract for Layer 1: `ref.qgemm_ppu` must agree
+bit-exactly with `qgemm.qgemm_ppu` (the Pallas kernel) for every shape,
+and `requant_exact` is a scalar integer-arithmetic model of gemmlowp's
+`SaturatingRoundingDoublingHighMul` + `RoundingDivideByPOT` used by the
+property tests (python) and mirrored by `rust/src/framework/quant.rs`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+INT32_MIN = -(1 << 31)
+INT32_MAX = (1 << 31) - 1
+
+
+# ---------------------------------------------------------------------------
+# gemmlowp fixed-point requantization — jnp (vectorized) version
+# ---------------------------------------------------------------------------
+
+def srdhm(a, b):
+    """SaturatingRoundingDoublingHighMul over int32 arrays.
+
+    round((a * b) / 2**31) with to-nearest (ties away from zero) rounding,
+    saturating the single overflow case a == b == INT32_MIN.
+    """
+    a64 = a.astype(jnp.int64)
+    b64 = b.astype(jnp.int64)
+    ab = a64 * b64
+    nudge = jnp.where(ab >= 0, jnp.int64(1 << 30), jnp.int64(1 - (1 << 30)))
+    s = ab + nudge
+    # gemmlowp divides with C++ semantics (truncation toward zero), NOT an
+    # arithmetic shift (floor) — they differ for negative sums.
+    res = jnp.where(s >= 0, s >> 31, -((-s) >> 31))
+    res = jnp.clip(res, INT32_MIN, INT32_MAX)  # saturate INT32_MIN * INT32_MIN
+    return res.astype(jnp.int32)
+
+
+def rounding_divide_by_pot(x, exponent):
+    """gemmlowp RoundingDivideByPOT: x / 2**exponent, rounding to nearest,
+    ties away from zero. `exponent` >= 0 (int32 array or scalar)."""
+    exponent = jnp.asarray(exponent, dtype=jnp.int32)
+    mask = (jnp.int32(1) << exponent) - jnp.int32(1)
+    remainder = jnp.bitwise_and(x, mask)
+    threshold = (mask >> 1) + jnp.where(x < 0, jnp.int32(1), jnp.int32(0))
+    return (x >> exponent) + jnp.where(remainder > threshold, jnp.int32(1), jnp.int32(0))
+
+
+def multiply_by_quantized_multiplier(acc, mult, shift):
+    """TFLite MultiplyByQuantizedMultiplier.
+
+    `shift` uses the TFLite convention: positive = left shift, negative =
+    right shift. out = RDByPOT(SRDHM(acc * 2**max(0,shift), mult), max(0,-shift))
+    """
+    shift = jnp.asarray(shift, dtype=jnp.int32)
+    left = jnp.maximum(shift, 0)
+    right = jnp.maximum(-shift, 0)
+    shifted = acc * (jnp.int32(1) << left)
+    return rounding_divide_by_pot(srdhm(shifted, mult), right)
+
+
+# ---------------------------------------------------------------------------
+# Reference qGEMM + PPU (pure jnp, no pallas)
+# ---------------------------------------------------------------------------
+
+def qgemm_ppu(w, x, bias, mult, shift, qparams):
+    """Oracle for the Layer-1 kernel.
+
+    w        : int8[M, K]   weights (symmetric, zero-point 0)
+    x        : int8[K, N]   im2col activations (zero-point folded into bias)
+    bias     : int32[M]     bias + (-x_zp * rowsum(w)) folded by the driver
+    mult     : int32[M]     per-output-channel quantized multiplier (>= 2**30)
+    shift    : int32[M]     per-channel shift (TFLite convention)
+    qparams  : int32[4]     [out_zp, act_min, act_max, unused]
+    returns  : int8[M, N]
+    """
+    acc = jax.lax.dot_general(
+        w.astype(jnp.int32),
+        x.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + bias[:, None]
+    scaled = multiply_by_quantized_multiplier(acc, mult[:, None], shift[:, None])
+    out_zp = qparams[0]
+    act_min = qparams[1]
+    act_max = qparams[2]
+    out = jnp.clip(scaled + out_zp, act_min, act_max)
+    return out.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Exact scalar integer model (numpy / python ints) for property testing
+# ---------------------------------------------------------------------------
+
+def srdhm_exact(a: int, b: int) -> int:
+    if a == INT32_MIN and b == INT32_MIN:
+        return INT32_MAX
+    ab = a * b
+    nudge = (1 << 30) if ab >= 0 else (1 - (1 << 30))
+    s = ab + nudge
+    # C++ truncating division by 2**31 (toward zero), not a floor shift.
+    return s >> 31 if s >= 0 else -((-s) >> 31)
+
+
+def rounding_divide_by_pot_exact(x: int, exponent: int) -> int:
+    assert exponent >= 0
+    mask = (1 << exponent) - 1
+    remainder = x & mask
+    threshold = (mask >> 1) + (1 if x < 0 else 0)
+    return (x >> exponent) + (1 if remainder > threshold else 0)
+
+
+def requant_exact(acc: int, mult: int, shift: int) -> int:
+    left = max(shift, 0)
+    right = max(-shift, 0)
+    shifted = _wrap_i32(acc * (1 << left))
+    return rounding_divide_by_pot_exact(srdhm_exact(shifted, mult), right)
+
+
+def _wrap_i32(v: int) -> int:
+    v &= (1 << 32) - 1
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
+def golden_cases():
+    """Deterministic requantization golden vectors shared with the rust
+    implementation (rust/tests/quant_golden.rs). Written to
+    artifacts/requant_golden.json by aot.py."""
+    rng = np.random.default_rng(42)
+    cases = []
+    for _ in range(64):
+        acc = int(rng.integers(-(1 << 28), 1 << 28))
+        mult = int(rng.integers(1 << 30, (1 << 31) - 1))
+        shift = int(rng.integers(-16, 3))
+        cases.append({"acc": acc, "mult": mult, "shift": shift,
+                      "out": requant_exact(acc, mult, shift)})
+    for acc, mult, shift in [
+        (INT32_MIN, INT32_MIN, 0),
+        (INT32_MAX, (1 << 31) - 1, -31),
+        (-1, 1 << 30, -1), (1, 1 << 30, -1), (0, 1 << 30, 0),
+    ]:
+        cases.append({"acc": acc, "mult": mult, "shift": shift,
+                      "out": requant_exact(acc, mult, shift)})
+    return cases
+
+
+def quantize_multiplier(real_multiplier: float):
+    """TFLite QuantizeMultiplier: real -> (mantissa int32 in [2**30, 2**31),
+    shift with positive = left). Mirrored in rust framework/quant.rs."""
+    if real_multiplier == 0.0:
+        return 0, 0
+    mant, exp = np.frexp(real_multiplier)
+    q = int(round(mant * (1 << 31)))
+    assert q <= (1 << 31)
+    if q == (1 << 31):
+        q //= 2
+        exp += 1
+    shift = int(exp)
+    if shift < -31:
+        return 0, 0
+    return q, shift

@@ -1,0 +1,229 @@
+"""Layer-2: the accelerated subgraph (quantized GEMM-convolution) in JAX.
+
+In the SECDA runtime model (paper Fig. 2) the *accelerator* executes one
+GEMM + post-processing call per convolution tile batch; everything else
+(im2col reshaping, scheduling, the rest of the network) lives in the
+CPU-side driver / framework — in this reproduction, in Rust (Layer 3).
+
+So Layer 2 is the per-bucket `gemm_ppu` computation (which calls the
+Layer-1 Pallas kernel), plus:
+
+* the conv-layer GEMM-shape tables of the paper's four benchmark models
+  (MobileNetV1, MobileNetV2, InceptionV1, ResNet18 — ImageNet, 224x224),
+  used by `aot.py` to decide which shape buckets to AOT-compile, and
+  cross-checked against the Rust model zoo by an integration test;
+* a pure-jnp quantized conv2d reference (im2col composition) used by the
+  pytest suite to validate the conv-as-GEMM path end to end.
+
+GEMM convention (TFLite/gemmlowp "GEMM convolution"):
+    M = output channels, K = kh*kw*in_channels, N = out_h*out_w
+    out[M, N] = PPU(W[M, K] @ im2col(X)[K, N] + bias[M])
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import qgemm
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# The accelerated computation (lowered per shape bucket by aot.py)
+# ---------------------------------------------------------------------------
+
+def gemm_ppu(w, x, bias, mult, shift, qparams):
+    """The AOT entry point: int8 GEMM + fused PPU (Layer-1 kernel).
+
+    Returned as a 1-tuple: the AOT recipe lowers with return_tuple=True
+    and the Rust side unwraps with `to_tuple1`.
+    """
+    return (qgemm.qgemm_ppu(w, x, bias, mult, shift, qparams),)
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets
+# ---------------------------------------------------------------------------
+
+def _round_up(v: int, base: int) -> int:
+    return ((v + base - 1) // base) * base
+
+
+def bucket_shape(m: int, k: int, n: int):
+    """Round a logical GEMM (m, k, n) up to its AOT bucket.
+
+    M and N round to the Pallas/MXU tile grid (multiples of 32 below 128,
+    multiples of 128 above); K (the reduction) rounds to 32. The Rust
+    driver zero-pads W rows / ignores padded outputs, so padding is
+    numerically inert (see DESIGN.md).
+    """
+    mb = _round_up(m, 32) if m < 128 else _round_up(m, 128)
+    nb = _round_up(n, 32) if n < 128 else _round_up(n, 128)
+    kb = _round_up(k, 32)
+    return mb, kb, nb
+
+
+# ---------------------------------------------------------------------------
+# Benchmark model conv tables (GEMM-delegated layers only)
+#
+# Each entry: (name, out_ch, kh*kw*in_ch, out_h*out_w). Depthwise
+# convolutions are NOT listed: in TFLite they do not go through the
+# gemmlowp GEMM path, so (as in the paper's case study) they stay on the
+# CPU and are merely counted inside the CONV time bucket.
+# ---------------------------------------------------------------------------
+
+def _conv(name, out_ch, kh, kw, in_ch, out_hw):
+    return (name, out_ch, kh * kw * in_ch, out_hw * out_hw)
+
+
+def mobilenet_v1_gemms():
+    """MobileNetV1 1.0/224: stem conv + 13 pointwise convs."""
+    layers = [_conv("conv0", 32, 3, 3, 3, 112)]
+    # (in_ch, out_ch, spatial after the preceding depthwise stride)
+    pw = [
+        (32, 64, 112), (64, 128, 56), (128, 128, 56), (128, 256, 28),
+        (256, 256, 28), (256, 512, 14), (512, 512, 14), (512, 512, 14),
+        (512, 512, 14), (512, 512, 14), (512, 512, 14), (512, 1024, 7),
+        (1024, 1024, 7),
+    ]
+    for i, (cin, cout, hw) in enumerate(pw, 1):
+        layers.append(_conv(f"pw{i}", cout, 1, 1, cin, hw))
+    return layers
+
+
+def mobilenet_v2_gemms():
+    """MobileNetV2 1.0/224: stem + bottleneck expand/project 1x1 convs."""
+    layers = [_conv("conv0", 32, 3, 3, 3, 112)]
+    # (t, c, n, s) inverted-residual config from the paper.
+    cfg = [
+        (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+        (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
+    ]
+    cin, hw = 32, 112
+    blk = 0
+    for t, c, n, s in cfg:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            exp = cin * t
+            if t != 1:
+                layers.append(_conv(f"b{blk}_expand", exp, 1, 1, cin, hw))
+            hw_out = hw // stride
+            layers.append(_conv(f"b{blk}_project", c, 1, 1, exp, hw_out))
+            cin, hw = c, hw_out
+            blk += 1
+    layers.append(_conv("conv_last", 1280, 1, 1, 320, 7))
+    return layers
+
+
+def inception_v1_gemms():
+    """GoogLeNet (InceptionV1), standard table."""
+    layers = [
+        _conv("conv1", 64, 7, 7, 3, 112),
+        _conv("conv2_red", 64, 1, 1, 64, 56),
+        _conv("conv2", 192, 3, 3, 64, 56),
+    ]
+    # (in, #1x1, #3x3red, #3x3, #5x5red, #5x5, pool_proj, spatial)
+    inc = [
+        ("3a", 192, 64, 96, 128, 16, 32, 32, 28),
+        ("3b", 256, 128, 128, 192, 32, 96, 64, 28),
+        ("4a", 480, 192, 96, 208, 16, 48, 64, 14),
+        ("4b", 512, 160, 112, 224, 24, 64, 64, 14),
+        ("4c", 512, 128, 128, 256, 24, 64, 64, 14),
+        ("4d", 512, 112, 144, 288, 32, 64, 64, 14),
+        ("4e", 528, 256, 160, 320, 32, 128, 128, 14),
+        ("5a", 832, 256, 160, 320, 32, 128, 128, 7),
+        ("5b", 832, 384, 192, 384, 48, 128, 128, 7),
+    ]
+    for nm, cin, c1, c3r, c3, c5r, c5, cp, hw in inc:
+        layers += [
+            _conv(f"{nm}_1x1", c1, 1, 1, cin, hw),
+            _conv(f"{nm}_3x3r", c3r, 1, 1, cin, hw),
+            _conv(f"{nm}_3x3", c3, 3, 3, c3r, hw),
+            _conv(f"{nm}_5x5r", c5r, 1, 1, cin, hw),
+            _conv(f"{nm}_5x5", c5, 5, 5, c5r, hw),
+            _conv(f"{nm}_pool", cp, 1, 1, cin, hw),
+        ]
+    return layers
+
+
+def resnet18_gemms():
+    """ResNet18, standard ImageNet table (basic blocks)."""
+    layers = [_conv("conv1", 64, 7, 7, 3, 112)]
+    # (stage channels, spatial, first-block stride, in_ch)
+    stages = [(64, 56, 1, 64), (128, 28, 2, 64), (256, 14, 2, 128), (512, 7, 2, 256)]
+    for si, (c, hw, s, cin) in enumerate(stages, 1):
+        for b in range(2):
+            in_c = cin if b == 0 else c
+            layers.append(_conv(f"l{si}b{b}_conv1", c, 3, 3, in_c, hw))
+            layers.append(_conv(f"l{si}b{b}_conv2", c, 3, 3, c, hw))
+            if b == 0 and s == 2:
+                layers.append(_conv(f"l{si}_down", c, 1, 1, in_c, hw))
+    return layers
+
+
+MODELS = {
+    "mobilenet_v1": mobilenet_v1_gemms,
+    "mobilenet_v2": mobilenet_v2_gemms,
+    "inception_v1": inception_v1_gemms,
+    "resnet18": resnet18_gemms,
+}
+
+
+def all_buckets():
+    """Union of AOT buckets needed by the four benchmark models."""
+    buckets = {}
+    for model, fn in MODELS.items():
+        for name, m, k, n in fn():
+            b = bucket_shape(m, k, n)
+            buckets.setdefault(b, []).append(f"{model}/{name}")
+    return buckets
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp quantized conv2d reference (pytest-only)
+# ---------------------------------------------------------------------------
+
+def im2col(x, kh, kw, stride, pad, pad_value):
+    """NHWC int8 -> [K, N] patch matrix, K = kh*kw*C, N = out_h*out_w.
+
+    Padding uses the activation zero-point so that padded positions are
+    numerically zero after offset folding (see DESIGN.md).
+    """
+    n, h, w, c = x.shape
+    assert n == 1, "reference path is single-image"
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                 constant_values=pad_value)
+    out_h = (h + 2 * pad - kh) // stride + 1
+    out_w = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.dynamic_slice(
+                xp, (0, i, j, 0), (1, (out_h - 1) * stride + 1, (out_w - 1) * stride + 1, c)
+            )
+            patch = patch[:, ::stride, ::stride, :]
+            cols.append(patch.reshape(out_h * out_w, c))
+    # K-major layout: (kh*kw, N, C) -> (kh*kw*C, N)
+    km = jnp.stack(cols, axis=0)            # (kh*kw, N, C)
+    km = jnp.transpose(km, (0, 2, 1))       # (kh*kw, C, N)
+    return km.reshape(kh * kw * c, out_h * out_w), (out_h, out_w)
+
+
+def conv2d_int8_ref(x, w, bias, mult, shift, qparams, stride, pad, x_zp):
+    """Quantized conv via im2col + the Layer-1 kernel path.
+
+    x: int8[1, H, W, Cin] (zero-point x_zp), w: int8[Cout, kh, kw, Cin].
+    bias must already include the -x_zp * sum(w) fold (driver contract).
+    """
+    cout, kh, kw, cin = w.shape
+    cols, (oh, ow) = im2col(x, kh, kw, stride, pad, x_zp)
+    wm = w.reshape(cout, kh * kw * cin)
+    out = qgemm.qgemm_ppu(wm, cols, bias, mult, shift, qparams)
+    return out.reshape(cout, oh, ow)
+
+
+def fold_bias(bias, w_matrix, x_zp):
+    """Driver-side bias fold: bias' = bias - x_zp * rowsum(W)."""
+    rowsum = np.asarray(w_matrix, dtype=np.int64).sum(axis=1).astype(np.int32)
+    return (np.asarray(bias, dtype=np.int32) - np.int32(x_zp) * rowsum).astype(np.int32)

@@ -1,0 +1,148 @@
+"""Layer-1 correctness: Pallas qGEMM+PPU kernel vs the pure-jnp oracle.
+
+The kernel must be *bit-exact* against ref.qgemm_ppu — these are integer
+computations, so assert_array_equal (not allclose).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import qgemm, ref
+
+
+def _rand_case(rng, m, k, n, shift_lo=-12, shift_hi=2):
+    w = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    x = rng.integers(-128, 128, (k, n), dtype=np.int8)
+    bias = rng.integers(-(1 << 16), 1 << 16, (m,), dtype=np.int32)
+    mult = rng.integers(1 << 30, (1 << 31) - 1, (m,), dtype=np.int32)
+    shift = rng.integers(shift_lo, shift_hi, (m,), dtype=np.int32)
+    qp = np.array([int(rng.integers(-16, 16)), -128, 127, 0], dtype=np.int32)
+    return w, x, bias, mult, shift, qp
+
+
+def _run_both(w, x, bias, mult, shift, qp):
+    got = np.asarray(qgemm.qgemm_ppu(w, x, bias, mult, shift, qp))
+    want = np.asarray(ref.qgemm_ppu(
+        jnp.asarray(w), jnp.asarray(x), jnp.asarray(bias),
+        jnp.asarray(mult), jnp.asarray(shift), jnp.asarray(qp)))
+    return got, want
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8),           # tiny, single block
+    (32, 27, 64),        # first-conv-like (K = 3*3*3)
+    (64, 96, 64),
+    (128, 32, 128),      # exactly one MXU tile
+    (256, 64, 128),      # multi-block M grid
+    (128, 64, 256),      # multi-block N grid
+    (256, 160, 256),     # multi-block both
+])
+def test_kernel_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    got, want = _run_both(*_rand_case(rng, m, k, n))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_is_deterministic():
+    rng = np.random.default_rng(7)
+    case = _rand_case(rng, 64, 48, 64)
+    a = np.asarray(qgemm.qgemm_ppu(*case))
+    b = np.asarray(qgemm.qgemm_ppu(*case))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_activation_clamp_applied():
+    """act_min/act_max (e.g. relu6 windows) must clamp the output."""
+    rng = np.random.default_rng(11)
+    w, x, bias, mult, shift, _ = _rand_case(rng, 32, 32, 32)
+    qp = np.array([0, 0, 6, 0], dtype=np.int32)  # relu6-like window
+    got, want = _run_both(w, x, bias, mult, shift, qp)
+    np.testing.assert_array_equal(got, want)
+    assert got.min() >= 0 and got.max() <= 6
+
+
+def test_zero_weights_give_bias_only_output():
+    """W = 0 isolates the PPU: out = clamp(requant(bias) + zp)."""
+    m, k, n = 32, 64, 32
+    w = np.zeros((m, k), dtype=np.int8)
+    x = np.ones((k, n), dtype=np.int8)
+    bias = np.arange(-16, 16, dtype=np.int32) * 100
+    mult = np.full(m, 1 << 30, dtype=np.int32)  # multiplier 0.5
+    shift = np.zeros(m, dtype=np.int32)
+    qp = np.array([0, -128, 127, 0], dtype=np.int32)
+    got, want = _run_both(w, x, bias, mult, shift, qp)
+    np.testing.assert_array_equal(got, want)
+    for i in range(m):
+        e = ref.requant_exact(int(bias[i]), 1 << 30, 0)
+        assert got[i, 0] == np.clip(e, -128, 127)
+        assert (got[i] == got[i, 0]).all()  # constant across N
+
+
+def test_padding_is_inert():
+    """Zero-padding W rows/K and garbage X in padded K must not change the
+    valid output region — this is the bucket-padding contract the rust
+    driver relies on."""
+    rng = np.random.default_rng(23)
+    m, k, n = 32, 48, 32
+    w, x, bias, mult, shift, qp = _rand_case(rng, m, k, n)
+    base, _ = _run_both(w, x, bias, mult, shift, qp)
+
+    mb, kb, nb = 64, 96, 64
+    wp = np.zeros((mb, kb), dtype=np.int8)
+    wp[:m, :k] = w
+    xp = rng.integers(-128, 128, (kb, nb), dtype=np.int8)  # garbage pad
+    xp[:k, :n] = x
+    biasp = np.zeros(mb, dtype=np.int32); biasp[:m] = bias
+    multp = np.full(mb, 1 << 30, dtype=np.int32); multp[:m] = mult
+    shiftp = np.zeros(mb, dtype=np.int32); shiftp[:m] = shift
+    padded = np.asarray(qgemm.qgemm_ppu(wp, xp, biasp, multp, shiftp, qp))
+    np.testing.assert_array_equal(padded[:m, :n], base)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    k=st.integers(1, 12).map(lambda v: v * 8),
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(m, k, n, seed):
+    """Hypothesis sweep over shapes and data: kernel == oracle, always."""
+    rng = np.random.default_rng(seed)
+    got, want = _run_both(*_rand_case(rng, m, k, n))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_shape_invariance(bm, bn, seed):
+    """The result must not depend on the BlockSpec tiling (the paper's
+    'varying systolic array sizes' §IV-E3, at the kernel level)."""
+    rng = np.random.default_rng(seed)
+    m = k = n = 64
+    case = _rand_case(rng, m, k, n)
+    base = np.asarray(qgemm.qgemm_ppu(*case))
+    tiled = np.asarray(qgemm.qgemm_ppu(*case, block_m=bm, block_n=bn))
+    np.testing.assert_array_equal(tiled, base)
+
+
+def test_vmem_footprint_within_budget():
+    """Every AOT bucket must fit VMEM with double buffering (16 MiB TPU
+    budget; we require <= 8 MiB single-buffered) — the §Perf gate."""
+    from compile import model
+    for (m, k, n) in model.all_buckets():
+        fp = qgemm.vmem_footprint_bytes(m, k, n)
+        assert fp <= 8 * 1024 * 1024, (m, k, n, fp)
+
+
+def test_mxu_utilization_sane():
+    assert qgemm.mxu_utilization(128, 128, 128) == 1.0
+    assert 0.24 < qgemm.mxu_utilization(32, 128, 128) < 0.26
+    assert qgemm.mxu_utilization(100, 100, 100) < 1.0

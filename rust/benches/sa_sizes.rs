@@ -1,0 +1,58 @@
+//! Bench E3: the §IV-E3 systolic-array size sweep (4x4 / 8x8 / 16x16),
+//! per benchmark model — reproducing "the 16x16 design improved
+//! performance by 1.7x across the various models for single thread
+//! inference compared to the 8x8 design".
+//!
+//! Run: `cargo bench --bench sa_sizes`
+
+use secda::accel::{SaConfig, SaDesign};
+use secda::driver::{AccelBackend, DriverConfig};
+use secda::framework::interpreter::Session;
+use secda::framework::models;
+use secda::synth;
+
+fn main() {
+    println!("=== §IV-E3: SA size sweep (1-thread end-to-end CONV time, ms) ===\n");
+    println!(
+        "{:<14} {:>8} {:>8} {:>8}   {:>10}",
+        "model", "4x4", "8x8", "16x16", "16 vs 8"
+    );
+    let mut ratio_sum = 0.0;
+    for model in models::ALL {
+        let g = models::by_name(model).unwrap();
+        let input = secda::cli::table2::synthetic_input(&g);
+        let mut conv_ms = Vec::new();
+        for dim in [4usize, 8, 16] {
+            let mut backend = AccelBackend::new(
+                SaDesign::with_dim(dim),
+                DriverConfig::with_threads(1),
+            );
+            let (_, rep) = Session::new(&g, &mut backend, 1).run(&input);
+            conv_ms.push(rep.conv_time.as_ms_f64());
+        }
+        let r = conv_ms[1] / conv_ms[2];
+        ratio_sum += r;
+        println!(
+            "{:<14} {:>8.0} {:>8.0} {:>8.0}   {:>9.2}x",
+            model, conv_ms[0], conv_ms[1], conv_ms[2], r
+        );
+    }
+    println!(
+        "\naverage 16x16 vs 8x8 CONV speedup: {:.2}x (paper: 1.7x end-to-end)",
+        ratio_sum / models::ALL.len() as f64
+    );
+
+    println!("\nresource cost of each size (Zynq-7020):");
+    for dim in [4usize, 8, 16] {
+        let rep = synth::synthesize_sa(&SaConfig::with_dim(dim));
+        println!(
+            "  {dim:>2}x{dim:<2}: {:>6} LUT {:>4} DSP {:>4} BRAM36  util {:>3.0}%  fits={}",
+            rep.resources.luts,
+            rep.resources.dsps,
+            rep.resources.bram36,
+            rep.utilization * 100.0,
+            rep.fits
+        );
+    }
+    println!("(paper: 4x4 lacked compute; 8x8 left fabric unused; 16x16 chosen)");
+}

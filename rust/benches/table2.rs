@@ -1,0 +1,85 @@
+//! Bench T2/A3: regenerate the paper's Table II (all four DNNs x six
+//! hardware setups + the VTA row) and the §V-B derived statistics,
+//! with wall-clock timing of the harness itself.
+//!
+//! Run: `cargo bench --bench table2`
+
+use std::time::Instant;
+
+use secda::cli::table2::{self, Setup};
+
+fn main() {
+    let t0 = Instant::now();
+    let models = secda::framework::models::ALL;
+    let rows = table2::table2(&models);
+    let elapsed = t0.elapsed();
+
+    println!("=== Table II (reproduced) ===");
+    print!("{}", table2::render(&rows));
+
+    println!("\n=== §V-B derived statistics ===");
+    for (base, accel, label) in [
+        (Setup::Cpu(1), Setup::CpuVm(1), "VM, 1 thread"),
+        (Setup::Cpu(1), Setup::CpuSa(1), "SA, 1 thread"),
+        (Setup::Cpu(2), Setup::CpuVm(2), "VM, 2 threads"),
+        (Setup::Cpu(2), Setup::CpuSa(2), "SA, 2 threads"),
+    ] {
+        let (s, e) = table2::speedup_summary(&rows, base, accel);
+        println!("avg speedup {label}: {s:.2}x   avg energy reduction: {e:.2}x");
+    }
+    println!("(paper: VM 3.0x/2.0x speedup, 2.7x/1.8x energy; SA 3.5x/2.2x, 2.9x/1.9x)");
+
+    // Non-CONV share shift (paper: 14% CPU-only -> 39% VM / 46% SA)
+    let share = |setup: Setup| {
+        let mut v = 0.0;
+        let mut n = 0;
+        for r in &rows {
+            if r.setup == setup.label() && r.threads == 1 {
+                v += r.nonconv_share();
+                n += 1;
+            }
+        }
+        100.0 * v / n.max(1) as f64
+    };
+    println!(
+        "\nNon-CONV share of 1-thread inference: CPU {:.0}%  VM {:.0}%  SA {:.0}%",
+        share(Setup::Cpu(1)),
+        share(Setup::CpuVm(1)),
+        share(Setup::CpuSa(1))
+    );
+    println!("(paper: 14% -> 39% / 46%)");
+
+    // InceptionV1 highlight (paper: best speedup, 4x/4.5x 1thr)
+    let find = |m: &str, s: Setup| rows.iter().find(|r| r.model == m && r.setup == s.label());
+    if let (Some(b), Some(vm), Some(sa)) = (
+        find("inception_v1", Setup::Cpu(1)),
+        find("inception_v1", Setup::CpuVm(1)),
+        find("inception_v1", Setup::CpuSa(1)),
+    ) {
+        println!(
+            "InceptionV1 1-thread speedups: VM {:.1}x, SA {:.1}x (paper: 4.0x / 4.5x)",
+            b.overall().as_secs_f64() / vm.overall().as_secs_f64(),
+            b.overall().as_secs_f64() / sa.overall().as_secs_f64()
+        );
+    }
+
+    // SA-vs-VM gap (paper: SA 16% better latency on average)
+    let mut gap = 0.0;
+    let mut n = 0;
+    for m in models {
+        if let (Some(vm), Some(sa)) = (find(m, Setup::CpuVm(1)), find(m, Setup::CpuSa(1))) {
+            gap += vm.overall().as_secs_f64() / sa.overall().as_secs_f64() - 1.0;
+            n += 1;
+        }
+    }
+    println!(
+        "SA vs VM average latency advantage: {:.0}% (paper: 16%)",
+        100.0 * gap / n as f64
+    );
+
+    println!(
+        "\nharness wall-clock: {:.1} s for {} full functional inferences",
+        elapsed.as_secs_f64(),
+        rows.len()
+    );
+}

@@ -1,0 +1,102 @@
+//! On-chip BRAM buffer model.
+//!
+//! Zynq-7020 block RAM: 140 x 36Kb blocks, dual-ported, 4 bytes per
+//! port per cycle. §IV-E1: the VM design initially starved its GEMM
+//! units because input/weight data lived in too few BRAMs; the Input
+//! Handler was extended to *distribute* incoming data across banks,
+//! multiplying the accesses available per cycle.
+
+/// A banked BRAM buffer (global weight/input buffer, local buffers).
+#[derive(Debug, Clone, Copy)]
+pub struct BramArray {
+    /// Number of banks data is distributed across.
+    pub banks: usize,
+    /// Bytes readable per bank per cycle (dual-port 36Kb ≈ 8B/cycle
+    /// using both ports).
+    pub bytes_per_bank_cycle: usize,
+    /// Total capacity in bytes.
+    pub capacity_bytes: usize,
+}
+
+impl BramArray {
+    pub fn new(banks: usize, bytes_per_bank_cycle: usize, capacity_bytes: usize) -> Self {
+        assert!(banks > 0);
+        BramArray {
+            banks,
+            bytes_per_bank_cycle,
+            capacity_bytes,
+        }
+    }
+
+    /// Aggregate read bandwidth, bytes per cycle.
+    pub fn read_bytes_per_cycle(&self) -> u64 {
+        (self.banks * self.bytes_per_bank_cycle) as u64
+    }
+
+    /// Cycles to stream `bytes` out of the array.
+    pub fn read_cycles(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.read_bytes_per_cycle())
+    }
+
+    /// Stall factor for a consumer needing `needed` bytes/cycle:
+    /// 1.0 when the banks keep up, >1.0 when reads serialize.
+    pub fn stall_factor(&self, needed_bytes_per_cycle: u64) -> f64 {
+        let have = self.read_bytes_per_cycle();
+        if needed_bytes_per_cycle <= have {
+            1.0
+        } else {
+            needed_bytes_per_cycle as f64 / have as f64
+        }
+    }
+
+    /// Number of Zynq 36Kb BRAM blocks this array occupies (for the
+    /// synthesis resource model).
+    pub fn bram36_blocks(&self) -> u32 {
+        let per_block = 36 * 1024 / 8; // 4.5 KiB usable
+        (self.capacity_bytes as u32).div_ceil(per_block as u32).max(self.banks as u32)
+    }
+
+    pub fn fits(&self, bytes: usize) -> bool {
+        bytes <= self.capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banking_multiplies_bandwidth() {
+        let one = BramArray::new(1, 8, 64 * 1024);
+        let eight = BramArray::new(8, 8, 64 * 1024);
+        assert_eq!(one.read_bytes_per_cycle(), 8);
+        assert_eq!(eight.read_bytes_per_cycle(), 64);
+        assert_eq!(one.read_cycles(640), 80);
+        assert_eq!(eight.read_cycles(640), 10);
+    }
+
+    #[test]
+    fn stall_factor() {
+        let b = BramArray::new(2, 8, 1024);
+        assert_eq!(b.stall_factor(8), 1.0);
+        assert_eq!(b.stall_factor(16), 1.0);
+        assert_eq!(b.stall_factor(64), 4.0);
+    }
+
+    #[test]
+    fn bram_block_estimate() {
+        let b = BramArray::new(4, 8, 64 * 1024);
+        // 64KiB / 4.5KiB ≈ 15 blocks
+        assert!(b.bram36_blocks() >= 14 && b.bram36_blocks() <= 16);
+        // at least one block per bank
+        let tiny = BramArray::new(8, 8, 1024);
+        assert_eq!(tiny.bram36_blocks(), 8);
+    }
+
+    #[test]
+    fn capacity_check() {
+        let b = BramArray::new(1, 8, 1000);
+        assert!(b.fits(1000));
+        assert!(!b.fits(1001));
+    }
+}

@@ -1,0 +1,189 @@
+//! Compute-core cycle models: the VM GEMM unit and the SA systolic
+//! array (paper Figs. 3 and 4).
+//!
+//! Both are *output-stationary* (§IV-C): an output tile's accumulators
+//! stay in the unit until complete, so no intermediate int32 results
+//! ever spill to buffers. The models return cycle counts per output
+//! stripe; functional values are computed separately (bit-exactly) via
+//! [`crate::gemm::accumulate_rows`] by the design state machines.
+
+/// One VM "GEMM unit" (Fig. 3): a 4x4 grid of output accumulators,
+/// each fed by `macs_per_output` MAC units reduced through an adder
+/// tree; weights broadcast from a local tile buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct VmUnitModel {
+    /// Output tile height/width (4 in the paper).
+    pub tile_m: usize,
+    pub tile_n: usize,
+    /// Parallel MACs per output value (4 in the paper).
+    pub macs_per_output: usize,
+    /// Adder-tree latency in cycles (log2(macs) rounded up).
+    pub tree_latency: u64,
+    /// Whether the next input tile is prefetched while the current one
+    /// computes. The paper's VM design loads the 4-column x-tile into
+    /// unit registers and then streams it through the MACs, so fetch
+    /// and compute serialize — one reason SA outperforms VM end to end
+    /// (§V-B: "SA achieves slightly better performance, 16% on
+    /// average").
+    pub input_prefetch_overlap: bool,
+}
+
+impl VmUnitModel {
+    pub fn paper() -> Self {
+        VmUnitModel {
+            tile_m: 4,
+            tile_n: 4,
+            macs_per_output: 4,
+            tree_latency: 2,
+            input_prefetch_overlap: false,
+        }
+    }
+
+    /// MACs retired per cycle when fully fed.
+    pub fn macs_per_cycle(&self) -> u64 {
+        (self.tile_m * self.tile_n * self.macs_per_output) as u64
+    }
+
+    /// Cycles to compute one 4x4 output tile over a K-deep reduction:
+    /// each output consumes `macs_per_output` K-elements per cycle.
+    /// Without prefetch overlap the x-tile load serializes with the
+    /// MAC streaming, doubling the K term.
+    pub fn tile_cycles(&self, k: usize) -> u64 {
+        let stream = (k as u64).div_ceil(self.macs_per_output as u64);
+        let fetch = if self.input_prefetch_overlap { 0 } else { stream };
+        stream + fetch + self.tree_latency + 1
+    }
+
+    /// Cycles for an output stripe of `tile_m` rows x `n` columns.
+    /// `feed_stall` >= 1.0 models BRAM input starvation (§IV-E1).
+    pub fn stripe_compute_cycles(&self, k: usize, n: usize, feed_stall: f64) -> u64 {
+        let tiles = (n as u64).div_ceil(self.tile_n as u64);
+        let base = tiles * self.tile_cycles(k);
+        (base as f64 * feed_stall).ceil() as u64
+    }
+
+    /// Input bytes the unit consumes per compute cycle when unstalled:
+    /// `tile_n` columns x `macs_per_output` K-lanes (int8).
+    pub fn input_bytes_per_cycle(&self) -> u64 {
+        (self.tile_n * self.macs_per_output) as u64
+    }
+
+    /// Bytes of one weight tile block (`tile_m` rows x k).
+    pub fn weight_stripe_bytes(&self, k: usize) -> u64 {
+        (self.tile_m * k) as u64
+    }
+}
+
+/// The SA design's `dim x dim` output-stationary systolic array
+/// (Fig. 4): weights move vertically, inputs horizontally, one hop per
+/// cycle; boundary PEs are fed from `2*dim` data queues.
+#[derive(Debug, Clone, Copy)]
+pub struct SaArrayModel {
+    /// Array dimension (4, 8 or 16 in §IV-E3).
+    pub dim: usize,
+    /// Whether the Scheduler refills the data queues in parallel with
+    /// array compute (§IV-E1's SA improvement). When false the fill
+    /// serializes with compute.
+    pub parallel_fill: bool,
+}
+
+impl SaArrayModel {
+    pub fn paper(dim: usize) -> Self {
+        SaArrayModel {
+            dim,
+            parallel_fill: true,
+        }
+    }
+
+    pub fn macs_per_cycle(&self) -> u64 {
+        (self.dim * self.dim) as u64
+    }
+
+    /// Cycles for one `dim x dim` output tile with K-deep reduction:
+    /// K streaming steps plus 2*dim skew (fill + drain wavefronts).
+    pub fn tile_cycles(&self, k: usize) -> u64 {
+        let stream = k as u64 + 2 * self.dim as u64;
+        if self.parallel_fill {
+            stream
+        } else {
+            // queues must be refilled between tiles: dim queues x k
+            // values each, 4 bytes/cycle queue write port
+            stream + (k as u64 * self.dim as u64) / 4
+        }
+    }
+
+    /// Cycles for an output stripe of `dim` rows x `n` columns.
+    pub fn stripe_compute_cycles(&self, k: usize, n: usize) -> u64 {
+        let tiles = (n as u64).div_ceil(self.dim as u64);
+        tiles * self.tile_cycles(k)
+    }
+
+    /// Queue count feeding the array boundary (32 in the 16x16 paper
+    /// design: 16 weight columns + 16 input rows).
+    pub fn queue_count(&self) -> usize {
+        2 * self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vm_paper_parameters() {
+        let u = VmUnitModel::paper();
+        assert_eq!(u.macs_per_cycle(), 64);
+        assert_eq!(u.input_bytes_per_cycle(), 16);
+        // K=64: 16 k-steps + 16 fetch (no prefetch overlap) + tree 2 + wb 1
+        assert_eq!(u.tile_cycles(64), 35);
+        // a double-buffered variant overlaps the fetch
+        let db = VmUnitModel {
+            input_prefetch_overlap: true,
+            ..u
+        };
+        assert_eq!(db.tile_cycles(64), 19);
+    }
+
+    #[test]
+    fn vm_stall_scales_cycles() {
+        let u = VmUnitModel::paper();
+        let fast = u.stripe_compute_cycles(64, 256, 1.0);
+        let slow = u.stripe_compute_cycles(64, 256, 2.0);
+        assert_eq!(slow, fast * 2);
+    }
+
+    #[test]
+    fn sa_tile_cycles() {
+        let a = SaArrayModel::paper(16);
+        assert_eq!(a.tile_cycles(128), 128 + 32);
+        assert_eq!(a.macs_per_cycle(), 256);
+        assert_eq!(a.queue_count(), 32);
+    }
+
+    #[test]
+    fn sa_serial_fill_is_slower() {
+        let par = SaArrayModel::paper(16);
+        let ser = SaArrayModel {
+            parallel_fill: false,
+            ..par
+        };
+        assert!(ser.tile_cycles(256) > par.tile_cycles(256));
+    }
+
+    #[test]
+    fn sa_dim_throughput_scaling() {
+        // compute-bound stripe cycle totals scale ~1/d^2 per full GEMM:
+        // (m/d stripes) x (n/d tiles) x (k + 2d)
+        let k = 512;
+        let n = 1024;
+        let m = 256;
+        let cyc = |d: usize| {
+            let a = SaArrayModel::paper(d);
+            (m as u64).div_ceil(d as u64) * a.stripe_compute_cycles(k, n)
+        };
+        let c8 = cyc(8);
+        let c16 = cyc(16);
+        let ratio = c8 as f64 / c16 as f64;
+        assert!((3.0..=4.5).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Reusable accelerator component models (paper §IV-D).
+//!
+//! Each component couples a *cycle cost model* (what the SystemC HLS
+//! testbench feeds into the end-to-end simulation, §III-C) with the
+//! functional behaviour needed for bit-exact TLM. The VM and SA designs
+//! are compositions of these components with different parameters and
+//! wiring — "adapting, reusing, and recomposing these components for
+//! new designs" is the reuse property §IV-D calls out.
+
+pub mod axi;
+pub mod bram;
+pub mod compute;
+pub mod ppu;
+
+pub use axi::AxiBus;
+pub use bram::BramArray;
+pub use compute::{SaArrayModel, VmUnitModel};
+pub use ppu::PpuModel;

@@ -1,0 +1,57 @@
+//! Post-Processing Unit model (paper §IV-D3).
+//!
+//! The PPU moved gemmlowp's "unpacking" (bias add, fixed-point
+//! scaling, activation, narrowing to 8 bits) from the CPU into the
+//! fabric, cutting output transfer bytes by 4x and giving the §IV-E2
+//! end-to-end speedups. The VM design instantiates one small PPU per
+//! GEMM unit plus an output crossbar; SA uses a single wide PPU.
+
+/// Throughput model of one PPU instance.
+#[derive(Debug, Clone, Copy)]
+pub struct PpuModel {
+    /// Output values requantized per cycle.
+    pub lanes: usize,
+    /// Pipeline latency in cycles (bias+SRDHM+shift+clamp stages).
+    pub pipeline_latency: u64,
+}
+
+impl PpuModel {
+    /// The per-GEMM-unit PPU of the VM design.
+    pub fn vm_small() -> Self {
+        PpuModel {
+            lanes: 4,
+            pipeline_latency: 5,
+        }
+    }
+
+    /// The single wide PPU of the SA design.
+    pub fn sa_wide() -> Self {
+        PpuModel {
+            lanes: 16,
+            pipeline_latency: 5,
+        }
+    }
+
+    /// Cycles to post-process `outputs` values.
+    pub fn cycles(&self, outputs: u64) -> u64 {
+        outputs.div_ceil(self.lanes as u64) + self.pipeline_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput() {
+        let p = PpuModel::vm_small();
+        assert_eq!(p.cycles(16), 4 + 5);
+        let w = PpuModel::sa_wide();
+        assert_eq!(w.cycles(256), 16 + 5);
+    }
+
+    #[test]
+    fn wide_ppu_faster() {
+        assert!(PpuModel::sa_wide().cycles(1024) < PpuModel::vm_small().cycles(1024));
+    }
+}

@@ -1,0 +1,22 @@
+//! The case-study accelerator designs (paper §IV), built on the
+//! [`crate::sysc`] TLM kernel from the shared component library.
+//!
+//! * [`vm`] — the Vector-MAC design: 4 GEMM units of 4x4 MAC tiles
+//!   with adder trees, per-unit PPUs and an output crossbar (Fig. 3).
+//! * [`sa`] — the Systolic-Array design: one output-stationary
+//!   `dim x dim` MAC array fed by 2*dim data queues, single wide PPU
+//!   (Fig. 4); `dim` in {4, 8, 16} (§IV-E3).
+//! * [`components`] — the §IV-D component models both compose.
+//!
+//! Both designs implement [`types::GemmAccel`]: the driver hands them
+//! [`types::GemmRequest`]s and gets bit-exact outputs plus an
+//! [`types::AccelReport`] of cycles/bytes/utilization per component.
+
+pub mod components;
+pub mod sa;
+pub mod types;
+pub mod vm;
+
+pub use sa::{SaConfig, SaDesign};
+pub use types::{AccelReport, ExecMode, GemmAccel, GemmRequest, GemmResult};
+pub use vm::{VmConfig, VmDesign};

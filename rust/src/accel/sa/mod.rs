@@ -1,0 +1,693 @@
+//! The Systolic-Array (SA) accelerator design — paper §IV-C2, Figure 4.
+//!
+//! A single `dim x dim` output-stationary MAC array: weights move
+//! vertically and inputs horizontally, one hop per step; each PE
+//! accumulates one output value. The boundary rows/columns are fed by
+//! `2*dim` data queues which the Scheduler fills — in the improved
+//! design (§IV-E1), in parallel with array compute, eliminating MAC
+//! idle time. A single wide PPU post-processes completed `dim x dim`
+//! tiles and streams them to the output DMA.
+//!
+//! TLM granularity: one job = (`dim` output rows) x (all N columns),
+//! i.e. a stripe of output tiles processed back to back by the array.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::accel::components::{AxiBus, BramArray, PpuModel, SaArrayModel};
+use crate::accel::types::{AccelReport, ExecMode, GemmAccel, GemmRequest, GemmResult};
+use crate::gemm;
+use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Wake};
+
+/// Configuration of an SA design instance.
+#[derive(Debug, Clone)]
+pub struct SaConfig {
+    pub array: SaArrayModel,
+    pub clock_mhz: f64,
+    /// Global buffers (SA keeps both weights and inputs global, §IV-D1).
+    pub global_weight_buf: BramArray,
+    pub global_input_buf: BramArray,
+    pub axi: AxiBus,
+    /// None = CPU-side post-processing (int32 outputs).
+    pub ppu: Option<PpuModel>,
+    /// Stripe-job FIFO depth between scheduler and array.
+    pub job_fifo_depth: usize,
+}
+
+impl SaConfig {
+    /// The paper's final 16x16 design.
+    pub fn paper() -> Self {
+        Self::with_dim(16)
+    }
+
+    /// §IV-E3 size sweep: 4x4, 8x8 or 16x16.
+    pub fn with_dim(dim: usize) -> Self {
+        SaConfig {
+            array: SaArrayModel::paper(dim),
+            clock_mhz: 100.0,
+            global_weight_buf: BramArray::new(8, 8, 256 * 1024),
+            global_input_buf: BramArray::new(8, 8, 128 * 1024),
+            axi: AxiBus::pynq_all_links(),
+            ppu: Some(PpuModel {
+                lanes: dim,
+                pipeline_latency: 5,
+            }),
+            job_fifo_depth: 2,
+        }
+    }
+
+    /// §IV-E1 ablation: queues refilled serially with compute.
+    pub fn serial_fill(dim: usize) -> Self {
+        let mut c = Self::with_dim(dim);
+        c.array.parallel_fill = false;
+        c
+    }
+
+    /// §IV-E2-style ablation for SA: no on-fabric PPU.
+    pub fn no_ppu() -> Self {
+        SaConfig {
+            ppu: None,
+            ..Self::paper()
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Job {
+    id: usize,
+    m0: usize,
+    m1: usize,
+}
+
+#[derive(Debug, Clone)]
+enum Msg {
+    Start,
+    DmaChunk { bytes: u64 },
+    TryDispatch,
+    ArrayWake,
+    ArrayDone { job: usize },
+    PpuWake,
+    PpuDone { job: usize },
+    DmaOut { job: usize },
+    DrainCheck,
+    Token(usize),
+}
+
+struct Run {
+    req: GemmRequest,
+    mode: ExecMode,
+    cfg: SaConfig,
+    clock: Clock,
+    jobs: Vec<Job>,
+    next_job: usize,
+    pending_acc: Vec<Option<Vec<i32>>>,
+    output: Vec<i8>,
+    raw_acc: Option<Vec<i32>>,
+    bytes_needed: u64,
+    bytes_arrived: u64,
+    weight_bytes: u64,
+    completed: usize,
+    report: AccelReport,
+}
+
+impl Run {
+    fn gate_ok(&self, job_idx: usize) -> bool {
+        if self.mode == ExecMode::Simulation {
+            return true;
+        }
+        let frac = (job_idx + 1) as f64 / self.jobs.len() as f64;
+        let need =
+            self.weight_bytes as f64 + frac * (self.bytes_needed - self.weight_bytes) as f64;
+        (self.bytes_arrived as f64) >= need - 1e-9
+    }
+}
+
+type Shared = Rc<RefCell<Run>>;
+
+/// Input handler: DMA in + distribution to the global buffers.
+struct InputHandler {
+    run: Shared,
+    sched: usize,
+    stats: ModuleStats,
+}
+
+impl Module<Msg> for InputHandler {
+    fn name(&self) -> &str {
+        "input_handler"
+    }
+    fn stats(&self) -> Option<&ModuleStats> {
+        Some(&self.stats)
+    }
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::Start => {
+                let (mode, bytes, chunk, clock) = {
+                    let r = self.run.borrow();
+                    (r.mode, r.bytes_needed, r.cfg.axi.chunk_bytes(), r.clock)
+                };
+                match mode {
+                    ExecMode::Simulation => {
+                        self.run.borrow_mut().bytes_arrived = bytes;
+                        ctx.schedule(SimTime::ZERO, self.sched, Msg::TryDispatch);
+                    }
+                    ExecMode::HardwareEval => {
+                        let mut sent = 0u64;
+                        let mut t = SimTime::ZERO;
+                        let me = ctx.current_module();
+                        while sent < bytes {
+                            let sz = chunk.min(bytes - sent);
+                            let cycles = self.run.borrow().cfg.axi.transfer_cycles(sz);
+                            t += clock.cycles(cycles);
+                            sent += sz;
+                            ctx.schedule(t, me, Msg::DmaChunk { bytes: sz });
+                        }
+                        let mut r = self.run.borrow_mut();
+                        r.report.dma_in_cycles = clock.cycles_for(t);
+                        r.report.bytes_in = bytes;
+                    }
+                }
+            }
+            Msg::DmaChunk { bytes } => {
+                self.run.borrow_mut().bytes_arrived += bytes;
+                self.stats.add_transaction(bytes);
+                ctx.schedule(SimTime::ZERO, self.sched, Msg::TryDispatch);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Scheduler (§IV-D2): feeds stripe jobs (and, inside the array model,
+/// the 2*dim data queues) to the systolic array.
+struct Scheduler {
+    run: Shared,
+    array_fifo: usize,
+    array_mod: usize,
+    stats: ModuleStats,
+}
+
+impl Module<Msg> for Scheduler {
+    fn name(&self) -> &str {
+        "scheduler"
+    }
+    fn stats(&self) -> Option<&ModuleStats> {
+        Some(&self.stats)
+    }
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        if !matches!(msg, Msg::TryDispatch) {
+            return;
+        }
+        loop {
+            let job = {
+                let r = self.run.borrow();
+                if r.next_job >= r.jobs.len() || !r.gate_ok(r.next_job) {
+                    return;
+                }
+                r.jobs[r.next_job]
+            };
+            if ctx.fifo_is_full(self.array_fifo) {
+                return;
+            }
+            {
+                let mut r = self.run.borrow_mut();
+                // queue-fill reads: the scheduler streams the stripe's
+                // weights and the whole input matrix through the queues
+                let stripe_w = ((job.m1 - job.m0) * r.req.k) as u64;
+                r.report.global_buffer_reads += stripe_w;
+                r.next_job += 1;
+            }
+            self.stats.add_transaction(0);
+            let ok = ctx.fifo_push(self.array_fifo, Msg::Token(job.id));
+            debug_assert!(ok);
+            ctx.schedule(SimTime::ZERO, self.array_mod, Msg::ArrayWake);
+        }
+    }
+}
+
+/// The systolic array: processes one stripe job at a time.
+struct SystolicArray {
+    run: Shared,
+    in_fifo: usize,
+    out_fifo: usize,
+    ppu_mod: usize,
+    sched_mod: usize,
+    busy: bool,
+    parked: Option<usize>,
+    stats: ModuleStats,
+}
+
+impl SystolicArray {
+    fn try_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.busy || self.parked.is_some() {
+            return;
+        }
+        let Some(Msg::Token(job_id)) = ctx.fifo_pop(self.in_fifo) else {
+            return;
+        };
+        ctx.schedule(SimTime::ZERO, self.sched_mod, Msg::TryDispatch);
+        let (cycles, dur) = {
+            let r = self.run.borrow();
+            let c = r.cfg.array.stripe_compute_cycles(r.req.k, r.req.n);
+            (c, r.clock.cycles(c))
+        };
+        self.busy = true;
+        self.stats.busy_for(ctx.now(), dur, cycles);
+        ctx.trace.record(ctx.now(), "systolic_array", || {
+            format!("stripe {job_id} ({cycles} cyc)")
+        });
+        ctx.schedule_self(dur, Msg::ArrayDone { job: job_id });
+    }
+}
+
+impl Module<Msg> for SystolicArray {
+    fn name(&self) -> &str {
+        "systolic_array"
+    }
+    fn stats(&self) -> Option<&ModuleStats> {
+        Some(&self.stats)
+    }
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::ArrayWake => {
+                if let Some(job) = self.parked.take() {
+                    if ctx.fifo_push(self.out_fifo, Msg::Token(job)) {
+                        ctx.schedule(SimTime::ZERO, self.ppu_mod, Msg::PpuWake);
+                    } else {
+                        self.parked = Some(job);
+                        return;
+                    }
+                }
+                self.try_start(ctx);
+            }
+            Msg::ArrayDone { job } => {
+                {
+                    let mut r = self.run.borrow_mut();
+                    let j = r.jobs[job];
+                    let (k, n) = (r.req.k, r.req.n);
+                    let mut acc = vec![0i32; (j.m1 - j.m0) * n];
+                    gemm::accumulate_rows(&r.req.weights, &r.req.inputs, j.m0, j.m1, k, n, &mut acc);
+                    let cycles = r.cfg.array.stripe_compute_cycles(k, n);
+                    r.report.compute_cycles += cycles;
+                    r.pending_acc[job] = Some(acc);
+                }
+                self.busy = false;
+                if ctx.fifo_push(self.out_fifo, Msg::Token(job)) {
+                    ctx.schedule(SimTime::ZERO, self.ppu_mod, Msg::PpuWake);
+                    self.try_start(ctx);
+                } else {
+                    self.parked = Some(job);
+                    self.run.borrow_mut().report.stall_cycles += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The single wide PPU (§IV-D3).
+struct Ppu {
+    run: Shared,
+    model: Option<PpuModel>,
+    in_fifo: usize,
+    array_mod: usize,
+    dma_mod: usize,
+    busy: bool,
+    stats: ModuleStats,
+}
+
+impl Ppu {
+    fn try_start(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.busy {
+            return;
+        }
+        let Some(Msg::Token(job_id)) = ctx.fifo_pop(self.in_fifo) else {
+            return;
+        };
+        ctx.schedule(SimTime::ZERO, self.array_mod, Msg::ArrayWake);
+        let (cycles, dur) = {
+            let r = self.run.borrow();
+            let j = r.jobs[job_id];
+            let outputs = ((j.m1 - j.m0) * r.req.n) as u64;
+            let c = match &self.model {
+                Some(p) => p.cycles(outputs),
+                None => 1,
+            };
+            (c, r.clock.cycles(c))
+        };
+        self.busy = true;
+        self.stats.busy_for(ctx.now(), dur, cycles);
+        ctx.schedule_self(dur, Msg::PpuDone { job: job_id });
+    }
+}
+
+impl Module<Msg> for Ppu {
+    fn name(&self) -> &str {
+        "ppu"
+    }
+    fn stats(&self) -> Option<&ModuleStats> {
+        Some(&self.stats)
+    }
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::PpuWake => self.try_start(ctx),
+            Msg::PpuDone { job } => {
+                {
+                    let mut r = self.run.borrow_mut();
+                    let j = r.jobs[job];
+                    let n = r.req.n;
+                    let acc = r.pending_acc[job].take().expect("acc parked");
+                    if self.model.is_some() {
+                        let mut block = vec![0i8; acc.len()];
+                        let params = r.req.params.clone();
+                        gemm::ppu_rows(&acc, &params, j.m0, j.m1, n, &mut block);
+                        r.output[j.m0 * n..j.m1 * n].copy_from_slice(&block);
+                    } else {
+                        let raw = r.raw_acc.as_mut().expect("raw buffer");
+                        raw[j.m0 * n..j.m1 * n].copy_from_slice(&acc);
+                    }
+                }
+                self.busy = false;
+                ctx.schedule(SimTime::ZERO, self.dma_mod, Msg::DmaOut { job });
+                self.try_start(ctx);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Output DMA + completion detection.
+struct OutputDma {
+    run: Shared,
+    busy_until: SimTime,
+    stats: ModuleStats,
+}
+
+impl Module<Msg> for OutputDma {
+    fn name(&self) -> &str {
+        "output_dma"
+    }
+    fn stats(&self) -> Option<&ModuleStats> {
+        Some(&self.stats)
+    }
+    fn handle(&mut self, msg: Msg, ctx: &mut Ctx<'_, Msg>) {
+        match msg {
+            Msg::DmaOut { job } => {
+                let done_at;
+                let all_done;
+                {
+                    let mut r = self.run.borrow_mut();
+                    let j = r.jobs[job];
+                    let bytes =
+                        ((j.m1 - j.m0) * r.req.n) as u64 * if r.cfg.ppu.is_some() { 1 } else { 4 };
+                    r.report.bytes_out += bytes;
+                    match r.mode {
+                        ExecMode::Simulation => done_at = ctx.now(),
+                        ExecMode::HardwareEval => {
+                            let cycles = r.cfg.axi.transfer_cycles(bytes);
+                            let clock = r.clock;
+                            let start = self.busy_until.max(ctx.now());
+                            let dur = clock.cycles(cycles);
+                            self.busy_until = start + dur;
+                            r.report.dma_out_cycles += cycles;
+                            self.stats.busy_for(start, dur, cycles);
+                            done_at = self.busy_until;
+                        }
+                    }
+                    r.completed += 1;
+                    all_done = r.completed == r.jobs.len();
+                    if all_done {
+                        r.report.total_time = done_at;
+                    }
+                }
+                if all_done {
+                    let delay = done_at.saturating_sub(ctx.now());
+                    ctx.schedule_self(delay, Msg::DrainCheck);
+                }
+            }
+            Msg::DrainCheck => ctx.stop(),
+            _ => {}
+        }
+    }
+}
+
+/// The SA accelerator design (implements [`GemmAccel`]).
+#[derive(Debug, Clone)]
+pub struct SaDesign {
+    pub cfg: SaConfig,
+}
+
+impl SaDesign {
+    pub fn new(cfg: SaConfig) -> Self {
+        SaDesign { cfg }
+    }
+
+    pub fn paper() -> Self {
+        Self::new(SaConfig::paper())
+    }
+
+    pub fn with_dim(dim: usize) -> Self {
+        Self::new(SaConfig::with_dim(dim))
+    }
+}
+
+impl GemmAccel for SaDesign {
+    fn name(&self) -> &str {
+        "sa"
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::from_mhz(self.cfg.clock_mhz)
+    }
+
+    fn weight_buffer_bytes(&self) -> usize {
+        self.cfg.global_weight_buf.capacity_bytes
+    }
+
+    fn has_ppu(&self) -> bool {
+        self.cfg.ppu.is_some()
+    }
+
+    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult {
+        let clock = self.clock();
+        let dim = self.cfg.array.dim;
+        let jobs: Vec<Job> = (0..req.m.div_ceil(dim))
+            .map(|s| Job {
+                id: s,
+                m0: s * dim,
+                m1: ((s + 1) * dim).min(req.m),
+            })
+            .collect();
+        let n_jobs = jobs.len();
+        let weight_bytes = if req.weights_resident {
+            0
+        } else {
+            req.weight_bytes()
+        };
+        let run = Rc::new(RefCell::new(Run {
+            req: req.clone(),
+            mode,
+            cfg: self.cfg.clone(),
+            clock,
+            jobs,
+            next_job: 0,
+            pending_acc: (0..n_jobs).map(|_| None).collect(),
+            output: vec![0i8; req.m * req.n],
+            raw_acc: if self.cfg.ppu.is_none() {
+                Some(vec![0i32; req.m * req.n])
+            } else {
+                None
+            },
+            bytes_needed: weight_bytes + req.input_bytes(),
+            bytes_arrived: 0,
+            weight_bytes,
+            completed: 0,
+            report: AccelReport::default(),
+        }));
+
+        // ids: 0 dma, 1 ppu, 2 array, 3 sched, 4 ih
+        let mut sim: Simulator<Msg> = Simulator::new();
+        let array_fifo = sim.add_fifo(self.cfg.job_fifo_depth, None, None);
+        let ppu_fifo = sim.add_fifo(2, None, None);
+        let dma = sim.add_module(Box::new(OutputDma {
+            run: run.clone(),
+            busy_until: SimTime::ZERO,
+            stats: ModuleStats::default(),
+        }));
+        let ppu = sim.add_module(Box::new(Ppu {
+            run: run.clone(),
+            model: self.cfg.ppu,
+            in_fifo: ppu_fifo,
+            array_mod: 2,
+            dma_mod: dma,
+            busy: false,
+            stats: ModuleStats::default(),
+        }));
+        let array = sim.add_module(Box::new(SystolicArray {
+            run: run.clone(),
+            in_fifo: array_fifo,
+            out_fifo: ppu_fifo,
+            ppu_mod: ppu,
+            sched_mod: 3,
+            busy: false,
+            parked: None,
+            stats: ModuleStats::default(),
+        }));
+        assert_eq!(array, 2);
+        let sched = sim.add_module(Box::new(Scheduler {
+            run: run.clone(),
+            array_fifo,
+            array_mod: array,
+            stats: ModuleStats::default(),
+        }));
+        assert_eq!(sched, 3);
+        let ih = sim.add_module(Box::new(InputHandler {
+            run: run.clone(),
+            sched,
+            stats: ModuleStats::default(),
+        }));
+        sim.set_fifo_wakes(
+            array_fifo,
+            Some(Wake {
+                module: array,
+                payload: Msg::ArrayWake,
+            }),
+            Some(Wake {
+                module: sched,
+                payload: Msg::TryDispatch,
+            }),
+        );
+        sim.set_fifo_wakes(
+            ppu_fifo,
+            Some(Wake {
+                module: ppu,
+                payload: Msg::PpuWake,
+            }),
+            Some(Wake {
+                module: array,
+                payload: Msg::ArrayWake,
+            }),
+        );
+
+        sim.schedule(SimTime::ZERO, ih, Msg::Start);
+        let end = sim.run();
+
+        let modules = sim.report();
+        drop(sim); // release the modules' Rc clones of the run state
+        let mut run = Rc::try_unwrap(run)
+            .unwrap_or_else(|_| panic!("run state still shared"))
+            .into_inner();
+        if run.report.total_time == SimTime::ZERO {
+            run.report.total_time = end;
+        }
+        run.report.total_cycles = clock.cycles_at(run.report.total_time);
+        run.report.modules = modules;
+        assert_eq!(run.completed, run.jobs.len(), "all jobs must drain");
+        GemmResult {
+            output: run.output,
+            raw_acc: run.raw_acc,
+            report: run.report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::quant::quantize_multiplier;
+    use crate::gemm::QGemmParams;
+
+    fn request(m: usize, k: usize, n: usize, seed: u64) -> GemmRequest {
+        let mut st = seed.max(1);
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let (mult, shift) = quantize_multiplier(0.019);
+        GemmRequest::new(m, k, n, w, x, QGemmParams::uniform(m, -25, mult, shift))
+    }
+
+    #[test]
+    fn sa_output_matches_cpu_gemm() {
+        let req = request(32, 48, 40, 5);
+        let res = SaDesign::paper().run(&req, ExecMode::Simulation);
+        let cpu = gemm::qgemm(&req.weights, &req.inputs, 32, 48, 40, &req.params, 1);
+        assert_eq!(res.output, cpu);
+    }
+
+    #[test]
+    fn sa_sizes_all_correct() {
+        for dim in [4, 8, 16] {
+            let req = request(24, 16, 20, dim as u64);
+            let res = SaDesign::with_dim(dim).run(&req, ExecMode::Simulation);
+            let cpu = gemm::qgemm(&req.weights, &req.inputs, 24, 16, 20, &req.params, 1);
+            assert_eq!(res.output, cpu, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn bigger_array_is_faster() {
+        let req = request(128, 256, 256, 3);
+        let c4 = SaDesign::with_dim(4).run(&req, ExecMode::Simulation).report.total_cycles;
+        let c8 = SaDesign::with_dim(8).run(&req, ExecMode::Simulation).report.total_cycles;
+        let c16 = SaDesign::with_dim(16).run(&req, ExecMode::Simulation).report.total_cycles;
+        assert!(c4 > c8 && c8 > c16, "{c4} {c8} {c16}");
+        // compute-bound scaling is ~4x per size doubling
+        let r = c8 as f64 / c16 as f64;
+        assert!((2.0..=4.6).contains(&r), "8->16 ratio {r}");
+    }
+
+    #[test]
+    fn serial_fill_slower_than_parallel() {
+        let req = request(64, 128, 128, 7);
+        let par = SaDesign::paper().run(&req, ExecMode::Simulation);
+        let ser = SaDesign::new(SaConfig::serial_fill(16)).run(&req, ExecMode::Simulation);
+        assert!(ser.report.total_cycles > par.report.total_cycles);
+        assert_eq!(ser.output, par.output);
+    }
+
+    #[test]
+    fn sa_hardware_mode_pays_transfers() {
+        let req = request(32, 64, 64, 9);
+        let sim = SaDesign::paper().run(&req, ExecMode::Simulation);
+        let hw = SaDesign::paper().run(&req, ExecMode::HardwareEval);
+        assert_eq!(sim.output, hw.output);
+        assert!(hw.report.total_cycles > sim.report.total_cycles);
+        assert!(hw.report.dma_in_cycles > 0);
+    }
+
+    #[test]
+    fn sa_no_ppu_raw_output() {
+        let req = request(16, 16, 16, 11);
+        let res = SaDesign::new(SaConfig::no_ppu()).run(&req, ExecMode::Simulation);
+        let raw = res.raw_acc.expect("raw acc");
+        let mut acc = vec![0i32; 16 * 16];
+        gemm::accumulate_rows(&req.weights, &req.inputs, 0, 16, 16, 16, &mut acc);
+        assert_eq!(raw, acc);
+    }
+
+    #[test]
+    fn sa_odd_shapes() {
+        for (m, k, n) in [(1, 1, 1), (17, 3, 5), (33, 7, 2), (15, 9, 31)] {
+            let req = request(m, k, n, (m + n) as u64);
+            let res = SaDesign::paper().run(&req, ExecMode::Simulation);
+            let cpu = gemm::qgemm(&req.weights, &req.inputs, m, k, n, &req.params, 1);
+            assert_eq!(res.output, cpu, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn sim_vs_hw_internal_cycles_close() {
+        // The A1 experiment at unit level: accelerator-internal compute
+        // cycles agree between the two modes (paper: >99%).
+        let req = request(64, 96, 128, 13);
+        let sim = SaDesign::paper().run(&req, ExecMode::Simulation);
+        let hw = SaDesign::paper().run(&req, ExecMode::HardwareEval);
+        let a = sim.report.compute_cycles as f64;
+        let b = hw.report.compute_cycles as f64;
+        assert!((a - b).abs() / a < 0.01, "sim {a} hw {b}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Shared accelerator-facing types: the GEMM transaction the driver
+//! offloads, execution modes, and the per-run report.
+
+use std::sync::Arc;
+
+use crate::gemm::QGemmParams;
+use crate::sysc::{ModuleStats, SimTime};
+
+/// Execution mode of an accelerator run — the two SECDA design loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// SystemC-simulation loop: off-chip transfers are NOT modeled
+    /// (paper §III-C/§III-E keeps simulation cheap by skipping them).
+    Simulation,
+    /// Hardware-evaluation loop: AXI DMA in/out transfers are modeled,
+    /// exposing the off-chip bottlenecks simulation is blind to
+    /// (paper §III-D; in the real flow this runs on the FPGA).
+    HardwareEval,
+}
+
+/// One GEMM offload request (the paper's Fig. 2 transaction):
+/// `out[i8; m*n] = PPU(W[m,k] @ X[k,n])`.
+#[derive(Debug, Clone)]
+pub struct GemmRequest {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Row-major `m x k` weights (driver-reshaped accelerator layout).
+    pub weights: Arc<Vec<i8>>,
+    /// Row-major `k x n` im2col activations.
+    pub inputs: Arc<Vec<i8>>,
+    pub params: Arc<QGemmParams>,
+    /// Weights already resident in accelerator global buffers (layer
+    /// weights are reused across an inference; the driver preloads
+    /// them once). When false, the weight DMA is part of the run.
+    pub weights_resident: bool,
+}
+
+impl GemmRequest {
+    pub fn new(m: usize, k: usize, n: usize, weights: Vec<i8>, inputs: Vec<i8>, params: QGemmParams) -> Self {
+        Self::from_shared(m, k, n, Arc::new(weights), Arc::new(inputs), params)
+    }
+
+    /// Zero-copy variant: the driver shares one DMA input buffer across
+    /// all tiling chunks of a layer.
+    pub fn from_shared(
+        m: usize,
+        k: usize,
+        n: usize,
+        weights: Arc<Vec<i8>>,
+        inputs: Arc<Vec<i8>>,
+        params: QGemmParams,
+    ) -> Self {
+        assert_eq!(weights.len(), m * k);
+        assert_eq!(inputs.len(), k * n);
+        GemmRequest {
+            m,
+            k,
+            n,
+            weights,
+            inputs,
+            params: Arc::new(params),
+            weights_resident: false,
+        }
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        (self.m * self.k) as u64
+    }
+    pub fn input_bytes(&self) -> u64 {
+        (self.k * self.n) as u64
+    }
+    /// Output bytes as transferred: int8 with PPU on-accelerator,
+    /// int32 when post-processing stays on the CPU (4x, §IV-E2).
+    pub fn output_bytes(&self, ppu_on_accel: bool) -> u64 {
+        let base = (self.m * self.n) as u64;
+        if ppu_on_accel {
+            base
+        } else {
+            base * 4
+        }
+    }
+    pub fn macs(&self) -> u64 {
+        crate::gemm::mac_count(self.m, self.k, self.n)
+    }
+}
+
+/// Result of simulating one GEMM on an accelerator design.
+#[derive(Debug, Clone)]
+pub struct GemmResult {
+    /// Functional output, bit-exact vs [`crate::gemm::qgemm`]:
+    /// int8 `m x n` when the PPU runs on the accelerator.
+    pub output: Vec<i8>,
+    /// Raw int32 accumulators (only when the PPU is disabled and
+    /// unpacking falls back to the CPU, §IV-E2 ablation).
+    pub raw_acc: Option<Vec<i32>>,
+    pub report: AccelReport,
+}
+
+/// Per-run performance report — the §III-C simulation metrics.
+#[derive(Debug, Clone, Default)]
+pub struct AccelReport {
+    /// End-to-end accelerator wall time for this GEMM.
+    pub total_time: SimTime,
+    /// Total fabric cycles (at the design clock).
+    pub total_cycles: u64,
+    /// Cycles the compute units spent doing MACs.
+    pub compute_cycles: u64,
+    /// Cycles loading weight tiles from global buffers.
+    pub weight_load_cycles: u64,
+    /// Compute-unit cycles lost to starvation/backpressure.
+    pub stall_cycles: u64,
+    /// DMA cycles (0 in Simulation mode).
+    pub dma_in_cycles: u64,
+    pub dma_out_cycles: u64,
+    /// Bytes over the AXI links.
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Reads issued against the global weight buffer (the §IV-E2
+    /// scheduler ablation observable: 4x fewer with the Scheduler).
+    pub global_buffer_reads: u64,
+    /// Per-module busy/utilization stats (name, stats).
+    pub modules: Vec<(String, ModuleStats)>,
+}
+
+impl AccelReport {
+    /// Utilization of the compute units over the run.
+    pub fn compute_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.compute_cycles as f64 / self.total_cycles as f64
+    }
+
+    /// Merge a sub-report (e.g. one tiling chunk) into an aggregate.
+    pub fn accumulate(&mut self, other: &AccelReport) {
+        self.total_time += other.total_time;
+        self.total_cycles += other.total_cycles;
+        self.compute_cycles += other.compute_cycles;
+        self.weight_load_cycles += other.weight_load_cycles;
+        self.stall_cycles += other.stall_cycles;
+        self.dma_in_cycles += other.dma_in_cycles;
+        self.dma_out_cycles += other.dma_out_cycles;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.global_buffer_reads += other.global_buffer_reads;
+    }
+}
+
+/// A GEMM accelerator design that the driver can target. Both case
+/// study designs (VM, SA) and the VTA comparison model implement this.
+pub trait GemmAccel {
+    fn name(&self) -> &str;
+    /// Simulate one GEMM request end to end.
+    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult;
+    /// Fabric clock of the design.
+    fn clock(&self) -> crate::sysc::Clock;
+    /// Capacity of the on-chip global weight buffer, bytes (drives the
+    /// driver's weight-tiling decisions, §IV-E4).
+    fn weight_buffer_bytes(&self) -> usize;
+    /// Whether post-processing runs on the accelerator (PPU present).
+    fn has_ppu(&self) -> bool;
+    /// Largest reduction depth K a single offload can hold natively
+    /// (None = unlimited, e.g. the SA design streams K).
+    fn max_k(&self) -> Option<usize> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> GemmRequest {
+        GemmRequest::new(
+            4,
+            3,
+            2,
+            vec![1; 12],
+            vec![2; 6],
+            QGemmParams::uniform(4, 0, 1 << 30, 0),
+        )
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let r = req();
+        assert_eq!(r.weight_bytes(), 12);
+        assert_eq!(r.input_bytes(), 6);
+        assert_eq!(r.output_bytes(true), 8);
+        assert_eq!(r.output_bytes(false), 32); // int32 fallback is 4x
+        assert_eq!(r.macs(), 24);
+    }
+
+    #[test]
+    fn report_accumulate() {
+        let mut a = AccelReport {
+            total_cycles: 10,
+            compute_cycles: 5,
+            ..Default::default()
+        };
+        let b = AccelReport {
+            total_cycles: 30,
+            compute_cycles: 15,
+            bytes_in: 7,
+            ..Default::default()
+        };
+        a.accumulate(&b);
+        assert_eq!(a.total_cycles, 40);
+        assert_eq!(a.compute_cycles, 20);
+        assert_eq!(a.bytes_in, 7);
+        assert!((a.compute_utilization() - 0.5).abs() < 1e-12);
+    }
+}

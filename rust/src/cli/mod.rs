@@ -1,0 +1,6 @@
+//! CLI plumbing: the Table II harness, design descriptions, and the
+//! hand-rolled argument parsing used by `rust/src/main.rs` (the
+//! offline environment has no clap; see Cargo.toml).
+
+pub mod describe;
+pub mod table2;

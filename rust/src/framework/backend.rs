@@ -1,0 +1,146 @@
+//! The GEMM interception point (paper Fig. 2).
+//!
+//! TFLite convolutions execute through gemmlowp; SECDA modifies that
+//! call-site so a co-designed driver can offload the GEMM. Here the
+//! same seam is the [`GemmBackend`] trait: the conv/FC ops build the
+//! (W, im2col(X)) matrices and call whichever backend the session is
+//! configured with — the CPU baseline ([`CpuBackend`]) or an
+//! accelerator driver ([`crate::driver::AccelBackend`]).
+
+use crate::gemm::{self, QGemmParams};
+use crate::perf::CpuModel;
+use crate::sysc::SimTime;
+
+/// One GEMM offload request from a conv/FC layer.
+pub struct GemmTask<'a> {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Row-major `m x k` weight matrix.
+    pub weights: &'a [i8],
+    /// Row-major `k x n` im2col activation matrix.
+    pub inputs: &'a [i8],
+    pub params: &'a QGemmParams,
+    pub layer: &'a str,
+    /// True when the layer's weights are already resident on the
+    /// accelerator (preloaded once per session).
+    pub weights_resident: bool,
+}
+
+impl GemmTask<'_> {
+    pub fn macs(&self) -> u64 {
+        gemm::mac_count(self.m, self.k, self.n)
+    }
+}
+
+/// Modeled timing of one GEMM execution (PYNQ-Z1 time base).
+#[derive(Debug, Clone, Default)]
+pub struct GemmTiming {
+    /// Contribution to the layer's CONV wall time.
+    pub total: SimTime,
+    /// CPU-busy portion (prep + unpack + CPU compute).
+    pub cpu_time: SimTime,
+    /// Fabric-active time (drives the energy model).
+    pub accel_active: SimTime,
+    /// Named components for breakdown reporting (§V-B's 31%/69%).
+    pub breakdown: Vec<(&'static str, SimTime)>,
+}
+
+/// Where a conv/FC layer's GEMM runs.
+pub trait GemmBackend {
+    fn name(&self) -> &str;
+    /// Execute the GEMM, returning the int8 output (`m*n`) and the
+    /// modeled timing.
+    fn run_gemm(&mut self, task: &GemmTask<'_>) -> (Vec<i8>, GemmTiming);
+}
+
+/// The CPU-only baseline: gemmlowp on 1 or 2 A9 threads.
+pub struct CpuBackend {
+    pub model: CpuModel,
+    pub threads: usize,
+}
+
+impl CpuBackend {
+    pub fn new(threads: usize) -> Self {
+        CpuBackend {
+            model: CpuModel::pynq_a9(),
+            threads,
+        }
+    }
+}
+
+impl GemmBackend for CpuBackend {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    fn run_gemm(&mut self, task: &GemmTask<'_>) -> (Vec<i8>, GemmTiming) {
+        let out = gemm::qgemm(
+            task.weights,
+            task.inputs,
+            task.m,
+            task.k,
+            task.n,
+            task.params,
+            self.threads,
+        );
+        let t = self.model.gemm_time(task.macs(), self.threads);
+        let timing = GemmTiming {
+            total: t,
+            cpu_time: t,
+            accel_active: SimTime::ZERO,
+            breakdown: vec![("cpu_gemm", t)],
+        };
+        (out, timing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::quant::quantize_multiplier;
+
+    #[test]
+    fn cpu_backend_functional_and_timed() {
+        let (m, k, n) = (8, 16, 8);
+        let w: Vec<i8> = (0..m * k).map(|i| (i % 7) as i8 - 3).collect();
+        let x: Vec<i8> = (0..k * n).map(|i| (i % 11) as i8 - 5).collect();
+        let (mult, shift) = quantize_multiplier(0.1);
+        let p = QGemmParams::uniform(m, 5, mult, shift);
+        let mut b = CpuBackend::new(1);
+        let task = GemmTask {
+            m,
+            k,
+            n,
+            weights: &w,
+            inputs: &x,
+            params: &p,
+            layer: "t",
+            weights_resident: false,
+        };
+        let (out, timing) = b.run_gemm(&task);
+        assert_eq!(out, gemm::qgemm(&w, &x, m, k, n, &p, 1));
+        assert!(timing.total > SimTime::ZERO);
+        assert_eq!(timing.accel_active, SimTime::ZERO);
+    }
+
+    #[test]
+    fn two_threads_faster() {
+        let p = QGemmParams::uniform(64, 0, 1 << 30, 0);
+        let w = vec![1i8; 64 * 64];
+        let x = vec![1i8; 64 * 64];
+        let task = GemmTask {
+            m: 64,
+            k: 64,
+            n: 64,
+            weights: &w,
+            inputs: &x,
+            params: &p,
+            layer: "t",
+            weights_resident: false,
+        };
+        let t1 = CpuBackend::new(1).run_gemm(&task).1.total;
+        let t2 = CpuBackend::new(2).run_gemm(&task).1.total;
+        assert!(t2 < t1);
+    }
+}

@@ -1,0 +1,182 @@
+//! Model graphs: a DAG of quantized ops over tensor slots.
+
+use super::ops::Op;
+use super::quant::QParams;
+
+pub type SlotId = usize;
+
+/// One graph node: an op reading `inputs` slots and writing `output`.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<SlotId>,
+    pub output: SlotId,
+}
+
+/// A quantized inference graph (batch-1, NHWC).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub input_slot: SlotId,
+    pub output_slot: SlotId,
+    pub input_shape: Vec<usize>,
+    pub input_qp: QParams,
+    pub n_slots: usize,
+}
+
+impl Graph {
+    /// Validate DAG invariants: slots written before read, single
+    /// writer per slot, output reachable.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut written = vec![false; self.n_slots];
+        written[self.input_slot] = true;
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                if !written[inp] {
+                    return Err(format!(
+                        "node {} ({}) reads slot {} before it is written",
+                        i,
+                        node.op.name(),
+                        inp
+                    ));
+                }
+            }
+            if written[node.output] {
+                return Err(format!(
+                    "node {} ({}) rewrites slot {}",
+                    i,
+                    node.op.name(),
+                    node.output
+                ));
+            }
+            written[node.output] = true;
+        }
+        if !written[self.output_slot] {
+            return Err("output slot never written".into());
+        }
+        Ok(())
+    }
+
+    /// Number of conv layers (Table II CONV bucket members).
+    pub fn conv_layer_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_conv()).count()
+    }
+
+    /// Total weight bytes (model size).
+    pub fn weight_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv(c) => c.weights.len(),
+                Op::DwConv(d) => d.weights.len(),
+                Op::Fc(f) => f.weights.len(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Last slot each slot is read (or written) — for slot freeing.
+    pub fn last_use(&self) -> Vec<usize> {
+        let mut last = vec![0usize; self.n_slots];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                last[inp] = i;
+            }
+            last[node.output] = last[node.output].max(i);
+        }
+        last[self.output_slot] = self.nodes.len();
+        last
+    }
+}
+
+/// Incremental graph builder used by the model zoo.
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+    input_shape: Vec<usize>,
+    input_qp: QParams,
+    next_slot: SlotId,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, input_shape: Vec<usize>, input_qp: QParams) -> Self {
+        GraphBuilder {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            input_shape,
+            input_qp,
+            next_slot: 1, // slot 0 = graph input
+        }
+    }
+
+    pub fn input(&self) -> SlotId {
+        0
+    }
+
+    /// Append an op, returning its output slot.
+    pub fn push(&mut self, op: Op, inputs: Vec<SlotId>) -> SlotId {
+        let out = self.next_slot;
+        self.next_slot += 1;
+        self.nodes.push(Node {
+            op,
+            inputs,
+            output: out,
+        });
+        out
+    }
+
+    pub fn finish(self, output: SlotId) -> Graph {
+        let g = Graph {
+            name: self.name,
+            nodes: self.nodes,
+            input_slot: 0,
+            output_slot: output,
+            input_shape: self.input_shape,
+            input_qp: self.input_qp,
+            n_slots: self.next_slot,
+        };
+        g.validate().expect("graph invalid");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::ops::{GlobalAvgPool, SoftmaxOp};
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("tiny", vec![1, 4, 4, 2], QParams::new(0.05, 0));
+        let gap = b.push(
+            Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }),
+            vec![b.input()],
+        );
+        let sm = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![gap]);
+        b.finish(sm)
+    }
+
+    #[test]
+    fn builder_produces_valid_graph() {
+        let g = tiny();
+        assert_eq!(g.nodes.len(), 2);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.conv_layer_count(), 0);
+    }
+
+    #[test]
+    fn validation_catches_read_before_write() {
+        let mut g = tiny();
+        g.nodes[0].inputs = vec![2]; // slot 2 is written by node 1
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn last_use_tracks_reads() {
+        let g = tiny();
+        let last = g.last_use();
+        assert_eq!(last[0], 0); // input read by node 0
+        assert_eq!(last[1], 1); // gap out read by node 1
+        assert_eq!(last[2], g.nodes.len()); // output kept alive
+    }
+}

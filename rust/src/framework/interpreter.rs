@@ -1,0 +1,210 @@
+//! The graph interpreter — the runtime of the Application Framework.
+//!
+//! Executes a [`Graph`] node by node against a [`GemmBackend`] and
+//! produces the functional output plus an [`InferenceReport`] with the
+//! Table II quantities: CONV time, Non-CONV time, overall latency and
+//! energy, with per-layer breakdowns (§V-B analyses).
+
+use super::backend::GemmBackend;
+use super::graph::Graph;
+use super::ops::{OpCtx, TimeBucket};
+use super::tensor::Tensor;
+use crate::perf::{CpuModel, EnergyModel};
+use crate::sysc::SimTime;
+
+/// Table II row, plus breakdowns.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub model: String,
+    pub setup: String,
+    pub conv_time: SimTime,
+    pub nonconv_time: SimTime,
+    pub accel_active: SimTime,
+    pub energy_j: f64,
+    pub threads: usize,
+    /// (layer name, bucket, time) per node.
+    pub layers: Vec<(String, TimeBucket, SimTime)>,
+}
+
+impl InferenceReport {
+    pub fn overall(&self) -> SimTime {
+        self.conv_time + self.nonconv_time
+    }
+
+    /// §V-B: share of inference time in Non-CONV layers.
+    pub fn nonconv_share(&self) -> f64 {
+        self.nonconv_time.as_secs_f64() / self.overall().as_secs_f64()
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<14} {:<16} {:>8.0} ms {:>8.0} ms {:>8.0} ms {:>7.2} J",
+            self.model,
+            self.setup,
+            self.conv_time.as_ms_f64(),
+            self.nonconv_time.as_ms_f64(),
+            self.overall().as_ms_f64(),
+            self.energy_j
+        )
+    }
+}
+
+/// An inference session: a graph bound to a GEMM backend.
+pub struct Session<'a> {
+    pub graph: &'a Graph,
+    pub backend: &'a mut dyn GemmBackend,
+    pub threads: usize,
+    pub cpu: CpuModel,
+    pub energy: EnergyModel,
+    pub setup_label: String,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(graph: &'a Graph, backend: &'a mut dyn GemmBackend, threads: usize) -> Self {
+        let label = format!("CPU({}thr)+{}", threads, backend.name());
+        Session {
+            graph,
+            backend,
+            threads,
+            cpu: CpuModel::pynq_a9(),
+            energy: EnergyModel::pynq(),
+            setup_label: label,
+        }
+    }
+
+    /// Run one inference.
+    pub fn run(&mut self, input: &Tensor) -> (Tensor, InferenceReport) {
+        assert_eq!(
+            input.shape, self.graph.input_shape,
+            "input shape mismatch for {}",
+            self.graph.name
+        );
+        let mut slots: Vec<Option<Tensor>> = vec![None; self.graph.n_slots];
+        slots[self.graph.input_slot] = Some(input.clone());
+        let last_use = self.graph.last_use();
+
+        let mut ctx = OpCtx::new(self.backend, &self.cpu, self.threads);
+        for (i, node) in self.graph.nodes.iter().enumerate() {
+            let inputs: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|&s| slots[s].as_ref().expect("slot not ready"))
+                .collect();
+            let out = node.op.eval(&inputs, &mut ctx);
+            slots[node.output] = Some(out);
+            // free tensors whose last use has passed (arena hygiene)
+            for &s in &node.inputs {
+                if last_use[s] <= i && s != self.graph.output_slot {
+                    slots[s] = None;
+                }
+            }
+        }
+        let output = slots[self.graph.output_slot]
+            .take()
+            .expect("output not produced");
+
+        // per-inference framework overhead (interpreter dispatch,
+        // input/output (de)quantization — see perf::calib)
+        let fw = SimTime::ps(
+            (self.cpu.framework_overhead.as_ps() as f64 / self.cpu.eff_threads(self.threads))
+                as u64,
+        );
+        ctx.nonconv_time += fw;
+        ctx.layers
+            .push(("framework".to_string(), TimeBucket::NonConv, fw));
+
+        let overall = ctx.conv_time + ctx.nonconv_time;
+        let energy = self
+            .energy
+            .energy_j(overall, ctx.accel_active, self.threads);
+        let report = InferenceReport {
+            model: self.graph.name.clone(),
+            setup: self.setup_label.clone(),
+            conv_time: ctx.conv_time,
+            nonconv_time: ctx.nonconv_time,
+            accel_active: ctx.accel_active,
+            energy_j: energy,
+            threads: self.threads,
+            layers: ctx.layers,
+        };
+        (output, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::framework::graph::GraphBuilder;
+    use crate::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use crate::framework::quant::QParams;
+
+    fn tiny_convnet() -> Graph {
+        let mut st = 5u64;
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        let mut b = GraphBuilder::new("tiny_conv", vec![1, 8, 8, 3], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: "c1".into(),
+            cout: 8,
+            kh: 3,
+            kw: 3,
+            cin: 3,
+            stride: 1,
+            pad: 1,
+            weights: (0..8 * 27).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+            bias: vec![10; 8],
+            w_scales: vec![0.02; 8],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    #[test]
+    fn session_runs_and_reports() {
+        let g = tiny_convnet();
+        let mut backend = CpuBackend::new(1);
+        let mut sess = Session::new(&g, &mut backend, 1);
+        let input = Tensor::zeros(vec![1, 8, 8, 3], QParams::new(0.05, 0));
+        let (out, report) = sess.run(&input);
+        assert_eq!(out.shape, vec![1, 8]);
+        assert!(report.conv_time > SimTime::ZERO);
+        assert!(report.nonconv_time > SimTime::ZERO);
+        assert!(report.energy_j > 0.0);
+        assert_eq!(report.layers.len(), 4); // 3 ops + framework overhead
+    }
+
+    #[test]
+    fn deterministic_outputs() {
+        let g = tiny_convnet();
+        let input = Tensor::zeros(vec![1, 8, 8, 3], QParams::new(0.05, 0));
+        let mut b1 = CpuBackend::new(1);
+        let o1 = Session::new(&g, &mut b1, 1).run(&input).0;
+        let mut b2 = CpuBackend::new(2);
+        let o2 = Session::new(&g, &mut b2, 2).run(&input).0;
+        assert_eq!(o1.data, o2.data); // thread count never changes bits
+    }
+
+    #[test]
+    fn accel_session_matches_cpu_session() {
+        use crate::accel::SaDesign;
+        use crate::driver::{AccelBackend, DriverConfig};
+        let g = tiny_convnet();
+        let input = Tensor::zeros(vec![1, 8, 8, 3], QParams::new(0.05, 0));
+        let mut cb = CpuBackend::new(1);
+        let (o_cpu, _) = Session::new(&g, &mut cb, 1).run(&input);
+        let mut ab = AccelBackend::new(SaDesign::paper(), DriverConfig::default());
+        let (o_acc, rep) = Session::new(&g, &mut ab, 1).run(&input);
+        assert_eq!(o_cpu.data, o_acc.data);
+        assert!(rep.accel_active > SimTime::ZERO);
+    }
+}

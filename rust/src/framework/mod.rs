@@ -1,0 +1,13 @@
+//! The Application Framework (paper §III-A) — a TFLite-like quantized
+//! inference runtime: int8 tensors, the op set of the four benchmark
+//! models, a graph interpreter with per-op cost accounting, and the
+//! gemmlowp-style GEMM interception seam ([`backend`]) through which
+//! the SECDA driver offloads convolutions (Fig. 2).
+
+pub mod backend;
+pub mod graph;
+pub mod interpreter;
+pub mod models;
+pub mod ops;
+pub mod quant;
+pub mod tensor;

@@ -1,0 +1,144 @@
+//! InceptionV1 / GoogLeNet (Szegedy et al., 2015), int8-quantized:
+//! 7x7 stem, two stacked convs, nine inception modules with channel
+//! concat, GAP, FC-1001, softmax. All convs are standard (no
+//! depthwise), so nearly every CONV MAC is GEMM-acceleratable — which
+//! is why InceptionV1 shows the best speedups in Table II (§V-B).
+
+use crate::framework::graph::{Graph, GraphBuilder, SlotId};
+use crate::framework::ops::{
+    Activation, ConcatOp, GlobalAvgPool, Op, Pool2d, PoolKind, SoftmaxOp,
+};
+
+use super::{act_qp, conv, fc, input_qp};
+
+const M: &str = "inception_v1";
+
+/// (name, in, #1x1, #3x3red, #3x3, #5x5red, #5x5, pool_proj).
+pub const MODULES: [(&str, usize, usize, usize, usize, usize, usize, usize); 9] = [
+    ("3a", 192, 64, 96, 128, 16, 32, 32),
+    ("3b", 256, 128, 128, 192, 32, 96, 64),
+    ("4a", 480, 192, 96, 208, 16, 48, 64),
+    ("4b", 512, 160, 112, 224, 24, 64, 64),
+    ("4c", 512, 128, 128, 256, 24, 64, 64),
+    ("4d", 512, 112, 144, 288, 32, 64, 64),
+    ("4e", 528, 256, 160, 320, 32, 128, 128),
+    ("5a", 832, 256, 160, 320, 32, 128, 128),
+    ("5b", 832, 384, 192, 384, 48, 128, 128),
+];
+
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    b: &mut GraphBuilder,
+    x: SlotId,
+    name: &str,
+    cin: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    cp: usize,
+) -> SlotId {
+    let qp = act_qp();
+    let r = Activation::Relu;
+    // branch 1: 1x1
+    let b1 = b.push(
+        Op::Conv(conv(M, &format!("{name}_1x1"), cin, c1, 1, 1, 0, r, qp, qp)),
+        vec![x],
+    );
+    // branch 2: 1x1 reduce -> 3x3
+    let b2r = b.push(
+        Op::Conv(conv(M, &format!("{name}_3x3r"), cin, c3r, 1, 1, 0, r, qp, qp)),
+        vec![x],
+    );
+    let b2 = b.push(
+        Op::Conv(conv(M, &format!("{name}_3x3"), c3r, c3, 3, 1, 1, r, qp, qp)),
+        vec![b2r],
+    );
+    // branch 3: 1x1 reduce -> 5x5
+    let b3r = b.push(
+        Op::Conv(conv(M, &format!("{name}_5x5r"), cin, c5r, 1, 1, 0, r, qp, qp)),
+        vec![x],
+    );
+    let b3 = b.push(
+        Op::Conv(conv(M, &format!("{name}_5x5"), c5r, c5, 5, 1, 2, r, qp, qp)),
+        vec![b3r],
+    );
+    // branch 4: 3x3 maxpool -> 1x1 proj
+    let b4p = b.push(
+        Op::Pool(Pool2d {
+            name: format!("{name}_pool"),
+            kind: PoolKind::Max,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        }),
+        vec![x],
+    );
+    let b4 = b.push(
+        Op::Conv(conv(M, &format!("{name}_pool"), cin, cp, 1, 1, 0, r, qp, qp)),
+        vec![b4p],
+    );
+    b.push(
+        Op::Concat(ConcatOp {
+            name: format!("{name}_concat"),
+            out_qp: qp,
+        }),
+        vec![b1, b2, b3, b4],
+    )
+}
+
+fn maxpool(b: &mut GraphBuilder, x: SlotId, name: &str) -> SlotId {
+    b.push(
+        Op::Pool(Pool2d {
+            name: name.into(),
+            kind: PoolKind::Max,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        }),
+        vec![x],
+    )
+}
+
+pub fn build() -> Graph {
+    let qp = act_qp();
+    let r = Activation::Relu;
+    let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());
+    let mut x = b.input();
+    x = b.push(
+        Op::Conv(conv(M, "conv1", 3, 64, 7, 2, 3, r, input_qp(), qp)),
+        vec![x],
+    );
+    x = maxpool(&mut b, x, "pool1"); // 112 -> 56
+    x = b.push(Op::Conv(conv(M, "conv2_red", 64, 64, 1, 1, 0, r, qp, qp)), vec![x]);
+    x = b.push(Op::Conv(conv(M, "conv2", 64, 192, 3, 1, 1, r, qp, qp)), vec![x]);
+    x = maxpool(&mut b, x, "pool2"); // 56 -> 28
+    for (i, &(name, cin, c1, c3r, c3, c5r, c5, cp)) in MODULES.iter().enumerate() {
+        x = inception(&mut b, x, name, cin, c1, c3r, c3, c5r, c5, cp);
+        // maxpool after 3b (idx 1) and 4e (idx 6)
+        if i == 1 || i == 6 {
+            x = maxpool(&mut b, x, &format!("pool_{name}"));
+        }
+    }
+    x = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![x]);
+    x = b.push(Op::Fc(fc(M, "fc", 1024, 1001, qp)), vec![x]);
+    x = b.push(Op::Softmax(SoftmaxOp { name: "softmax".into() }), vec![x]);
+    b.finish(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let g = build();
+        // convs: 3 stem + 9 modules x 6 = 57, all GEMM-delegatable
+        assert_eq!(g.conv_layer_count(), 57);
+        // output channel sums: 5b -> 384+384+128+128 = 1024
+        let (_, cin, c1, _, c3, _, c5, cp) = MODULES[8];
+        assert_eq!(cin, 832);
+        assert_eq!(c1 + c3 + c5 + cp, 1024);
+    }
+}

@@ -1,0 +1,66 @@
+//! MobileNetV1 1.0/224 (Howard et al., 2017), int8-quantized: a stem
+//! conv followed by 13 depthwise-separable blocks, GAP, FC-1001,
+//! softmax. The 1x1 pointwise convs go through the GEMM seam; the
+//! depthwise convs stay on the CPU (as in TFLite/gemmlowp).
+
+use crate::framework::graph::{Graph, GraphBuilder};
+use crate::framework::ops::{Activation, GlobalAvgPool, Op, SoftmaxOp};
+
+use super::{act_qp, conv, dwconv, fc, input_qp};
+
+const M: &str = "mobilenet_v1";
+
+/// (in_ch, out_ch, dw stride) per separable block.
+pub const BLOCKS: [(usize, usize, usize); 13] = [
+    (32, 64, 1),
+    (64, 128, 2),
+    (128, 128, 1),
+    (128, 256, 2),
+    (256, 256, 1),
+    (256, 512, 2),
+    (512, 512, 1),
+    (512, 512, 1),
+    (512, 512, 1),
+    (512, 512, 1),
+    (512, 512, 1),
+    (512, 1024, 2),
+    (1024, 1024, 1),
+];
+
+pub fn build() -> Graph {
+    let qp = act_qp();
+    let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());
+    let mut x = b.input();
+    x = b.push(
+        Op::Conv(conv(M, "conv0", 3, 32, 3, 2, 1, Activation::Relu6, input_qp(), qp)),
+        vec![x],
+    );
+    for (i, &(cin, cout, s)) in BLOCKS.iter().enumerate() {
+        let i = i + 1;
+        x = b.push(
+            Op::DwConv(dwconv(M, &format!("dw{i}"), cin, s, Activation::Relu6, qp, qp)),
+            vec![x],
+        );
+        x = b.push(
+            Op::Conv(conv(M, &format!("pw{i}"), cin, cout, 1, 1, 0, Activation::Relu6, qp, qp)),
+            vec![x],
+        );
+    }
+    x = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![x]);
+    x = b.push(Op::Fc(fc(M, "fc", 1024, 1001, qp)), vec![x]);
+    x = b.push(Op::Softmax(SoftmaxOp { name: "softmax".into() }), vec![x]);
+    b.finish(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let g = build();
+        // stem + 13 dw + 13 pw convs; GAP + FC + softmax non-conv
+        assert_eq!(g.conv_layer_count(), 1 + 26);
+        assert_eq!(g.nodes.len(), 27 + 3);
+    }
+}

@@ -1,0 +1,132 @@
+//! MobileNetV2 1.0/224 (Sandler et al., 2018), int8-quantized:
+//! inverted-residual bottlenecks with linear projections, residual
+//! adds on stride-1 same-width blocks, final 1x1 conv to 1280,
+//! GAP, FC-1001, softmax.
+
+use crate::framework::graph::{Graph, GraphBuilder};
+use crate::framework::ops::{Activation, AddOp, GlobalAvgPool, Op, SoftmaxOp};
+
+use super::{act_qp, conv, dwconv, fc, input_qp};
+
+const M: &str = "mobilenet_v2";
+
+/// (expansion t, out channels c, repeats n, first stride s).
+pub const CFG: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn build() -> Graph {
+    let qp = act_qp();
+    let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());
+    let mut x = b.input();
+    x = b.push(
+        Op::Conv(conv(M, "conv0", 3, 32, 3, 2, 1, Activation::Relu6, input_qp(), qp)),
+        vec![x],
+    );
+    let mut cin = 32;
+    let mut blk = 0;
+    for &(t, c, n, s) in &CFG {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let residual = stride == 1 && cin == c;
+            let entry = x;
+            let exp = cin * t;
+            if t != 1 {
+                x = b.push(
+                    Op::Conv(conv(
+                        M,
+                        &format!("b{blk}_expand"),
+                        cin,
+                        exp,
+                        1,
+                        1,
+                        0,
+                        Activation::Relu6,
+                        qp,
+                        qp,
+                    )),
+                    vec![x],
+                );
+            }
+            x = b.push(
+                Op::DwConv(dwconv(
+                    M,
+                    &format!("b{blk}_dw"),
+                    exp,
+                    stride,
+                    Activation::Relu6,
+                    qp,
+                    qp,
+                )),
+                vec![x],
+            );
+            // linear projection (no activation)
+            x = b.push(
+                Op::Conv(conv(
+                    M,
+                    &format!("b{blk}_project"),
+                    exp,
+                    c,
+                    1,
+                    1,
+                    0,
+                    Activation::None,
+                    qp,
+                    qp,
+                )),
+                vec![x],
+            );
+            if residual {
+                x = b.push(
+                    Op::Add(AddOp {
+                        name: format!("b{blk}_add"),
+                        out_qp: qp,
+                        act: Activation::None,
+                    }),
+                    vec![entry, x],
+                );
+            }
+            cin = c;
+            blk += 1;
+        }
+    }
+    x = b.push(
+        Op::Conv(conv(M, "conv_last", 320, 1280, 1, 1, 0, Activation::Relu6, qp, qp)),
+        vec![x],
+    );
+    x = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![x]);
+    x = b.push(Op::Fc(fc(M, "fc", 1280, 1001, qp)), vec![x]);
+    x = b.push(Op::Softmax(SoftmaxOp { name: "softmax".into() }), vec![x]);
+    b.finish(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::ops::Op;
+
+    #[test]
+    fn structure() {
+        let g = build();
+        // GEMM convs: stem + 16 expands + 17 projects + last = 35
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv(_)))
+            .count();
+        assert_eq!(convs, 35);
+        // 17 bottleneck blocks, 10 with residual adds
+        let adds = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Add(_)))
+            .count();
+        assert_eq!(adds, 10);
+    }
+}

@@ -1,0 +1,282 @@
+//! The benchmark model zoo: MobileNetV1, MobileNetV2, InceptionV1
+//! (GoogLeNet) and ResNet18 — the four DNNs of the paper's evaluation
+//! (§V-A), quantized to 8 bits, ImageNet 224x224 input.
+//!
+//! Weights are deterministic synthetic (xorshift-generated): layer
+//! *shapes* are faithful to the published architectures — which is
+//! what inference time and energy depend on — while weight values are
+//! irrelevant to the SECDA evaluation (accuracy is out of scope for
+//! the paper too). Scales are chosen so activations stay in-range
+//! (requant multiplier ~ 1/(25*sqrt(K))), exercising the full
+//! quantized pipeline rather than saturating.
+//!
+//! The conv GEMM shape tables here are cross-checked against
+//! `python/compile/model.py` (the AOT bucket source) by
+//! `rust/tests/integration.rs`.
+
+pub mod inception_v1;
+pub mod mobilenet_v1;
+pub mod mobilenet_v2;
+pub mod resnet18;
+
+use crate::framework::graph::Graph;
+use crate::framework::ops::{Activation, Conv2d, DepthwiseConv2d, FullyConnected, Op};
+use crate::framework::quant::QParams;
+
+pub const ALL: [&str; 4] = ["mobilenet_v1", "mobilenet_v2", "inception_v1", "resnet18"];
+
+/// Build a benchmark model by name.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "mobilenet_v1" => Some(mobilenet_v1::build()),
+        "mobilenet_v2" => Some(mobilenet_v2::build()),
+        "inception_v1" => Some(inception_v1::build()),
+        "resnet18" => Some(resnet18::build()),
+        _ => None,
+    }
+}
+
+/// Standard activation quantization used throughout the zoo.
+pub fn act_qp() -> QParams {
+    QParams::new(0.05, -4)
+}
+
+/// Input image quantization.
+pub fn input_qp() -> QParams {
+    QParams::new(1.0 / 128.0, 0)
+}
+
+/// Recover the conv GEMM dims of a graph by shape propagation (used by
+/// the AOT-bucket coverage test and the table2 harness).
+pub fn gemm_shapes(g: &Graph) -> Vec<(usize, usize, usize)> {
+    let mut shapes: Vec<Option<Vec<usize>>> = vec![None; g.n_slots];
+    shapes[g.input_slot] = Some(g.input_shape.clone());
+    let mut out = Vec::new();
+    for node in &g.nodes {
+        let in_shape = shapes[node.inputs[0]].clone().expect("shape ready");
+        if let Some(dims) = node.op.gemm_shape(&in_shape) {
+            out.push(dims);
+        }
+        let o = match &node.op {
+            Op::Conv(c) => {
+                let (oh, ow) = c.out_hw(in_shape[1], in_shape[2]);
+                vec![1, oh, ow, c.cout]
+            }
+            Op::DwConv(d) => {
+                let (oh, ow) = d.out_hw(in_shape[1], in_shape[2]);
+                vec![1, oh, ow, d.channels]
+            }
+            Op::Pool(p) => {
+                let (oh, ow) = p.out_hw(in_shape[1], in_shape[2]);
+                vec![1, oh, ow, in_shape[3]]
+            }
+            Op::GlobalAvgPool(_) => vec![1, in_shape[3]],
+            Op::Fc(f) => vec![1, f.out_features],
+            Op::Add(_) => in_shape.clone(),
+            Op::Concat(_) => {
+                let c: usize = node
+                    .inputs
+                    .iter()
+                    .map(|&s| shapes[s].as_ref().unwrap()[3])
+                    .sum();
+                vec![1, in_shape[1], in_shape[2], c]
+            }
+            Op::Softmax(_) => in_shape.clone(),
+        };
+        shapes[node.output] = Some(o);
+    }
+    out
+}
+
+/// Deterministic weight generator (seeded per layer from its name).
+pub struct WeightGen {
+    state: u64,
+}
+
+impl WeightGen {
+    pub fn for_layer(model: &str, layer: &str) -> Self {
+        // FNV-1a over the model/layer names
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in model.bytes().chain("/".bytes()).chain(layer.bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        WeightGen { state: h.max(1) }
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x
+    }
+
+    pub fn i8s(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (self.next() & 0xff) as u8 as i8).collect()
+    }
+
+    pub fn biases(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| (self.next() % 401) as i32 - 200).collect()
+    }
+}
+
+/// Per-layer weight scale keeping requantized activations in-range:
+/// real multiplier = in_s * w_s / out_s ~= 1 / (25 * sqrt(K)).
+fn w_scale_for(k: usize, in_s: f32, out_s: f32) -> f32 {
+    out_s / (in_s * 25.0 * (k as f32).sqrt())
+}
+
+/// Standard conv builder (square kernel, per-channel scales with a
+/// small deterministic jitter).
+#[allow(clippy::too_many_arguments)]
+pub fn conv(
+    model: &str,
+    name: &str,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    act: Activation,
+    in_qp: QParams,
+    out_qp: QParams,
+) -> Conv2d {
+    let mut gen = WeightGen::for_layer(model, name);
+    let kk = k * k * cin;
+    let base = w_scale_for(kk, in_qp.scale, out_qp.scale);
+    let w_scales = (0..cout)
+        .map(|_| base * (0.9 + 0.2 * ((gen.next() % 1000) as f32 / 1000.0)))
+        .collect();
+    Conv2d {
+        name: name.to_string(),
+        cout,
+        kh: k,
+        kw: k,
+        cin,
+        stride,
+        pad,
+        weights: gen.i8s(cout * kk),
+        bias: gen.biases(cout),
+        w_scales,
+        out_qp,
+        act,
+        weights_resident: false,
+    }
+}
+
+/// Depthwise conv builder (3x3).
+pub fn dwconv(
+    model: &str,
+    name: &str,
+    channels: usize,
+    stride: usize,
+    act: Activation,
+    in_qp: QParams,
+    out_qp: QParams,
+) -> DepthwiseConv2d {
+    let mut gen = WeightGen::for_layer(model, name);
+    let base = w_scale_for(9, in_qp.scale, out_qp.scale);
+    DepthwiseConv2d {
+        name: name.to_string(),
+        channels,
+        kh: 3,
+        kw: 3,
+        stride,
+        pad: 1,
+        weights: gen.i8s(9 * channels),
+        bias: gen.biases(channels),
+        w_scales: vec![base; channels],
+        out_qp,
+        act,
+    }
+}
+
+/// Fully-connected classifier head builder.
+pub fn fc(
+    model: &str,
+    name: &str,
+    in_features: usize,
+    out_features: usize,
+    in_qp: QParams,
+) -> FullyConnected {
+    let mut gen = WeightGen::for_layer(model, name);
+    let out_qp = QParams::new(0.1, 0);
+    FullyConnected {
+        name: name.to_string(),
+        in_features,
+        out_features,
+        weights: gen.i8s(in_features * out_features),
+        bias: gen.biases(out_features),
+        w_scale: w_scale_for(in_features, in_qp.scale, out_qp.scale),
+        out_qp,
+        act: Activation::None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for name in ALL {
+            let g = by_name(name).unwrap();
+            assert!(g.validate().is_ok(), "{name}");
+            assert!(g.conv_layer_count() > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn gemm_mac_totals_match_paper_architectures() {
+        // mirrors python/tests/test_model.py
+        let total = |name: &str| -> u64 {
+            gemm_shapes(&by_name(name).unwrap())
+                .iter()
+                .map(|&(m, k, n)| (m * k * n) as u64)
+                .sum()
+        };
+        let mb1 = total("mobilenet_v1");
+        assert!((400_000_000..600_000_000).contains(&mb1), "mb1 {mb1}");
+        let mb2 = total("mobilenet_v2");
+        assert!((250_000_000..400_000_000).contains(&mb2), "mb2 {mb2}");
+        let inc = total("inception_v1");
+        assert!((1_200_000_000..1_700_000_000).contains(&inc), "inc {inc}");
+        let res = total("resnet18");
+        assert!((1_600_000_000..2_000_000_000).contains(&res), "res {res}");
+    }
+
+    #[test]
+    fn gemm_conv_counts_match_python_tables() {
+        let count = |name: &str| gemm_shapes(&by_name(name).unwrap()).len();
+        assert_eq!(count("mobilenet_v1"), 14);
+        assert_eq!(count("mobilenet_v2"), 1 + 17 + 16 + 1);
+        assert_eq!(count("inception_v1"), 3 + 9 * 6);
+        assert_eq!(count("resnet18"), 1 + 4 + 5 + 5 + 5);
+    }
+
+    #[test]
+    fn weight_gen_is_deterministic_per_layer() {
+        let a = WeightGen::for_layer("m", "l").i8s(16);
+        let b = WeightGen::for_layer("m", "l").i8s(16);
+        let c = WeightGen::for_layer("m", "l2").i8s(16);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn model_sizes_are_plausible() {
+        // int8 model weight sizes within ~2x of the known parameter
+        // counts: MbV1 4.2M, MbV2 3.5M, GoogLeNet 7.0M, ResNet18 11.7M
+        let size = |n: &str| by_name(n).unwrap().weight_bytes();
+        let mb1 = size("mobilenet_v1");
+        assert!((3_000_000..6_000_000).contains(&mb1), "mb1 {mb1}");
+        let mb2 = size("mobilenet_v2");
+        assert!((2_000_000..5_500_000).contains(&mb2), "mb2 {mb2}");
+        let inc = size("inception_v1");
+        assert!((5_000_000..9_000_000).contains(&inc), "inc {inc}");
+        let res = size("resnet18");
+        assert!((9_000_000..14_000_000).contains(&res), "res {res}");
+    }
+}

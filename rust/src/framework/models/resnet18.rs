@@ -1,0 +1,112 @@
+//! ResNet18 (He et al., 2016), int8-quantized: 7x7 stem + maxpool,
+//! four stages of two basic blocks (3x3+3x3 with residual add; the
+//! first block of stages 2-4 downsamples via a strided 1x1 conv on
+//! the skip path), GAP, FC-1000, softmax.
+//!
+//! ResNet18's stage-4 convs have K = 3*3*512 = 4608 — too deep for the
+//! standard VM design's local buffers, motivating the §IV-E4 variant.
+
+use crate::framework::graph::{Graph, GraphBuilder, SlotId};
+use crate::framework::ops::{
+    Activation, AddOp, GlobalAvgPool, Op, Pool2d, PoolKind, SoftmaxOp,
+};
+
+use super::{act_qp, conv, fc, input_qp};
+
+const M: &str = "resnet18";
+
+/// (channels, first-block stride, in channels) per stage.
+pub const STAGES: [(usize, usize, usize); 4] =
+    [(64, 1, 64), (128, 2, 64), (256, 2, 128), (512, 2, 256)];
+
+fn basic_block(
+    b: &mut GraphBuilder,
+    x: SlotId,
+    name: &str,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) -> SlotId {
+    let qp = act_qp();
+    let c1 = b.push(
+        Op::Conv(conv(M, &format!("{name}_conv1"), cin, cout, 3, stride, 1, Activation::Relu, qp, qp)),
+        vec![x],
+    );
+    let c2 = b.push(
+        Op::Conv(conv(M, &format!("{name}_conv2"), cout, cout, 3, 1, 1, Activation::None, qp, qp)),
+        vec![c1],
+    );
+    let skip = if stride != 1 || cin != cout {
+        b.push(
+            Op::Conv(conv(M, &format!("{name}_down"), cin, cout, 1, stride, 0, Activation::None, qp, qp)),
+            vec![x],
+        )
+    } else {
+        x
+    };
+    // residual add with fused relu
+    b.push(
+        Op::Add(AddOp {
+            name: format!("{name}_add"),
+            out_qp: qp,
+            act: Activation::Relu,
+        }),
+        vec![skip, c2],
+    )
+}
+
+pub fn build() -> Graph {
+    let qp = act_qp();
+    let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());
+    let mut x = b.input();
+    x = b.push(
+        Op::Conv(conv(M, "conv1", 3, 64, 7, 2, 3, Activation::Relu, input_qp(), qp)),
+        vec![x],
+    );
+    x = b.push(
+        Op::Pool(Pool2d {
+            name: "pool1".into(),
+            kind: PoolKind::Max,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        }),
+        vec![x],
+    ); // 112 -> 56
+    for (si, &(c, s, cin)) in STAGES.iter().enumerate() {
+        for blk in 0..2 {
+            let (bin, bstride) = if blk == 0 { (cin, s) } else { (c, 1) };
+            x = basic_block(&mut b, x, &format!("l{}b{}", si + 1, blk), bin, c, bstride);
+        }
+    }
+    x = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![x]);
+    x = b.push(Op::Fc(fc(M, "fc", 512, 1000, qp)), vec![x]);
+    x = b.push(Op::Softmax(SoftmaxOp { name: "softmax".into() }), vec![x]);
+    b.finish(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::models::gemm_shapes;
+
+    #[test]
+    fn structure() {
+        let g = build();
+        // 1 stem + 8 blocks x 2 convs + 3 downsamples = 20 GEMM convs
+        assert_eq!(g.conv_layer_count(), 20);
+        // 8 residual adds
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add(_))).count();
+        assert_eq!(adds, 8);
+    }
+
+    #[test]
+    fn stage4_k_exceeds_vm_local_buffers() {
+        // the §IV-E4 motivation: K = 4608 > 4096 (= 16 KiB / 4 rows)
+        let shapes = gemm_shapes(&build());
+        let kmax = shapes.iter().map(|&(_, k, _)| k).max().unwrap();
+        assert_eq!(kmax, 4608);
+        assert!(kmax > crate::accel::VmConfig::paper().max_k());
+        assert!(kmax <= crate::accel::VmConfig::resnet_variant().max_k());
+    }
+}

@@ -1,0 +1,217 @@
+//! Quantized self-attention — the paper's §VII future-work extension
+//! ("support ... DNN classes (e.g., Transformer models)").
+//!
+//! A single-head int8 self-attention over a `[seq, d]` activation:
+//! the Q/K/V/output projections are weight-static GEMMs, so they flow
+//! through the same gemmlowp seam the conv layers use and are
+//! offloaded to the SECDA accelerators unchanged. The two
+//! activation-by-activation matmuls (QK^T and PV) have no static
+//! operand, so — like depthwise convs — they stay on the CPU, computed
+//! in int32 with a quantized softmax in between.
+
+use crate::framework::backend::GemmTask;
+use crate::framework::ops::{OpCtx, TimeBucket};
+use crate::framework::quant::{quantize_multiplier, QParams};
+use crate::framework::tensor::Tensor;
+use crate::gemm::{self, QGemmParams};
+
+/// Single-head quantized self-attention block.
+#[derive(Debug, Clone)]
+pub struct SelfAttention {
+    pub name: String,
+    pub seq: usize,
+    pub d: usize,
+    /// Q, K, V, O projection weights, each `[d, d]` row-major.
+    pub wq: Vec<i8>,
+    pub wk: Vec<i8>,
+    pub wv: Vec<i8>,
+    pub wo: Vec<i8>,
+    pub w_scale: f32,
+    pub out_qp: QParams,
+}
+
+impl SelfAttention {
+    fn projection(
+        &self,
+        label: &str,
+        w: &[i8],
+        x_t: &[i8], // [d, seq] column-major tokens (K x N layout)
+        in_qp: &QParams,
+        ctx: &mut OpCtx<'_>,
+    ) -> Vec<i8> {
+        // per-projection requant back into in_qp's domain
+        let real = in_qp.scale as f64 * self.w_scale as f64 / in_qp.scale as f64;
+        let (mult, shift) = quantize_multiplier(real);
+        let mut params = QGemmParams::uniform(self.d, 0, mult, shift);
+        params.out_zp = in_qp.zero_point;
+        // fold x zero-point
+        params.bias = gemm::fold_bias(&vec![0; self.d], w, self.d, self.d, in_qp.zero_point);
+        let task = GemmTask {
+            m: self.d,
+            k: self.d,
+            n: self.seq,
+            weights: w,
+            inputs: x_t,
+            params: &params,
+            layer: label,
+            weights_resident: false,
+        };
+        let (out, mut timing) = ctx.backend.run_gemm(&task);
+        if timing.accel_active.as_ps() == 0
+            && timing.breakdown.iter().any(|(n, _)| *n == "cpu_gemm")
+        {
+            timing.total += ctx
+                .cpu
+                .reshape_time((self.d * self.seq) as u64, ctx.threads);
+        }
+        ctx.accel_active += timing.accel_active;
+        ctx.charge(label, TimeBucket::Conv, timing.total);
+        out // [d, seq]
+    }
+
+    /// Evaluate over `x`: `[1, seq, d]` int8 tokens.
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        assert_eq!(x.shape, vec![1, self.seq, self.d], "{}", self.name);
+        let qp = x.qp;
+        // transpose tokens to [d, seq] for the (M=d, K=d, N=seq) GEMMs
+        let mut x_t = vec![0i8; self.d * self.seq];
+        for t in 0..self.seq {
+            for c in 0..self.d {
+                x_t[c * self.seq + t] = x.data[t * self.d + c];
+            }
+        }
+        let q = self.projection(&format!("{}_q", self.name), &self.wq, &x_t, &qp, ctx);
+        let k = self.projection(&format!("{}_k", self.name), &self.wk, &x_t, &qp, ctx);
+        let v = self.projection(&format!("{}_v", self.name), &self.wv, &x_t, &qp, ctx);
+
+        // attention scores: S = Q^T K / sqrt(d), int32 accumulation on
+        // the CPU (both operands dynamic -> not offloadable)
+        let zp = qp.zero_point;
+        let mut probs = vec![0f32; self.seq * self.seq]; // row-softmaxed
+        let scale2 = qp.scale * qp.scale / (self.d as f32).sqrt();
+        for i in 0..self.seq {
+            let mut row = vec![0f32; self.seq];
+            for (j, r) in row.iter_mut().enumerate() {
+                let mut acc: i32 = 0;
+                for c in 0..self.d {
+                    let qv = q[c * self.seq + i] as i32 - zp;
+                    let kv = k[c * self.seq + j] as i32 - zp;
+                    acc += qv * kv;
+                }
+                *r = acc as f32 * scale2;
+            }
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = row.iter().map(|s| (s - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for (j, e) in exps.iter().enumerate() {
+                probs[i * self.seq + j] = e / sum;
+            }
+        }
+        // context = P V (P float probs in [0,1], V int8): accumulate in
+        // f32 then requantize to qp — an 8.8 fixed-point P would change
+        // results by <1 output step
+        let mut context_t = vec![0i8; self.d * self.seq]; // [d, seq]
+        for i in 0..self.seq {
+            for c in 0..self.d {
+                let mut acc = 0f32;
+                for j in 0..self.seq {
+                    acc += probs[i * self.seq + j] * (v[c * self.seq + j] as i32 - zp) as f32;
+                }
+                let qv = (acc + zp as f32).round().clamp(-128.0, 127.0) as i8;
+                context_t[c * self.seq + i] = qv;
+            }
+        }
+        // CPU cost of the two dynamic matmuls + softmax
+        let macs = 2 * (self.seq * self.seq * self.d) as u64;
+        let t = ctx.cpu.gemm_time(macs, ctx.threads);
+        ctx.charge(&format!("{}_attn", self.name), TimeBucket::NonConv, t);
+
+        // output projection back to token-major [1, seq, d]
+        let o = self.projection(&format!("{}_o", self.name), &self.wo, &context_t, &qp, ctx);
+        let mut out = vec![0i8; self.seq * self.d];
+        for t in 0..self.seq {
+            for c in 0..self.d {
+                out[t * self.d + c] = o[c * self.seq + t];
+            }
+        }
+        Tensor::new(vec![1, self.seq, self.d], out, self.out_qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::SaDesign;
+    use crate::driver::{AccelBackend, DriverConfig};
+    use crate::framework::backend::CpuBackend;
+    use crate::framework::models::WeightGen;
+    use crate::perf::CpuModel;
+
+    fn block(seq: usize, d: usize) -> SelfAttention {
+        let mut gen = WeightGen::for_layer("attn_test", "blk");
+        SelfAttention {
+            name: "attn".into(),
+            seq,
+            d,
+            wq: gen.i8s(d * d),
+            wk: gen.i8s(d * d),
+            wv: gen.i8s(d * d),
+            wo: gen.i8s(d * d),
+            w_scale: 0.3 / (d as f32).sqrt() / 25.0,
+            out_qp: QParams::new(0.05, -4),
+        }
+    }
+
+    fn tokens(seq: usize, d: usize) -> Tensor {
+        let mut gen = WeightGen::for_layer("attn_test", "tokens");
+        Tensor::new(vec![1, seq, d], gen.i8s(seq * d), QParams::new(0.05, -4))
+    }
+
+    #[test]
+    fn attention_runs_and_shapes() {
+        let a = block(16, 32);
+        let x = tokens(16, 32);
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        let y = a.eval(&x, &mut ctx);
+        assert_eq!(y.shape, vec![1, 16, 32]);
+        // 4 projections land in the (delegatable) CONV bucket, the
+        // dynamic attention matmuls in Non-CONV
+        assert!(ctx.conv_time > crate::sysc::SimTime::ZERO);
+        assert!(ctx.nonconv_time > crate::sysc::SimTime::ZERO);
+        assert_eq!(ctx.layers.len(), 5);
+    }
+
+    #[test]
+    fn projections_offload_to_accelerator_bit_exactly() {
+        // the §VII extension works through the SAME seam: outputs on the
+        // accelerated path match the CPU path bit for bit
+        let a = block(16, 32);
+        let x = tokens(16, 32);
+        let cpu = CpuModel::pynq_a9();
+        let mut cb = CpuBackend::new(1);
+        let mut ctx1 = OpCtx::new(&mut cb, &cpu, 1);
+        let y_cpu = a.eval(&x, &mut ctx1);
+        let mut ab = AccelBackend::new(SaDesign::paper(), DriverConfig::with_threads(1));
+        let mut ctx2 = OpCtx::new(&mut ab, &cpu, 1);
+        let y_acc = a.eval(&x, &mut ctx2);
+        assert_eq!(y_cpu.data, y_acc.data);
+        assert!(ctx2.accel_active > crate::sysc::SimTime::ZERO);
+        assert_eq!(ab.stats.offloads, 4); // q, k, v, o
+    }
+
+    #[test]
+    fn attention_attends() {
+        // with identity-ish V and a strongly self-similar token, the
+        // output should not be constant across tokens
+        let a = block(8, 16);
+        let x = tokens(8, 16);
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        let y = a.eval(&x, &mut ctx);
+        let first = &y.data[..16];
+        assert!(y.data.chunks(16).any(|t| t != first));
+    }
+}

@@ -1,0 +1,319 @@
+//! Quantized 2-D convolution via GEMM ("GEMM convolution", §IV) — the
+//! op the SECDA case study accelerates.
+//!
+//! `eval` performs im2col (padding with the input zero-point), folds
+//! the zero-point into the bias (the driver contract shared with the
+//! AOT artifacts), derives the per-channel requantization multipliers,
+//! and calls the configured [`GemmBackend`] — the interception point
+//! where the accelerator driver takes over (Fig. 2).
+
+use crate::framework::backend::GemmTask;
+use crate::framework::ops::{OpCtx, TimeBucket};
+use crate::framework::quant::{quantize_multiplier, QParams};
+use crate::framework::tensor::Tensor;
+use crate::gemm::{self, QGemmParams};
+
+/// Fused activation of a conv/FC layer (TFLite style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl Activation {
+    /// Quantized clamp window for an output with params `qp`.
+    pub fn window(&self, qp: &QParams) -> (i32, i32) {
+        match self {
+            Activation::None => (-128, 127),
+            Activation::Relu => (qp.zero_point.max(-128), 127),
+            Activation::Relu6 => {
+                let hi = qp.zero_point + (6.0 / qp.scale).round() as i32;
+                (qp.zero_point.max(-128), hi.min(127))
+            }
+        }
+    }
+}
+
+/// Quantized conv2d. Weights are `[cout, kh, kw, cin]` int8 with
+/// per-output-channel scales (TFLite int8 spec: symmetric weights).
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    pub name: String,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub weights: Vec<i8>,
+    pub bias: Vec<i32>,
+    pub w_scales: Vec<f32>,
+    pub out_qp: QParams,
+    pub act: Activation,
+    /// Weights preloaded on the accelerator across inferences.
+    pub weights_resident: bool,
+}
+
+impl Conv2d {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// im2col: NHWC input -> `[K, N]` matrix, K = kh*kw*cin (kh-major,
+    /// then kw, then cin — matching python/compile/model.py), N =
+    /// oh*ow. Out-of-bounds positions take the input zero-point so
+    /// they vanish after offset folding.
+    pub fn im2col(&self, x: &Tensor) -> (Vec<i8>, usize, usize) {
+        let (_, h, w, c) = x.nhwc();
+        assert_eq!(c, self.cin, "{}: cin mismatch", self.name);
+        let (oh, ow) = self.out_hw(h, w);
+        let n = oh * ow;
+        let k = self.kh * self.kw * c;
+        let zp = x.qp.zero_point.clamp(-128, 127) as i8;
+        let mut cols = vec![zp; k * n];
+        let pad = self.pad as isize;
+        for ki in 0..self.kh {
+            for kj in 0..self.kw {
+                for oy in 0..oh {
+                    let iy = oy as isize * self.stride as isize + ki as isize - pad;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for ox in 0..ow {
+                        let ix = ox as isize * self.stride as isize + kj as isize - pad;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize * w) + ix as usize) * c;
+                        let col = oy * ow + ox;
+                        let row_base = (ki * self.kw + kj) * c;
+                        for cc in 0..c {
+                            cols[(row_base + cc) * n + col] = x.data[src + cc];
+                        }
+                    }
+                }
+            }
+        }
+        (cols, k, n)
+    }
+
+    /// Build the requantization params for input qp `in_qp`.
+    pub fn qgemm_params(&self, in_qp: &QParams) -> QGemmParams {
+        let k = self.kh * self.kw * self.cin;
+        let folded = gemm::fold_bias(&self.bias, &self.weights, self.cout, k, in_qp.zero_point);
+        let mut mult = Vec::with_capacity(self.cout);
+        let mut shift = Vec::with_capacity(self.cout);
+        for oc in 0..self.cout {
+            let real = in_qp.scale as f64 * self.w_scales[oc] as f64 / self.out_qp.scale as f64;
+            let (m, s) = quantize_multiplier(real);
+            mult.push(m);
+            shift.push(s);
+        }
+        let (act_min, act_max) = self.act.window(&self.out_qp);
+        QGemmParams {
+            bias: folded,
+            mult,
+            shift,
+            out_zp: self.out_qp.zero_point,
+            act_min,
+            act_max,
+        }
+    }
+
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        let (_, h, w, _) = x.nhwc();
+        let (oh, ow) = self.out_hw(h, w);
+        let (cols, k, n) = self.im2col(x);
+        let params = self.qgemm_params(&x.qp);
+        let task = GemmTask {
+            m: self.cout,
+            k,
+            n,
+            weights: &self.weights,
+            inputs: &cols,
+            params: &params,
+            layer: &self.name,
+            weights_resident: self.weights_resident,
+        };
+        let (out_mn, mut timing) = ctx.backend.run_gemm(&task);
+        // The CPU baseline path pays im2col here; accelerator drivers
+        // already include data prep in their own timing.
+        if timing.accel_active.as_ps() == 0 && timing.breakdown.iter().any(|(n, _)| *n == "cpu_gemm")
+        {
+            timing.total += ctx.cpu.reshape_time((k * n) as u64, ctx.threads);
+        }
+        ctx.accel_active += timing.accel_active;
+        ctx.charge(&self.name, TimeBucket::Conv, timing.total);
+
+        // out_mn is [cout, oh*ow] (M x N); convert to NHWC
+        let mut nhwc = vec![0i8; oh * ow * self.cout];
+        for oc in 0..self.cout {
+            for p in 0..oh * ow {
+                nhwc[p * self.cout + oc] = out_mn[oc * (oh * ow) + p];
+            }
+        }
+        Tensor::new(vec![1, oh, ow, self.cout], nhwc, self.out_qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::perf::CpuModel;
+
+    fn mk_conv(cout: usize, kh: usize, cin: usize, stride: usize, pad: usize) -> Conv2d {
+        let k = kh * kh * cin;
+        let mut st = 0xdeadbeefu64;
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        Conv2d {
+            name: "conv_t".into(),
+            cout,
+            kh,
+            kw: kh,
+            cin,
+            stride,
+            pad,
+            weights: (0..cout * k).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+            bias: (0..cout).map(|_| (rnd() % 512) as i32 - 256).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, -5),
+            act: Activation::None,
+            weights_resident: false,
+        }
+    }
+
+    fn mk_input(h: usize, c: usize) -> Tensor {
+        let mut st = 777u64;
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        Tensor::new(
+            vec![1, h, h, c],
+            (0..h * h * c).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+            QParams::new(0.05, 3),
+        )
+    }
+
+    /// Direct O(n^4) reference convolution.
+    fn direct(conv: &Conv2d, x: &Tensor) -> Vec<i8> {
+        use crate::framework::quant::ppu_requant;
+        let (_, h, w, c) = x.nhwc();
+        let (oh, ow) = conv.out_hw(h, w);
+        let p = conv.qgemm_params(&x.qp);
+        let zp_in = x.qp.zero_point;
+        let mut out = vec![0i8; oh * ow * conv.cout];
+        for oc in 0..conv.cout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc: i64 = 0;
+                    for ki in 0..conv.kh {
+                        for kj in 0..conv.kw {
+                            let iy = (oy * conv.stride + ki) as isize - conv.pad as isize;
+                            let ix = (ox * conv.stride + kj) as isize - conv.pad as isize;
+                            for cc in 0..c {
+                                let xv = if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize
+                                {
+                                    0 // (x - zp) of padding is zero
+                                } else {
+                                    x.data[((iy as usize * w) + ix as usize) * c + cc] as i64
+                                        - zp_in as i64
+                                };
+                                let wv = conv.weights
+                                    [((oc * conv.kh + ki) * conv.kw + kj) * c + cc]
+                                    as i64;
+                                acc += wv * xv;
+                            }
+                        }
+                    }
+                    // p.bias has the zp fold; undo it by using raw bias
+                    let raw_acc = acc as i32 + conv.bias[oc];
+                    out[(oy * ow + ox) * conv.cout + oc] = ppu_requant(
+                        raw_acc,
+                        p.mult[oc],
+                        p.shift[oc],
+                        p.out_zp,
+                        p.act_min,
+                        p.act_max,
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_direct_reference() {
+        for (cout, kh, cin, stride, pad, h) in [
+            (8, 3, 4, 1, 1, 8),
+            (8, 3, 4, 2, 1, 9),
+            (16, 1, 8, 1, 0, 6),
+            (4, 5, 3, 2, 2, 11),
+            (6, 7, 3, 2, 3, 14),
+        ] {
+            let conv = mk_conv(cout, kh, cin, stride, pad);
+            let x = mk_input(h, cin);
+            let cpu = CpuModel::pynq_a9();
+            let mut backend = CpuBackend::new(1);
+            let mut ctx = OpCtx::new(&mut backend, &cpu, 1);
+            let y = conv.eval(&x, &mut ctx);
+            assert_eq!(y.data, direct(&conv, &x), "cfg ({cout},{kh},{cin},{stride},{pad})");
+            assert!(ctx.conv_time > crate::sysc::SimTime::ZERO);
+            assert_eq!(ctx.nonconv_time, crate::sysc::SimTime::ZERO);
+        }
+    }
+
+    #[test]
+    fn relu6_window_clamps() {
+        let mut conv = mk_conv(4, 3, 4, 1, 1);
+        conv.act = Activation::Relu6;
+        let (lo, hi) = conv.act.window(&conv.out_qp);
+        assert_eq!(lo, -5);
+        assert_eq!(hi, -5 + 120);
+        let x = mk_input(6, 4);
+        let cpu = CpuModel::pynq_a9();
+        let mut backend = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut backend, &cpu, 1);
+        let y = conv.eval(&x, &mut ctx);
+        assert!(y.data.iter().all(|&v| (lo..=hi).contains(&(v as i32))));
+    }
+
+    #[test]
+    fn im2col_shapes() {
+        let conv = mk_conv(4, 3, 2, 2, 1);
+        let x = mk_input(8, 2);
+        let (cols, k, n) = conv.im2col(&x);
+        assert_eq!(k, 3 * 3 * 2);
+        assert_eq!(n, 4 * 4);
+        assert_eq!(cols.len(), k * n);
+    }
+
+    #[test]
+    fn accel_backend_agrees_with_cpu_backend() {
+        use crate::accel::SaDesign;
+        use crate::driver::{AccelBackend, DriverConfig};
+        let conv = mk_conv(16, 3, 8, 1, 1);
+        let x = mk_input(10, 8);
+        let cpu = CpuModel::pynq_a9();
+        let mut cb = CpuBackend::new(1);
+        let mut ctx1 = OpCtx::new(&mut cb, &cpu, 1);
+        let y_cpu = conv.eval(&x, &mut ctx1);
+        let mut ab = AccelBackend::new(SaDesign::paper(), DriverConfig::default());
+        let mut ctx2 = OpCtx::new(&mut ab, &cpu, 1);
+        let y_acc = conv.eval(&x, &mut ctx2);
+        assert_eq!(y_cpu.data, y_acc.data);
+        assert!(ctx2.accel_active > crate::sysc::SimTime::ZERO);
+    }
+}

@@ -1,0 +1,163 @@
+//! Quantized depthwise convolution (MobileNet family).
+//!
+//! In TFLite depthwise convs do not go through the gemmlowp GEMM, so
+//! the paper's accelerators never see them — they run on the CPU and
+//! count toward the CONV bucket of Table II (they are conv layers).
+//! This is why MobileNets profit less from the accelerators (§V-B).
+
+use crate::framework::ops::{Activation, OpCtx, TimeBucket};
+use crate::framework::quant::{ppu_requant, quantize_multiplier, QParams};
+use crate::framework::tensor::Tensor;
+
+/// Depthwise conv: one `kh x kw` filter per channel (multiplier 1).
+#[derive(Debug, Clone)]
+pub struct DepthwiseConv2d {
+    pub name: String,
+    pub channels: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// `[kh, kw, channels]` int8 filters.
+    pub weights: Vec<i8>,
+    pub bias: Vec<i32>,
+    pub w_scales: Vec<f32>,
+    pub out_qp: QParams,
+    pub act: Activation,
+}
+
+impl DepthwiseConv2d {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    pub fn macs(&self, h: usize, w: usize) -> u64 {
+        let (oh, ow) = self.out_hw(h, w);
+        (oh * ow * self.channels * self.kh * self.kw) as u64
+    }
+
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        let (_, h, w, c) = x.nhwc();
+        assert_eq!(c, self.channels, "{}: channel mismatch", self.name);
+        let (oh, ow) = self.out_hw(h, w);
+        let zp_in = x.qp.zero_point;
+        let (act_min, act_max) = self.act.window(&self.out_qp);
+
+        // per-channel requant params
+        let mut mult = vec![0i32; c];
+        let mut shift = vec![0i32; c];
+        for cc in 0..c {
+            let real = x.qp.scale as f64 * self.w_scales[cc] as f64 / self.out_qp.scale as f64;
+            let (m, s) = quantize_multiplier(real);
+            mult[cc] = m;
+            shift[cc] = s;
+        }
+
+        let mut out = vec![0i8; oh * ow * c];
+        let pad = self.pad as isize;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for cc in 0..c {
+                    let mut acc: i32 = self.bias[cc];
+                    for ki in 0..self.kh {
+                        let iy = oy as isize * self.stride as isize + ki as isize - pad;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kj in 0..self.kw {
+                            let ix = ox as isize * self.stride as isize + kj as isize - pad;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let xv = x.data[((iy as usize) * w + ix as usize) * c + cc] as i32
+                                - zp_in;
+                            let wv = self.weights[(ki * self.kw + kj) * c + cc] as i32;
+                            acc += wv * xv;
+                        }
+                    }
+                    out[(oy * ow + ox) * c + cc] =
+                        ppu_requant(acc, mult[cc], shift[cc], self.out_qp.zero_point, act_min, act_max);
+                }
+            }
+        }
+        let t = ctx.cpu.dwconv_time(self.macs(h, w), ctx.threads);
+        ctx.charge(&self.name, TimeBucket::Conv, t);
+        Tensor::new(vec![1, oh, ow, c], out, self.out_qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::perf::CpuModel;
+
+    fn mk(channels: usize, stride: usize) -> DepthwiseConv2d {
+        let mut st = 99u64;
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        DepthwiseConv2d {
+            name: "dw_t".into(),
+            channels,
+            kh: 3,
+            kw: 3,
+            stride,
+            pad: 1,
+            weights: (0..9 * channels).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+            bias: (0..channels).map(|_| (rnd() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; channels],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::None,
+        }
+    }
+
+    #[test]
+    fn identity_filter_passes_signal_through() {
+        // single channel, center tap = 1/w_scale-quantized identity
+        let mut dw = mk(1, 1);
+        dw.weights = vec![0, 0, 0, 0, 50, 0, 0, 0, 0]; // center 50
+        dw.bias = vec![0];
+        // real multiplier: in 0.05 * w 0.02 / out 0.05 = 0.02;
+        // out ≈ (x - zp) * 50 * 0.02 = x - zp
+        let x = Tensor::new(
+            vec![1, 3, 3, 1],
+            vec![10, -20, 30, 40, -50, 60, 70, -80, 90],
+            QParams::new(0.05, 0),
+        );
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        let y = dw.eval(&x, &mut ctx);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn stride_two_halves_spatial() {
+        let dw = mk(4, 2);
+        let x = Tensor::zeros(vec![1, 8, 8, 4], QParams::new(0.05, 0));
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        let y = dw.eval(&x, &mut ctx);
+        assert_eq!(y.shape, vec![1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn charges_conv_bucket() {
+        let dw = mk(8, 1);
+        let x = Tensor::zeros(vec![1, 6, 6, 8], QParams::new(0.05, 0));
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        dw.eval(&x, &mut ctx);
+        assert!(ctx.conv_time > crate::sysc::SimTime::ZERO);
+        assert_eq!(ctx.nonconv_time, crate::sysc::SimTime::ZERO);
+    }
+}

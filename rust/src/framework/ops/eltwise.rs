@@ -1,0 +1,172 @@
+//! Quantized element-wise ops: residual Add and channel Concat.
+
+use crate::framework::ops::{Activation, OpCtx, TimeBucket};
+use crate::framework::quant::{multiply_by_quantized_multiplier, quantize_multiplier, QParams};
+use crate::framework::tensor::Tensor;
+
+/// TFLite-style quantized add: both operands are rescaled into a
+/// shared fixed-point domain (left-shift 20), summed, then requantized
+/// to the output scale.
+#[derive(Debug, Clone)]
+pub struct AddOp {
+    pub name: String,
+    pub out_qp: QParams,
+    pub act: Activation,
+}
+
+const ADD_LEFT_SHIFT: i32 = 20;
+
+impl AddOp {
+    pub fn eval(&self, a: &Tensor, b: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        assert_eq!(a.shape, b.shape, "{}: shape mismatch", self.name);
+        let twice_max = 2.0 * a.qp.scale.max(b.qp.scale) as f64;
+        let (m_a, s_a) = quantize_multiplier(a.qp.scale as f64 / twice_max);
+        let (m_b, s_b) = quantize_multiplier(b.qp.scale as f64 / twice_max);
+        let (m_o, s_o) = quantize_multiplier(
+            twice_max / ((1i64 << ADD_LEFT_SHIFT) as f64 * self.out_qp.scale as f64),
+        );
+        let (act_min, act_max) = self.act.window(&self.out_qp);
+        let mut out = vec![0i8; a.numel()];
+        for i in 0..a.numel() {
+            let av = ((a.data[i] as i32) - a.qp.zero_point) << ADD_LEFT_SHIFT;
+            let bv = ((b.data[i] as i32) - b.qp.zero_point) << ADD_LEFT_SHIFT;
+            let sa = multiply_by_quantized_multiplier(av, m_a, s_a);
+            let sb = multiply_by_quantized_multiplier(bv, m_b, s_b);
+            let sum = sa.wrapping_add(sb);
+            let v = multiply_by_quantized_multiplier(sum, m_o, s_o) + self.out_qp.zero_point;
+            out[i] = v.clamp(act_min, act_max) as i8;
+        }
+        let t = ctx
+            .cpu
+            .elementwise_time(2 * a.numel() as u64, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(a.shape.clone(), out, self.out_qp)
+    }
+}
+
+/// Channel-dimension concat; inputs are requantized to the output
+/// scale when their params differ (TFLite semantics).
+#[derive(Debug, Clone)]
+pub struct ConcatOp {
+    pub name: String,
+    pub out_qp: QParams,
+}
+
+impl ConcatOp {
+    pub fn eval(&self, inputs: &[&Tensor], ctx: &mut OpCtx<'_>) -> Tensor {
+        assert!(!inputs.is_empty());
+        let (_, h, w, _) = inputs[0].nhwc();
+        let mut c_total = 0;
+        for t in inputs {
+            let (_, th, tw, tc) = t.nhwc();
+            assert_eq!((th, tw), (h, w), "{}: spatial mismatch", self.name);
+            c_total += tc;
+        }
+        let mut out = vec![0i8; h * w * c_total];
+        let mut c_off = 0;
+        let mut total_bytes = 0u64;
+        for t in inputs {
+            let (_, _, _, tc) = t.nhwc();
+            let same = t.qp == self.out_qp;
+            let (m, s) = if same {
+                (0, 0)
+            } else {
+                quantize_multiplier(t.qp.scale as f64 / self.out_qp.scale as f64)
+            };
+            for p in 0..h * w {
+                for cc in 0..tc {
+                    let v = t.data[p * tc + cc];
+                    out[p * c_total + c_off + cc] = if same {
+                        v
+                    } else {
+                        let shifted = (v as i32) - t.qp.zero_point;
+                        let r = multiply_by_quantized_multiplier(shifted, m, s)
+                            + self.out_qp.zero_point;
+                        r.clamp(-128, 127) as i8
+                    };
+                }
+            }
+            c_off += tc;
+            total_bytes += t.numel() as u64;
+        }
+        let t = ctx.cpu.elementwise_time(total_bytes, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(vec![1, h, w, c_total], out, self.out_qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::perf::CpuModel;
+
+    fn ctx_eval<F: FnOnce(&mut OpCtx<'_>) -> Tensor>(f: F) -> Tensor {
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        f(&mut ctx)
+    }
+
+    #[test]
+    fn add_same_scale_is_plain_sum() {
+        let qp = QParams::new(0.1, 0);
+        let a = Tensor::new(vec![1, 1, 1, 4], vec![10, 20, -30, 40], qp);
+        let b = Tensor::new(vec![1, 1, 1, 4], vec![1, 2, 3, -4], qp);
+        let add = AddOp {
+            name: "add".into(),
+            out_qp: QParams::new(0.2, 0), // out scale 2x -> sum/2
+            act: Activation::None,
+        };
+        let y = ctx_eval(|c| add.eval(&a, &b, c));
+        // (a+b)*0.1/0.2 = (a+b)/2, rounded
+        assert_eq!(y.data, vec![6, 11, -14, 18]);
+    }
+
+    #[test]
+    fn add_dequantized_error_bounded() {
+        let qa = QParams::new(0.07, 3);
+        let qb = QParams::new(0.11, -5);
+        let qo = QParams::new(0.15, 1);
+        let a = Tensor::new(vec![1, 1, 1, 3], vec![50, -20, 100], qa);
+        let b = Tensor::new(vec![1, 1, 1, 3], vec![-10, 60, 7], qb);
+        let add = AddOp {
+            name: "add".into(),
+            out_qp: qo,
+            act: Activation::None,
+        };
+        let y = ctx_eval(|c| add.eval(&a, &b, c));
+        for i in 0..3 {
+            let real = qa.dequantize(a.data[i]) + qb.dequantize(b.data[i]);
+            let got = qo.dequantize(y.data[i]);
+            assert!((real - got).abs() <= qo.scale, "i={i} {real} vs {got}");
+        }
+    }
+
+    #[test]
+    fn concat_same_params_is_interleave() {
+        let qp = QParams::new(0.1, 0);
+        let a = Tensor::new(vec![1, 1, 2, 2], vec![1, 2, 3, 4], qp);
+        let b = Tensor::new(vec![1, 1, 2, 1], vec![9, 8], qp);
+        let cat = ConcatOp {
+            name: "cat".into(),
+            out_qp: qp,
+        };
+        let y = ctx_eval(|c| cat.eval(&[&a, &b], c));
+        assert_eq!(y.shape, vec![1, 1, 2, 3]);
+        assert_eq!(y.data, vec![1, 2, 9, 3, 4, 8]);
+    }
+
+    #[test]
+    fn concat_requantizes_mismatched_scales() {
+        let a = Tensor::new(vec![1, 1, 1, 1], vec![100], QParams::new(0.1, 0));
+        let b = Tensor::new(vec![1, 1, 1, 1], vec![100], QParams::new(0.2, 0));
+        let cat = ConcatOp {
+            name: "cat".into(),
+            out_qp: QParams::new(0.1, 0),
+        };
+        let y = ctx_eval(|c| cat.eval(&[&a, &b], c));
+        assert_eq!(y.data[0], 100); // same scale: unchanged
+        assert_eq!(y.data[1], 127); // 100*0.2/0.1 = 200 -> saturates
+    }
+}

@@ -1,0 +1,118 @@
+//! Quantized fully-connected layer (the classifier heads).
+//!
+//! FC layers run on the CPU and land in the Non-CONV bucket: the paper
+//! accelerates only the convolutional layers (§IV: "We accelerate the
+//! convolutional layers"). Functionally this is a GEMM with N = 1.
+
+use crate::framework::ops::{Activation, OpCtx, TimeBucket};
+use crate::framework::quant::{quantize_multiplier, QParams};
+use crate::framework::tensor::Tensor;
+use crate::gemm::{self, QGemmParams};
+
+#[derive(Debug, Clone)]
+pub struct FullyConnected {
+    pub name: String,
+    pub in_features: usize,
+    pub out_features: usize,
+    /// `[out_features, in_features]` int8 weights (per-tensor scale).
+    pub weights: Vec<i8>,
+    pub bias: Vec<i32>,
+    pub w_scale: f32,
+    pub out_qp: QParams,
+    pub act: Activation,
+}
+
+impl FullyConnected {
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        assert_eq!(
+            x.numel(),
+            self.in_features,
+            "{}: flattened input size mismatch",
+            self.name
+        );
+        let folded = gemm::fold_bias(
+            &self.bias,
+            &self.weights,
+            self.out_features,
+            self.in_features,
+            x.qp.zero_point,
+        );
+        let real = x.qp.scale as f64 * self.w_scale as f64 / self.out_qp.scale as f64;
+        let (mult, shift) = quantize_multiplier(real);
+        let (act_min, act_max) = self.act.window(&self.out_qp);
+        let params = QGemmParams {
+            bias: folded,
+            mult: vec![mult; self.out_features],
+            shift: vec![shift; self.out_features],
+            out_zp: self.out_qp.zero_point,
+            act_min,
+            act_max,
+        };
+        let out = gemm::qgemm(
+            &self.weights,
+            &x.data,
+            self.out_features,
+            self.in_features,
+            1,
+            &params,
+            ctx.threads,
+        );
+        let macs = (self.out_features * self.in_features) as u64;
+        let t = ctx.cpu.gemm_time(macs, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(vec![1, self.out_features], out, self.out_qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::framework::quant::ppu_requant;
+    use crate::perf::CpuModel;
+
+    #[test]
+    fn fc_matches_scalar_reference() {
+        let (fin, fout) = (12, 5);
+        let mut st = 31u64;
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        let fc = FullyConnected {
+            name: "fc_t".into(),
+            in_features: fin,
+            out_features: fout,
+            weights: (0..fin * fout).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+            bias: (0..fout).map(|_| (rnd() % 100) as i32).collect(),
+            w_scale: 0.01,
+            out_qp: QParams::new(0.1, 4),
+            act: Activation::None,
+        };
+        let x = Tensor::new(
+            vec![1, fin],
+            (0..fin).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+            QParams::new(0.05, -3),
+        );
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        let y = fc.eval(&x, &mut ctx);
+
+        let real = 0.05f64 * 0.01 / 0.1;
+        let (m, s) = quantize_multiplier(real);
+        for o in 0..fout {
+            let mut acc: i64 = fc.bias[o] as i64;
+            for i in 0..fin {
+                acc += fc.weights[o * fin + i] as i64 * (x.data[i] as i64 - (-3));
+            }
+            let want = ppu_requant(acc as i32, m, s, 4, -128, 127);
+            assert_eq!(y.data[o], want, "out {o}");
+        }
+        // FC is Non-CONV time
+        assert_eq!(ctx.conv_time, crate::sysc::SimTime::ZERO);
+        assert!(ctx.nonconv_time > crate::sysc::SimTime::ZERO);
+    }
+}

@@ -1,0 +1,131 @@
+//! The operator set of the four benchmark models.
+//!
+//! Convolutions execute through the GEMM seam ([`super::backend`]) so
+//! the SECDA driver can intercept them (paper Fig. 2); everything else
+//! runs on the CPU with times from the calibrated
+//! [`crate::perf::CpuModel`]. Depthwise convolutions are *conv layers*
+//! (they land in Table II's CONV bucket) but do not go through
+//! gemmlowp, so they stay on the CPU — exactly as in the paper's
+//! TFLite case study.
+
+pub mod attention;
+pub mod conv;
+pub mod dwconv;
+pub mod eltwise;
+pub mod fc;
+pub mod pool;
+pub mod softmax;
+
+use super::backend::GemmBackend;
+use super::tensor::Tensor;
+use crate::perf::CpuModel;
+use crate::sysc::SimTime;
+
+pub use attention::SelfAttention;
+pub use conv::{Activation, Conv2d};
+pub use dwconv::DepthwiseConv2d;
+pub use eltwise::{AddOp, ConcatOp};
+pub use fc::FullyConnected;
+pub use pool::{GlobalAvgPool, Pool2d, PoolKind};
+pub use softmax::SoftmaxOp;
+
+/// Time bucket an op's cost lands in (Table II columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeBucket {
+    Conv,
+    NonConv,
+}
+
+/// Execution context handed to op kernels: the GEMM backend, the CPU
+/// timing model, and the time accounting sinks.
+pub struct OpCtx<'a> {
+    pub backend: &'a mut dyn GemmBackend,
+    pub cpu: &'a CpuModel,
+    pub threads: usize,
+    pub conv_time: SimTime,
+    pub nonconv_time: SimTime,
+    pub accel_active: SimTime,
+    /// Per-layer records: (name, bucket, time).
+    pub layers: Vec<(String, TimeBucket, SimTime)>,
+}
+
+impl<'a> OpCtx<'a> {
+    pub fn new(backend: &'a mut dyn GemmBackend, cpu: &'a CpuModel, threads: usize) -> Self {
+        OpCtx {
+            backend,
+            cpu,
+            threads,
+            conv_time: SimTime::ZERO,
+            nonconv_time: SimTime::ZERO,
+            accel_active: SimTime::ZERO,
+            layers: Vec::new(),
+        }
+    }
+
+    pub fn charge(&mut self, name: &str, bucket: TimeBucket, t: SimTime) {
+        match bucket {
+            TimeBucket::Conv => self.conv_time += t,
+            TimeBucket::NonConv => self.nonconv_time += t,
+        }
+        self.layers.push((name.to_string(), bucket, t));
+    }
+}
+
+/// One graph operator.
+#[derive(Debug, Clone)]
+pub enum Op {
+    Conv(Conv2d),
+    DwConv(DepthwiseConv2d),
+    Fc(FullyConnected),
+    Pool(Pool2d),
+    GlobalAvgPool(GlobalAvgPool),
+    Add(AddOp),
+    Concat(ConcatOp),
+    Softmax(SoftmaxOp),
+}
+
+impl Op {
+    pub fn name(&self) -> &str {
+        match self {
+            Op::Conv(o) => &o.name,
+            Op::DwConv(o) => &o.name,
+            Op::Fc(o) => &o.name,
+            Op::Pool(o) => &o.name,
+            Op::GlobalAvgPool(o) => &o.name,
+            Op::Add(o) => &o.name,
+            Op::Concat(o) => &o.name,
+            Op::Softmax(o) => &o.name,
+        }
+    }
+
+    /// Evaluate the op, charging its time to `ctx`.
+    pub fn eval(&self, inputs: &[&Tensor], ctx: &mut OpCtx<'_>) -> Tensor {
+        match self {
+            Op::Conv(o) => o.eval(inputs[0], ctx),
+            Op::DwConv(o) => o.eval(inputs[0], ctx),
+            Op::Fc(o) => o.eval(inputs[0], ctx),
+            Op::Pool(o) => o.eval(inputs[0], ctx),
+            Op::GlobalAvgPool(o) => o.eval(inputs[0], ctx),
+            Op::Add(o) => o.eval(inputs[0], inputs[1], ctx),
+            Op::Concat(o) => o.eval(inputs, ctx),
+            Op::Softmax(o) => o.eval(inputs[0], ctx),
+        }
+    }
+
+    /// Is this a convolution layer (Table II CONV bucket)?
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Op::Conv(_) | Op::DwConv(_))
+    }
+
+    /// GEMM dims (m, k, n) if this op offloads through the GEMM seam.
+    pub fn gemm_shape(&self, input_shape: &[usize]) -> Option<(usize, usize, usize)> {
+        match self {
+            Op::Conv(o) => {
+                let (h, w) = (input_shape[1], input_shape[2]);
+                let (oh, ow) = o.out_hw(h, w);
+                Some((o.cout, o.kh * o.kw * o.cin, oh * ow))
+            }
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Quantized pooling ops (TFLite semantics: qparams pass through).
+
+use crate::framework::ops::{OpCtx, TimeBucket};
+use crate::framework::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Windowed max/avg pooling.
+#[derive(Debug, Clone)]
+pub struct Pool2d {
+    pub name: String,
+    pub kind: PoolKind,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Pool2d {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.k) / self.stride + 1,
+            (w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        let (_, h, w, c) = x.nhwc();
+        let (oh, ow) = self.out_hw(h, w);
+        let mut out = vec![0i8; oh * ow * c];
+        let pad = self.pad as isize;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for cc in 0..c {
+                    let mut maxv = i8::MIN;
+                    let mut sum: i32 = 0;
+                    let mut count: i32 = 0;
+                    for ki in 0..self.k {
+                        let iy = oy as isize * self.stride as isize + ki as isize - pad;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kj in 0..self.k {
+                            let ix = ox as isize * self.stride as isize + kj as isize - pad;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let v = x.data[((iy as usize) * w + ix as usize) * c + cc];
+                            maxv = maxv.max(v);
+                            sum += v as i32;
+                            count += 1;
+                        }
+                    }
+                    out[(oy * ow + ox) * c + cc] = match self.kind {
+                        PoolKind::Max => maxv,
+                        PoolKind::Avg => {
+                            // round-to-nearest integer average
+                            let half = count / 2;
+                            let r = if sum >= 0 { sum + half } else { sum - half } / count;
+                            r.clamp(-128, 127) as i8
+                        }
+                    };
+                }
+            }
+        }
+        let t = ctx
+            .cpu
+            .elementwise_time((h * w * c) as u64, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(vec![1, oh, ow, c], out, x.qp)
+    }
+}
+
+/// Global average pooling: NHWC -> [1, C].
+#[derive(Debug, Clone)]
+pub struct GlobalAvgPool {
+    pub name: String,
+}
+
+impl GlobalAvgPool {
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        let (_, h, w, c) = x.nhwc();
+        let count = (h * w) as i32;
+        let mut out = vec![0i8; c];
+        for cc in 0..c {
+            let mut sum: i32 = 0;
+            for p in 0..h * w {
+                sum += x.data[p * c + cc] as i32;
+            }
+            let half = count / 2;
+            let r = if sum >= 0 { sum + half } else { sum - half } / count;
+            out[cc] = r.clamp(-128, 127) as i8;
+        }
+        let t = ctx
+            .cpu
+            .elementwise_time((h * w * c) as u64, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(vec![1, c], out, x.qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::framework::quant::QParams;
+    use crate::perf::CpuModel;
+
+    fn ctx_eval<F: FnOnce(&mut OpCtx<'_>) -> Tensor>(f: F) -> Tensor {
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        f(&mut ctx)
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = Tensor::new(
+            vec![1, 2, 2, 1],
+            vec![1, 5, -3, 2],
+            QParams::new(0.1, 0),
+        );
+        let p = Pool2d {
+            name: "mp".into(),
+            kind: PoolKind::Max,
+            k: 2,
+            stride: 2,
+            pad: 0,
+        };
+        let y = ctx_eval(|c| p.eval(&x, c));
+        assert_eq!(y.data, vec![5]);
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn avgpool_rounds_to_nearest() {
+        let x = Tensor::new(
+            vec![1, 2, 2, 1],
+            vec![1, 2, 2, 2], // mean 1.75 -> 2
+            QParams::new(0.1, 0),
+        );
+        let p = Pool2d {
+            name: "ap".into(),
+            kind: PoolKind::Avg,
+            k: 2,
+            stride: 2,
+            pad: 0,
+        };
+        let y = ctx_eval(|c| p.eval(&x, c));
+        assert_eq!(y.data, vec![2]);
+        // negative mean rounds away from zero
+        let xn = Tensor::new(vec![1, 2, 2, 1], vec![-1, -2, -2, -2], QParams::new(0.1, 0));
+        let y = ctx_eval(|c| p.eval(&xn, c));
+        assert_eq!(y.data, vec![-2]);
+    }
+
+    #[test]
+    fn global_avg_pool_shape_and_value() {
+        let x = Tensor::new(
+            vec![1, 2, 2, 2],
+            vec![10, 0, 20, 0, 30, 0, 40, 100],
+            QParams::new(0.1, 0),
+        );
+        let g = GlobalAvgPool { name: "gap".into() };
+        let y = ctx_eval(|c| g.eval(&x, c));
+        assert_eq!(y.shape, vec![1, 2]);
+        assert_eq!(y.data, vec![25, 25]);
+    }
+
+    #[test]
+    fn pool_with_padding_ignores_outside() {
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![4, 4, 4, 4], QParams::new(0.1, 0));
+        let p = Pool2d {
+            name: "mp3".into(),
+            kind: PoolKind::Avg,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        // window at (0,0) covers 4 valid cells, all 4 -> avg 4
+        let y = ctx_eval(|c| p.eval(&x, c));
+        assert_eq!(y.data[0], 4);
+    }
+}

@@ -1,0 +1,64 @@
+//! Softmax head. TFLite fixes the output quantization to
+//! (scale 1/256, zero-point -128). The inner computation here uses
+//! f32 (the reference TFLite kernel uses a fixed-point exp table; the
+//! f32 shortcut changes results by < 1 ulp of the 1/256 output grid
+//! and is documented as a substitution in DESIGN.md).
+
+use crate::framework::ops::{OpCtx, TimeBucket};
+use crate::framework::quant::QParams;
+use crate::framework::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct SoftmaxOp {
+    pub name: String,
+}
+
+impl SoftmaxOp {
+    pub fn out_qp() -> QParams {
+        QParams::new(1.0 / 256.0, -128)
+    }
+
+    pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        let vals = x.dequantize();
+        let max = vals.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = vals.iter().map(|v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let qp = Self::out_qp();
+        let out: Vec<i8> = exps.iter().map(|e| qp.quantize(e / sum)).collect();
+        let t = ctx.cpu.elementwise_time(x.numel() as u64 * 4, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(x.shape.clone(), out, qp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::backend::CpuBackend;
+    use crate::perf::CpuModel;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let x = Tensor::new(
+            vec![1, 5],
+            vec![10, 20, 30, -10, 0],
+            QParams::new(0.1, 0),
+        );
+        let sm = SoftmaxOp { name: "sm".into() };
+        let cpu = CpuModel::pynq_a9();
+        let mut b = CpuBackend::new(1);
+        let mut ctx = OpCtx::new(&mut b, &cpu, 1);
+        let y = sm.eval(&x, &mut ctx);
+        let probs = y.dequantize();
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 0.05, "sum {sum}");
+        // argmax preserved
+        let argmax = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 2);
+    }
+}

@@ -1,0 +1,199 @@
+//! Quantization arithmetic — bit-exact port of gemmlowp/TFLite fixed
+//! point requantization, mirrored by `python/compile/kernels/ref.py`
+//! (cross-checked by `rust/tests/quant_golden.rs` against the golden
+//! vectors emitted at `make artifacts` time).
+//!
+//! Convention (TFLite int8 spec): weights are symmetric (zero-point 0,
+//! per-output-channel scales); activations are asymmetric int8 with a
+//! per-tensor zero-point; accumulators are int32; the requantization
+//! multiplier is a Q31 mantissa + power-of-two shift.
+
+/// Quantization parameters of an int8 tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        debug_assert!(scale > 0.0);
+        QParams { scale, zero_point }
+    }
+
+    /// Parameters covering `[lo, hi]` with the int8 value range.
+    pub fn from_range(lo: f32, hi: f32) -> Self {
+        let (lo, hi) = (lo.min(0.0), hi.max(0.0));
+        let scale = (hi - lo) / 255.0;
+        let scale = if scale <= 0.0 { 1.0 / 255.0 } else { scale };
+        let zp = (-128.0 - lo / scale).round().clamp(-128.0, 127.0) as i32;
+        QParams::new(scale, zp)
+    }
+
+    pub fn quantize(&self, v: f32) -> i8 {
+        ((v / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// gemmlowp `SaturatingRoundingDoublingHighMul`:
+/// `round(a * b / 2^31)`, ties away from zero, saturating the single
+/// overflow case `a == b == i32::MIN`.
+#[inline]
+pub fn srdhm(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX;
+    }
+    let ab = a as i64 * b as i64;
+    let nudge: i64 = if ab >= 0 { 1 << 30 } else { 1 - (1 << 30) };
+    // C++ truncating division by 2^31 (toward zero), not a floor shift.
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// gemmlowp `RoundingDivideByPOT`: `x / 2^exponent`, round to nearest,
+/// ties away from zero. `exponent` in [0, 31].
+#[inline]
+pub fn rounding_divide_by_pot(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    let mask = (1i64 << exponent) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + i64::from(x < 0);
+    (x >> exponent) + i32::from(remainder > threshold)
+}
+
+/// TFLite `MultiplyByQuantizedMultiplier`: `shift` positive = left.
+#[inline]
+pub fn multiply_by_quantized_multiplier(acc: i32, mult: i32, shift: i32) -> i32 {
+    let left = shift.max(0);
+    let right = (-shift).max(0);
+    let shifted = acc.wrapping_shl(left as u32);
+    rounding_divide_by_pot(srdhm(shifted, mult), right)
+}
+
+/// TFLite `QuantizeMultiplier`: real multiplier -> (Q31 mantissa, shift).
+pub fn quantize_multiplier(real: f64) -> (i32, i32) {
+    if real == 0.0 {
+        return (0, 0);
+    }
+    let (mant, exp) = frexp(real);
+    let mut q = (mant * (1i64 << 31) as f64).round() as i64;
+    let mut shift = exp;
+    if q == 1i64 << 31 {
+        q /= 2;
+        shift += 1;
+    }
+    if shift < -31 {
+        return (0, 0);
+    }
+    (q as i32, shift)
+}
+
+/// libm `frexp` for f64 (mantissa in [0.5, 1), power-of-two exponent).
+fn frexp(v: f64) -> (f64, i32) {
+    if v == 0.0 || v.is_nan() || v.is_infinite() {
+        return (v, 0);
+    }
+    let bits = v.to_bits();
+    let exp_bits = ((bits >> 52) & 0x7ff) as i32;
+    if exp_bits == 0 {
+        // subnormal: scale up first
+        let (m, e) = frexp(v * (1u64 << 54) as f64);
+        return (m, e - 54);
+    }
+    let exp = exp_bits - 1022;
+    let mant_bits = (bits & !(0x7ffu64 << 52)) | (1022u64 << 52);
+    (f64::from_bits(mant_bits), exp)
+}
+
+/// The full PPU scalar path: bias add happens before, this performs
+/// requantize + zero-point add + activation clamp + narrow.
+#[inline]
+pub fn ppu_requant(acc: i32, mult: i32, shift: i32, out_zp: i32, act_min: i32, act_max: i32) -> i8 {
+    let v = multiply_by_quantized_multiplier(acc, mult, shift) + out_zp;
+    v.clamp(act_min, act_max) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srdhm_saturates() {
+        assert_eq!(srdhm(i32::MIN, i32::MIN), i32::MAX);
+    }
+
+    #[test]
+    fn srdhm_half_multiplier_even() {
+        // SRDHM(a, 2^30) == a/2 exactly for even a
+        for a in [-100, -2, 0, 2, 100, 123456] {
+            assert_eq!(srdhm(a, 1 << 30), a / 2, "a={a}");
+        }
+    }
+
+    #[test]
+    fn srdhm_truncating_division_semantics() {
+        // Regression for the floor-vs-trunc subtlety: a=-1, b=0.75*2^31.
+        let b = (0.75 * (1i64 << 31) as f64) as i32;
+        assert_eq!(srdhm(-1, b), -1); // floor would give -2
+    }
+
+    #[test]
+    fn rdbypot_rounds_to_nearest_away() {
+        assert_eq!(rounding_divide_by_pot(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rounding_divide_by_pot(-5, 1), -3); // -2.5 -> -3
+        assert_eq!(rounding_divide_by_pot(4, 1), 2);
+        assert_eq!(rounding_divide_by_pot(7, 2), 2); // 1.75 -> 2
+        assert_eq!(rounding_divide_by_pot(-7, 2), -2);
+        assert_eq!(rounding_divide_by_pot(123, 0), 123);
+    }
+
+    #[test]
+    fn quantize_multiplier_range() {
+        for real in [0.25, 0.5, 0.75, 0.9999, 0.0001, 1.5] {
+            let (m, s) = quantize_multiplier(real);
+            let recon = m as f64 / (1i64 << 31) as f64 * 2f64.powi(s);
+            assert!((recon - real).abs() / real < 1e-6, "real={real}");
+            assert!(m >= 1 << 30, "mantissa normalized: {m}");
+        }
+        assert_eq!(quantize_multiplier(0.0), (0, 0));
+    }
+
+    #[test]
+    fn frexp_matches_definition() {
+        for v in [1.0, 0.5, 0.75, 3.14159, 1e-12, 123456.789] {
+            let (m, e) = frexp(v);
+            assert!((0.5..1.0).contains(&m), "v={v} m={m}");
+            assert!((m * 2f64.powi(e) - v).abs() < 1e-15 * v.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn qparams_round_trip() {
+        let q = QParams::from_range(-1.0, 1.0);
+        for v in [-1.0f32, -0.5, 0.0, 0.5, 0.9999] {
+            let d = q.dequantize(q.quantize(v));
+            assert!((d - v).abs() <= q.scale, "v={v} d={d}");
+        }
+    }
+
+    #[test]
+    fn qparams_zero_always_exact() {
+        // the real value 0.0 must be exactly representable (TFLite req)
+        for (lo, hi) in [(-1.0, 1.0), (0.0, 6.0), (-0.3, 2.7)] {
+            let q = QParams::from_range(lo, hi);
+            assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+        }
+    }
+
+    #[test]
+    fn ppu_requant_clamps() {
+        // huge accumulator clamps to act_max
+        let (m, s) = quantize_multiplier(0.5);
+        assert_eq!(ppu_requant(i32::MAX / 2, m, s, 0, -128, 127), 127);
+        assert_eq!(ppu_requant(i32::MIN / 2, m, s, 0, -128, 127), -128);
+        assert_eq!(ppu_requant(10, m, s, 3, 0, 6), 6); // relu6 window
+    }
+}

@@ -1,0 +1,89 @@
+//! Quantized tensors (NHWC int8, TFLite-style asymmetric quantization).
+
+use super::quant::QParams;
+
+/// An int8 tensor with quantization parameters. Layout is NHWC for
+/// activations, `[Cout, kh, kw, Cin]` for convolution weights.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub qp: QParams,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i8>, qp: QParams) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data, qp }
+    }
+
+    pub fn zeros(shape: Vec<usize>, qp: QParams) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![qp.zero_point.clamp(-128, 127) as i8; n],
+            qp,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// NHWC dims of an activation tensor (requires rank 4, batch 1).
+    pub fn nhwc(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "expected NHWC, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| self.qp.dequantize(v)).collect()
+    }
+
+    /// Quantize an f32 image into a tensor (test/example inputs).
+    pub fn quantize_from(values: &[f32], shape: Vec<usize>, qp: QParams) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let data = values.iter().map(|&v| qp.quantize(v)).collect();
+        Tensor { shape, data, qp }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let qp = QParams::new(0.1, 0);
+        let t = Tensor::new(vec![1, 2, 2, 3], vec![1; 12], qp);
+        assert_eq!(t.numel(), 12);
+        assert_eq!(t.nhwc(), (1, 2, 2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0; 5], QParams::new(1.0, 0));
+    }
+
+    #[test]
+    fn zeros_takes_zero_point() {
+        let t = Tensor::zeros(vec![4], QParams::new(0.5, 3));
+        assert!(t.data.iter().all(|&v| v == 3));
+        assert!(t.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantize_round_trip() {
+        let qp = QParams::from_range(-1.0, 1.0);
+        let vals = [-0.9f32, -0.1, 0.0, 0.4, 0.77];
+        let t = Tensor::quantize_from(&vals, vec![5], qp);
+        for (a, b) in t.dequantize().iter().zip(&vals) {
+            assert!((a - b).abs() <= qp.scale, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # SECDA — SystemC-Enabled Co-design of DNN Accelerators (reproduction)
+//!
+//! A full-system reproduction of *SECDA: Efficient Hardware/Software
+//! Co-Design of FPGA-based DNN Accelerators for Edge Inference*
+//! (Haris et al., 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the SECDA system itself: a SystemC-like
+//!   TLM simulation kernel ([`sysc`]), the paper's two accelerator
+//!   designs ([`accel::vm`], [`accel::sa`]) built from a shared
+//!   component library, the co-designed accelerator driver ([`driver`]),
+//!   a TFLite-like quantized inference framework with the GEMM delegate
+//!   hook ([`framework`]), the gemmlowp-style CPU baseline ([`gemm`]),
+//!   PYNQ-Z1 timing/energy models ([`perf`]), the synthesis model
+//!   ([`synth`]), a VTA-like comparison accelerator ([`vta`]), and the
+//!   PJRT runtime that executes the AOT-compiled artifacts ([`runtime`]).
+//! * **Layer 2 (python/compile/model.py)** — the accelerated subgraph
+//!   (int8 GEMM-convolution) in JAX, AOT-lowered per shape bucket.
+//! * **Layer 1 (python/compile/kernels/qgemm.py)** — the Pallas
+//!   output-stationary int8 GEMM kernel with fused PPU epilogue.
+//!
+//! Python never runs on the inference path: `make artifacts` lowers the
+//! kernels once to HLO text; the Rust binary loads and executes them via
+//! the PJRT C API.
+//!
+//! See `DESIGN.md` for the paper↔module map and the experiment index,
+//! and `EXPERIMENTS.md` for reproduced tables/figures.
+
+pub mod accel;
+pub mod cli;
+pub mod driver;
+pub mod framework;
+pub mod gemm;
+pub mod perf;
+pub mod runtime;
+pub mod synth;
+pub mod sysc;
+pub mod vta;

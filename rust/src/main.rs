@@ -1,0 +1,304 @@
+//! `secda` — the SECDA reproduction CLI (Layer-3 leader entrypoint).
+//!
+//! Subcommands (hand-rolled parsing; the offline vendor set has no
+//! clap):
+//!
+//! ```text
+//! secda table2 [model...]        regenerate Table II rows
+//! secda describe <vm|sa> [dim]   print a design block diagram (Figs 3/4)
+//! secda synth <vm|sa> [dim]      resource + synthesis-time report
+//! secda simulate <vm|sa> M K N   TLM-simulate one GEMM, per-component report
+//! secda sa-sizes                 §IV-E3 systolic-array size sweep
+//! secda devtime                  Eq. 1-3 development-time model
+//! secda runtime-check            PJRT artifact numerics vs CPU gemm
+//! ```
+
+use std::process::ExitCode;
+
+use secda::accel::{ExecMode, GemmAccel, GemmRequest, SaConfig, SaDesign, VmConfig, VmDesign};
+use secda::cli::{describe, table2};
+use secda::framework::quant::quantize_multiplier;
+use secda::gemm::QGemmParams;
+use secda::perf::devtime;
+use secda::synth;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "table2" => cmd_table2(&args[1..]),
+        "describe" => cmd_describe(&args[1..]),
+        "synth" => cmd_synth(&args[1..]),
+        "simulate" => cmd_simulate(&args[1..]),
+        "sa-sizes" => cmd_sa_sizes(),
+        "devtime" => cmd_devtime(),
+        "runtime-check" => cmd_runtime_check(),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            ExitCode::SUCCESS
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{HELP}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+secda — SECDA reproduction (SystemC-enabled co-design of DNN accelerators)
+
+USAGE: secda <command> [args]
+
+COMMANDS:
+  table2 [model...]       regenerate Table II (default: all four models)
+  describe <vm|sa> [dim]  design block diagram (paper Figs. 3/4)
+  synth <vm|sa> [dim]     resource estimate + synthesis-time model
+  simulate <vm|sa> M K N  TLM-simulate one GEMM with per-component stats
+  sa-sizes                §IV-E3 systolic array size sweep (4/8/16)
+  devtime                 Eq. 1-3 development-time comparison
+  runtime-check           verify PJRT artifacts against the CPU gemm
+";
+
+fn cmd_table2(args: &[String]) -> ExitCode {
+    let models: Vec<&str> = if args.is_empty() {
+        secda::framework::models::ALL.to_vec()
+    } else {
+        args.iter().map(String::as_str).collect()
+    };
+    for m in &models {
+        if secda::framework::models::by_name(m).is_none() {
+            eprintln!(
+                "unknown model `{m}` (known: {:?})",
+                secda::framework::models::ALL
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+    eprintln!("running Table II for {models:?} (full functional inference per cell)...");
+    let rows = table2::table2(&models);
+    print!("{}", table2::render(&rows));
+    // §V-B summary lines
+    use table2::Setup;
+    for (base, accel, label) in [
+        (Setup::Cpu(1), Setup::CpuVm(1), "VM vs CPU(1thr)"),
+        (Setup::Cpu(1), Setup::CpuSa(1), "SA vs CPU(1thr)"),
+        (Setup::Cpu(2), Setup::CpuVm(2), "VM vs CPU(2thr)"),
+        (Setup::Cpu(2), Setup::CpuSa(2), "SA vs CPU(2thr)"),
+    ] {
+        let (s, e) = table2::speedup_summary(&rows, base, accel);
+        println!("avg {label}: {s:.2}x speedup, {e:.2}x energy reduction");
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_describe(args: &[String]) -> ExitCode {
+    match args.first().map(String::as_str) {
+        Some("vm") => {
+            print!("{}", describe::describe_vm(&VmConfig::paper()));
+            ExitCode::SUCCESS
+        }
+        Some("sa") => {
+            let dim = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+            print!("{}", describe::describe_sa(&SaConfig::with_dim(dim)));
+            ExitCode::SUCCESS
+        }
+        _ => {
+            eprintln!("usage: secda describe <vm|sa> [dim]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_synth(args: &[String]) -> ExitCode {
+    let rep = match args.first().map(String::as_str) {
+        Some("vm") => synth::synthesize_vm(&VmConfig::paper()),
+        Some("sa") => {
+            let dim = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+            synth::synthesize_sa(&SaConfig::with_dim(dim))
+        }
+        _ => {
+            eprintln!("usage: secda synth <vm|sa> [dim]");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "resources: {} LUT, {} FF, {} DSP, {} BRAM36",
+        rep.resources.luts, rep.resources.ffs, rep.resources.dsps, rep.resources.bram36
+    );
+    println!(
+        "fits Zynq-7020: {} (max utilization {:.0}%)",
+        rep.fits,
+        rep.utilization * 100.0
+    );
+    println!(
+        "modeled synthesis time: {:.1} min",
+        rep.synth_time.as_secs_f64() / 60.0
+    );
+    ExitCode::SUCCESS
+}
+
+fn parse_mkn(args: &[String]) -> Option<(usize, usize, usize)> {
+    Some((
+        args.first()?.parse().ok()?,
+        args.get(1)?.parse().ok()?,
+        args.get(2)?.parse().ok()?,
+    ))
+}
+
+fn cmd_simulate(args: &[String]) -> ExitCode {
+    let design = args.first().map(String::as_str).unwrap_or("sa");
+    let Some((m, k, n)) = parse_mkn(&args[1..]) else {
+        eprintln!("usage: secda simulate <vm|sa> M K N");
+        return ExitCode::FAILURE;
+    };
+    let mut st = 1u64;
+    let mut rnd = || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let (mult, shift) = quantize_multiplier(0.03);
+    let req = GemmRequest::new(m, k, n, w, x, QGemmParams::uniform(m, 0, mult, shift));
+    let run = |label: &str, mode: ExecMode| {
+        let report = match design {
+            "vm" => VmDesign::paper().run(&req, mode).report,
+            _ => SaDesign::paper().run(&req, mode).report,
+        };
+        println!("--- {design} {label} ---");
+        println!(
+            "total: {} ({} cycles) | compute {} cyc | weight-load {} cyc | dma in/out {}/{} cyc",
+            report.total_time,
+            report.total_cycles,
+            report.compute_cycles,
+            report.weight_load_cycles,
+            report.dma_in_cycles,
+            report.dma_out_cycles
+        );
+        println!(
+            "bytes in/out: {}/{} | global buffer reads: {}",
+            report.bytes_in, report.bytes_out, report.global_buffer_reads
+        );
+        for (name, s) in &report.modules {
+            println!(
+                "  {:<18} busy {:>12} util {:>5.1}% txns {:>6}",
+                name,
+                format!("{}", s.busy),
+                s.utilization() * 100.0,
+                s.transactions
+            );
+        }
+    };
+    run("simulation (SystemC loop)", ExecMode::Simulation);
+    run("hardware-eval loop", ExecMode::HardwareEval);
+    ExitCode::SUCCESS
+}
+
+fn cmd_sa_sizes() -> ExitCode {
+    println!("SA size sweep (§IV-E3): GEMM 512x512x784 per size");
+    let mut st = 3u64;
+    let mut rnd = || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let (m, k, n) = (512, 512, 784);
+    let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let (mult, shift) = quantize_multiplier(0.02);
+    let req = GemmRequest::new(m, k, n, w, x, QGemmParams::uniform(m, 0, mult, shift));
+    let mut prev: Option<u64> = None;
+    for dim in [4usize, 8, 16] {
+        let res = SaDesign::with_dim(dim).run(&req, ExecMode::HardwareEval);
+        let rep = synth::synthesize_sa(&SaConfig::with_dim(dim));
+        let speedup = prev
+            .map(|p| format!("{:.2}x vs previous", p as f64 / res.report.total_cycles as f64))
+            .unwrap_or_default();
+        println!(
+            "  {dim:>2}x{dim:<2}: {:>10} cycles, {:>3} DSP, util {:>4.0}%  {}",
+            res.report.total_cycles,
+            rep.resources.dsps,
+            rep.utilization * 100.0,
+            speedup
+        );
+        prev = Some(res.report.total_cycles);
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_devtime() -> ExitCode {
+    let p = devtime::DevTimeParams::paper_like();
+    println!("development-time model (Eqs. 1-3), paper-like parameters:");
+    println!(
+        "  C_t={:.1} min  IS_t={:.1} min  S_t={:.1} min (S_t/C_t = {:.0}x)",
+        p.compile.as_secs_f64() / 60.0,
+        p.sim_inference.as_secs_f64() / 60.0,
+        p.synthesis.as_secs_f64() / 60.0,
+        p.synthesis.as_secs_f64() / p.compile.as_secs_f64()
+    );
+    for (n_sim, n_synth) in [(20u64, 2u64), (50, 3), (100, 5)] {
+        let e1 = devtime::eq1_secda(&p, n_sim, n_synth);
+        let e2 = devtime::eq2_synth_only(&p, n_sim, n_synth);
+        let e3 = devtime::eq3_full_sim(&p, n_sim, n_synth, 100.0);
+        println!(
+            "  {n_sim} sims + {n_synth} synths: SECDA {:.1} h | synth-only {:.1} h ({:.1}x) | full-sys sim {:.1} h",
+            e1.as_secs_f64() / 3600.0,
+            e2.as_secs_f64() / 3600.0,
+            e2.as_secs_f64() / e1.as_secs_f64(),
+            e3.as_secs_f64() / 3600.0
+        );
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_runtime_check() -> ExitCode {
+    use secda::runtime::{default_dir, ArtifactRuntime};
+    let dir = default_dir();
+    if !ArtifactRuntime::available(&dir) {
+        eprintln!("artifacts not found at {dir:?}; run `make artifacts`");
+        return ExitCode::FAILURE;
+    }
+    let mut rt = match ArtifactRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime init failed: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!("loaded {} buckets from {dir:?}", rt.buckets.len());
+    let mut st = 11u64;
+    let mut rnd = || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    for (m, k, n) in [(32, 27, 12544), (64, 32, 12544), (512, 4608, 49), (100, 100, 100)] {
+        let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let (mult, shift) = quantize_multiplier(0.017);
+        let p = QGemmParams::uniform(m, 42, mult, shift);
+        match rt.qgemm(m, k, n, &w, &x, &p) {
+            Ok(out) => {
+                let cpu = secda::gemm::qgemm(&w, &x, m, k, n, &p, 1);
+                let ok = out == cpu;
+                println!("  GEMM ({m},{k},{n}): PJRT == CPU: {ok}");
+                if !ok {
+                    return ExitCode::FAILURE;
+                }
+            }
+            Err(e) => {
+                eprintln!("  GEMM ({m},{k},{n}) failed: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    println!(
+        "runtime-check OK ({} executables compiled)",
+        rt.compiled_count()
+    );
+    ExitCode::SUCCESS
+}

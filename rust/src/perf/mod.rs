@@ -1,0 +1,159 @@
+//! PYNQ-Z1 timing and energy models.
+//!
+//! The paper measures wall-clock on a dual Cortex-A9 @650MHz and energy
+//! with a COOWOO USB power meter. Neither exists here, so Table II's
+//! CPU-side numbers come from an analytic model *calibrated against the
+//! paper's own CPU-only baselines* (see [`calib`] for constants and
+//! provenance), while accelerator times come from the [`crate::sysc`]
+//! TLM simulations. This is the substitution DESIGN.md documents:
+//! predictions for the accelerated configurations then follow from the
+//! models, and the comparison against the paper's measured rows is the
+//! reproduction result.
+
+pub mod calib;
+pub mod devtime;
+
+use crate::sysc::SimTime;
+
+/// Cortex-A9 (2-core, 650 MHz) execution-time model for the TFLite
+/// CPU paths.
+#[derive(Debug, Clone)]
+pub struct CpuModel {
+    /// Effective int8 GEMM throughput per thread, MAC/s (gemmlowp with
+    /// NEON on the A9).
+    pub gemm_macs_per_sec: f64,
+    /// Depthwise conv throughput per thread, MAC/s (lower arithmetic
+    /// intensity than GEMM).
+    pub dwconv_macs_per_sec: f64,
+    /// Streaming element-wise throughput per thread, bytes/s.
+    pub elementwise_bytes_per_sec: f64,
+    /// im2col / data-reshape throughput (driver prep), bytes/s.
+    pub reshape_bytes_per_sec: f64,
+    /// gemmlowp output unpacking (requant on CPU), outputs/s.
+    pub unpack_outputs_per_sec: f64,
+    /// Fixed per-op dispatch overhead.
+    pub op_overhead: SimTime,
+    /// Per-inference framework overhead (TFLite interpreter dispatch,
+    /// tensor (de)quantization, allocation churn) — the bulk of the
+    /// Non-CONV column that is not attributable to any single op.
+    pub framework_overhead: SimTime,
+    /// Marginal efficiency of the second thread (Table II shows ~1.93x
+    /// scaling on CONV): `eff_threads = 1 + scaling * (threads - 1)`.
+    pub second_thread_scaling: f64,
+}
+
+impl CpuModel {
+    pub fn pynq_a9() -> Self {
+        calib::cpu_model()
+    }
+
+    /// Effective parallelism for `threads` CPU threads.
+    pub fn eff_threads(&self, threads: usize) -> f64 {
+        1.0 + self.second_thread_scaling * (threads.max(1) - 1) as f64
+    }
+
+    fn time(&self, amount: f64, rate_per_sec: f64, threads: usize) -> SimTime {
+        let secs = amount / (rate_per_sec * self.eff_threads(threads));
+        SimTime::ps((secs * 1e12).round() as u64) + self.op_overhead
+    }
+
+    /// CPU-side quantized GEMM (gemmlowp) time.
+    pub fn gemm_time(&self, macs: u64, threads: usize) -> SimTime {
+        self.time(macs as f64, self.gemm_macs_per_sec, threads)
+    }
+
+    /// Depthwise convolution time.
+    pub fn dwconv_time(&self, macs: u64, threads: usize) -> SimTime {
+        self.time(macs as f64, self.dwconv_macs_per_sec, threads)
+    }
+
+    /// Pool / add / concat / activation style streaming ops.
+    pub fn elementwise_time(&self, bytes: u64, threads: usize) -> SimTime {
+        self.time(bytes as f64, self.elementwise_bytes_per_sec, threads)
+    }
+
+    /// Driver data preparation (im2col, accelerator-layout reshape).
+    pub fn reshape_time(&self, bytes: u64, threads: usize) -> SimTime {
+        self.time(bytes as f64, self.reshape_bytes_per_sec, threads)
+    }
+
+    /// CPU-side gemmlowp "unpack" (bias+requant+narrow) when the PPU
+    /// is not on the accelerator.
+    pub fn unpack_time(&self, outputs: u64, threads: usize) -> SimTime {
+        self.time(outputs as f64, self.unpack_outputs_per_sec, threads)
+    }
+}
+
+/// Board-level energy model (COOWOO power-meter analogue):
+/// `E = T_total * (P_idle + P_cpu * threads) + T_accel_active * P_fpga`.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Board idle power (SoC static + DRAM + peripherals), watts.
+    pub p_idle_w: f64,
+    /// Marginal power per active A9 thread, watts.
+    pub p_per_thread_w: f64,
+    /// Marginal FPGA fabric power while the accelerator is active.
+    pub p_fpga_active_w: f64,
+}
+
+impl EnergyModel {
+    pub fn pynq() -> Self {
+        calib::energy_model()
+    }
+
+    /// Energy in joules for an inference.
+    pub fn energy_j(&self, total: SimTime, accel_active: SimTime, threads: usize) -> f64 {
+        let t = total.as_secs_f64();
+        let ta = accel_active.as_secs_f64().min(t);
+        t * (self.p_idle_w + self.p_per_thread_w * threads as f64) + ta * self.p_fpga_active_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_time_scales_with_threads() {
+        let m = CpuModel::pynq_a9();
+        let one = m.gemm_time(1_000_000_000, 1);
+        let two = m.gemm_time(1_000_000_000, 2);
+        let ratio = one.as_secs_f64() / two.as_secs_f64();
+        assert!((1.8..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn calibration_mobilenet_v1_cpu_baseline() {
+        // MobileNetV1 CPU(1thr) CONV = 635 ms in Table II. Our model on
+        // the same workload (GEMM convs + depthwise + im2col) must land
+        // within 20% of the paper's measurement.
+        let m = CpuModel::pynq_a9();
+        let gemm_macs: u64 = 567_716_864; // from the python shape table
+        let dw_macs: u64 = 42_264_768;
+        let im2col_bytes: u64 = 12_153_344;
+        let t = m.gemm_time(gemm_macs, 1)
+            + m.dwconv_time(dw_macs, 1)
+            + m.reshape_time(im2col_bytes, 1);
+        let ms = t.as_ms_f64();
+        assert!((508.0..=762.0).contains(&ms), "modeled CONV {ms} ms vs paper 635 ms");
+    }
+
+    #[test]
+    fn energy_model_matches_cpu_rows() {
+        // Table II MobileNetV1: CPU 1thr 776 ms -> 1.84 J (2.37 W);
+        // CPU 2thr 402 ms -> 1.04 J (2.59 W).
+        let e = EnergyModel::pynq();
+        let j1 = e.energy_j(SimTime::ms(776), SimTime::ZERO, 1);
+        let j2 = e.energy_j(SimTime::ms(402), SimTime::ZERO, 2);
+        assert!((j1 - 1.84).abs() < 0.15, "1thr {j1} J");
+        assert!((j2 - 1.04).abs() < 0.15, "2thr {j2} J");
+    }
+
+    #[test]
+    fn fpga_power_adds_energy() {
+        let e = EnergyModel::pynq();
+        let base = e.energy_j(SimTime::ms(100), SimTime::ZERO, 1);
+        let with = e.energy_j(SimTime::ms(100), SimTime::ms(80), 1);
+        assert!(with > base);
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT runtime: load and execute the AOT-compiled qGEMM artifacts.
+//!
+//! This is the "bitstream" of the reproduction: `make artifacts`
+//! lowers the Layer-1 Pallas kernel (via the Layer-2 JAX entry) to HLO
+//! text once per shape bucket; this module compiles each bucket on the
+//! PJRT CPU client at first use and executes it from the request path.
+//! Python is never involved at runtime.
+//!
+//! Interchange is HLO *text* — xla_extension 0.5.1 rejects jax >= 0.5
+//! serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+//!
+//! i8/i32 literals are built through
+//! `Literal::create_from_shape_and_untyped_data` (the crate's typed
+//! constructors only cover i32/i64/u32/u64/f32/f64).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::gemm::QGemmParams;
+
+/// One AOT shape bucket from the manifest.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+impl Bucket {
+    pub fn covers(&self, m: usize, k: usize, n: usize) -> bool {
+        self.m >= m && self.k >= k && self.n >= n
+    }
+
+    pub fn volume(&self) -> u128 {
+        self.m as u128 * self.k as u128 * self.n as u128
+    }
+}
+
+/// The artifact runtime: manifest + lazily compiled executables.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub buckets: Vec<Bucket>,
+    cache: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+/// Default artifacts directory (repo-relative, overridable via env).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("SECDA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl ArtifactRuntime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+        let mut buckets = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let mut it = line.split('\t');
+            let parse = |s: Option<&str>| -> Result<usize> {
+                s.ok_or_else(|| anyhow!("manifest.tsv line {}: missing field", lineno + 1))?
+                    .parse::<usize>()
+                    .with_context(|| format!("manifest.tsv line {}", lineno + 1))
+            };
+            let m = parse(it.next())?;
+            let k = parse(it.next())?;
+            let n = parse(it.next())?;
+            let file = it
+                .next()
+                .ok_or_else(|| anyhow!("manifest.tsv line {}: missing file", lineno + 1))?
+                .to_string();
+            buckets.push(Bucket { m, k, n, file });
+        }
+        if buckets.is_empty() {
+            bail!("empty manifest at {manifest:?}");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            buckets,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// True when the artifacts directory looks usable.
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.tsv").is_file()
+    }
+
+    /// Smallest bucket covering a logical GEMM shape.
+    pub fn pick_bucket(&self, m: usize, k: usize, n: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.covers(m, k, n))
+            .min_by_key(|b| b.volume())
+    }
+
+    fn executable(
+        &mut self,
+        key: (usize, usize, usize),
+        file: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&key) {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+            self.cache.insert(key, exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Execute a quantized GEMM through the AOT artifact: pads into the
+    /// bucket, runs on PJRT, and returns the valid `m x n` region.
+    /// Bit-exact vs [`crate::gemm::qgemm`] (see tests/runtime_numerics).
+    pub fn qgemm(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        w: &[i8],
+        x: &[i8],
+        params: &QGemmParams,
+    ) -> Result<Vec<i8>> {
+        assert_eq!(w.len(), m * k);
+        assert_eq!(x.len(), k * n);
+        let b = self
+            .pick_bucket(m, k, n)
+            .ok_or_else(|| anyhow!("no AOT bucket covers GEMM ({m},{k},{n})"))?
+            .clone();
+        let (mb, kb, nb) = (b.m, b.k, b.n);
+
+        // pad W rows with zeros (inert), X with anything (zero)
+        let mut wp = vec![0i8; mb * kb];
+        for i in 0..m {
+            wp[i * kb..i * kb + k].copy_from_slice(&w[i * k..(i + 1) * k]);
+        }
+        let mut xp = vec![0i8; kb * nb];
+        for r in 0..k {
+            xp[r * nb..r * nb + n].copy_from_slice(&x[r * n..(r + 1) * n]);
+        }
+        let mut bias = vec![0i32; mb];
+        bias[..m].copy_from_slice(&params.bias);
+        let mut mult = vec![1 << 30; mb];
+        mult[..m].copy_from_slice(&params.mult);
+        let mut shift = vec![0i32; mb];
+        shift[..m].copy_from_slice(&params.shift);
+        let qp = [params.out_zp, params.act_min, params.act_max, 0i32];
+
+        let lit_i8 = |data: &[i8], dims: &[usize]| -> Result<xla::Literal> {
+            let bytes =
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)
+                .map_err(|e| anyhow!("i8 literal: {e:?}"))
+        };
+        let lit_i32 = |data: &[i32], dims: &[usize]| -> Result<xla::Literal> {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+                .map_err(|e| anyhow!("i32 literal: {e:?}"))
+        };
+
+        let args = [
+            lit_i8(&wp, &[mb, kb])?,
+            lit_i8(&xp, &[kb, nb])?,
+            lit_i32(&bias, &[mb])?,
+            lit_i32(&mult, &[mb])?,
+            lit_i32(&shift, &[mb])?,
+            lit_i32(&qp, &[4])?,
+        ];
+        let exe = self.executable((mb, kb, nb), &b.file)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("executing bucket {:?}: {e:?}", (mb, kb, nb)))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // lowered with return_tuple=True -> 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let flat: Vec<i8> = out.to_vec().map_err(|e| anyhow!("to_vec i8: {e:?}"))?;
+        if flat.len() != mb * nb {
+            bail!("unexpected output size {} != {}", flat.len(), mb * nb);
+        }
+        // crop the valid region
+        let mut cropped = vec![0i8; m * n];
+        for i in 0..m {
+            cropped[i * n..(i + 1) * n].copy_from_slice(&flat[i * nb..i * nb + n]);
+        }
+        Ok(cropped)
+    }
+
+    /// Number of compiled executables (cache telemetry).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_picking_prefers_smallest() {
+        let buckets = vec![
+            Bucket { m: 128, k: 64, n: 128, file: "a".into() },
+            Bucket { m: 64, k: 64, n: 128, file: "b".into() },
+            Bucket { m: 64, k: 32, n: 64, file: "c".into() },
+        ];
+        let rt_pick = |m: usize, k: usize, n: usize| -> Option<String> {
+            buckets
+                .iter()
+                .filter(|b| b.covers(m, k, n))
+                .min_by_key(|b| b.volume())
+                .map(|b| b.file.clone())
+        };
+        assert_eq!(rt_pick(60, 30, 60), Some("c".into()));
+        assert_eq!(rt_pick(60, 60, 100), Some("b".into()));
+        assert_eq!(rt_pick(100, 60, 100), Some("a".into()));
+        assert_eq!(rt_pick(200, 10, 10), None);
+    }
+
+    #[test]
+    fn covers_semantics() {
+        let b = Bucket { m: 64, k: 32, n: 128, file: "x".into() };
+        assert!(b.covers(64, 32, 128));
+        assert!(b.covers(1, 1, 1));
+        assert!(!b.covers(65, 32, 128));
+    }
+}

@@ -1,0 +1,119 @@
+//! Bounded FIFO channels (the `sc_fifo` analogue) with occupancy stats.
+
+use std::collections::VecDeque;
+
+use super::stats::FifoStats;
+use super::time::SimTime;
+
+/// A capacity-bounded FIFO. Push/pop are non-blocking; blocking
+/// semantics are built by the kernel's wake notifications
+/// ([`super::kernel::Wake`]), mirroring how SystemC processes sleep on
+/// `data_written`/`data_read` events.
+#[derive(Debug)]
+pub struct Fifo<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    stats: FifoStats,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "zero-capacity fifo");
+        Fifo {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            stats: FifoStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.capacity
+    }
+
+    /// Push at simulated time `now`; returns false when full.
+    pub fn push(&mut self, item: T, now: SimTime) -> bool {
+        if self.is_full() {
+            self.stats.push_rejects += 1;
+            return false;
+        }
+        self.items.push_back(item);
+        self.stats.pushes += 1;
+        self.stats.high_water = self.stats.high_water.max(self.items.len());
+        self.stats.last_activity = now;
+        true
+    }
+
+    /// Pop at simulated time `now`; `None` when empty.
+    pub fn pop(&mut self, now: SimTime) -> Option<T> {
+        let item = self.items.pop_front();
+        if item.is_some() {
+            self.stats.pops += 1;
+            self.stats.last_activity = now;
+        } else {
+            self.stats.pop_misses += 1;
+        }
+        item
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    pub fn stats(&self) -> &FifoStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_order() {
+        let mut f = Fifo::new(4);
+        for v in 0..4 {
+            assert!(f.push(v, SimTime::ZERO));
+        }
+        assert!(f.is_full());
+        assert!(!f.push(9, SimTime::ZERO)); // rejected
+        assert_eq!(f.pop(SimTime::ZERO), Some(0));
+        assert_eq!(f.pop(SimTime::ZERO), Some(1));
+        assert!(f.push(9, SimTime::ZERO));
+        assert_eq!(f.pop(SimTime::ZERO), Some(2));
+        assert_eq!(f.pop(SimTime::ZERO), Some(3));
+        assert_eq!(f.pop(SimTime::ZERO), Some(9));
+        assert!(f.pop(SimTime::ZERO).is_none());
+    }
+
+    #[test]
+    fn stats_track_activity() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1, SimTime::ns(1)));
+        assert!(f.push(2, SimTime::ns(2)));
+        assert!(!f.push(3, SimTime::ns(3)));
+        f.pop(SimTime::ns(4));
+        assert_eq!(f.stats().pushes, 2);
+        assert_eq!(f.stats().push_rejects, 1);
+        assert_eq!(f.stats().pops, 1);
+        assert_eq!(f.stats().high_water, 2);
+        assert_eq!(f.stats().last_activity, SimTime::ns(4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = Fifo::<u8>::new(0);
+    }
+}

@@ -1,0 +1,35 @@
+//! `sysc` — a SystemC-flavoured discrete-event / transaction-level
+//! simulation kernel, written from scratch in Rust.
+//!
+//! This is the substrate the paper takes from SystemC 2.3 (IEEE 1666):
+//! SECDA models accelerator designs at *transaction level* — components
+//! exchange tile-sized transactions through bounded FIFOs, with cycle
+//! costs annotated per component — instead of register-transfer level.
+//! The kernel provides:
+//!
+//! * [`time::SimTime`] — picosecond-resolution simulated time, plus
+//!   [`time::Clock`] for cycle↔time conversion at a component frequency.
+//! * [`kernel::Simulator`] — the event wheel: schedule, delta-cycles,
+//!   run-to-quiescence, per-module dispatch.
+//! * [`fifo::Fifo`] — bounded FIFOs with producer/consumer wake
+//!   notifications and occupancy statistics (the `sc_fifo` analogue).
+//! * [`stats::ModuleStats`] — busy/idle accounting, transaction and
+//!   byte counters; the numbers §III-C says simulation must surface
+//!   (clock cycles per component, utilization, BRAM bandwidth, ...).
+//! * [`trace::Trace`] — lightweight event tracing for debugging and for
+//!   the waveform-ish dumps used in tests.
+//!
+//! The accelerator models in [`crate::accel`] are built exclusively on
+//! this module, mirroring how the paper's designs are built on SystemC.
+
+pub mod fifo;
+pub mod kernel;
+pub mod stats;
+pub mod time;
+pub mod trace;
+
+pub use fifo::Fifo;
+pub use kernel::{Ctx, Event, FifoId, Module, ModuleId, Simulator, Wake};
+pub use stats::{FifoStats, ModuleStats};
+pub use time::{Clock, SimTime};
+pub use trace::Trace;

@@ -1,0 +1,108 @@
+//! Per-component statistics — the §III-C simulation metrics: cycles
+//! spent per component, utilization, queue occupancy, byte traffic.
+
+use super::time::SimTime;
+
+/// Busy/idle accounting for a module.
+///
+/// Components call [`ModuleStats::busy_for`] whenever they consume
+/// simulated time doing work; utilization is busy-time over the window
+/// between first and last activity.
+#[derive(Debug, Clone, Default)]
+pub struct ModuleStats {
+    /// Total simulated time the component spent doing work.
+    pub busy: SimTime,
+    /// Number of transactions processed.
+    pub transactions: u64,
+    /// Bytes moved through the component (for bandwidth metrics).
+    pub bytes: u64,
+    /// Work cycles in the component's own clock domain.
+    pub cycles: u64,
+    /// First/last activity timestamps (utilization window).
+    pub first_activity: Option<SimTime>,
+    pub last_activity: SimTime,
+    /// Cycles the component wanted to work but was starved/blocked.
+    pub stall_cycles: u64,
+}
+
+impl ModuleStats {
+    pub fn busy_for(&mut self, start: SimTime, dur: SimTime, cycles: u64) {
+        self.busy += dur;
+        self.cycles += cycles;
+        if self.first_activity.is_none() {
+            self.first_activity = Some(start);
+        }
+        self.last_activity = self.last_activity.max(start + dur);
+    }
+
+    pub fn add_transaction(&mut self, bytes: u64) {
+        self.transactions += 1;
+        self.bytes += bytes;
+    }
+
+    pub fn add_stall(&mut self, cycles: u64) {
+        self.stall_cycles += cycles;
+    }
+
+    /// Busy fraction of the activity window, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        match self.first_activity {
+            Some(first) if self.last_activity > first => {
+                self.busy.as_ps() as f64 / (self.last_activity - first).as_ps() as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Effective bandwidth over the activity window, bytes/second.
+    pub fn bandwidth_bps(&self) -> f64 {
+        match self.first_activity {
+            Some(first) if self.last_activity > first => {
+                self.bytes as f64 / (self.last_activity - first).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// Occupancy statistics of a [`super::fifo::Fifo`].
+#[derive(Debug, Clone, Default)]
+pub struct FifoStats {
+    pub pushes: u64,
+    pub pops: u64,
+    pub push_rejects: u64,
+    pub pop_misses: u64,
+    pub high_water: usize,
+    pub last_activity: SimTime,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_window() {
+        let mut s = ModuleStats::default();
+        s.busy_for(SimTime::ns(0), SimTime::ns(10), 1);
+        s.busy_for(SimTime::ns(30), SimTime::ns(10), 1);
+        // busy 20ns over a 40ns window
+        assert!((s.utilization() - 0.5).abs() < 1e-9);
+        assert_eq!(s.cycles, 2);
+    }
+
+    #[test]
+    fn bandwidth() {
+        let mut s = ModuleStats::default();
+        s.busy_for(SimTime::ZERO, SimTime::us(1), 100);
+        s.add_transaction(1000);
+        // 1000 bytes over 1us = 1 GB/s
+        assert!((s.bandwidth_bps() - 1e9).abs() / 1e9 < 1e-6);
+    }
+
+    #[test]
+    fn idle_module_reports_zero() {
+        let s = ModuleStats::default();
+        assert_eq!(s.utilization(), 0.0);
+        assert_eq!(s.bandwidth_bps(), 0.0);
+    }
+}

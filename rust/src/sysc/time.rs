@@ -1,0 +1,165 @@
+//! Simulated time: picosecond-resolution counters and clock domains.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time, in integer picoseconds.
+///
+/// Picoseconds give headroom for multi-GHz clock domains while a u64
+/// still spans ~213 days of simulated time — far beyond any inference.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn ps(v: u64) -> Self {
+        SimTime(v)
+    }
+    pub fn ns(v: u64) -> Self {
+        SimTime(v * 1_000)
+    }
+    pub fn us(v: u64) -> Self {
+        SimTime(v * 1_000_000)
+    }
+    pub fn ms(v: u64) -> Self {
+        SimTime(v * 1_000_000_000)
+    }
+
+    pub fn as_ps(self) -> u64 {
+        self.0
+    }
+    pub fn as_ns_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e12
+    }
+
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000_000 {
+            write!(f, "{:.3}ms", self.as_ms_f64())
+        } else if self.0 >= 1_000_000 {
+            write!(f, "{:.3}us", self.as_us_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}ns", self.as_ns_f64())
+        } else {
+            write!(f, "{}ps", self.0)
+        }
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// A clock domain: converts between cycle counts and [`SimTime`].
+///
+/// Every accelerator component in [`crate::accel`] annotates its costs
+/// in *cycles* of its domain clock; the kernel works in time so that
+/// multi-clock designs (e.g. fabric @100MHz, AXI @133MHz) compose.
+#[derive(Clone, Copy, Debug)]
+pub struct Clock {
+    /// Cycle period in picoseconds.
+    pub period_ps: u64,
+}
+
+impl Clock {
+    pub fn from_mhz(mhz: f64) -> Self {
+        assert!(mhz > 0.0);
+        Clock {
+            period_ps: (1e6 / mhz).round() as u64,
+        }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        1e6 / self.period_ps as f64
+    }
+
+    /// Duration of `n` cycles.
+    pub fn cycles(&self, n: u64) -> SimTime {
+        SimTime(self.period_ps * n)
+    }
+
+    /// Number of whole cycles elapsed at time `t` (floor).
+    pub fn cycles_at(&self, t: SimTime) -> u64 {
+        t.0 / self.period_ps
+    }
+
+    /// Cycles needed to cover duration `t` (ceil).
+    pub fn cycles_for(&self, t: SimTime) -> u64 {
+        t.0.div_ceil(self.period_ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_units() {
+        assert_eq!(SimTime::ns(1).as_ps(), 1_000);
+        assert_eq!(SimTime::us(2).as_ps(), 2_000_000);
+        assert_eq!(SimTime::ms(3).as_ps(), 3_000_000_000);
+        assert_eq!(SimTime::ms(1).as_ms_f64(), 1.0);
+    }
+
+    #[test]
+    fn simtime_arith() {
+        let a = SimTime::ns(5) + SimTime::ns(7);
+        assert_eq!(a, SimTime::ns(12));
+        assert_eq!(a - SimTime::ns(2), SimTime::ns(10));
+        assert_eq!(SimTime::ns(1).saturating_sub(SimTime::ns(9)), SimTime::ZERO);
+    }
+
+    #[test]
+    fn clock_conversion() {
+        let c = Clock::from_mhz(100.0); // 10ns period
+        assert_eq!(c.period_ps, 10_000);
+        assert_eq!(c.cycles(3), SimTime::ns(30));
+        assert_eq!(c.cycles_at(SimTime::ns(35)), 3);
+        assert_eq!(c.cycles_for(SimTime::ns(35)), 4);
+        assert!((c.freq_mhz() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simtime_display() {
+        assert_eq!(format!("{}", SimTime::ns(30)), "30.000ns");
+        assert_eq!(format!("{}", SimTime::ps(5)), "5ps");
+        assert_eq!(format!("{}", SimTime::ms(2)), "2.000ms");
+    }
+}

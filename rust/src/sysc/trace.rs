@@ -1,0 +1,102 @@
+//! Lightweight event tracing (the waveform-dump analogue).
+//!
+//! Disabled by default — the trace is on the simulation hot path, so a
+//! disabled trace must cost one branch. When enabled it records
+//! `(time, module, label)` tuples, capped to avoid unbounded growth.
+
+use super::time::SimTime;
+
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub time: SimTime,
+    pub module: String,
+    pub label: String,
+}
+
+#[derive(Debug)]
+pub struct Trace {
+    enabled: bool,
+    cap: usize,
+    pub entries: Vec<TraceEntry>,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn disabled() -> Self {
+        Trace {
+            enabled: false,
+            cap: 0,
+            entries: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn enabled(cap: usize) -> Self {
+        Trace {
+            enabled: true,
+            cap,
+            entries: Vec::with_capacity(cap.min(4096)),
+            dropped: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn record(&mut self, time: SimTime, module: &str, label: impl FnOnce() -> String) {
+        if !self.enabled {
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.entries.push(TraceEntry {
+            time,
+            module: module.to_string(),
+            label: label(),
+        });
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Render as a text "waveform" listing, one event per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&format!("{:>14}  {:<20} {}\n", format!("{}", e.time), e.module, e.label));
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("... {} entries dropped (cap {})\n", self.dropped, self.cap));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(SimTime::ns(1), "m", || "x".into());
+        assert!(t.entries.is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_caps() {
+        let mut t = Trace::enabled(2);
+        for i in 0..5 {
+            t.record(SimTime::ns(i), "m", || format!("e{i}"));
+        }
+        assert_eq!(t.entries.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        let s = t.render();
+        assert!(s.contains("e0") && s.contains("dropped"));
+    }
+}

@@ -1,0 +1,184 @@
+//! VTA-like comparison accelerator (paper §V-C, Table II last row).
+//!
+//! VTA (Moreau et al.) is a GEMM-core accelerator with a high-level
+//! task ISA, driven by the TVM stack; the paper compares its ResNet18
+//! deployment on the same PYNQ-Z1 board. We model its published
+//! PYNQ-Z1 configuration: a 1x16x16 int8 GEMM core @100MHz with
+//! on-chip micro-op/weight/activation scratchpads.
+//!
+//! Key behavioural differences vs the SECDA designs, which reproduce
+//! the paper's observations:
+//! * VTA runs *more* of the network on the accelerator (TVM offloads
+//!   nearly all conv layers and keeps intermediate tensors resident),
+//!   so it moves fewer bytes off-chip → better energy efficiency;
+//! * its task-ISA execution adds per-tile instruction overhead and its
+//!   GEMM core is smaller than SA's effective throughput → higher
+//!   latency than both SECDA designs (the paper: VM beats VTA by 8%,
+//!   SA by 37% on latency; VTA wins energy by 14-29%).
+
+use crate::accel::components::AxiBus;
+use crate::accel::types::{AccelReport, ExecMode, GemmAccel, GemmRequest, GemmResult};
+use crate::gemm;
+use crate::sysc::Clock;
+
+/// VTA PYNQ configuration model.
+#[derive(Debug, Clone)]
+pub struct VtaConfig {
+    /// GEMM core shape: batch x block_in x block_out per cycle.
+    pub block: usize,
+    pub clock_mhz: f64,
+    /// Per-tile micro-op issue overhead, cycles.
+    pub uop_overhead: u64,
+    /// GEMM-core occupancy: the task ISA interleaves LOAD/GEMM/STORE
+    /// micro-ops through the instruction queues, and dependence stalls
+    /// keep the core below peak (VTA's published PYNQ runs sustain
+    /// ~60-75% of the core's nominal throughput).
+    pub pipeline_efficiency: f64,
+    /// Fraction of off-chip traffic avoided by keeping intermediates
+    /// resident (TVM graph-level planning).
+    pub residency_factor: f64,
+    pub axi: AxiBus,
+}
+
+impl VtaConfig {
+    /// The published PYNQ-Z1 VTA: 1x16x16 GEMM core @ 100 MHz.
+    pub fn pynq() -> Self {
+        VtaConfig {
+            block: 16,
+            clock_mhz: 100.0,
+            uop_overhead: 24,
+            pipeline_efficiency: 0.50,
+            residency_factor: 0.55,
+            axi: AxiBus::pynq_all_links(),
+        }
+    }
+}
+
+/// The VTA-like accelerator (implements [`GemmAccel`] analytically —
+/// the comparison row doesn't need component-level TLM).
+#[derive(Debug, Clone)]
+pub struct VtaDesign {
+    pub cfg: VtaConfig,
+}
+
+impl VtaDesign {
+    pub fn pynq() -> Self {
+        VtaDesign {
+            cfg: VtaConfig::pynq(),
+        }
+    }
+}
+
+impl GemmAccel for VtaDesign {
+    fn name(&self) -> &str {
+        "vta"
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::from_mhz(self.cfg.clock_mhz)
+    }
+
+    fn weight_buffer_bytes(&self) -> usize {
+        256 * 1024
+    }
+
+    fn has_ppu(&self) -> bool {
+        true // VTA's ALU core handles requant on-fabric
+    }
+
+    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult {
+        let b = self.cfg.block;
+        // tile counts over the GEMM core
+        let tiles_m = req.m.div_ceil(b) as u64;
+        let tiles_n = req.n.div_ceil(b) as u64;
+        let tiles_k = req.k.div_ceil(b) as u64;
+        // each (m, n) tile accumulates over k-tiles: b cycles per
+        // k-tile through the core, plus uop issue overhead
+        let ideal = tiles_m * tiles_n * (tiles_k * b as u64 + self.cfg.uop_overhead);
+        let compute = (ideal as f64 / self.cfg.pipeline_efficiency).ceil() as u64;
+        let mut report = AccelReport {
+            compute_cycles: compute,
+            ..Default::default()
+        };
+        let mut total_cycles = compute;
+        if mode == ExecMode::HardwareEval {
+            let keep = 1.0 - self.cfg.residency_factor;
+            let bytes_in = ((req.weight_bytes() + req.input_bytes()) as f64 * keep) as u64;
+            let bytes_out = (req.output_bytes(true) as f64 * keep) as u64;
+            let dma_in = self.cfg.axi.transfer_cycles(bytes_in);
+            let dma_out = self.cfg.axi.transfer_cycles(bytes_out);
+            report.bytes_in = bytes_in;
+            report.bytes_out = bytes_out;
+            report.dma_in_cycles = dma_in;
+            report.dma_out_cycles = dma_out;
+            // transfers overlap compute partially (TVM double buffers)
+            total_cycles += (dma_in + dma_out) / 2;
+        }
+        report.total_cycles = total_cycles;
+        report.total_time = self.clock().cycles(total_cycles);
+
+        // functional output via the shared bit-exact core
+        let mut acc = vec![0i32; req.m * req.n];
+        gemm::accumulate_rows(&req.weights, &req.inputs, 0, req.m, req.k, req.n, &mut acc);
+        let mut output = vec![0i8; req.m * req.n];
+        gemm::ppu_rows(&acc, &req.params, 0, req.m, req.n, &mut output);
+        GemmResult {
+            output,
+            raw_acc: None,
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::SaDesign;
+    use crate::framework::quant::quantize_multiplier;
+    use crate::gemm::QGemmParams;
+
+    fn request(m: usize, k: usize, n: usize) -> GemmRequest {
+        let mut st = 21u64;
+        let mut rnd = || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let (mult, shift) = quantize_multiplier(0.02);
+        GemmRequest::new(m, k, n, w, x, QGemmParams::uniform(m, 0, mult, shift))
+    }
+
+    #[test]
+    fn vta_functionally_correct() {
+        let req = request(32, 48, 24);
+        let res = VtaDesign::pynq().run(&req, ExecMode::Simulation);
+        let cpu = gemm::qgemm(&req.weights, &req.inputs, 32, 48, 24, &req.params, 1);
+        assert_eq!(res.output, cpu);
+    }
+
+    #[test]
+    fn vta_moves_fewer_bytes_than_sa() {
+        let req = request(64, 128, 128);
+        let vta = VtaDesign::pynq().run(&req, ExecMode::HardwareEval);
+        let sa = SaDesign::paper().run(&req, ExecMode::HardwareEval);
+        assert!(vta.report.bytes_in < sa.report.bytes_in);
+        assert!(vta.report.bytes_out <= sa.report.bytes_out);
+    }
+
+    #[test]
+    fn vta_slower_than_sa_on_compute() {
+        // same nominal 256 MAC/cycle, but uop overhead + strict k-tiling
+        let req = request(256, 512, 256);
+        let vta = VtaDesign::pynq().run(&req, ExecMode::Simulation);
+        let sa = SaDesign::paper().run(&req, ExecMode::Simulation);
+        assert!(
+            vta.report.total_cycles > sa.report.total_cycles,
+            "vta {} sa {}",
+            vta.report.total_cycles,
+            sa.report.total_cycles
+        );
+    }
+}

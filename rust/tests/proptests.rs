@@ -1,0 +1,253 @@
+//! Property-based tests (hand-rolled generator; the offline vendor set
+//! has no proptest). Each property runs over many randomized cases with
+//! a deterministic xorshift seed, printing the failing seed on panic.
+//!
+//! Focus: coordinator invariants — simulator/CPU functional agreement
+//! over arbitrary shapes, FIFO/batching conservation laws, tiling
+//! partitions, and sysc event-ordering determinism.
+
+use secda::accel::{ExecMode, GemmAccel, GemmRequest, SaDesign, VmDesign};
+use secda::driver::tiling;
+use secda::framework::quant::{self, quantize_multiplier};
+use secda::gemm::{self, QGemmParams};
+use secda::sysc::{Fifo, SimTime};
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+    fn i8s(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (self.next() & 0xff) as u8 as i8).collect()
+    }
+}
+
+fn random_request(rng: &mut Rng) -> GemmRequest {
+    let m = rng.range(1, 48);
+    let k = rng.range(1, 64);
+    let n = rng.range(1, 48);
+    let w = rng.i8s(m * k);
+    let x = rng.i8s(k * n);
+    let (mult, shift) = quantize_multiplier(0.001 + (rng.next() % 1000) as f64 / 1500.0);
+    let mut p = QGemmParams::uniform(m, 0, mult, shift);
+    for i in 0..m {
+        p.bias[i] = (rng.next() % 4000) as i32 - 2000;
+    }
+    p.out_zp = (rng.next() % 21) as i32 - 10;
+    GemmRequest::new(m, k, n, w, x, p)
+}
+
+/// Property: for ANY shape and data, both accelerator simulators
+/// produce bit-identical results to the CPU gemm (TLM bit-accuracy).
+#[test]
+fn prop_simulators_match_cpu_gemm() {
+    for seed in 1..=60u64 {
+        let mut rng = Rng::new(seed * 0x9e3779b9);
+        let req = random_request(&mut rng);
+        let cpu = gemm::qgemm(
+            &req.weights, &req.inputs, req.m, req.k, req.n, &req.params, 1,
+        );
+        let mode = if seed % 2 == 0 {
+            ExecMode::Simulation
+        } else {
+            ExecMode::HardwareEval
+        };
+        let sa = SaDesign::paper().run(&req, mode);
+        assert_eq!(sa.output, cpu, "SA seed {seed} shape ({},{},{})", req.m, req.k, req.n);
+        let vm = VmDesign::paper().run(&req, mode);
+        assert_eq!(vm.output, cpu, "VM seed {seed} shape ({},{},{})", req.m, req.k, req.n);
+    }
+}
+
+/// Property: simulated time and cycle reports are deterministic —
+/// running the same request twice gives identical reports.
+#[test]
+fn prop_simulation_deterministic() {
+    for seed in 1..=20u64 {
+        let mut rng = Rng::new(seed * 31);
+        let req = random_request(&mut rng);
+        let a = SaDesign::paper().run(&req, ExecMode::HardwareEval).report;
+        let b = SaDesign::paper().run(&req, ExecMode::HardwareEval).report;
+        assert_eq!(a.total_cycles, b.total_cycles, "seed {seed}");
+        assert_eq!(a.compute_cycles, b.compute_cycles, "seed {seed}");
+        assert_eq!(a.bytes_in, b.bytes_in, "seed {seed}");
+    }
+}
+
+/// Property: accelerator byte accounting is conserved — output bytes
+/// equal exactly m*n (int8 PPU path) regardless of tiling/shape.
+#[test]
+fn prop_output_byte_conservation() {
+    for seed in 1..=30u64 {
+        let mut rng = Rng::new(seed * 77);
+        let req = random_request(&mut rng);
+        let res = SaDesign::paper().run(&req, ExecMode::HardwareEval);
+        assert_eq!(
+            res.report.bytes_out,
+            (req.m * req.n) as u64,
+            "seed {seed}"
+        );
+        assert_eq!(res.output.len(), req.m * req.n);
+    }
+}
+
+/// Property: FIFO conservation — len == pushes - pops, never exceeds
+/// capacity, FIFO order preserved.
+#[test]
+fn prop_fifo_conservation() {
+    for seed in 1..=40u64 {
+        let mut rng = Rng::new(seed * 131);
+        let cap = rng.range(1, 16);
+        let mut f: Fifo<u64> = Fifo::new(cap);
+        let mut model: std::collections::VecDeque<u64> = Default::default();
+        for step in 0..200 {
+            if rng.next() % 2 == 0 {
+                let v = rng.next();
+                let ok = f.push(v, SimTime::ns(step));
+                assert_eq!(ok, model.len() < cap, "push acceptance");
+                if ok {
+                    model.push_back(v);
+                }
+            } else {
+                let got = f.pop(SimTime::ns(step));
+                assert_eq!(got, model.pop_front(), "fifo order");
+            }
+            assert_eq!(f.len(), model.len());
+            assert!(f.len() <= cap);
+            assert_eq!(
+                f.stats().pushes - f.stats().pops,
+                model.len() as u64,
+                "conservation"
+            );
+        }
+    }
+}
+
+/// Property: tiling chunks partition [0, m) exactly, without overlap,
+/// and every chunk's weights fit the buffer (except the 16-row floor).
+#[test]
+fn prop_tiling_partitions() {
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 523);
+        let m = rng.range(1, 2048);
+        let k = rng.range(1, 8192);
+        let buf = rng.range(1024, 512 * 1024);
+        let chunks = tiling::plan_chunks(m, k, buf);
+        assert_eq!(chunks[0].m0, 0, "seed {seed}");
+        assert_eq!(chunks.last().unwrap().m1, m, "seed {seed}");
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].m1, w[1].m0, "contiguous, seed {seed}");
+            assert!(w[0].m1 > w[0].m0, "non-empty, seed {seed}");
+        }
+        if chunks.len() > 1 {
+            for c in &chunks {
+                let rows = c.m1 - c.m0;
+                assert!(rows * k <= buf.max(16 * k), "cap, seed {seed}");
+            }
+        }
+    }
+}
+
+/// Property: requantization stays within i8 after the PPU clamp for
+/// any accumulator/multiplier/shift, and is monotone in acc for fixed
+/// positive multiplier.
+#[test]
+fn prop_requant_bounded_and_monotone() {
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 7);
+        let mult = (1 << 30) + (rng.next() % (1 << 30)) as i32;
+        let shift = -((rng.next() % 20) as i32);
+        let mut prev = i32::MIN;
+        for step in 0..60 {
+            let acc = -30_000_000 + step * 1_000_000;
+            let v = quant::ppu_requant(acc, mult, shift, 0, -128, 127);
+            assert!((-128..=127).contains(&(v as i32)));
+            let raw = quant::multiply_by_quantized_multiplier(acc, mult, shift);
+            assert!(raw >= prev, "monotonicity, seed {seed}");
+            prev = raw;
+        }
+    }
+}
+
+/// Property: the quantize->requantize roundtrip approximates the real
+/// multiplication within 1 output step for moderate accumulators.
+#[test]
+fn prop_requant_approximates_real() {
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 911);
+        let real = 0.0001 + (rng.next() % 10_000) as f64 / 10_500.0;
+        let (mult, shift) = quantize_multiplier(real);
+        for _ in 0..20 {
+            let acc = (rng.next() % (1 << 24)) as i32 - (1 << 23);
+            let got = quant::multiply_by_quantized_multiplier(acc, mult, shift) as f64;
+            let want = acc as f64 * real;
+            assert!(
+                (got - want).abs() <= 1.0 + want.abs() * 1e-6,
+                "seed {seed}: acc {acc} real {real} got {got} want {want}"
+            );
+        }
+    }
+}
+
+/// Property: zero-padding K or M never changes the valid output region
+/// (the AOT bucket-padding contract).
+#[test]
+fn prop_padding_inert() {
+    for seed in 1..=25u64 {
+        let mut rng = Rng::new(seed * 1337);
+        let req = random_request(&mut rng);
+        let base = gemm::qgemm(
+            &req.weights, &req.inputs, req.m, req.k, req.n, &req.params, 1,
+        );
+        // pad K by up to 16 with zero weights / garbage inputs
+        let pad = rng.range(1, 16);
+        let kp = req.k + pad;
+        let mut wp = vec![0i8; req.m * kp];
+        for i in 0..req.m {
+            wp[i * kp..i * kp + req.k]
+                .copy_from_slice(&req.weights[i * req.k..(i + 1) * req.k]);
+        }
+        let mut xp = rng.i8s(kp * req.n);
+        for r in 0..req.k {
+            let row = &req.inputs[r * req.n..(r + 1) * req.n];
+            xp[r * req.n..(r + 1) * req.n].copy_from_slice(row);
+        }
+        let padded = gemm::qgemm(&wp, &xp, req.m, kp, req.n, &req.params, 1);
+        assert_eq!(padded, base, "seed {seed}");
+    }
+}
+
+/// Failure injection: a livelocked module graph (self-rescheduling
+/// forever) must be contained by the kernel's event budget instead of
+/// hanging the design loop.
+#[test]
+fn prop_event_budget_contains_livelock() {
+    use secda::sysc::{Ctx, Module, Simulator};
+
+    #[derive(Clone, Debug)]
+    struct Spin;
+    struct Spinner;
+    impl Module<Spin> for Spinner {
+        fn name(&self) -> &str {
+            "spinner"
+        }
+        fn handle(&mut self, _p: Spin, ctx: &mut Ctx<'_, Spin>) {
+            ctx.schedule_self(SimTime::ns(1), Spin); // never terminates
+        }
+    }
+    let mut sim = Simulator::new();
+    let id = sim.add_module(Box::new(Spinner));
+    sim.schedule(SimTime::ZERO, id, Spin);
+    sim.run_with_limit(10_000);
+    assert_eq!(sim.events_dispatched(), 10_000);
+}

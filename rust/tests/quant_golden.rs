@@ -1,0 +1,38 @@
+//! Cross-language bit-exactness: the rust requantization pipeline must
+//! reproduce the golden vectors emitted by the python reference
+//! (`python/compile/kernels/ref.py`, written by `make artifacts`).
+//!
+//! This pins the integer semantics shared by three implementations:
+//! the Pallas kernel epilogue (L1), the jnp oracle, and
+//! `framework::quant` (L3 / the accelerator PPU models).
+
+use std::path::PathBuf;
+
+use secda::framework::quant::multiply_by_quantized_multiplier;
+
+fn golden_path() -> PathBuf {
+    std::env::var_os("SECDA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+        .join("requant_golden.tsv")
+}
+
+#[test]
+fn requant_matches_python_golden_vectors() {
+    let path = golden_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {path:?} ({e}); run `make artifacts` first"));
+    let mut n = 0;
+    for (i, line) in text.lines().enumerate() {
+        let f: Vec<i64> = line
+            .split('\t')
+            .map(|v| v.parse().unwrap_or_else(|e| panic!("line {}: {e}", i + 1)))
+            .collect();
+        assert_eq!(f.len(), 4, "line {}", i + 1);
+        let (acc, mult, shift, want) = (f[0] as i32, f[1] as i32, f[2] as i32, f[3] as i32);
+        let got = multiply_by_quantized_multiplier(acc, mult, shift);
+        assert_eq!(got, want, "case {i}: acc={acc} mult={mult} shift={shift}");
+        n += 1;
+    }
+    assert!(n >= 64, "expected at least 64 golden cases, got {n}");
+}

@@ -1,0 +1,175 @@
+//! PJRT runtime numerics: the AOT-compiled Pallas artifacts must be
+//! bit-exact against the rust CPU gemm (and therefore against the
+//! accelerator simulators, which share the same functional core).
+//!
+//! This is the three-layer integration proof: L1 Pallas kernel ==
+//! L2 jax lowering == L3 rust, across shape buckets including padding.
+
+use std::path::PathBuf;
+
+use secda::framework::quant::quantize_multiplier;
+use secda::gemm::{self, QGemmParams};
+use secda::runtime::ArtifactRuntime;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SECDA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn xorshift(st: &mut u64) -> u64 {
+    *st ^= *st << 13;
+    *st ^= *st >> 7;
+    *st ^= *st << 17;
+    *st
+}
+
+fn rand_i8(st: &mut u64, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (xorshift(st) & 0xff) as u8 as i8).collect()
+}
+
+fn check_shape(rt: &mut ArtifactRuntime, m: usize, k: usize, n: usize, seed: u64) {
+    let mut st = seed.max(1);
+    let w = rand_i8(&mut st, m * k);
+    let x = rand_i8(&mut st, k * n);
+    let (mult, shift) = quantize_multiplier(0.5 / (k as f64).sqrt());
+    let mut p = QGemmParams::uniform(m, 0, mult, shift);
+    for i in 0..m {
+        p.bias[i] = (xorshift(&mut st) % 2000) as i32 - 1000;
+        p.shift[i] = shift - (xorshift(&mut st) % 3) as i32;
+    }
+    p.out_zp = (xorshift(&mut st) % 17) as i32 - 8;
+    let pjrt = rt
+        .qgemm(m, k, n, &w, &x, &p)
+        .unwrap_or_else(|e| panic!("pjrt qgemm ({m},{k},{n}): {e:#}"));
+    let cpu = gemm::qgemm(&w, &x, m, k, n, &p, 1);
+    assert_eq!(pjrt, cpu, "PJRT vs CPU mismatch at ({m},{k},{n})");
+}
+
+#[test]
+fn pjrt_matches_cpu_gemm_across_buckets() {
+    let dir = artifacts_dir();
+    assert!(
+        ArtifactRuntime::available(&dir),
+        "artifacts missing at {dir:?}; run `make artifacts`"
+    );
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime init");
+    assert!(rt.buckets.len() >= 50, "expected many buckets");
+    // exact-bucket shapes and padded (off-bucket) shapes
+    for (i, &(m, k, n)) in [
+        (32, 27, 12544), // MobileNetV1 conv0 (logical, padded into bucket)
+        (64, 32, 12544), // exact bucket
+        (512, 4608, 49), // ResNet18 stage-4 (largest K)
+        (100, 100, 100), // arbitrary padding in all dims
+        (1, 1, 1),       // degenerate
+        (130, 33, 140),  // just past bucket boundaries
+    ]
+    .iter()
+    .enumerate()
+    {
+        check_shape(&mut rt, m, k, n, (i as u64 + 1) * 7919);
+    }
+}
+
+#[test]
+fn pjrt_matches_accelerator_simulators() {
+    use secda::accel::{ExecMode, GemmAccel, GemmRequest, SaDesign, VmDesign};
+    let dir = artifacts_dir();
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime init");
+    let (m, k, n) = (64, 96, 160);
+    let mut st = 31u64;
+    let w = rand_i8(&mut st, m * k);
+    let x = rand_i8(&mut st, k * n);
+    let (mult, shift) = quantize_multiplier(0.01);
+    let p = QGemmParams::uniform(m, 7, mult, shift);
+    let pjrt = rt.qgemm(m, k, n, &w, &x, &p).expect("pjrt");
+    let req = GemmRequest::new(m, k, n, w, x, p);
+    let sa = SaDesign::paper().run(&req, ExecMode::Simulation);
+    let vm = VmDesign::paper().run(&req, ExecMode::HardwareEval);
+    assert_eq!(pjrt, sa.output, "PJRT vs SA simulator");
+    assert_eq!(pjrt, vm.output, "PJRT vs VM simulator");
+}
+
+#[test]
+fn bucket_coverage_for_all_models() {
+    // every GEMM in the rust model zoo must have an AOT bucket — this
+    // cross-checks the rust shape tables against python/compile/model.py
+    let dir = artifacts_dir();
+    let rt = ArtifactRuntime::new(&dir).expect("runtime init");
+    for name in secda::framework::models::ALL {
+        let g = secda::framework::models::by_name(name).unwrap();
+        for (m, k, n) in secda::framework::models::gemm_shapes(&g) {
+            assert!(
+                rt.pick_bucket(m, k, n).is_some(),
+                "{name}: GEMM ({m},{k},{n}) has no AOT bucket — python \
+                 and rust shape tables have diverged"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: the runtime must fail loudly and descriptively,
+// never silently compute garbage.
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("secda_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.tsv"), "64\tnot_a_number\t64\tx.hlo.txt\n").unwrap();
+    let err = match ArtifactRuntime::new(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("must reject"),
+    };
+    assert!(format!("{err:#}").contains("manifest.tsv line 1"), "{err:#}");
+}
+
+#[test]
+fn empty_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("secda_empty_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.tsv"), "").unwrap();
+    let err = match ArtifactRuntime::new(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("must reject"),
+    };
+    assert!(format!("{err:#}").contains("empty manifest"), "{err:#}");
+}
+
+#[test]
+fn missing_artifact_file_fails_at_compile() {
+    let dir = std::env::temp_dir().join("secda_missing_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.tsv"), "32\t32\t32\tdoes_not_exist.hlo.txt\n").unwrap();
+    let mut rt = ArtifactRuntime::new(&dir).expect("manifest parses");
+    let w = vec![0i8; 32 * 32];
+    let x = vec![0i8; 32 * 32];
+    let p = QGemmParams::uniform(32, 0, 1 << 30, 0);
+    let err = rt.qgemm(32, 32, 32, &w, &x, &p).expect_err("must fail");
+    assert!(format!("{err:#}").contains("does_not_exist"), "{err:#}");
+}
+
+#[test]
+fn uncovered_shape_reports_bucket_miss() {
+    let dir = artifacts_dir();
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime init");
+    // absurdly large GEMM: no bucket can cover it
+    let (m, k, n) = (100_000, 8, 8);
+    let w = vec![0i8; m * k];
+    let x = vec![0i8; k * n];
+    let p = QGemmParams::uniform(m, 0, 1 << 30, 0);
+    let err = rt.qgemm(m, k, n, &w, &x, &p).expect_err("must fail");
+    assert!(format!("{err:#}").contains("no AOT bucket"), "{err:#}");
+}
+
+#[test]
+fn runtime_missing_dir_reports_helpfully() {
+    let dir = std::path::Path::new("/nonexistent/secda_artifacts");
+    assert!(!ArtifactRuntime::available(dir));
+    let err = match ArtifactRuntime::new(dir) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
