@@ -1,103 +1,139 @@
-//! End-to-end driver: serve a stream of inference requests through the
-//! FULL three-layer stack, with the AOT-compiled PJRT artifacts doing
-//! the functional GEMM math on the request path (the "real hardware"
-//! numerics) while the TLM simulators provide the PYNQ-Z1 timing.
+//! End-to-end serving driver: route a stream of inference requests
+//! through the L3 coordinator — a pool of simulated accelerator
+//! instances with bucket-aware batching, per-layer HW/SW partitioning,
+//! work stealing and backpressure — while cross-checking every GEMM's
+//! functional bits per request.
 //!
 //! This is the repo's end-to-end validation (DESIGN.md): it proves all
 //! layers compose — Pallas kernel (L1) → jax lowering (L2) → rust
 //! runtime + coordinator (L3) — by checking, for every request, that
-//! the PJRT outputs are bit-identical to the simulator outputs, and
-//! reports serving latency/throughput for the batch.
+//! the pool's outputs are bit-identical to an independent functional
+//! path, and reports serving latency/throughput for the stream.
 //!
-//! Requires `make artifacts`. Run:
-//! `cargo run --release --example edge_serving [n_requests] [model]`
+//! With the `pjrt` feature and `make artifacts` done, the independent
+//! path is the AOT-compiled PJRT executables (the "real hardware"
+//! numerics); otherwise the gemmlowp CPU reference stands in, so the
+//! example runs out of the box on a plain `cargo run`.
+//!
+//! Run: `cargo run --release --example edge_serving [n_requests] [model] [sa_workers]`
 
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use secda::accel::SaDesign;
-use secda::driver::{AccelBackend, DriverConfig};
-use secda::framework::backend::{GemmBackend, GemmTask, GemmTiming};
-use secda::framework::interpreter::Session;
+use secda::coordinator::{Coordinator, CoordinatorConfig, SubmitError};
 use secda::framework::models;
 use secda::framework::tensor::Tensor;
-use secda::runtime::{default_dir, ArtifactRuntime};
+use secda::gemm;
+use secda::runtime::default_dir;
 use secda::sysc::SimTime;
 
-/// A GemmBackend that executes numerics through the PJRT artifacts
-/// while delegating the timing model to the SA driver — cross-checking
-/// the two functional paths bit for bit on every call.
-struct PjrtBackend {
-    rt: ArtifactRuntime,
-    inner: AccelBackend<SaDesign>,
-    gemm_calls: u64,
-}
-
-impl GemmBackend for PjrtBackend {
-    fn name(&self) -> &str {
-        "sa+pjrt"
+/// Install the per-GEMM bit-identity assertion; returns the name of
+/// the reference path it checks the pool against.
+fn install_cross_check(coord: &mut Coordinator, checks: Rc<RefCell<u64>>) -> &'static str {
+    #[cfg(feature = "pjrt")]
+    {
+        use secda::runtime::ArtifactRuntime;
+        let dir = default_dir();
+        if ArtifactRuntime::available(&dir) {
+            let mut rt = ArtifactRuntime::new(&dir).expect("artifact runtime");
+            coord.set_cross_check(Box::new(move |task, out| {
+                let pjrt = rt
+                    .qgemm(task.m, task.k, task.n, task.weights, task.inputs, task.params)
+                    .unwrap_or_else(|e| panic!("PJRT qgemm failed for {}: {e}", task.layer));
+                assert_eq!(
+                    pjrt, out,
+                    "layer {}: PJRT artifact diverged from the TLM simulator",
+                    task.layer
+                );
+                *checks.borrow_mut() += 1;
+            }));
+            return "PJRT artifacts";
+        }
+        eprintln!("artifacts missing at {dir:?}; cross-checking against CPU gemmlowp instead");
     }
-
-    fn run_gemm(&mut self, task: &GemmTask<'_>) -> (Vec<i8>, GemmTiming) {
-        let (sim_out, timing) = self.inner.run_gemm(task);
-        let pjrt_out = self
-            .rt
-            .qgemm(task.m, task.k, task.n, task.weights, task.inputs, task.params)
-            .unwrap_or_else(|e| panic!("PJRT qgemm failed for {}: {e:#}", task.layer));
+    coord.set_cross_check(Box::new(move |task, out| {
+        let reference = gemm::qgemm(
+            task.weights,
+            task.inputs,
+            task.m,
+            task.k,
+            task.n,
+            task.params,
+            1,
+        );
         assert_eq!(
-            pjrt_out, sim_out,
-            "layer {}: PJRT artifact diverged from the TLM simulator",
+            reference, out,
+            "layer {}: pool output diverged from the gemmlowp reference",
             task.layer
         );
-        self.gemm_calls += 1;
-        (pjrt_out, timing)
-    }
+        *checks.borrow_mut() += 1;
+    }));
+    "CPU gemmlowp reference"
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(8);
     let model = args.get(1).map(String::as_str).unwrap_or("mobilenet_v1");
+    let sa_workers: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(2);
 
-    let dir = default_dir();
-    if !ArtifactRuntime::available(&dir) {
-        eprintln!("artifacts missing at {dir:?}; run `make artifacts` first");
-        std::process::exit(1);
-    }
-    let rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let g = Arc::new(models::by_name(model).expect("model"));
+    let mut cfg = CoordinatorConfig::default();
+    cfg.sa_workers = sa_workers;
+    let mut coord =
+        Coordinator::with_artifact_manifest(cfg, &default_dir()).expect("artifact manifest");
+    let checks = Rc::new(RefCell::new(0u64));
+    let reference = install_cross_check(&mut coord, checks.clone());
     println!(
-        "serving {model} with SA accelerator + PJRT functional path ({} AOT buckets)",
-        rt.buckets.len()
+        "serving {model} through the L3 coordinator: {} SA + {} VM + {} CPU workers \
+         (batch window {}, queue depth {}); cross-check vs {reference}",
+        coord.cfg.sa_workers,
+        coord.cfg.vm_workers,
+        coord.cfg.cpu_workers,
+        coord.cfg.batch_window,
+        coord.cfg.queue_depth,
     );
 
-    let g = models::by_name(model).expect("model");
-    let mut backend = PjrtBackend {
-        rt,
-        inner: AccelBackend::new(SaDesign::paper(), DriverConfig::with_threads(2)),
-        gemm_calls: 0,
-    };
-
-    // request stream: deterministic pseudo-images
-    let mut modeled_latencies: Vec<SimTime> = Vec::new();
-    let mut host_latencies = Vec::new();
+    // request stream: deterministic pseudo-images, ~20-50 ms modeled
+    // inter-arrival
     let mut st = 0xfeedu64;
+    let mut rnd = move || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let mut completions = Vec::new();
     let t_serve = Instant::now();
-    for r in 0..n_requests {
+    for _ in 0..n_requests {
         let n: usize = g.input_shape.iter().product();
-        let data: Vec<i8> = (0..n)
-            .map(|_| {
-                st ^= st << 13;
-                st ^= st >> 7;
-                st ^= st << 17;
-                (st & 0xff) as u8 as i8
-            })
-            .collect();
-        let input = Tensor::new(g.input_shape.clone(), data, g.input_qp);
-        let t0 = Instant::now();
-        let (out, report) = Session::new(&g, &mut backend, 2).run(&input);
-        host_latencies.push(t0.elapsed());
-        modeled_latencies.push(report.overall());
-        // classify: argmax of the head
-        let top = out
+        let data: Vec<i8> = (0..n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let mut model = g.clone();
+        let mut input = Tensor::new(g.input_shape.clone(), data, g.input_qp);
+        loop {
+            match coord.submit(model, input) {
+                Ok(_) => break,
+                // closed-loop client: drain the pool, then resubmit
+                // the request that was handed back
+                Err(SubmitError::Backpressure { request, .. }) => {
+                    completions.extend(coord.run_until_idle());
+                    model = request.model;
+                    input = request.input;
+                }
+                Err(e) => panic!("submit failed: {e}"),
+            }
+        }
+        coord.advance(SimTime::ms(20 + rnd() % 31));
+    }
+    completions.extend(coord.run_until_idle());
+    let wall = t_serve.elapsed();
+
+    completions.sort_by_key(|c| c.id);
+    for c in &completions {
+        let top = c
+            .output
             .data
             .iter()
             .enumerate()
@@ -105,30 +141,30 @@ fn main() {
             .map(|(i, _)| i)
             .unwrap();
         println!(
-            "  req {r:>2}: class {top:>4}  modeled {:>7.1} ms on PYNQ-Z1  ({:>6.0} ms host wall)",
-            report.overall().as_ms_f64(),
-            host_latencies[r].as_secs_f64() * 1000.0
+            "  req {:>2}: class {top:>4}  worker {}  batch {}  modeled {:>7.1} ms on PYNQ-Z1 \
+             ({:>7.1} ms incl. queueing)",
+            c.id,
+            c.worker,
+            c.batch_size,
+            c.report.overall().as_ms_f64(),
+            c.latency().as_ms_f64(),
         );
     }
-    let wall = t_serve.elapsed();
 
-    modeled_latencies.sort();
-    let pct = |p: f64| modeled_latencies[(p * (n_requests - 1) as f64) as usize];
-    println!("\nserved {n_requests} requests in {:.1} s host wall", wall.as_secs_f64());
+    println!();
+    println!("{}", coord.metrics().summary());
+    print!("{}", coord.worker_report());
+    {
+        let b = coord.batcher();
+        println!(
+            "executable cache: {} buckets compiled once ({} total), {} warm hits",
+            b.compiles, b.compile_time, b.hits
+        );
+    }
     println!(
-        "modeled PYNQ-Z1 latency: p50 {:.1} ms, p99 {:.1} ms -> {:.2} inf/s on-device",
-        pct(0.5).as_ms_f64(),
-        pct(0.99).as_ms_f64(),
-        1.0 / pct(0.5).as_secs_f64()
+        "pool output == {reference} on every one of {} GEMMs across {} requests",
+        checks.borrow(),
+        completions.len()
     );
-    println!(
-        "PJRT == simulator on every one of {} GEMM offloads across {} requests",
-        backend.gemm_calls, n_requests
-    );
-    println!(
-        "driver: {} offloads, {} fallbacks, {:.1} MB moved",
-        backend.inner.stats.offloads,
-        backend.inner.stats.cpu_fallbacks,
-        (backend.inner.stats.bytes_to_accel + backend.inner.stats.bytes_from_accel) as f64 / 1e6
-    );
+    println!("host wall: {:.1} s", wall.as_secs_f64());
 }

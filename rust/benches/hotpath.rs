@@ -162,6 +162,11 @@ fn main() {
     );
 
     // --- PJRT artifact execution --------------------------------------
+    bench_pjrt(&req);
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(req: &GemmRequest) {
     let dir = secda::runtime::default_dir();
     if secda::runtime::ArtifactRuntime::available(&dir) {
         let mut rt = secda::runtime::ArtifactRuntime::new(&dir).expect("runtime");
@@ -180,4 +185,9 @@ fn main() {
     } else {
         println!("pjrt: artifacts missing, skipped (run `make artifacts`)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt(_req: &GemmRequest) {
+    println!("pjrt: built without the `pjrt` feature, skipped");
 }

@@ -1,0 +1,210 @@
+//! Serving benchmarks: coordinator throughput/latency vs pool size and
+//! batch window (hand-rolled harness like `hotpath.rs`; criterion is
+//! not in the offline vendor set).
+//!
+//! All serving numbers are in *modeled PYNQ-Z1 time* (the coordinator
+//! is a discrete-event model): a pool of N instances overlaps N
+//! requests in modeled time, so throughput here is the number the
+//! ROADMAP north star cares about, not host wall-clock. Host wall
+//! time is printed per sweep for harness-cost visibility.
+//!
+//! Run: `cargo bench --bench serving`
+//! Add a heavier MobileNetV1 sweep with: `cargo bench --bench serving -- full`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use secda::coordinator::{Coordinator, CoordinatorConfig};
+use secda::framework::graph::{Graph, GraphBuilder};
+use secda::framework::models;
+use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+use secda::framework::quant::QParams;
+use secda::framework::tensor::Tensor;
+use secda::sysc::SimTime;
+
+fn xorshift(st: &mut u64) -> u64 {
+    *st ^= *st << 13;
+    *st ^= *st >> 7;
+    *st ^= *st << 17;
+    *st
+}
+
+/// A small two-conv "edge camera" net: big enough that both convs
+/// offload, small enough that the host-side functional math never
+/// dominates the benchmark.
+fn edge_cam() -> Graph {
+    let mut st = 7u64;
+    let mut b = GraphBuilder::new("edge_cam", vec![1, 16, 16, 3], QParams::new(0.05, 0));
+    let conv1 = Conv2d {
+        name: "c1".into(),
+        cout: 32,
+        kh: 3,
+        kw: 3,
+        cin: 3,
+        stride: 1,
+        pad: 1,
+        weights: (0..32 * 27).map(|_| (xorshift(&mut st) & 0xff) as u8 as i8).collect(),
+        bias: vec![5; 32],
+        w_scales: vec![0.02; 32],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c1 = b.push(Op::Conv(conv1), vec![b.input()]);
+    let conv2 = Conv2d {
+        name: "c2".into(),
+        cout: 32,
+        kh: 3,
+        kw: 3,
+        cin: 32,
+        stride: 2,
+        pad: 1,
+        weights: (0..32 * 9 * 32).map(|_| (xorshift(&mut st) & 0xff) as u8 as i8).collect(),
+        bias: vec![3; 32],
+        w_scales: vec![0.02; 32],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c2 = b.push(Op::Conv(conv2), vec![c1]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c2]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+fn image(g: &Graph, st: &mut u64) -> Tensor {
+    let n: usize = g.input_shape.iter().product();
+    let data = (0..n).map(|_| (xorshift(st) & 0xff) as u8 as i8).collect();
+    Tensor::new(g.input_shape.clone(), data, g.input_qp)
+}
+
+struct RunStats {
+    throughput: f64,
+    p50: SimTime,
+    p99: SimTime,
+    batches: usize,
+    mean_batch: f64,
+    steals: u64,
+    host_ms: f64,
+}
+
+/// Serve `n_requests` of `g` with the given config and inter-arrival
+/// gap, to idle.
+fn serve(g: &Arc<Graph>, mut cfg: CoordinatorConfig, n_requests: usize, gap: SimTime) -> RunStats {
+    cfg.queue_depth = n_requests.max(cfg.queue_depth); // open-loop load
+    let mut coord = Coordinator::new(cfg);
+    let mut st = 0x5eedu64;
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let input = image(g, &mut st);
+        coord
+            .submit(g.clone(), input)
+            .expect("queue_depth sized for the full stream");
+        coord.advance(gap);
+    }
+    let done = coord.run_until_idle();
+    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(done.len(), n_requests);
+    let m = coord.metrics();
+    RunStats {
+        throughput: m.throughput_rps(),
+        p50: m.latency_pct(0.5),
+        p99: m.latency_pct(0.99),
+        batches: m.batches.len(),
+        mean_batch: m.mean_batch_size(),
+        steals: m.steals,
+        host_ms,
+    }
+}
+
+fn pool_scaling(g: &Arc<Graph>, n_requests: usize) {
+    println!("--- pool scaling ({n_requests} edge_cam requests, 1 ms inter-arrival) ---");
+    println!(
+        "{:<22} {:>10} {:>9} {:>10} {:>10} {:>7} {:>9}",
+        "pool", "req/s", "speedup", "p50", "p99", "steals", "host ms"
+    );
+    let mut base = None;
+    for n in [1usize, 2, 4] {
+        let s = serve(g, CoordinatorConfig::sa_pool(n), n_requests, SimTime::ms(1));
+        let base_tp = *base.get_or_insert(s.throughput);
+        println!(
+            "{:<22} {:>10.2} {:>8.2}x {:>10} {:>10} {:>7} {:>9.0}",
+            format!("{n}x SA"),
+            s.throughput,
+            s.throughput / base_tp,
+            format!("{}", s.p50),
+            format!("{}", s.p99),
+            s.steals,
+            s.host_ms
+        );
+    }
+    // heterogeneous pool for comparison
+    let mut cfg = CoordinatorConfig::default(); // 2 SA + 1 VM + 1 CPU
+    cfg.queue_depth = n_requests;
+    let s = serve(g, cfg, n_requests, SimTime::ms(1));
+    println!(
+        "{:<22} {:>10.2} {:>8.2}x {:>10} {:>10} {:>7} {:>9.0}",
+        "2x SA + 1x VM + 1 CPU",
+        s.throughput,
+        s.throughput / base.unwrap(),
+        format!("{}", s.p50),
+        format!("{}", s.p99),
+        s.steals,
+        s.host_ms
+    );
+    println!();
+}
+
+fn batch_window_sweep(g: &Arc<Graph>, n_requests: usize) {
+    println!("--- batch window (pool = 1x SA, {n_requests} requests, 20 ms inter-arrival) ---");
+    println!(
+        "{:<12} {:>9} {:>12} {:>10} {:>10} {:>10}",
+        "window", "batches", "mean batch", "req/s", "p50", "p99"
+    );
+    for window_ms in [0u64, 2, 10, 50] {
+        let mut cfg = CoordinatorConfig::sa_pool(1);
+        cfg.batch_window = SimTime::ms(window_ms);
+        let s = serve(g, cfg, n_requests, SimTime::ms(20));
+        println!(
+            "{:<12} {:>9} {:>12.2} {:>10.2} {:>10} {:>10}",
+            format!("{window_ms} ms"),
+            s.batches,
+            s.mean_batch,
+            s.throughput,
+            format!("{}", s.p50),
+            format!("{}", s.p99)
+        );
+    }
+    println!();
+}
+
+fn mobilenet_sweep() {
+    println!("--- MobileNetV1 pool scaling (8 requests, 30 ms inter-arrival) ---");
+    let g = Arc::new(models::by_name("mobilenet_v1").expect("model"));
+    let mut base = None;
+    for n in [1usize, 2] {
+        let s = serve(&g, CoordinatorConfig::sa_pool(n), 8, SimTime::ms(30));
+        let base_tp = *base.get_or_insert(s.throughput);
+        println!(
+            "  {n}x SA: {:.2} req/s ({:.2}x), p50 {}, p99 {}, host {:.0} ms",
+            s.throughput,
+            s.throughput / base_tp,
+            s.p50,
+            s.p99,
+            s.host_ms
+        );
+    }
+    println!();
+}
+
+fn main() {
+    println!("=== serving benchmarks (modeled PYNQ-Z1 time) ===\n");
+    let g = Arc::new(edge_cam());
+    pool_scaling(&g, 96);
+    batch_window_sweep(&g, 48);
+    if std::env::args().any(|a| a == "full") {
+        mobilenet_sweep();
+    } else {
+        println!("(run with `-- full` for the MobileNetV1 sweep)");
+    }
+}

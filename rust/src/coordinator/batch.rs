@@ -1,0 +1,162 @@
+//! Shape-bucket-aware batching.
+//!
+//! Every GEMM the pool offloads maps to one AOT shape bucket (the
+//! PJRT executable identity, see [`crate::runtime`]). Compiling an
+//! executable is expensive and happens once per bucket; grouping
+//! same-model requests back to back therefore (a) hits the executable
+//! cache instead of compiling, and (b) keeps layer weights resident on
+//! the accelerator across the batch. [`BucketBatcher`] owns the
+//! shared executable-cache model: the first offloaded GEMM that
+//! touches a bucket is charged `compile_cost`, every later one is a
+//! cache hit (CPU-routed GEMMs run gemmlowp and never touch an
+//! executable, so they are not charged).
+//!
+//! Bucket identity comes from the artifact manifest when one is on
+//! disk ([`crate::runtime::smallest_covering`] — the exact lookup the
+//! PJRT runtime uses), and from the [`crate::runtime::bucket_shape`]
+//! rounding grid otherwise, so batching decisions are identical with
+//! and without artifacts.
+
+use std::collections::HashMap;
+
+use crate::runtime::{bucket_shape, smallest_covering, Bucket};
+use crate::sysc::SimTime;
+
+/// A bucket identity: the padded (m, k, n) the executable was
+/// compiled for.
+pub type BucketKey = (usize, usize, usize);
+
+/// The pool-wide executable-reuse model.
+pub struct BucketBatcher {
+    /// Manifest bucket table; empty means "use the rounding grid".
+    buckets: Vec<Bucket>,
+    /// Modeled one-time compile latency per bucket.
+    compile_cost: SimTime,
+    /// Hit count per compiled bucket.
+    compiled: HashMap<BucketKey, u64>,
+    /// Number of compilations charged.
+    pub compiles: u64,
+    /// Number of warm executable hits.
+    pub hits: u64,
+    /// Total modeled compile time charged.
+    pub compile_time: SimTime,
+}
+
+impl BucketBatcher {
+    pub fn new(buckets: Vec<Bucket>, compile_cost: SimTime) -> Self {
+        BucketBatcher {
+            buckets,
+            compile_cost,
+            compiled: HashMap::new(),
+            compiles: 0,
+            hits: 0,
+            compile_time: SimTime::ZERO,
+        }
+    }
+
+    /// The bucket a logical GEMM shape executes in.
+    pub fn key(&self, m: usize, k: usize, n: usize) -> BucketKey {
+        match smallest_covering(&self.buckets, m, k, n) {
+            Some(b) => b.key(),
+            None => bucket_shape(m, k, n),
+        }
+    }
+
+    /// Account one GEMM against the executable cache: returns its
+    /// bucket key and the compile latency to charge (zero on a warm
+    /// hit).
+    pub fn charge(&mut self, m: usize, k: usize, n: usize) -> (BucketKey, SimTime) {
+        let key = self.key(m, k, n);
+        match self.compiled.get_mut(&key) {
+            Some(hits) => {
+                *hits += 1;
+                self.hits += 1;
+                (key, SimTime::ZERO)
+            }
+            None => {
+                self.compiled.insert(key, 0);
+                self.compiles += 1;
+                self.compile_time += self.compile_cost;
+                (key, self.compile_cost)
+            }
+        }
+    }
+
+    /// Number of distinct buckets touched so far.
+    pub fn distinct_buckets(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// Diagnostic: group a list of GEMM shapes by bucket identity,
+    /// preserving order inside each group. This is bucket-affinity
+    /// introspection (and the spec the grouping tests pin) — the
+    /// scheduler itself batches whole *requests* by graph identity,
+    /// relying on same-model ⇒ same bucket sequence to realize this
+    /// grouping implicitly.
+    pub fn group(&self, shapes: &[(usize, usize, usize)]) -> HashMap<BucketKey, Vec<usize>> {
+        let mut groups: HashMap<BucketKey, Vec<usize>> = HashMap::new();
+        for (i, &(m, k, n)) in shapes.iter().enumerate() {
+            groups.entry(self.key(m, k, n)).or_default().push(i);
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Vec<Bucket> {
+        vec![
+            Bucket { m: 32, k: 32, n: 12544, file: "a".into() },
+            Bucket { m: 64, k: 320, n: 12544, file: "b".into() },
+            Bucket { m: 128, k: 1152, n: 3136, file: "c".into() },
+        ]
+    }
+
+    #[test]
+    fn first_touch_compiles_then_hits() {
+        let mut b = BucketBatcher::new(Vec::new(), SimTime::ms(40));
+        let (k1, c1) = b.charge(30, 27, 12500);
+        assert_eq!(c1, SimTime::ms(40));
+        // same bucket (after rounding) -> warm
+        let (k2, c2) = b.charge(32, 20, 12544);
+        assert_eq!(k1, k2);
+        assert_eq!(c2, SimTime::ZERO);
+        // different bucket -> compile again
+        let (_k3, c3) = b.charge(64, 64, 64);
+        assert_eq!(c3, SimTime::ms(40));
+        assert_eq!(b.compiles, 2);
+        assert_eq!(b.hits, 1);
+        assert_eq!(b.compile_time, SimTime::ms(80));
+        assert_eq!(b.distinct_buckets(), 2);
+    }
+
+    #[test]
+    fn manifest_buckets_beat_grid_when_present() {
+        let b = BucketBatcher::new(manifest(), SimTime::ZERO);
+        // smallest covering manifest bucket, not the rounding grid
+        assert_eq!(b.key(30, 27, 12500), (32, 32, 12544));
+        assert_eq!(b.key(60, 300, 12000), (64, 320, 12544));
+        // nothing covers it -> falls back to the grid
+        assert_eq!(b.key(4096, 27, 12544), bucket_shape(4096, 27, 12544));
+    }
+
+    #[test]
+    fn grouping_preserves_fifo_order_within_buckets() {
+        let b = BucketBatcher::new(Vec::new(), SimTime::ZERO);
+        let shapes = [
+            (30, 27, 12500),  // bucket A
+            (64, 64, 64),     // bucket B
+            (32, 20, 12544),  // bucket A again
+            (60, 60, 60),     // bucket B again
+            (32, 32, 12544),  // bucket A again
+        ];
+        let groups = b.group(&shapes);
+        assert_eq!(groups.len(), 2);
+        let a = &groups[&b.key(30, 27, 12500)];
+        let bb = &groups[&b.key(64, 64, 64)];
+        assert_eq!(a, &vec![0, 2, 4]);
+        assert_eq!(bb, &vec![1, 3]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Serving telemetry: what the coordinator reports about itself.
+//!
+//! All times are modeled PYNQ-Z1 [`SimTime`] — the same time base as
+//! the per-inference [`crate::framework::interpreter::InferenceReport`]
+//! — so latency percentiles, worker utilization and throughput compose
+//! with the Table II numbers rather than with host wall-clock.
+
+use crate::sysc::SimTime;
+
+/// One dispatch round: a group of same-model requests executed back to
+/// back on one worker.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    pub worker: usize,
+    pub model: String,
+    pub size: usize,
+    pub start: SimTime,
+}
+
+/// Aggregate serving statistics over a coordinator's lifetime.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    pub submitted: u64,
+    /// Submissions rejected with backpressure (every queue full).
+    pub rejected: u64,
+    pub completed: u64,
+    /// Requests an idle worker stole from a sibling's queue.
+    pub steals: u64,
+    /// End-to-end modeled latency (finish - arrival) per request.
+    latencies: Vec<SimTime>,
+    /// Queue wait (start - arrival) per request.
+    waits: Vec<SimTime>,
+    pub batches: Vec<BatchRecord>,
+    /// Highest queue depth observed on any worker.
+    pub queue_peak: usize,
+    first_arrival: Option<SimTime>,
+    last_finish: SimTime,
+}
+
+impl ServingMetrics {
+    pub fn record_submit(&mut self, arrival: SimTime) {
+        self.submitted += 1;
+        self.first_arrival = Some(match self.first_arrival {
+            Some(t) => t.min(arrival),
+            None => arrival,
+        });
+    }
+
+    pub fn record_reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn record_batch(&mut self, worker: usize, model: &str, size: usize, start: SimTime) {
+        self.batches.push(BatchRecord {
+            worker,
+            model: model.to_string(),
+            size,
+            start,
+        });
+    }
+
+    pub fn record_request(&mut self, arrival: SimTime, start: SimTime, finish: SimTime) {
+        self.completed += 1;
+        self.latencies.push(finish.saturating_sub(arrival));
+        self.waits.push(start.saturating_sub(arrival));
+        self.last_finish = self.last_finish.max(finish);
+    }
+
+    /// Serving makespan: first arrival to last completion.
+    pub fn makespan(&self) -> SimTime {
+        match self.first_arrival {
+            Some(t0) => self.last_finish.saturating_sub(t0),
+            None => SimTime::ZERO,
+        }
+    }
+
+    /// Completed requests per modeled second.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.makespan().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / secs
+    }
+
+    fn percentile(sorted: &[SimTime], p: f64) -> SimTime {
+        if sorted.is_empty() {
+            return SimTime::ZERO;
+        }
+        let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Latency percentile over completed requests (p in [0, 1]).
+    pub fn latency_pct(&self, p: f64) -> SimTime {
+        let mut v = self.latencies.clone();
+        v.sort();
+        Self::percentile(&v, p)
+    }
+
+    /// Queue-wait percentile over completed requests.
+    pub fn wait_pct(&self, p: f64) -> SimTime {
+        let mut v = self.waits.clone();
+        v.sort();
+        Self::percentile(&v, p)
+    }
+
+    pub fn max_wait(&self) -> SimTime {
+        self.waits.iter().copied().max().unwrap_or(SimTime::ZERO)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self.batches.iter().map(|b| b.size).sum();
+        total as f64 / self.batches.len() as f64
+    }
+
+    pub fn observe_queue_depth(&mut self, depth: usize) {
+        self.queue_peak = self.queue_peak.max(depth);
+    }
+
+    /// One-paragraph serving summary. Sorts each sample vector once
+    /// (the `*_pct` accessors sort per call; fine for spot reads, not
+    /// for a four-percentile report over a long serving run).
+    pub fn summary(&self) -> String {
+        let mut lat = self.latencies.clone();
+        lat.sort();
+        let mut waits = self.waits.clone();
+        waits.sort();
+        format!(
+            "served {}/{} requests ({} rejected) in {} makespan -> {:.2} req/s; \
+             latency p50 {} p99 {}; wait p50 {} max {}; \
+             {} batches (mean size {:.2}), {} steals, queue peak {}",
+            self.completed,
+            self.submitted,
+            self.rejected,
+            self.makespan(),
+            self.throughput_rps(),
+            Self::percentile(&lat, 0.5),
+            Self::percentile(&lat, 0.99),
+            Self::percentile(&waits, 0.5),
+            waits.last().copied().unwrap_or(SimTime::ZERO),
+            self.batches.len(),
+            self.mean_batch_size(),
+            self.steals,
+            self.queue_peak,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_throughput() {
+        let mut m = ServingMetrics::default();
+        for i in 0..10u64 {
+            let arrival = SimTime::ms(i);
+            m.record_submit(arrival);
+            let start = arrival + SimTime::ms(1);
+            let finish = start + SimTime::ms(10 + i);
+            m.record_request(arrival, start, finish);
+        }
+        assert_eq!(m.completed, 10);
+        // latencies are 11..=20 ms
+        assert_eq!(m.latency_pct(0.0), SimTime::ms(11));
+        assert_eq!(m.latency_pct(1.0), SimTime::ms(20));
+        assert_eq!(m.wait_pct(0.5), SimTime::ms(1));
+        // makespan = (arrival 9ms + 1ms wait + 19ms run) - 0
+        assert_eq!(m.makespan(), SimTime::ms(29));
+        let rps = m.throughput_rps();
+        assert!((rps - 10.0 / 0.029).abs() < 1.0, "rps {rps}");
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServingMetrics::default();
+        assert_eq!(m.makespan(), SimTime::ZERO);
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.latency_pct(0.99), SimTime::ZERO);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,400 @@
+//! The heterogeneous accelerator pool.
+//!
+//! A [`WorkerPool`] owns N workers; each worker is one *instance* —
+//! an SA or VM accelerator behind its own [`DriverHandle`] (its own
+//! simulated fabric and driver state), or a CPU-only worker — plus a
+//! bounded FIFO request queue and a `free_at` horizon in modeled time.
+//!
+//! Every worker executes requests through a [`PartitionedBackend`]:
+//! the [`GemmBackend`] that realizes per-layer HW/SW partitioning
+//! (route each GEMM to the instance's accelerator or to gemmlowp by
+//! [`OffloadPlanner`] policy), charges AOT-executable compile costs
+//! against the shared [`BucketBatcher`], upgrades weight residency for
+//! warm same-model batches, and feeds every functional output through
+//! the optional cross-check hook (the PJRT-vs-simulator bit-identity
+//! assertion in `examples/edge_serving.rs`).
+
+use std::cell::RefCell;
+use std::collections::{HashSet, VecDeque};
+use std::rc::Rc;
+
+use crate::driver::DriverHandle;
+use crate::framework::backend::{CpuBackend, GemmBackend, GemmTask, GemmTiming};
+use crate::sysc::SimTime;
+
+use super::batch::BucketBatcher;
+use super::scheduler::{OffloadPlanner, Route};
+use super::{CoordinatorConfig, InferenceRequest};
+
+/// Functional-output hook: called with every GEMM task and the bits
+/// the pool produced for it. `edge_serving` installs the PJRT
+/// cross-check here. Must not re-enter the coordinator.
+pub type CrossCheckFn = dyn FnMut(&GemmTask<'_>, &[i8]);
+
+/// The hook shared across all workers of a pool.
+pub type SharedCrossCheck = Rc<RefCell<Option<Box<CrossCheckFn>>>>;
+
+/// The shared executable-cache model, one per pool.
+pub type SharedBatcher = Rc<RefCell<BucketBatcher>>;
+
+/// What kind of instance a worker wraps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerKind {
+    Sa,
+    Vm,
+    Cpu,
+}
+
+/// Per-layer partitioned execution backend of one worker.
+pub struct PartitionedBackend {
+    label: String,
+    /// The accelerator instance; `None` for CPU-only workers.
+    handle: Option<DriverHandle>,
+    cpu: CpuBackend,
+    pub planner: OffloadPlanner,
+    batcher: SharedBatcher,
+    check: SharedCrossCheck,
+    /// Set while serving the 2nd+ request of a same-model batch: the
+    /// previous request already streamed this model's weights, so
+    /// untiled layers are offloaded weights-resident.
+    warm: bool,
+    /// Layers actually offloaded while serving the current request.
+    offloaded: HashSet<String>,
+    /// Layers the *previous* request of this batch offloaded — only
+    /// those have weights resident on the fabric, so only those earn
+    /// the warm residency upgrade.
+    prev_offloaded: HashSet<String>,
+}
+
+impl PartitionedBackend {
+    pub fn with_accel(
+        handle: DriverHandle,
+        threads: usize,
+        sync_overhead: SimTime,
+        batcher: SharedBatcher,
+        check: SharedCrossCheck,
+    ) -> Self {
+        PartitionedBackend {
+            label: handle.label.clone(),
+            handle: Some(handle),
+            cpu: CpuBackend::new(threads),
+            planner: OffloadPlanner::new(threads, sync_overhead),
+            batcher,
+            check,
+            warm: false,
+            offloaded: HashSet::new(),
+            prev_offloaded: HashSet::new(),
+        }
+    }
+
+    pub fn cpu_only(
+        id: usize,
+        threads: usize,
+        batcher: SharedBatcher,
+        check: SharedCrossCheck,
+    ) -> Self {
+        PartitionedBackend {
+            label: format!("cpu{id}"),
+            handle: None,
+            cpu: CpuBackend::new(threads),
+            // sync_overhead ZERO: there is nothing to offload to, the
+            // planner only keeps its routing counters consistent
+            planner: OffloadPlanner::new(threads, SimTime::ZERO),
+            batcher,
+            check,
+            warm: false,
+            offloaded: HashSet::new(),
+            prev_offloaded: HashSet::new(),
+        }
+    }
+
+    /// Mark the start of a request within a dispatch round. `warm`
+    /// means the previous request in the batch was the same model, so
+    /// the layers it offloaded still have weights on the fabric.
+    pub fn set_warm(&mut self, warm: bool) {
+        self.warm = warm;
+        self.prev_offloaded = std::mem::take(&mut self.offloaded);
+        if !warm {
+            self.prev_offloaded.clear();
+        }
+    }
+
+    /// The accelerator instance, when this worker has one.
+    pub fn handle(&self) -> Option<&DriverHandle> {
+        self.handle.as_ref()
+    }
+}
+
+impl GemmBackend for PartitionedBackend {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn run_gemm(&mut self, task: &GemmTask<'_>) -> (Vec<i8>, GemmTiming) {
+        // residency upgrade only for layers the previous same-model
+        // request actually offloaded — a layer it ran on the CPU never
+        // put weights on the fabric
+        let resident = task.weights_resident
+            || (self.warm && self.prev_offloaded.contains(task.layer));
+        let route = match self.handle {
+            None => {
+                // no accelerator on this worker: still count the
+                // routing decision so worker_report stays truthful
+                self.planner.cpu_routed += 1;
+                Route::Cpu
+            }
+            Some(_) => self.planner.decide(task.m, task.k, task.n, resident),
+        };
+        let (out, timing) = match route {
+            Route::Accel => {
+                let warmed = GemmTask {
+                    m: task.m,
+                    k: task.k,
+                    n: task.n,
+                    weights: task.weights,
+                    inputs: task.inputs,
+                    params: task.params,
+                    layer: task.layer,
+                    weights_resident: resident,
+                };
+                let handle = self.handle.as_mut().expect("accel route without handle");
+                let (out, mut timing) = handle.backend_mut().run_gemm(&warmed);
+                self.planner
+                    .observe(task.m, task.k, task.n, resident, timing.total);
+                // executable-cache accounting: only a GEMM the driver
+                // really offloaded runs through an AOT artifact (the
+                // driver falls back internally when K exceeds the
+                // design's buffers — no fabric time, no executable)
+                if timing.accel_active > SimTime::ZERO {
+                    self.offloaded.insert(task.layer.to_string());
+                    let (_bucket, compile) =
+                        self.batcher.borrow_mut().charge(task.m, task.k, task.n);
+                    if compile > SimTime::ZERO {
+                        timing.total += compile;
+                        timing.cpu_time += compile;
+                        timing.breakdown.push(("aot_compile", compile));
+                    }
+                }
+                (out, timing)
+            }
+            Route::Cpu => self.cpu.run_gemm(task),
+        };
+
+        if let Some(cb) = self.check.borrow_mut().as_mut() {
+            cb(task, &out);
+        }
+        (out, timing)
+    }
+}
+
+/// One pool member: an instance, its queue, and its time horizon.
+pub struct Worker {
+    pub id: usize,
+    pub kind: WorkerKind,
+    pub backend: PartitionedBackend,
+    pub queue: VecDeque<InferenceRequest>,
+    /// Modeled time at which this worker finishes its current work.
+    pub free_at: SimTime,
+    /// Cumulative modeled busy time (utilization numerator).
+    pub busy: SimTime,
+    pub served: u64,
+}
+
+impl Worker {
+    pub fn new(id: usize, kind: WorkerKind, backend: PartitionedBackend) -> Self {
+        Worker {
+            id,
+            kind,
+            backend,
+            queue: VecDeque::new(),
+            free_at: SimTime::ZERO,
+            busy: SimTime::ZERO,
+            served: 0,
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        self.backend.name()
+    }
+
+    /// Busy share of a serving makespan.
+    pub fn utilization(&self, makespan: SimTime) -> f64 {
+        if makespan == SimTime::ZERO {
+            return 0.0;
+        }
+        self.busy.as_secs_f64() / makespan.as_secs_f64()
+    }
+}
+
+/// The worker set plus admission (queue-depth) policy.
+pub struct WorkerPool {
+    pub workers: Vec<Worker>,
+    queue_depth: usize,
+}
+
+impl WorkerPool {
+    /// Build the pool a [`CoordinatorConfig`] describes.
+    pub fn build(
+        cfg: &CoordinatorConfig,
+        batcher: SharedBatcher,
+        check: SharedCrossCheck,
+    ) -> Self {
+        let threads = cfg.driver.threads;
+        let sync = cfg.driver.sync_overhead;
+        let mut workers: Vec<Worker> = Vec::new();
+        let kinds = [
+            (WorkerKind::Sa, cfg.sa_workers),
+            (WorkerKind::Vm, cfg.vm_workers),
+            (WorkerKind::Cpu, cfg.cpu_workers),
+        ];
+        for (kind, count) in kinds {
+            for _ in 0..count {
+                let id = workers.len();
+                let backend = match kind {
+                    WorkerKind::Sa => PartitionedBackend::with_accel(
+                        DriverHandle::sa(id, cfg.driver.clone()),
+                        threads,
+                        sync,
+                        batcher.clone(),
+                        check.clone(),
+                    ),
+                    WorkerKind::Vm => PartitionedBackend::with_accel(
+                        DriverHandle::vm(id, cfg.driver.clone()),
+                        threads,
+                        sync,
+                        batcher.clone(),
+                        check.clone(),
+                    ),
+                    WorkerKind::Cpu => PartitionedBackend::cpu_only(
+                        id,
+                        threads,
+                        batcher.clone(),
+                        check.clone(),
+                    ),
+                };
+                workers.push(Worker::new(id, kind, backend));
+            }
+        }
+        assert!(!workers.is_empty(), "coordinator pool must have at least one worker");
+        WorkerPool {
+            workers,
+            queue_depth: cfg.queue_depth.max(1),
+        }
+    }
+
+    pub fn total_queued(&self) -> usize {
+        self.workers.iter().map(|w| w.queue.len()).sum()
+    }
+
+    /// Arrival stamp of the oldest queued request across all workers.
+    pub fn oldest_queued_arrival(&self) -> Option<SimTime> {
+        self.workers
+            .iter()
+            .filter_map(|w| w.queue.front().map(|r| r.arrival))
+            .min()
+    }
+
+    /// Worker with the earliest `free_at` (per-layer dispatch target).
+    pub fn idlest(&self) -> usize {
+        self.workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, w)| (w.free_at, *i))
+            .map(|(i, _)| i)
+            .expect("non-empty pool")
+    }
+
+    /// Admit a request, or hand it back when every queue is at depth.
+    ///
+    /// Placement is batch-affine: among workers with room, one whose
+    /// queue tail already holds the same model wins (if its queue is
+    /// no more than one deeper than the shortest), so same-model
+    /// requests land back to back and form batches; otherwise the
+    /// shortest queue wins.
+    pub fn submit(&mut self, req: InferenceRequest) -> Result<usize, InferenceRequest> {
+        let depth = self.queue_depth;
+        let min_len = match self
+            .workers
+            .iter()
+            .map(|w| w.queue.len())
+            .filter(|&l| l < depth)
+            .min()
+        {
+            Some(l) => l,
+            None => return Err(req),
+        };
+        let affine = self.workers.iter().position(|w| {
+            w.queue.len() < depth
+                && w.queue.len() <= min_len + 1
+                && w.queue
+                    .back()
+                    // graph identity, not name: two distinct graphs
+                    // sharing a name must never batch together
+                    .is_some_and(|r| std::sync::Arc::ptr_eq(&r.model, &req.model))
+        });
+        let target = affine.unwrap_or_else(|| {
+            self.workers
+                .iter()
+                .position(|w| w.queue.len() == min_len)
+                .expect("min_len worker exists")
+        });
+        self.workers[target].queue.push_back(req);
+        Ok(target)
+    }
+
+    /// Move the oldest queued request from some other worker to
+    /// `widx`'s queue. Returns false when nothing is stealable.
+    fn steal_into(&mut self, widx: usize) -> bool {
+        let donor = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(i, w)| *i != widx && !w.queue.is_empty())
+            .min_by_key(|(i, w)| (w.queue.front().expect("non-empty").arrival, *i))
+            .map(|(i, _)| i);
+        match donor {
+            Some(d) => {
+                let req = self.workers[d].queue.pop_front().expect("donor non-empty");
+                self.workers[widx].queue.push_back(req);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pop the next batch for worker `widx`: consecutive same-model
+    /// requests from the head of its FIFO queue, arrived within the
+    /// batch window, up to `max_batch`. Steals first when idle with an
+    /// empty queue. Returns the batch and the number of steals.
+    pub fn take_batch(
+        &mut self,
+        widx: usize,
+        cfg: &CoordinatorConfig,
+    ) -> (Vec<InferenceRequest>, u64) {
+        let mut steals = 0;
+        if self.workers[widx].queue.is_empty() && cfg.steal && self.steal_into(widx) {
+            steals = 1;
+        }
+        let Some(first) = self.workers[widx].queue.pop_front() else {
+            return (Vec::new(), steals);
+        };
+        let window_close = self.workers[widx].free_at.max(first.arrival) + cfg.batch_window;
+        let model = first.model.clone();
+        let mut batch = vec![first];
+        while batch.len() < cfg.max_batch {
+            let take = match self.workers[widx].queue.front() {
+                // same graph *instance* — name equality is not model
+                // identity (weight residency depends on it)
+                Some(r) => {
+                    std::sync::Arc::ptr_eq(&r.model, &model) && r.arrival <= window_close
+                }
+                None => false,
+            };
+            if !take {
+                break;
+            }
+            batch.push(self.workers[widx].queue.pop_front().expect("checked front"));
+        }
+        (batch, steals)
+    }
+}

@@ -1,0 +1,229 @@
+//! Dispatch: per-layer HW/SW partitioning and the batch-forming,
+//! work-stealing request loop.
+//!
+//! Two decisions live here, mirroring the co-design split of the
+//! paper (§IV-B) lifted to serving scale:
+//!
+//! * [`OffloadPlanner`] — *per layer*: offload a GEMM only when the
+//!   accelerator is predicted to beat the calibrated CPU model. A
+//!   layer whose CPU time cannot even cover the per-offload sync
+//!   overhead stays on the CPU outright; otherwise the planner
+//!   offloads once, records the simulator-measured total, and from
+//!   then on picks the measured winner per (shape, residency) — the
+//!   simulation-in-the-loop partitioning SECDA's methodology enables.
+//! * [`drain`] — *per request*: an event loop over modeled time. The
+//!   worker that can start earliest takes the next dispatch round,
+//!   forming a batch of consecutive same-model requests from its FIFO
+//!   queue (within `batch_window`, up to `max_batch`); an idle worker
+//!   with an empty queue steals the oldest queued request in the pool
+//!   (from the sibling whose queue head has been waiting longest).
+//!   Queues are strictly FIFO and batches never
+//!   reorder across a queue head, so no request can starve.
+
+use std::collections::HashMap;
+
+use crate::framework::interpreter::Session;
+use crate::gemm;
+use crate::perf::CpuModel;
+use crate::sysc::SimTime;
+
+use super::metrics::ServingMetrics;
+use super::pool::WorkerPool;
+use super::{Completion, CoordinatorConfig};
+
+/// Where one GEMM layer runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Accel,
+    Cpu,
+}
+
+/// The per-layer HW/SW partitioning policy of one worker.
+///
+/// Decisions are driven by the calibrated [`CpuModel`] on one side and
+/// observed simulator timings on the other ("measure once, then pick
+/// the winner"): the first time a (shape, residency) is seen it is
+/// offloaded optimistically and the driver's modeled total — DMA,
+/// compute, sync, everything — is recorded; later occurrences compare
+/// that observation against the CPU prediction.
+pub struct OffloadPlanner {
+    cpu: CpuModel,
+    threads: usize,
+    sync_overhead: SimTime,
+    /// Best observed accelerator total per (m, k, n, weights_resident).
+    observed: HashMap<(usize, usize, usize, bool), SimTime>,
+    /// Layers routed to the accelerator.
+    pub offloads: u64,
+    /// Layers kept on the CPU by policy.
+    pub cpu_routed: u64,
+}
+
+impl OffloadPlanner {
+    pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
+        OffloadPlanner {
+            cpu: CpuModel::pynq_a9(),
+            threads,
+            sync_overhead,
+            observed: HashMap::new(),
+            offloads: 0,
+            cpu_routed: 0,
+        }
+    }
+
+    /// Predicted CPU (gemmlowp) time for a GEMM shape.
+    pub fn predicted_cpu(&self, m: usize, k: usize, n: usize) -> SimTime {
+        self.cpu.gemm_time(gemm::mac_count(m, k, n), self.threads)
+    }
+
+    /// Choose where a GEMM layer runs.
+    pub fn decide(&mut self, m: usize, k: usize, n: usize, resident: bool) -> Route {
+        let cpu_t = self.predicted_cpu(m, k, n);
+        let route = if cpu_t <= self.sync_overhead {
+            // the offload round-trip alone costs more than the CPU run
+            Route::Cpu
+        } else {
+            match self.observed.get(&(m, k, n, resident)) {
+                Some(&accel_t) if accel_t >= cpu_t => Route::Cpu,
+                _ => Route::Accel,
+            }
+        };
+        match route {
+            Route::Accel => self.offloads += 1,
+            Route::Cpu => self.cpu_routed += 1,
+        }
+        route
+    }
+
+    /// Record a measured accelerator total for a shape (keeps the
+    /// best, so one outlier never poisons the policy).
+    pub fn observe(&mut self, m: usize, k: usize, n: usize, resident: bool, total: SimTime) {
+        self.observed
+            .entry((m, k, n, resident))
+            .and_modify(|t| *t = (*t).min(total))
+            .or_insert(total);
+    }
+}
+
+/// Run queued requests to completion, in modeled time.
+///
+/// Each iteration picks the worker with the earliest possible start
+/// (its `free_at` vs the arrival of the next request it could run),
+/// forms one batch and executes it. Within a batch the functional math
+/// runs immediately on the host; completion times advance in modeled
+/// PYNQ time, so a pool of N workers genuinely overlaps N requests.
+pub fn drain(
+    pool: &mut WorkerPool,
+    cfg: &CoordinatorConfig,
+    metrics: &mut ServingMetrics,
+) -> Vec<Completion> {
+    let mut done = Vec::new();
+    while pool.total_queued() > 0 {
+        // pick the worker that can start soonest
+        let oldest = pool.oldest_queued_arrival();
+        let mut best: Option<(SimTime, usize)> = None;
+        for (i, w) in pool.workers.iter().enumerate() {
+            let arrival = match w.queue.front() {
+                Some(r) => Some(r.arrival),
+                None if cfg.steal => oldest,
+                None => None,
+            };
+            if let Some(arr) = arrival {
+                let start = w.free_at.max(arr);
+                if best.map_or(true, |(s, _)| start < s) {
+                    best = Some((start, i));
+                }
+            }
+        }
+        let Some((_, widx)) = best else { break };
+
+        let (batch, stole) = pool.take_batch(widx, cfg);
+        metrics.steals += stole;
+        if batch.is_empty() {
+            break; // defensive: no dispatchable work despite queue count
+        }
+
+        let w = &mut pool.workers[widx];
+        let round_start = w.free_at.max(batch[0].arrival);
+        metrics.record_batch(widx, &batch[0].model.name, batch.len(), round_start);
+        let size = batch.len();
+        let mut t = round_start;
+        let mut warm = false;
+        for req in batch {
+            let started = t.max(req.arrival);
+            w.backend.set_warm(warm);
+            let (output, report) =
+                Session::new(req.model.as_ref(), &mut w.backend, cfg.driver.threads)
+                    .run(&req.input);
+            let finished = started + report.overall();
+            metrics.record_request(req.arrival, started, finished);
+            done.push(Completion {
+                id: req.id,
+                worker: widx,
+                arrival: req.arrival,
+                started,
+                finished,
+                batch_size: size,
+                output,
+                report,
+            });
+            w.busy += finished.saturating_sub(started);
+            w.served += 1;
+            t = finished;
+            warm = true;
+        }
+        w.backend.set_warm(false);
+        w.free_at = t;
+    }
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::DriverConfig;
+
+    #[test]
+    fn tiny_layers_stay_on_cpu() {
+        // 8x8x8 = 512 MACs: ~0.5us of CPU work vs a 150us offload
+        // sync — the planner must not offload.
+        let sync = DriverConfig::default().sync_overhead;
+        let mut p = OffloadPlanner::new(1, sync);
+        assert_eq!(p.decide(8, 8, 8, false), Route::Cpu);
+        assert_eq!(p.cpu_routed, 1);
+        assert_eq!(p.offloads, 0);
+    }
+
+    #[test]
+    fn unknown_large_layers_explore_the_accelerator() {
+        let mut p = OffloadPlanner::new(1, SimTime::us(150));
+        // 256x256x256 = 16.7M MACs ≈ 16 ms on CPU
+        assert_eq!(p.decide(256, 256, 256, false), Route::Accel);
+        assert_eq!(p.offloads, 1);
+    }
+
+    #[test]
+    fn observed_loss_flips_route_to_cpu() {
+        let mut p = OffloadPlanner::new(1, SimTime::us(150));
+        let (m, k, n) = (128, 128, 128);
+        assert_eq!(p.decide(m, k, n, false), Route::Accel);
+        // simulator reported the offload slower than the CPU estimate
+        let cpu_t = p.predicted_cpu(m, k, n);
+        p.observe(m, k, n, false, cpu_t + SimTime::ms(5));
+        assert_eq!(p.decide(m, k, n, false), Route::Cpu);
+        // ... and a later, better observation flips it back
+        p.observe(m, k, n, false, SimTime::us(200));
+        assert_eq!(p.decide(m, k, n, false), Route::Accel);
+    }
+
+    #[test]
+    fn residency_tracked_separately() {
+        let mut p = OffloadPlanner::new(1, SimTime::us(150));
+        let (m, k, n) = (128, 512, 128);
+        let cpu_t = p.predicted_cpu(m, k, n);
+        // cold offloads lose (weight DMA dominates), warm ones win
+        p.observe(m, k, n, false, cpu_t + SimTime::ms(1));
+        p.observe(m, k, n, true, cpu_t.saturating_sub(SimTime::us(500)));
+        assert_eq!(p.decide(m, k, n, false), Route::Cpu);
+        assert_eq!(p.decide(m, k, n, true), Route::Accel);
+    }
+}

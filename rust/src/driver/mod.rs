@@ -20,6 +20,28 @@
 //! * **CPU fallback**: layers the design cannot hold natively (K
 //!   exceeding VM local buffers) fall back to CPU gemmlowp — the
 //!   motivation for the §IV-E4 ResNet18 VM variant.
+//!
+//! ## Serving knobs (L3 coordinator)
+//!
+//! [`DriverConfig`] configures ONE driver instance. When many
+//! instances serve concurrent traffic, the pool- and queue-level
+//! policy lives in [`crate::coordinator::CoordinatorConfig`]:
+//!
+//! * `sa_workers` / `vm_workers` / `cpu_workers` — pool composition
+//!   (how many SA / VM accelerator instances and CPU-only workers the
+//!   coordinator owns; each accelerator worker wraps a
+//!   [`DriverHandle`] built from a `DriverConfig` clone);
+//! * `batch_window` — how long a dispatch round waits to group
+//!   same-model requests (amortizes AOT-executable reuse and keeps
+//!   weights resident across the batch);
+//! * `max_batch` — batch size cap per dispatch round;
+//! * `queue_depth` — per-worker queue bound; submissions beyond it
+//!   are rejected with backpressure;
+//! * `steal` — whether an idle worker steals the oldest queued
+//!   request in the pool (the donor is the sibling whose queue head
+//!   has been waiting longest);
+//! * `compile_cost` — modeled one-time cost charged on the first GEMM
+//!   that hits a given AOT shape bucket.
 
 pub mod tiling;
 
@@ -272,6 +294,70 @@ impl<A: GemmAccel> GemmBackend for AccelBackend<A> {
             _ => self.run_offload(task),
         }
     }
+
+    fn driver_stats(&self) -> Option<&DriverStats> {
+        Some(&self.stats)
+    }
+}
+
+/// A reusable per-instance driver handle: one accelerator instance
+/// (its own simulated fabric, driver state and statistics) boxed
+/// behind the [`GemmBackend`] seam so a pool can own a heterogeneous
+/// mix of designs. This is what the L3 coordinator's workers wrap —
+/// each worker holds exactly one handle and runs requests against it,
+/// so per-instance stats (offloads, fallbacks, bytes moved) stay
+/// attributable to a physical accelerator.
+pub struct DriverHandle {
+    pub id: usize,
+    /// Human-readable instance label, e.g. `sa0`, `vm1`.
+    pub label: String,
+    backend: Box<dyn GemmBackend>,
+}
+
+impl DriverHandle {
+    /// Wrap an arbitrary backend as a pool instance.
+    pub fn new(id: usize, label: impl Into<String>, backend: Box<dyn GemmBackend>) -> Self {
+        DriverHandle {
+            id,
+            label: label.into(),
+            backend,
+        }
+    }
+
+    /// A paper-configuration systolic-array instance.
+    pub fn sa(id: usize, cfg: DriverConfig) -> Self {
+        use crate::accel::SaDesign;
+        DriverHandle::new(
+            id,
+            format!("sa{id}"),
+            Box::new(AccelBackend::new(SaDesign::paper(), cfg)),
+        )
+    }
+
+    /// A paper-configuration vector-MAC instance.
+    pub fn vm(id: usize, cfg: DriverConfig) -> Self {
+        use crate::accel::VmDesign;
+        DriverHandle::new(
+            id,
+            format!("vm{id}"),
+            Box::new(AccelBackend::new(VmDesign::paper(), cfg)),
+        )
+    }
+
+    /// The driver instance as a [`GemmBackend`].
+    pub fn backend_mut(&mut self) -> &mut dyn GemmBackend {
+        self.backend.as_mut()
+    }
+
+    pub fn design_name(&self) -> String {
+        self.backend.name().to_string()
+    }
+
+    /// This instance's accumulated driver statistics, when the wrapped
+    /// backend is an accelerator driver.
+    pub fn driver_stats(&self) -> Option<&DriverStats> {
+        self.backend.driver_stats()
+    }
 }
 
 #[cfg(test)]
@@ -421,6 +507,20 @@ mod tests {
             .unwrap()
             .1;
         assert!(unpack > SimTime::ZERO);
+    }
+
+    #[test]
+    fn driver_handle_reusable_across_tasks() {
+        let mut h = DriverHandle::sa(3, DriverConfig::default());
+        assert_eq!(h.label, "sa3");
+        assert_eq!(h.design_name(), "sa");
+        let (m, k, n) = (16, 24, 20);
+        let (w, x, p) = task_data(m, k, n, 21);
+        for _ in 0..3 {
+            let (out, t) = h.backend_mut().run_gemm(&make_task(m, k, n, &w, &x, &p));
+            assert_eq!(out, gemm::qgemm(&w, &x, m, k, n, &p, 1));
+            assert!(t.total > SimTime::ZERO);
+        }
     }
 
     #[test]

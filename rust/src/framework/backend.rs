@@ -4,8 +4,11 @@
 //! call-site so a co-designed driver can offload the GEMM. Here the
 //! same seam is the [`GemmBackend`] trait: the conv/FC ops build the
 //! (W, im2col(X)) matrices and call whichever backend the session is
-//! configured with — the CPU baseline ([`CpuBackend`]) or an
-//! accelerator driver ([`crate::driver::AccelBackend`]).
+//! configured with — the CPU baseline ([`CpuBackend`]), an
+//! accelerator driver ([`crate::driver::AccelBackend`]), or the L3
+//! serving pool ([`crate::coordinator::CoordinatorBackend`]), which
+//! dispatches each layer to whichever pool instance frees up first
+//! and partitions HW/SW per layer by the calibrated perf model.
 
 use crate::gemm::{self, QGemmParams};
 use crate::perf::CpuModel;
@@ -52,6 +55,12 @@ pub trait GemmBackend {
     /// Execute the GEMM, returning the int8 output (`m*n`) and the
     /// modeled timing.
     fn run_gemm(&mut self, task: &GemmTask<'_>) -> (Vec<i8>, GemmTiming);
+    /// Accumulated driver statistics, for backends that wrap an
+    /// accelerator driver (lets pool owners report per-instance
+    /// offloads/bytes through the trait object).
+    fn driver_stats(&self) -> Option<&crate::driver::DriverStats> {
+        None
+    }
 }
 
 /// The CPU-only baseline: gemmlowp on 1 or 2 A9 threads.

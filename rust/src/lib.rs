@@ -11,8 +11,11 @@
 //!   a TFLite-like quantized inference framework with the GEMM delegate
 //!   hook ([`framework`]), the gemmlowp-style CPU baseline ([`gemm`]),
 //!   PYNQ-Z1 timing/energy models ([`perf`]), the synthesis model
-//!   ([`synth`]), a VTA-like comparison accelerator ([`vta`]), and the
-//!   PJRT runtime that executes the AOT-compiled artifacts ([`runtime`]).
+//!   ([`synth`]), a VTA-like comparison accelerator ([`vta`]), the
+//!   PJRT runtime that executes the AOT-compiled artifacts ([`runtime`]),
+//!   and the serving coordinator ([`coordinator`]) that schedules
+//!   request streams across a pool of accelerator instances with
+//!   bucket-aware batching and HW/SW partitioning.
 //! * **Layer 2 (python/compile/model.py)** — the accelerated subgraph
 //!   (int8 GEMM-convolution) in JAX, AOT-lowered per shape bucket.
 //! * **Layer 1 (python/compile/kernels/qgemm.py)** — the Pallas
@@ -27,6 +30,7 @@
 
 pub mod accel;
 pub mod cli;
+pub mod coordinator;
 pub mod driver;
 pub mod framework;
 pub mod gemm;

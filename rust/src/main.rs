@@ -254,6 +254,17 @@ fn cmd_devtime() -> ExitCode {
     ExitCode::SUCCESS
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime_check() -> ExitCode {
+    eprintln!(
+        "runtime-check needs the `pjrt` feature (PJRT execution of the AOT \
+         artifacts); rebuild with `--features pjrt` after re-adding the \
+         vendored xla crate (see Cargo.toml)"
+    );
+    ExitCode::FAILURE
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_runtime_check() -> ExitCode {
     use secda::runtime::{default_dir, ArtifactRuntime};
     let dir = default_dir();

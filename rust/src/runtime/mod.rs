@@ -13,16 +13,43 @@
 //! i8/i32 literals are built through
 //! `Literal::create_from_shape_and_untyped_data` (the crate's typed
 //! constructors only cover i32/i64/u32/u64/f32/f64).
+//!
+//! ## Layering
+//!
+//! The *bucket book-keeping* half of this module (manifest parsing,
+//! [`Bucket`], [`smallest_covering`], the [`bucket_shape`] rounding
+//! grid) is dependency-free and always compiled: the L3 serving
+//! coordinator ([`crate::coordinator`]) shares it to group queued GEMM
+//! tasks by AOT bucket so executable reuse amortizes across requests.
+//! The *execution* half ([`ArtifactRuntime`]) needs the vendored `xla`
+//! crate (PJRT C API bindings over xla_extension 0.5.1) and is gated
+//! behind the `pjrt` cargo feature; enable it only after re-adding
+//! that dependency to `Cargo.toml` (see the manifest's comment).
 
-use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+/// Runtime error (std-only; the default build carries no anyhow).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
 
-use crate::gemm::QGemmParams;
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used throughout the artifact runtime.
+pub type Result<T, E = RuntimeError> = std::result::Result<T, E>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// One AOT shape bucket from the manifest.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bucket {
     pub m: usize,
     pub k: usize,
@@ -38,14 +65,68 @@ impl Bucket {
     pub fn volume(&self) -> u128 {
         self.m as u128 * self.k as u128 * self.n as u128
     }
+
+    /// The bucket's identity as a key (what the coordinator's batcher
+    /// groups on).
+    pub fn key(&self) -> (usize, usize, usize) {
+        (self.m, self.k, self.n)
+    }
 }
 
-/// The artifact runtime: manifest + lazily compiled executables.
-pub struct ArtifactRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub buckets: Vec<Bucket>,
-    cache: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
+/// Round a logical GEMM `(m, k, n)` up to its AOT bucket shape — the
+/// rust mirror of `python/compile/model.py::bucket_shape`: M and N
+/// round to the Pallas/MXU tile grid (multiples of 32 below 128,
+/// multiples of 128 above); K (the reduction) rounds to 32. Used as
+/// the batching key when no artifact manifest is on disk.
+pub fn bucket_shape(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
+    fn round_up(v: usize, to: usize) -> usize {
+        v.div_ceil(to) * to
+    }
+    let mb = if m < 128 { round_up(m, 32) } else { round_up(m, 128) };
+    let nb = if n < 128 { round_up(n, 32) } else { round_up(n, 128) };
+    let kb = round_up(k, 32);
+    (mb, kb, nb)
+}
+
+/// Smallest bucket (by [`Bucket::volume`]) covering a logical GEMM
+/// shape. Shared by [`ArtifactRuntime::pick_bucket`] and the serving
+/// coordinator's batcher so both agree on executable identity.
+pub fn smallest_covering(buckets: &[Bucket], m: usize, k: usize, n: usize) -> Option<&Bucket> {
+    buckets
+        .iter()
+        .filter(|b| b.covers(m, k, n))
+        .min_by_key(|b| b.volume())
+}
+
+/// Error for a GEMM shape no AOT bucket covers — names the requested
+/// shape so serving logs identify the offending layer immediately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NoBucketError {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl fmt::Display for NoBucketError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "no AOT bucket covers GEMM ({},{},{})",
+            self.m, self.k, self.n
+        )
+    }
+}
+
+impl std::error::Error for NoBucketError {}
+
+/// [`smallest_covering`], or a [`NoBucketError`] naming the shape.
+pub fn require_covering(
+    buckets: &[Bucket],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<&Bucket, NoBucketError> {
+    smallest_covering(buckets, m, k, n).ok_or(NoBucketError { m, k, n })
 }
 
 /// Default artifacts directory (repo-relative, overridable via env).
@@ -55,184 +136,225 @@ pub fn default_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl ArtifactRuntime {
-    /// Load the manifest and create the PJRT CPU client.
-    pub fn new(dir: &Path) -> Result<Self> {
-        let manifest = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
-        let mut buckets = Vec::new();
-        for (lineno, line) in text.lines().enumerate() {
-            let mut it = line.split('\t');
-            let parse = |s: Option<&str>| -> Result<usize> {
-                s.ok_or_else(|| anyhow!("manifest.tsv line {}: missing field", lineno + 1))?
-                    .parse::<usize>()
-                    .with_context(|| format!("manifest.tsv line {}", lineno + 1))
-            };
-            let m = parse(it.next())?;
-            let k = parse(it.next())?;
-            let n = parse(it.next())?;
-            let file = it
-                .next()
-                .ok_or_else(|| anyhow!("manifest.tsv line {}: missing file", lineno + 1))?
-                .to_string();
-            buckets.push(Bucket { m, k, n, file });
-        }
-        if buckets.is_empty() {
-            bail!("empty manifest at {manifest:?}");
-        }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(ArtifactRuntime {
-            client,
-            dir: dir.to_path_buf(),
-            buckets,
-            cache: HashMap::new(),
-        })
-    }
+/// True when the artifacts directory looks usable.
+pub fn available(dir: &Path) -> bool {
+    dir.join("manifest.tsv").is_file()
+}
 
-    /// True when the artifacts directory looks usable.
-    pub fn available(dir: &Path) -> bool {
-        dir.join("manifest.tsv").is_file()
-    }
-
-    /// Smallest bucket covering a logical GEMM shape.
-    pub fn pick_bucket(&self, m: usize, k: usize, n: usize) -> Option<&Bucket> {
-        self.buckets
-            .iter()
-            .filter(|b| b.covers(m, k, n))
-            .min_by_key(|b| b.volume())
-    }
-
-    fn executable(
-        &mut self,
-        key: (usize, usize, usize),
-        file: &str,
-    ) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&key) {
-            let path = self.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
-            self.cache.insert(key, exe);
-        }
-        Ok(&self.cache[&key])
-    }
-
-    /// Execute a quantized GEMM through the AOT artifact: pads into the
-    /// bucket, runs on PJRT, and returns the valid `m x n` region.
-    /// Bit-exact vs [`crate::gemm::qgemm`] (see tests/runtime_numerics).
-    pub fn qgemm(
-        &mut self,
-        m: usize,
-        k: usize,
-        n: usize,
-        w: &[i8],
-        x: &[i8],
-        params: &QGemmParams,
-    ) -> Result<Vec<i8>> {
-        assert_eq!(w.len(), m * k);
-        assert_eq!(x.len(), k * n);
-        let b = self
-            .pick_bucket(m, k, n)
-            .ok_or_else(|| anyhow!("no AOT bucket covers GEMM ({m},{k},{n})"))?
-            .clone();
-        let (mb, kb, nb) = (b.m, b.k, b.n);
-
-        // pad W rows with zeros (inert), X with anything (zero)
-        let mut wp = vec![0i8; mb * kb];
-        for i in 0..m {
-            wp[i * kb..i * kb + k].copy_from_slice(&w[i * k..(i + 1) * k]);
-        }
-        let mut xp = vec![0i8; kb * nb];
-        for r in 0..k {
-            xp[r * nb..r * nb + n].copy_from_slice(&x[r * n..(r + 1) * n]);
-        }
-        let mut bias = vec![0i32; mb];
-        bias[..m].copy_from_slice(&params.bias);
-        let mut mult = vec![1 << 30; mb];
-        mult[..m].copy_from_slice(&params.mult);
-        let mut shift = vec![0i32; mb];
-        shift[..m].copy_from_slice(&params.shift);
-        let qp = [params.out_zp, params.act_min, params.act_max, 0i32];
-
-        let lit_i8 = |data: &[i8], dims: &[usize]| -> Result<xla::Literal> {
-            let bytes =
-                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)
-                .map_err(|e| anyhow!("i8 literal: {e:?}"))
+/// Parse `manifest.tsv` (one bucket per line, `m\tk\tn\tfile`) into
+/// the bucket table. Dependency-free so the coordinator can use the
+/// bucket grid without a PJRT client.
+pub fn load_manifest(dir: &Path) -> Result<Vec<Bucket>> {
+    let manifest = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| err(format!("reading {manifest:?}; run `make artifacts` first: {e}")))?;
+    let mut buckets = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let mut it = line.split('\t');
+        let parse = |s: Option<&str>| -> Result<usize> {
+            s.ok_or_else(|| err(format!("manifest.tsv line {}: missing field", lineno + 1)))?
+                .parse::<usize>()
+                .map_err(|e| err(format!("manifest.tsv line {}: {e}", lineno + 1)))
         };
-        let lit_i32 = |data: &[i32], dims: &[usize]| -> Result<xla::Literal> {
-            let bytes = unsafe {
-                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-            };
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
-                .map_err(|e| anyhow!("i32 literal: {e:?}"))
-        };
+        let m = parse(it.next())?;
+        let k = parse(it.next())?;
+        let n = parse(it.next())?;
+        let file = it
+            .next()
+            .ok_or_else(|| err(format!("manifest.tsv line {}: missing file", lineno + 1)))?
+            .to_string();
+        buckets.push(Bucket { m, k, n, file });
+    }
+    if buckets.is_empty() {
+        return Err(err(format!("empty manifest at {manifest:?}")));
+    }
+    Ok(buckets)
+}
 
-        let args = [
-            lit_i8(&wp, &[mb, kb])?,
-            lit_i8(&xp, &[kb, nb])?,
-            lit_i32(&bias, &[mb])?,
-            lit_i32(&mult, &[mb])?,
-            lit_i32(&shift, &[mb])?,
-            lit_i32(&qp, &[4])?,
-        ];
-        let exe = self.executable((mb, kb, nb), &b.file)?;
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("executing bucket {:?}: {e:?}", (mb, kb, nb)))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // lowered with return_tuple=True -> 1-tuple
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let flat: Vec<i8> = out.to_vec().map_err(|e| anyhow!("to_vec i8: {e:?}"))?;
-        if flat.len() != mb * nb {
-            bail!("unexpected output size {} != {}", flat.len(), mb * nb);
-        }
-        // crop the valid region
-        let mut cropped = vec![0i8; m * n];
-        for i in 0..m {
-            cropped[i * n..(i + 1) * n].copy_from_slice(&flat[i * nb..i * nb + n]);
-        }
-        Ok(cropped)
+#[cfg(feature = "pjrt")]
+mod artifact {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use super::{err, load_manifest, require_covering, smallest_covering, Bucket, Result};
+    use crate::gemm::QGemmParams;
+
+    /// The artifact runtime: manifest + lazily compiled executables.
+    pub struct ArtifactRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        pub buckets: Vec<Bucket>,
+        cache: HashMap<(usize, usize, usize), xla::PjRtLoadedExecutable>,
     }
 
-    /// Number of compiled executables (cache telemetry).
-    pub fn compiled_count(&self) -> usize {
-        self.cache.len()
+    impl ArtifactRuntime {
+        /// Load the manifest and create the PJRT CPU client.
+        pub fn new(dir: &Path) -> Result<Self> {
+            let buckets = load_manifest(dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT cpu client: {e:?}")))?;
+            Ok(ArtifactRuntime {
+                client,
+                dir: dir.to_path_buf(),
+                buckets,
+                cache: HashMap::new(),
+            })
+        }
+
+        /// True when the artifacts directory looks usable.
+        pub fn available(dir: &Path) -> bool {
+            super::available(dir)
+        }
+
+        /// Smallest bucket covering a logical GEMM shape.
+        pub fn pick_bucket(&self, m: usize, k: usize, n: usize) -> Option<&Bucket> {
+            smallest_covering(&self.buckets, m, k, n)
+        }
+
+        fn executable(
+            &mut self,
+            key: (usize, usize, usize),
+            file: &str,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&key) {
+                let path = self.dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| err("non-utf8 path"))?,
+                )
+                .map_err(|e| err(format!("parsing {path:?}: {e:?}")))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| err(format!("compiling {file}: {e:?}")))?;
+                self.cache.insert(key, exe);
+            }
+            Ok(&self.cache[&key])
+        }
+
+        /// Execute a quantized GEMM through the AOT artifact: pads into the
+        /// bucket, runs on PJRT, and returns the valid `m x n` region.
+        /// Bit-exact vs [`crate::gemm::qgemm`] (see tests/runtime_numerics).
+        pub fn qgemm(
+            &mut self,
+            m: usize,
+            k: usize,
+            n: usize,
+            w: &[i8],
+            x: &[i8],
+            params: &QGemmParams,
+        ) -> Result<Vec<i8>> {
+            assert_eq!(w.len(), m * k);
+            assert_eq!(x.len(), k * n);
+            let b = require_covering(&self.buckets, m, k, n)
+                .map_err(|e| err(e.to_string()))?
+                .clone();
+            let (mb, kb, nb) = (b.m, b.k, b.n);
+
+            // pad W rows with zeros (inert), X with anything (zero)
+            let mut wp = vec![0i8; mb * kb];
+            for i in 0..m {
+                wp[i * kb..i * kb + k].copy_from_slice(&w[i * k..(i + 1) * k]);
+            }
+            let mut xp = vec![0i8; kb * nb];
+            for r in 0..k {
+                xp[r * nb..r * nb + n].copy_from_slice(&x[r * n..(r + 1) * n]);
+            }
+            let mut bias = vec![0i32; mb];
+            bias[..m].copy_from_slice(&params.bias);
+            let mut mult = vec![1 << 30; mb];
+            mult[..m].copy_from_slice(&params.mult);
+            let mut shift = vec![0i32; mb];
+            shift[..m].copy_from_slice(&params.shift);
+            let qp = [params.out_zp, params.act_min, params.act_max, 0i32];
+
+            let lit_i8 = |data: &[i8], dims: &[usize]| -> Result<xla::Literal> {
+                let bytes =
+                    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+                xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)
+                    .map_err(|e| err(format!("i8 literal: {e:?}")))
+            };
+            let lit_i32 = |data: &[i32], dims: &[usize]| -> Result<xla::Literal> {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+                    .map_err(|e| err(format!("i32 literal: {e:?}")))
+            };
+
+            let args = [
+                lit_i8(&wp, &[mb, kb])?,
+                lit_i8(&xp, &[kb, nb])?,
+                lit_i32(&bias, &[mb])?,
+                lit_i32(&mult, &[mb])?,
+                lit_i32(&shift, &[mb])?,
+                lit_i32(&qp, &[4])?,
+            ];
+            let exe = self.executable((mb, kb, nb), &b.file)?;
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| err(format!("executing bucket {:?}: {e:?}", (mb, kb, nb))))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("fetch result: {e:?}")))?;
+            // lowered with return_tuple=True -> 1-tuple
+            let out = result
+                .to_tuple1()
+                .map_err(|e| err(format!("untuple: {e:?}")))?;
+            let flat: Vec<i8> = out
+                .to_vec()
+                .map_err(|e| err(format!("to_vec i8: {e:?}")))?;
+            if flat.len() != mb * nb {
+                return Err(err(format!(
+                    "unexpected output size {} != {}",
+                    flat.len(),
+                    mb * nb
+                )));
+            }
+            // crop the valid region
+            let mut cropped = vec![0i8; m * n];
+            for i in 0..m {
+                cropped[i * n..(i + 1) * n].copy_from_slice(&flat[i * nb..i * nb + n]);
+            }
+            Ok(cropped)
+        }
+
+        /// Number of compiled executables (cache telemetry).
+        pub fn compiled_count(&self) -> usize {
+            self.cache.len()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use artifact::ArtifactRuntime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn bucket_picking_prefers_smallest() {
-        let buckets = vec![
+    fn table() -> Vec<Bucket> {
+        vec![
             Bucket { m: 128, k: 64, n: 128, file: "a".into() },
             Bucket { m: 64, k: 64, n: 128, file: "b".into() },
             Bucket { m: 64, k: 32, n: 64, file: "c".into() },
-        ];
-        let rt_pick = |m: usize, k: usize, n: usize| -> Option<String> {
-            buckets
-                .iter()
-                .filter(|b| b.covers(m, k, n))
-                .min_by_key(|b| b.volume())
-                .map(|b| b.file.clone())
-        };
-        assert_eq!(rt_pick(60, 30, 60), Some("c".into()));
-        assert_eq!(rt_pick(60, 60, 100), Some("b".into()));
-        assert_eq!(rt_pick(100, 60, 100), Some("a".into()));
-        assert_eq!(rt_pick(200, 10, 10), None);
+        ]
+    }
+
+    #[test]
+    fn bucket_picking_prefers_smallest() {
+        // Pin the selection policy: among all covering buckets, the
+        // one with the smallest volume() wins (not first-found, not
+        // tightest-per-axis).
+        let buckets = table();
+        let pick = |m, k, n| smallest_covering(&buckets, m, k, n).map(|b| b.file.as_str());
+        assert_eq!(pick(60, 30, 60), Some("c"));
+        assert_eq!(pick(60, 60, 100), Some("b"));
+        assert_eq!(pick(100, 60, 100), Some("a"));
+        assert_eq!(pick(200, 10, 10), None);
+        // exact-fit bucket beats any strictly larger cover
+        assert_eq!(pick(64, 32, 64), Some("c"));
+        // "b" covers this too, but c's volume (131072) < b's (524288)
+        assert!(table()[2].volume() < table()[1].volume());
     }
 
     #[test]
@@ -241,5 +363,30 @@ mod tests {
         assert!(b.covers(64, 32, 128));
         assert!(b.covers(1, 1, 1));
         assert!(!b.covers(65, 32, 128));
+    }
+
+    #[test]
+    fn missing_bucket_error_names_shape() {
+        let e = require_covering(&table(), 4096, 27, 12544).unwrap_err();
+        assert_eq!(e, NoBucketError { m: 4096, k: 27, n: 12544 });
+        assert_eq!(e.to_string(), "no AOT bucket covers GEMM (4096,27,12544)");
+    }
+
+    #[test]
+    fn bucket_shape_mirrors_python_grid() {
+        // below 128: multiples of 32; at/above 128: multiples of 128;
+        // K always multiples of 32 (python/compile/model.py).
+        assert_eq!(bucket_shape(1, 1, 1), (32, 32, 32));
+        assert_eq!(bucket_shape(32, 27, 12544), (32, 32, 12544));
+        assert_eq!(bucket_shape(100, 33, 100), (128, 64, 128));
+        assert_eq!(bucket_shape(128, 64, 49), (128, 64, 64));
+        assert_eq!(bucket_shape(129, 64, 200), (256, 64, 256));
+        assert_eq!(bucket_shape(512, 4608, 49), (512, 4608, 64));
+    }
+
+    #[test]
+    fn load_manifest_missing_dir_errors() {
+        let e = load_manifest(Path::new("/nonexistent-secda-artifacts")).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
     }
 }

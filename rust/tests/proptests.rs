@@ -227,6 +227,121 @@ fn prop_padding_inert() {
     }
 }
 
+/// Property: the coordinator pool (heterogeneous workers, batching,
+/// work stealing, per-layer partitioning) is functionally invisible —
+/// for ANY request stream its outputs are bit-identical to the
+/// single-driver path (one `AccelBackend<SaDesign>` session per
+/// request), which is itself bit-identical to the CPU path.
+#[test]
+fn prop_coordinator_matches_single_driver_path() {
+    use std::sync::Arc;
+
+    use secda::accel::SaDesign;
+    use secda::coordinator::{Coordinator, CoordinatorConfig};
+    use secda::driver::{AccelBackend, DriverConfig};
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::interpreter::Session;
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 6);
+        let cout = rng.range(4, 24);
+        let hw = rng.range(6, 14);
+        let (kh, pad) = if rng.next() % 2 == 0 { (3, 1) } else { (1, 0) };
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh,
+            kw: kh,
+            cin,
+            stride: 1,
+            pad,
+            weights: rng.i8s(cout * kh * kh * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    for seed in 1..=8u64 {
+        let mut rng = Rng::new(seed * 0x51ed);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let mut cfg = CoordinatorConfig::default(); // 2 SA + 1 VM + 1 CPU
+        cfg.queue_depth = 64;
+        let mut coord = Coordinator::new(cfg);
+        let mut inputs = Vec::new();
+        for i in 0..5usize {
+            let g = &nets[i % 2];
+            let n: usize = g.input_shape.iter().product();
+            let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+            let id = coord.submit(g.clone(), input.clone()).expect("queue sized");
+            inputs.push((id, g.clone(), input));
+            coord.advance(secda::sysc::SimTime::us(rng.range(50, 5000) as u64));
+        }
+        let done = coord.run_until_idle();
+        assert_eq!(done.len(), 5, "seed {seed}");
+        for (id, g, input) in inputs {
+            let c = done.iter().find(|c| c.id == id).expect("completed");
+            let mut single = AccelBackend::new(SaDesign::paper(), DriverConfig::default());
+            let (reference, _) = Session::new(&g, &mut single, 1).run(&input);
+            assert_eq!(
+                c.output.data, reference.data,
+                "seed {seed} request {id}: coordinator diverged from single driver"
+            );
+        }
+    }
+}
+
+/// Property: the coordinator-as-GemmBackend seam ([`Coordinator::backend`])
+/// produces bit-identical GEMM outputs to the plain CPU gemm for ANY
+/// shape and data, regardless of which pool instance each call lands on.
+#[test]
+fn prop_coordinator_backend_gemm_bit_exact() {
+    use secda::coordinator::{Coordinator, CoordinatorConfig};
+    use secda::framework::backend::{GemmBackend, GemmTask};
+
+    for seed in 1..=20u64 {
+        let mut rng = Rng::new(seed * 0xc0de);
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut cb = coord.backend();
+        for _ in 0..4 {
+            let req = random_request(&mut rng);
+            let task = GemmTask {
+                m: req.m,
+                k: req.k,
+                n: req.n,
+                weights: &req.weights,
+                inputs: &req.inputs,
+                params: &req.params,
+                layer: "prop",
+                weights_resident: false,
+            };
+            let (out, timing) = cb.run_gemm(&task);
+            let cpu = gemm::qgemm(
+                &req.weights, &req.inputs, req.m, req.k, req.n, &req.params, 1,
+            );
+            assert_eq!(
+                out, cpu,
+                "seed {seed} shape ({},{},{})",
+                req.m, req.k, req.n
+            );
+            assert!(timing.total > SimTime::ZERO);
+        }
+    }
+}
+
 /// Failure injection: a livelocked module graph (self-rescheduling
 /// forever) must be contained by the kernel's event budget instead of
 /// hanging the design loop.

@@ -4,6 +4,9 @@
 //!
 //! This is the three-layer integration proof: L1 Pallas kernel ==
 //! L2 jax lowering == L3 rust, across shape buckets including padding.
+//!
+//! Requires the `pjrt` feature (PJRT execution of the artifacts).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
