@@ -4,7 +4,7 @@
 //! work stealing and backpressure — while cross-checking every GEMM's
 //! functional bits per request.
 //!
-//! This is the repo's end-to-end validation (DESIGN.md): it proves all
+//! This is the repo's end-to-end validation (ARCHITECTURE.md): it proves all
 //! layers compose — Pallas kernel (L1) → jax lowering (L2) → rust
 //! runtime + coordinator (L3) — by checking, for every request, that
 //! the pool's outputs are bit-identical to an independent functional
@@ -15,14 +15,20 @@
 //! numerics); otherwise the gemmlowp CPU reference stands in, so the
 //! example runs out of the box on a plain `cargo run`.
 //!
-//! Run: `cargo run --release --example edge_serving [n_requests] [model] [sa_workers]`
+//! The 4th argument picks the exec mode: `modeled` (default) drains
+//! the pool as the deterministic discrete-event model; `threaded` runs
+//! one OS thread per pool worker and reports real wall-clock
+//! throughput next to the modeled numbers. The per-GEMM bit-identity
+//! cross-check runs identically in both modes (the hook is `Send` and
+//! serialized by its mutex).
+//!
+//! Run: `cargo run --release --example edge_serving [n_requests] [model] [sa_workers] [modeled|threaded]`
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use secda::coordinator::{Coordinator, CoordinatorConfig, SubmitError};
+use secda::coordinator::{Coordinator, CoordinatorConfig, ExecMode, SubmitError};
 use secda::framework::models;
 use secda::framework::tensor::Tensor;
 use secda::gemm;
@@ -31,12 +37,18 @@ use secda::sysc::SimTime;
 
 /// Install the per-GEMM bit-identity assertion; returns the name of
 /// the reference path it checks the pool against.
-fn install_cross_check(coord: &mut Coordinator, checks: Rc<RefCell<u64>>) -> &'static str {
+fn install_cross_check(coord: &mut Coordinator, checks: Arc<AtomicU64>) -> &'static str {
     #[cfg(feature = "pjrt")]
     {
         use secda::runtime::ArtifactRuntime;
         let dir = default_dir();
         if ArtifactRuntime::available(&dir) {
+            // NOTE: CrossCheckFn is `Send` (worker threads invoke the
+            // hook under ExecMode::Threaded), so this closure requires
+            // the vendored xla PJRT wrappers to be Send. If they are
+            // not when the dependency is re-added, route the cross-
+            // check through a dedicated PJRT thread + channel instead
+            // of capturing the runtime directly (ROADMAP item).
             let mut rt = ArtifactRuntime::new(&dir).expect("artifact runtime");
             coord.set_cross_check(Box::new(move |task, out| {
                 let pjrt = rt
@@ -47,7 +59,7 @@ fn install_cross_check(coord: &mut Coordinator, checks: Rc<RefCell<u64>>) -> &'s
                     "layer {}: PJRT artifact diverged from the TLM simulator",
                     task.layer
                 );
-                *checks.borrow_mut() += 1;
+                checks.fetch_add(1, Ordering::Relaxed);
             }));
             return "PJRT artifacts";
         }
@@ -68,7 +80,7 @@ fn install_cross_check(coord: &mut Coordinator, checks: Rc<RefCell<u64>>) -> &'s
             "layer {}: pool output diverged from the gemmlowp reference",
             task.layer
         );
-        *checks.borrow_mut() += 1;
+        checks.fetch_add(1, Ordering::Relaxed);
     }));
     "CPU gemmlowp reference"
 }
@@ -78,17 +90,23 @@ fn main() {
     let n_requests: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(8);
     let model = args.get(1).map(String::as_str).unwrap_or("mobilenet_v1");
     let sa_workers: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(2);
+    let exec_mode = match args.get(3).map(String::as_str) {
+        Some("threaded") => ExecMode::Threaded,
+        Some("modeled") | None => ExecMode::Modeled,
+        Some(other) => panic!("unknown exec mode {other:?}: use `modeled` or `threaded`"),
+    };
 
     let g = Arc::new(models::by_name(model).expect("model"));
     let mut cfg = CoordinatorConfig::default();
     cfg.sa_workers = sa_workers;
+    cfg.exec_mode = exec_mode;
     let mut coord =
         Coordinator::with_artifact_manifest(cfg, &default_dir()).expect("artifact manifest");
-    let checks = Rc::new(RefCell::new(0u64));
+    let checks = Arc::new(AtomicU64::new(0));
     let reference = install_cross_check(&mut coord, checks.clone());
     println!(
-        "serving {model} through the L3 coordinator: {} SA + {} VM + {} CPU workers \
-         (batch window {}, queue depth {}); cross-check vs {reference}",
+        "serving {model} through the L3 coordinator [{exec_mode}]: {} SA + {} VM + {} CPU \
+         workers (batch window {}, queue depth {}); cross-check vs {reference}",
         coord.cfg.sa_workers,
         coord.cfg.vm_workers,
         coord.cfg.cpu_workers,
@@ -163,8 +181,15 @@ fn main() {
     }
     println!(
         "pool output == {reference} on every one of {} GEMMs across {} requests",
-        checks.borrow(),
+        checks.load(Ordering::Relaxed),
         completions.len()
     );
+    if exec_mode == ExecMode::Threaded {
+        println!(
+            "threaded drains: {:.1} ms wall -> {:.1} req/s real",
+            coord.metrics().wall_elapsed.as_secs_f64() * 1e3,
+            coord.metrics().wall_throughput_rps(),
+        );
+    }
     println!("host wall: {:.1} s", wall.as_secs_f64());
 }

@@ -2,19 +2,24 @@
 //! batch window (hand-rolled harness like `hotpath.rs`; criterion is
 //! not in the offline vendor set).
 //!
-//! All serving numbers are in *modeled PYNQ-Z1 time* (the coordinator
-//! is a discrete-event model): a pool of N instances overlaps N
-//! requests in modeled time, so throughput here is the number the
-//! ROADMAP north star cares about, not host wall-clock. Host wall
-//! time is printed per sweep for harness-cost visibility.
+//! Two sweeps, one per exec mode:
+//!
+//! * **modeled** — numbers in *modeled PYNQ-Z1 time* (the coordinator
+//!   as a discrete-event model): a pool of N instances overlaps N
+//!   requests in modeled time; deterministic and reproducible. Host
+//!   wall time is printed per sweep for harness-cost visibility.
+//! * **threaded** — the same pool with one OS thread per worker
+//!   (`ExecMode::Threaded`): wall req/s is *real* host throughput and
+//!   should scale with the worker count on a multi-core machine.
 //!
 //! Run: `cargo bench --bench serving`
+//! Restrict to one mode:  `-- modeled` or `-- threaded`
 //! Add a heavier MobileNetV1 sweep with: `cargo bench --bench serving -- full`
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use secda::coordinator::{Coordinator, CoordinatorConfig};
+use secda::coordinator::{Coordinator, CoordinatorConfig, ExecMode};
 use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::models;
 use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
@@ -80,6 +85,9 @@ fn image(g: &Graph, st: &mut u64) -> Tensor {
 
 struct RunStats {
     throughput: f64,
+    /// Real requests/s over the host wall-clock of the drain
+    /// (meaningful under ExecMode::Threaded only).
+    wall_rps: f64,
     p50: SimTime,
     p99: SimTime,
     batches: usize,
@@ -108,6 +116,7 @@ fn serve(g: &Arc<Graph>, mut cfg: CoordinatorConfig, n_requests: usize, gap: Sim
     let m = coord.metrics();
     RunStats {
         throughput: m.throughput_rps(),
+        wall_rps: m.wall_throughput_rps(),
         p50: m.latency_pct(0.5),
         p99: m.latency_pct(0.99),
         batches: m.batches.len(),
@@ -149,6 +158,42 @@ fn pool_scaling(g: &Arc<Graph>, n_requests: usize) {
         s.throughput / base.unwrap(),
         format!("{}", s.p50),
         format!("{}", s.p99),
+        s.steals,
+        s.host_ms
+    );
+    println!();
+}
+
+/// Wall-clock scaling of the threaded pool: one OS thread per worker,
+/// real concurrency, throughput measured against the host clock. On a
+/// multi-core host, wall req/s should rise with the worker count.
+fn threaded_pool_scaling(g: &Arc<Graph>, n_requests: usize) {
+    println!("--- threaded pool scaling ({n_requests} edge_cam requests, ExecMode::Threaded) ---");
+    println!(
+        "{:<22} {:>12} {:>9} {:>9} {:>9}",
+        "pool", "wall req/s", "speedup", "steals", "host ms"
+    );
+    let mut base = None;
+    for n in [1usize, 2, 4] {
+        let cfg = CoordinatorConfig::sa_pool(n).with_exec_mode(ExecMode::Threaded);
+        let s = serve(g, cfg, n_requests, SimTime::ms(1));
+        let base_rps = *base.get_or_insert(s.wall_rps);
+        println!(
+            "{:<22} {:>12.1} {:>8.2}x {:>9} {:>9.0}",
+            format!("{n}x SA"),
+            s.wall_rps,
+            s.wall_rps / base_rps,
+            s.steals,
+            s.host_ms
+        );
+    }
+    let cfg = CoordinatorConfig::default().with_exec_mode(ExecMode::Threaded);
+    let s = serve(g, cfg, n_requests, SimTime::ms(1));
+    println!(
+        "{:<22} {:>12.1} {:>8.2}x {:>9} {:>9.0}",
+        "2x SA + 1x VM + 1 CPU",
+        s.wall_rps,
+        s.wall_rps / base.unwrap(),
         s.steals,
         s.host_ms
     );
@@ -198,13 +243,23 @@ fn mobilenet_sweep() {
 }
 
 fn main() {
-    println!("=== serving benchmarks (modeled PYNQ-Z1 time) ===\n");
+    let args: Vec<String> = std::env::args().collect();
+    let only = |m: &str| args.iter().any(|a| a == m);
+    let both = !only("modeled") && !only("threaded");
+    println!("=== serving benchmarks ===\n");
     let g = Arc::new(edge_cam());
-    pool_scaling(&g, 96);
-    batch_window_sweep(&g, 48);
-    if std::env::args().any(|a| a == "full") {
+    if both || only("modeled") {
+        println!("== ExecMode::Modeled (deterministic, modeled PYNQ-Z1 time) ==\n");
+        pool_scaling(&g, 96);
+        batch_window_sweep(&g, 48);
+    }
+    if both || only("threaded") {
+        println!("== ExecMode::Threaded (OS threads, host wall-clock) ==\n");
+        threaded_pool_scaling(&g, 192);
+    }
+    if only("full") {
         mobilenet_sweep();
     } else {
-        println!("(run with `-- full` for the MobileNetV1 sweep)");
+        println!("(run with `-- full` for the MobileNetV1 sweep; `-- modeled` / `-- threaded` to restrict)");
     }
 }

@@ -43,6 +43,8 @@ pub struct BucketBatcher {
 }
 
 impl BucketBatcher {
+    /// An executable-cache model over `buckets` (empty = rounding
+    /// grid), charging `compile_cost` on each bucket's first use.
     pub fn new(buckets: Vec<Bucket>, compile_cost: SimTime) -> Self {
         BucketBatcher {
             buckets,

@@ -4,6 +4,14 @@
 //! the per-inference [`crate::framework::interpreter::InferenceReport`]
 //! — so latency percentiles, worker utilization and throughput compose
 //! with the Table II numbers rather than with host wall-clock.
+//!
+//! The one exception is [`ServingMetrics::wall_elapsed`]: under
+//! [`crate::coordinator::ExecMode::Threaded`] each drain also records
+//! its host wall-clock span, so
+//! [`ServingMetrics::wall_throughput_rps`] reports *real* requests per
+//! second next to the modeled figure.
+
+use std::time::Duration;
 
 use crate::sysc::SimTime;
 
@@ -11,33 +19,51 @@ use crate::sysc::SimTime;
 /// back on one worker.
 #[derive(Debug, Clone)]
 pub struct BatchRecord {
+    /// Pool worker that ran the round.
     pub worker: usize,
+    /// Model name the round grouped on (display only; grouping itself
+    /// is by graph identity).
     pub model: String,
+    /// Number of requests in the round.
     pub size: usize,
+    /// Modeled start time of the round.
     pub start: SimTime,
 }
 
 /// Aggregate serving statistics over a coordinator's lifetime.
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
+    /// Requests accepted by `submit`.
     pub submitted: u64,
     /// Submissions rejected with backpressure (every queue full).
     pub rejected: u64,
+    /// Requests that finished executing.
     pub completed: u64,
-    /// Requests an idle worker stole from a sibling's queue.
+    /// Requests an idle worker stole from a sibling's queue (modeled
+    /// mode counts stolen requests; threaded mode counts stolen runs).
     pub steals: u64,
     /// End-to-end modeled latency (finish - arrival) per request.
     latencies: Vec<SimTime>,
     /// Queue wait (start - arrival) per request.
     waits: Vec<SimTime>,
+    /// Every dispatch round, in recording order.
     pub batches: Vec<BatchRecord>,
     /// Highest queue depth observed on any worker.
     pub queue_peak: usize,
+    /// Host wall-clock spent inside threaded drains (zero in modeled
+    /// mode, accumulated across drains in threaded mode).
+    pub wall_elapsed: Duration,
+    /// Requests completed inside threaded drains (the numerator of
+    /// [`ServingMetrics::wall_throughput_rps`] — kept separate from
+    /// `completed` so modeled-mode completions never inflate the
+    /// wall-clock figure on a mixed-mode coordinator).
+    pub wall_completed: u64,
     first_arrival: Option<SimTime>,
     last_finish: SimTime,
 }
 
 impl ServingMetrics {
+    /// Count an accepted submission arriving at `arrival`.
     pub fn record_submit(&mut self, arrival: SimTime) {
         self.submitted += 1;
         self.first_arrival = Some(match self.first_arrival {
@@ -46,10 +72,12 @@ impl ServingMetrics {
         });
     }
 
+    /// Count a backpressure rejection.
     pub fn record_reject(&mut self) {
         self.rejected += 1;
     }
 
+    /// Record one dispatch round.
     pub fn record_batch(&mut self, worker: usize, model: &str, size: usize, start: SimTime) {
         self.batches.push(BatchRecord {
             worker,
@@ -59,11 +87,19 @@ impl ServingMetrics {
         });
     }
 
+    /// Record one completed request's modeled timeline.
     pub fn record_request(&mut self, arrival: SimTime, start: SimTime, finish: SimTime) {
         self.completed += 1;
         self.latencies.push(finish.saturating_sub(arrival));
         self.waits.push(start.saturating_sub(arrival));
         self.last_finish = self.last_finish.max(finish);
+    }
+
+    /// Accumulate one threaded drain: its host wall-clock span and the
+    /// number of requests it completed.
+    pub fn record_wall(&mut self, elapsed: Duration, completed: u64) {
+        self.wall_elapsed += elapsed;
+        self.wall_completed += completed;
     }
 
     /// Serving makespan: first arrival to last completion.
@@ -81,6 +117,19 @@ impl ServingMetrics {
             return 0.0;
         }
         self.completed as f64 / secs
+    }
+
+    /// Requests completed in threaded drains per *host wall-clock*
+    /// second spent inside them — the real-concurrency figure
+    /// [`crate::coordinator::ExecMode::Threaded`] exists to produce.
+    /// Zero when no threaded drain has run; modeled-mode completions
+    /// are excluded from the numerator.
+    pub fn wall_throughput_rps(&self) -> f64 {
+        let secs = self.wall_elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.wall_completed as f64 / secs
     }
 
     fn percentile(sorted: &[SimTime], p: f64) -> SimTime {
@@ -105,10 +154,12 @@ impl ServingMetrics {
         Self::percentile(&v, p)
     }
 
+    /// Longest queue wait any completed request saw.
     pub fn max_wait(&self) -> SimTime {
         self.waits.iter().copied().max().unwrap_or(SimTime::ZERO)
     }
 
+    /// Mean dispatch-round size over all recorded batches.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches.is_empty() {
             return 0.0;
@@ -117,6 +168,7 @@ impl ServingMetrics {
         total as f64 / self.batches.len() as f64
     }
 
+    /// Track the peak per-worker queue depth seen at submit time.
     pub fn observe_queue_depth(&mut self, depth: usize) {
         self.queue_peak = self.queue_peak.max(depth);
     }
@@ -129,10 +181,19 @@ impl ServingMetrics {
         lat.sort();
         let mut waits = self.waits.clone();
         waits.sort();
+        let wall = if self.wall_elapsed > Duration::ZERO {
+            format!(
+                "; wall {:.1} ms -> {:.1} req/s real",
+                self.wall_elapsed.as_secs_f64() * 1e3,
+                self.wall_throughput_rps()
+            )
+        } else {
+            String::new()
+        };
         format!(
             "served {}/{} requests ({} rejected) in {} makespan -> {:.2} req/s; \
              latency p50 {} p99 {}; wait p50 {} max {}; \
-             {} batches (mean size {:.2}), {} steals, queue peak {}",
+             {} batches (mean size {:.2}), {} steals, queue peak {}{}",
             self.completed,
             self.submitted,
             self.rejected,
@@ -146,6 +207,7 @@ impl ServingMetrics {
             self.mean_batch_size(),
             self.steals,
             self.queue_peak,
+            wall,
         )
     }
 }
@@ -182,5 +244,32 @@ mod tests {
         assert_eq!(m.throughput_rps(), 0.0);
         assert_eq!(m.latency_pct(0.99), SimTime::ZERO);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.wall_throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn wall_throughput_accumulates_across_drains() {
+        let mut m = ServingMetrics::default();
+        m.record_submit(SimTime::ZERO);
+        m.record_request(SimTime::ZERO, SimTime::ZERO, SimTime::ms(1));
+        m.record_wall(Duration::from_millis(250), 1);
+        m.record_wall(Duration::from_millis(250), 1);
+        assert_eq!(m.wall_elapsed, Duration::from_millis(500));
+        assert_eq!(m.wall_completed, 2);
+        assert!((m.wall_throughput_rps() - 4.0).abs() < 1e-9);
+        assert!(m.summary().contains("req/s real"), "{}", m.summary());
+    }
+
+    #[test]
+    fn modeled_completions_never_inflate_wall_throughput() {
+        // a coordinator that served 96 requests modeled, then 1
+        // threaded, must report 1-request wall throughput — not 97
+        let mut m = ServingMetrics::default();
+        for i in 0..96u64 {
+            m.record_request(SimTime::ms(i), SimTime::ms(i), SimTime::ms(i + 10));
+        }
+        m.record_request(SimTime::ms(100), SimTime::ms(100), SimTime::ms(110));
+        m.record_wall(Duration::from_millis(5), 1);
+        assert!((m.wall_throughput_rps() - 200.0).abs() < 1e-9);
     }
 }

@@ -20,13 +20,26 @@
 //!   [`crate::perf::CpuModel`]) and the work-stealing dispatch loop
 //!   with queue-depth backpressure;
 //! * [`metrics`] — latency percentiles, throughput, utilization,
-//!   batching and stealing telemetry, all in modeled PYNQ-Z1 time.
+//!   batching and stealing telemetry, all in modeled PYNQ-Z1 time
+//!   (plus host wall-clock for the threaded mode);
+//! * [`threaded`] — the OS-thread worker loop behind
+//!   [`ExecMode::Threaded`]: a shared injector queue, per-worker
+//!   deques, work stealing, and a clean scope-join shutdown.
 //!
-//! Like everything in L3, the coordinator is a *discrete-event model*:
-//! functional math runs eagerly on the host while request timing
-//! advances in simulated [`SimTime`], so a pool of N instances
-//! genuinely overlaps N requests in modeled time and results stay
-//! bit-exact and deterministic.
+//! The coordinator executes in one of two [`ExecMode`]s:
+//!
+//! * [`ExecMode::Modeled`] (default) — a *discrete-event model*:
+//!   functional math runs eagerly on the host while request timing
+//!   advances in simulated [`SimTime`], so a pool of N instances
+//!   genuinely overlaps N requests in modeled time and results stay
+//!   bit-exact **and deterministic** — tests and modeled-time
+//!   percentiles are pinned against this mode.
+//! * [`ExecMode::Threaded`] — every pool worker runs on its own OS
+//!   thread, so N instances overlap N requests in *host wall-clock*
+//!   too. Functional outputs stay bit-identical to the modeled path
+//!   (same execution core, math independent of scheduling); modeled
+//!   percentiles become scheduling-dependent, and
+//!   [`ServingMetrics::wall_throughput_rps`] reports real throughput.
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -46,12 +59,11 @@ pub mod batch;
 pub mod metrics;
 pub mod pool;
 pub mod scheduler;
+pub mod threaded;
 
-use std::cell::RefCell;
 use std::fmt;
 use std::path::Path;
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::driver::DriverConfig;
 use crate::framework::backend::{GemmBackend, GemmTask, GemmTiming};
@@ -65,6 +77,34 @@ pub use batch::{BucketBatcher, BucketKey};
 pub use metrics::{BatchRecord, ServingMetrics};
 pub use pool::{PartitionedBackend, SharedCrossCheck, Worker, WorkerKind, WorkerPool};
 pub use scheduler::{OffloadPlanner, Route};
+
+/// How the coordinator executes its worker pool.
+///
+/// Not to be confused with [`crate::accel::ExecMode`], which selects
+/// the *simulation fidelity* of one accelerator run (§III-C vs §III-D
+/// of the paper); this enum selects how the *pool* advances: one
+/// deterministic discrete-event loop, or one OS thread per worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Single-threaded discrete-event model (the default): fully
+    /// deterministic, request timing advances only in modeled
+    /// [`SimTime`]. Tests and pinned percentiles use this mode.
+    #[default]
+    Modeled,
+    /// One OS thread per pool worker ([`threaded`]): batches execute
+    /// concurrently on the host, wall-clock throughput becomes real,
+    /// functional outputs stay bit-identical to [`ExecMode::Modeled`].
+    Threaded,
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ExecMode::Modeled => "modeled",
+            ExecMode::Threaded => "threaded",
+        })
+    }
+}
 
 /// Pool- and queue-level serving policy (see also the per-instance
 /// [`DriverConfig`] these workers are built from).
@@ -90,6 +130,10 @@ pub struct CoordinatorConfig {
     pub steal: bool,
     /// Modeled one-time AOT executable compile cost per shape bucket.
     pub compile_cost: SimTime,
+    /// How the pool executes: the deterministic discrete-event model
+    /// ([`ExecMode::Modeled`], default) or one OS thread per worker
+    /// ([`ExecMode::Threaded`]).
+    pub exec_mode: ExecMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -104,6 +148,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 16,
             steal: true,
             compile_cost: SimTime::ms(25),
+            exec_mode: ExecMode::Modeled,
         }
     }
 }
@@ -119,13 +164,23 @@ impl CoordinatorConfig {
             ..Default::default()
         }
     }
+
+    /// The same configuration with a different [`ExecMode`].
+    pub fn with_exec_mode(mut self, mode: ExecMode) -> Self {
+        self.exec_mode = mode;
+        self
+    }
 }
 
 /// One queued inference request.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
+    /// Coordinator-assigned request id (monotonic per coordinator).
     pub id: u64,
+    /// The model to run; graph *identity* (the `Arc` pointer) is the
+    /// batching key, not the model name.
     pub model: Arc<Graph>,
+    /// The input tensor (must match the model's input shape).
     pub input: Tensor,
     /// Modeled arrival time (the coordinator's clock at submit).
     pub arrival: SimTime,
@@ -134,19 +189,26 @@ pub struct InferenceRequest {
 /// One finished request.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The request id this completion answers.
     pub id: u64,
     /// Pool worker that served it.
     pub worker: usize,
+    /// Modeled arrival time (copied from the request).
     pub arrival: SimTime,
+    /// Modeled execution start (after queueing and batching).
     pub started: SimTime,
+    /// Modeled completion time.
     pub finished: SimTime,
     /// Size of the dispatch round this request rode in.
     pub batch_size: usize,
+    /// The inference output tensor.
     pub output: Tensor,
+    /// Per-layer timing/energy report of this inference.
     pub report: InferenceReport,
 }
 
 impl Completion {
+    /// End-to-end modeled latency: finish minus arrival.
     pub fn latency(&self) -> SimTime {
         self.finished.saturating_sub(self.arrival)
     }
@@ -158,13 +220,18 @@ impl Completion {
 pub enum SubmitError {
     /// Every worker queue is at `queue_depth`.
     Backpressure {
+        /// Total requests queued across the pool at rejection time.
         queued: usize,
+        /// The rejected request, returned intact for retry.
         request: Box<InferenceRequest>,
     },
     /// The input tensor does not match the model's input shape.
     ShapeMismatch {
+        /// The model's declared input shape.
         expected: Vec<usize>,
+        /// The shape of the tensor actually submitted.
         got: Vec<usize>,
+        /// The rejected request, returned intact.
         request: Box<InferenceRequest>,
     },
 }
@@ -190,8 +257,10 @@ impl std::error::Error for SubmitError {}
 
 /// The serving coordinator: owns the pool, the executable-cache model
 /// and the clock; accepts requests and drains them through the
-/// scheduler.
+/// scheduler ([`ExecMode::Modeled`]) or the OS-thread worker loop
+/// ([`ExecMode::Threaded`]).
 pub struct Coordinator {
+    /// The policy this coordinator was built with.
     pub cfg: CoordinatorConfig,
     pool: WorkerPool,
     batcher: pool::SharedBatcher,
@@ -212,8 +281,8 @@ impl Coordinator {
 
     /// A coordinator batching against an explicit AOT bucket table.
     pub fn with_buckets(cfg: CoordinatorConfig, buckets: Vec<Bucket>) -> Self {
-        let batcher = Rc::new(RefCell::new(BucketBatcher::new(buckets, cfg.compile_cost)));
-        let check: SharedCrossCheck = Rc::new(RefCell::new(None));
+        let batcher = Arc::new(Mutex::new(BucketBatcher::new(buckets, cfg.compile_cost)));
+        let check: SharedCrossCheck = Arc::new(Mutex::new(None));
         let pool = WorkerPool::build(&cfg, batcher.clone(), check.clone());
         Coordinator {
             cfg,
@@ -246,15 +315,19 @@ impl Coordinator {
     /// Install a hook called with every GEMM task and its functional
     /// output — `edge_serving` uses it for the PJRT-vs-simulator
     /// bit-identity assertion. The hook must not re-enter the
-    /// coordinator.
+    /// coordinator; under [`ExecMode::Threaded`] it is called from
+    /// worker threads (serialized by the hook's mutex), hence the
+    /// [`Send`] bound on [`pool::CrossCheckFn`].
     pub fn set_cross_check(&mut self, f: Box<pool::CrossCheckFn>) {
-        *self.check.borrow_mut() = Some(f);
+        *self.check.lock().expect("cross-check lock") = Some(f);
     }
 
+    /// Remove the cross-check hook.
     pub fn clear_cross_check(&mut self) {
-        *self.check.borrow_mut() = None;
+        *self.check.lock().expect("cross-check lock") = None;
     }
 
+    /// The coordinator's modeled clock.
     pub fn now(&self) -> SimTime {
         self.now
     }
@@ -303,29 +376,42 @@ impl Coordinator {
         }
     }
 
+    /// Requests currently queued across the pool.
     pub fn queued(&self) -> usize {
         self.pool.total_queued()
     }
 
-    /// Drain every queued request through the scheduler, returning the
-    /// completions of this drain in execution order.
+    /// Drain every queued request, returning the completions of this
+    /// drain — in execution order under [`ExecMode::Modeled`], sorted
+    /// by request id under [`ExecMode::Threaded`] (worker threads
+    /// spawn, drain the shared queues, and are joined before this
+    /// returns; no thread outlives the call).
     pub fn run_until_idle(&mut self) -> Vec<Completion> {
-        let done = scheduler::drain(&mut self.pool, &self.cfg, &mut self.metrics);
+        let done = match self.cfg.exec_mode {
+            ExecMode::Modeled => {
+                scheduler::drain(&mut self.pool, &self.cfg, &mut self.metrics)
+            }
+            ExecMode::Threaded => {
+                threaded::drain(&mut self.pool, &self.cfg, &mut self.metrics)
+            }
+        };
         if let Some(last) = done.iter().map(|c| c.finished).max() {
             self.now = self.now.max(last);
         }
         done
     }
 
+    /// Accumulated serving telemetry.
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
     }
 
     /// The shared executable-cache model (compiles / hits / buckets).
-    pub fn batcher(&self) -> std::cell::Ref<'_, BucketBatcher> {
-        self.batcher.borrow()
+    pub fn batcher(&self) -> std::sync::MutexGuard<'_, BucketBatcher> {
+        self.batcher.lock().expect("executable-cache lock")
     }
 
+    /// The worker pool (read-only view for reports).
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
     }
@@ -412,8 +498,11 @@ impl GemmBackend for CoordinatorBackend<'_> {
     }
 }
 
+/// Shared fixtures for the coordinator test modules (here and in
+/// [`threaded`]) — one definition so the threaded-vs-modeled agreement
+/// tests provably exercise the same graphs as the modeled-path tests.
 #[cfg(test)]
-mod tests {
+pub(crate) mod testutil {
     use super::*;
     use crate::framework::backend::CpuBackend;
     use crate::framework::graph::GraphBuilder;
@@ -429,7 +518,7 @@ mod tests {
     }
 
     /// A small convnet whose conv is big enough to offload.
-    fn convnet(name: &str, cout: usize, seed: u64) -> Graph {
+    pub(crate) fn convnet(name: &str, cout: usize, seed: u64) -> Graph {
         let mut st = seed.max(1);
         let cin = 3;
         // 16x16 input -> the conv GEMM is (cout, 27, 256): large
@@ -459,17 +548,26 @@ mod tests {
         b.finish(s)
     }
 
-    fn image(g: &Graph, seed: u64) -> Tensor {
+    /// A deterministic pseudo-random input image for `g`.
+    pub(crate) fn image(g: &Graph, seed: u64) -> Tensor {
         let mut st = seed.max(1);
         let n: usize = g.input_shape.iter().product();
         let data = (0..n).map(|_| (rnd(&mut st) & 0xff) as u8 as i8).collect();
         Tensor::new(g.input_shape.clone(), data, g.input_qp)
     }
 
-    fn cpu_reference(g: &Graph, input: &Tensor) -> Tensor {
+    /// Independent single-threaded gemmlowp reference output.
+    pub(crate) fn cpu_reference(g: &Graph, input: &Tensor) -> Tensor {
         let mut cb = CpuBackend::new(1);
         Session::new(g, &mut cb, 1).run(input).0
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{convnet, cpu_reference, image};
+    use super::*;
+    use crate::framework::interpreter::Session;
 
     #[test]
     fn serves_mixed_models_bit_exact() {
@@ -594,8 +692,8 @@ mod tests {
     fn idle_worker_steals_queued_work() {
         let g = Arc::new(convnet("net", 32, 17));
         let cfg = CoordinatorConfig::sa_pool(2);
-        let batcher = Rc::new(RefCell::new(BucketBatcher::new(Vec::new(), SimTime::ZERO)));
-        let check: SharedCrossCheck = Rc::new(RefCell::new(None));
+        let batcher = Arc::new(Mutex::new(BucketBatcher::new(Vec::new(), SimTime::ZERO)));
+        let check: SharedCrossCheck = Arc::new(Mutex::new(None));
         let mut pool = WorkerPool::build(&cfg, batcher, check);
         let mut cfg2 = cfg.clone();
         cfg2.max_batch = 1; // force one dispatch round per request
@@ -622,18 +720,18 @@ mod tests {
     fn cross_check_hook_sees_every_gemm() {
         let g = Arc::new(convnet("net", 16, 19));
         let mut coord = Coordinator::new(CoordinatorConfig::sa_pool(1));
-        let count = Rc::new(RefCell::new(0u64));
+        let count = Arc::new(Mutex::new(0u64));
         let c2 = count.clone();
         coord.set_cross_check(Box::new(move |task, out| {
             assert_eq!(out.len(), task.m * task.n);
-            *c2.borrow_mut() += 1;
+            *c2.lock().unwrap() += 1;
         }));
         for i in 0..3u64 {
             coord.submit(g.clone(), image(&g, 70 + i)).unwrap();
         }
         coord.run_until_idle();
         // one conv per request
-        assert_eq!(*count.borrow(), 3);
+        assert_eq!(*count.lock().unwrap(), 3);
     }
 
     #[test]

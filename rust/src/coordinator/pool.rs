@@ -13,10 +13,16 @@
 //! warm same-model batches, and feeds every functional output through
 //! the optional cross-check hook (the PJRT-vs-simulator bit-identity
 //! assertion in `examples/edge_serving.rs`).
+//!
+//! Shared pool state (the executable-cache model, the cross-check
+//! hook) lives behind `Arc<Mutex<_>>` so the same pool serves both
+//! execution modes: the deterministic discrete-event scheduler
+//! ([`super::scheduler`]) and the OS-thread worker loop
+//! ([`super::threaded`]), where every worker — and everything it
+//! closes over — must be [`Send`].
 
-use std::cell::RefCell;
 use std::collections::{HashSet, VecDeque};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::driver::DriverHandle;
 use crate::framework::backend::{CpuBackend, GemmBackend, GemmTask, GemmTiming};
@@ -28,20 +34,25 @@ use super::{CoordinatorConfig, InferenceRequest};
 
 /// Functional-output hook: called with every GEMM task and the bits
 /// the pool produced for it. `edge_serving` installs the PJRT
-/// cross-check here. Must not re-enter the coordinator.
-pub type CrossCheckFn = dyn FnMut(&GemmTask<'_>, &[i8]);
+/// cross-check here. Must not re-enter the coordinator, and must be
+/// [`Send`]: under [`super::ExecMode::Threaded`] it is invoked from
+/// worker threads (serialized by the hook's mutex).
+pub type CrossCheckFn = dyn FnMut(&GemmTask<'_>, &[i8]) + Send;
 
 /// The hook shared across all workers of a pool.
-pub type SharedCrossCheck = Rc<RefCell<Option<Box<CrossCheckFn>>>>;
+pub type SharedCrossCheck = Arc<Mutex<Option<Box<CrossCheckFn>>>>;
 
 /// The shared executable-cache model, one per pool.
-pub type SharedBatcher = Rc<RefCell<BucketBatcher>>;
+pub type SharedBatcher = Arc<Mutex<BucketBatcher>>;
 
 /// What kind of instance a worker wraps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WorkerKind {
+    /// Systolic-array accelerator instance (paper §IV-C).
     Sa,
+    /// Vector-MAC accelerator instance (paper §IV-D).
     Vm,
+    /// CPU-only worker (gemmlowp, no fabric).
     Cpu,
 }
 
@@ -51,6 +62,7 @@ pub struct PartitionedBackend {
     /// The accelerator instance; `None` for CPU-only workers.
     handle: Option<DriverHandle>,
     cpu: CpuBackend,
+    /// The HW/SW partitioning policy driving this worker's routing.
     pub planner: OffloadPlanner,
     batcher: SharedBatcher,
     check: SharedCrossCheck,
@@ -67,6 +79,7 @@ pub struct PartitionedBackend {
 }
 
 impl PartitionedBackend {
+    /// A worker backend wrapping an accelerator instance.
     pub fn with_accel(
         handle: DriverHandle,
         threads: usize,
@@ -87,6 +100,7 @@ impl PartitionedBackend {
         }
     }
 
+    /// A CPU-only worker backend (no accelerator to offload to).
     pub fn cpu_only(
         id: usize,
         threads: usize,
@@ -167,8 +181,11 @@ impl GemmBackend for PartitionedBackend {
                 // design's buffers — no fabric time, no executable)
                 if timing.accel_active > SimTime::ZERO {
                     self.offloaded.insert(task.layer.to_string());
-                    let (_bucket, compile) =
-                        self.batcher.borrow_mut().charge(task.m, task.k, task.n);
+                    let (_bucket, compile) = self
+                        .batcher
+                        .lock()
+                        .expect("executable-cache lock")
+                        .charge(task.m, task.k, task.n);
                     if compile > SimTime::ZERO {
                         timing.total += compile;
                         timing.cpu_time += compile;
@@ -180,7 +197,7 @@ impl GemmBackend for PartitionedBackend {
             Route::Cpu => self.cpu.run_gemm(task),
         };
 
-        if let Some(cb) = self.check.borrow_mut().as_mut() {
+        if let Some(cb) = self.check.lock().expect("cross-check lock").as_mut() {
             cb(task, &out);
         }
         (out, timing)
@@ -189,18 +206,24 @@ impl GemmBackend for PartitionedBackend {
 
 /// One pool member: an instance, its queue, and its time horizon.
 pub struct Worker {
+    /// Stable pool index (also the `Completion::worker` stamp).
     pub id: usize,
+    /// Which kind of instance this worker wraps.
     pub kind: WorkerKind,
+    /// The worker's partitioned execution backend.
     pub backend: PartitionedBackend,
+    /// Bounded FIFO admission queue (drained by the scheduler).
     pub queue: VecDeque<InferenceRequest>,
     /// Modeled time at which this worker finishes its current work.
     pub free_at: SimTime,
     /// Cumulative modeled busy time (utilization numerator).
     pub busy: SimTime,
+    /// Requests this worker completed.
     pub served: u64,
 }
 
 impl Worker {
+    /// A fresh worker with an empty queue at modeled time zero.
     pub fn new(id: usize, kind: WorkerKind, backend: PartitionedBackend) -> Self {
         Worker {
             id,
@@ -213,6 +236,7 @@ impl Worker {
         }
     }
 
+    /// Human-readable instance label (e.g. `sa0`, `vm1`, `cpu2`).
     pub fn label(&self) -> &str {
         self.backend.name()
     }
@@ -228,6 +252,7 @@ impl Worker {
 
 /// The worker set plus admission (queue-depth) policy.
 pub struct WorkerPool {
+    /// The pool members, in `[SA.., VM.., CPU..]` construction order.
     pub workers: Vec<Worker>,
     queue_depth: usize,
 }
@@ -282,6 +307,7 @@ impl WorkerPool {
         }
     }
 
+    /// Requests currently queued across all workers.
     pub fn total_queued(&self) -> usize {
         self.workers.iter().map(|w| w.queue.len()).sum()
     }
@@ -330,7 +356,7 @@ impl WorkerPool {
                     .back()
                     // graph identity, not name: two distinct graphs
                     // sharing a name must never batch together
-                    .is_some_and(|r| std::sync::Arc::ptr_eq(&r.model, &req.model))
+                    .is_some_and(|r| Arc::ptr_eq(&r.model, &req.model))
         });
         let target = affine.unwrap_or_else(|| {
             self.workers
@@ -375,26 +401,43 @@ impl WorkerPool {
         if self.workers[widx].queue.is_empty() && cfg.steal && self.steal_into(widx) {
             steals = 1;
         }
-        let Some(first) = self.workers[widx].queue.pop_front() else {
-            return (Vec::new(), steals);
-        };
-        let window_close = self.workers[widx].free_at.max(first.arrival) + cfg.batch_window;
-        let model = first.model.clone();
-        let mut batch = vec![first];
-        while batch.len() < cfg.max_batch {
-            let take = match self.workers[widx].queue.front() {
-                // same graph *instance* — name equality is not model
-                // identity (weight residency depends on it)
-                Some(r) => {
-                    std::sync::Arc::ptr_eq(&r.model, &model) && r.arrival <= window_close
-                }
-                None => false,
-            };
-            if !take {
-                break;
-            }
-            batch.push(self.workers[widx].queue.pop_front().expect("checked front"));
-        }
-        (batch, steals)
+        let w = &mut self.workers[widx];
+        let free_at = w.free_at;
+        (pop_batch(&mut w.queue, cfg, free_at), steals)
     }
+}
+
+/// Pop one batch from the front of a request queue: the head request
+/// plus consecutive same-model requests, up to `max_batch`, whose
+/// arrivals fall inside the batch window anchored at the earliest
+/// possible round start (`free_at.max(head.arrival)`) of the worker
+/// that will execute the batch.
+///
+/// This is THE batch-grouping rule, shared verbatim by the modeled
+/// path ([`WorkerPool::take_batch`]) and the OS-thread path
+/// ([`super::threaded`]) so batch composition policy cannot drift
+/// between exec modes. Model comparison is by graph *instance*
+/// ([`Arc::ptr_eq`]) — name equality is not model identity (weight
+/// residency depends on it).
+pub fn pop_batch(
+    q: &mut VecDeque<InferenceRequest>,
+    cfg: &CoordinatorConfig,
+    free_at: SimTime,
+) -> Vec<InferenceRequest> {
+    let Some(first) = q.pop_front() else {
+        return Vec::new();
+    };
+    let window_close = free_at.max(first.arrival) + cfg.batch_window;
+    let model = first.model.clone();
+    let mut batch = vec![first];
+    while batch.len() < cfg.max_batch {
+        let take = q
+            .front()
+            .is_some_and(|r| Arc::ptr_eq(&r.model, &model) && r.arrival <= window_close);
+        if !take {
+            break;
+        }
+        batch.push(q.pop_front().expect("checked front"));
+    }
+    batch
 }

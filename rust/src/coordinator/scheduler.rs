@@ -19,6 +19,12 @@
 //!   (from the sibling whose queue head has been waiting longest).
 //!   Queues are strictly FIFO and batches never
 //!   reorder across a queue head, so no request can starve.
+//!
+//! [`drain`] is the [`super::ExecMode::Modeled`] path: fully
+//! deterministic, single-threaded, reproducible percentiles. Its
+//! per-batch execution core ([`execute_batch_on`]) is shared with the
+//! OS-thread path in [`super::threaded`], so both modes produce
+//! bit-identical functional outputs per request.
 
 use std::collections::HashMap;
 
@@ -28,13 +34,15 @@ use crate::perf::CpuModel;
 use crate::sysc::SimTime;
 
 use super::metrics::ServingMetrics;
-use super::pool::WorkerPool;
-use super::{Completion, CoordinatorConfig};
+use super::pool::{Worker, WorkerPool};
+use super::{Completion, CoordinatorConfig, InferenceRequest};
 
 /// Where one GEMM layer runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Route {
+    /// Offload to the worker's accelerator instance.
     Accel,
+    /// Keep on the CPU (gemmlowp).
     Cpu,
 }
 
@@ -59,6 +67,8 @@ pub struct OffloadPlanner {
 }
 
 impl OffloadPlanner {
+    /// A planner for a worker with `threads` CPU threads and the given
+    /// per-offload synchronization overhead floor.
     pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
         OffloadPlanner {
             cpu: CpuModel::pynq_a9(),
@@ -104,7 +114,56 @@ impl OffloadPlanner {
     }
 }
 
-/// Run queued requests to completion, in modeled time.
+/// Execute one already-formed batch on one worker, advancing the
+/// worker's modeled horizon (`free_at`), busy time and served count.
+///
+/// This is the execution core shared by both drain paths: the
+/// deterministic discrete-event loop ([`drain`]) calls it from the
+/// coordinator's thread; the OS-thread loop
+/// ([`super::threaded::drain`]) calls it from each worker's own
+/// thread, which is why it takes `&mut Worker` rather than the pool.
+/// Within a batch the functional math runs eagerly on the host while
+/// request timing advances in modeled PYNQ time; the 2nd+ request of
+/// the batch runs warm (weights the previous same-model request
+/// offloaded stay resident on the fabric).
+pub fn execute_batch_on(
+    w: &mut Worker,
+    widx: usize,
+    batch: Vec<InferenceRequest>,
+    threads: usize,
+) -> Vec<Completion> {
+    let size = batch.len();
+    let mut done = Vec::with_capacity(size);
+    let mut t = w.free_at.max(batch[0].arrival);
+    let mut warm = false;
+    for req in batch {
+        let started = t.max(req.arrival);
+        w.backend.set_warm(warm);
+        let (output, report) =
+            Session::new(req.model.as_ref(), &mut w.backend, threads).run(&req.input);
+        let finished = started + report.overall();
+        done.push(Completion {
+            id: req.id,
+            worker: widx,
+            arrival: req.arrival,
+            started,
+            finished,
+            batch_size: size,
+            output,
+            report,
+        });
+        w.busy += finished.saturating_sub(started);
+        w.served += 1;
+        t = finished;
+        warm = true;
+    }
+    w.backend.set_warm(false);
+    w.free_at = t;
+    done
+}
+
+/// Run queued requests to completion, in modeled time — the
+/// deterministic [`super::ExecMode::Modeled`] path.
 ///
 /// Each iteration picks the worker with the earliest possible start
 /// (its `free_at` vs the arrival of the next request it could run),
@@ -145,34 +204,11 @@ pub fn drain(
         let w = &mut pool.workers[widx];
         let round_start = w.free_at.max(batch[0].arrival);
         metrics.record_batch(widx, &batch[0].model.name, batch.len(), round_start);
-        let size = batch.len();
-        let mut t = round_start;
-        let mut warm = false;
-        for req in batch {
-            let started = t.max(req.arrival);
-            w.backend.set_warm(warm);
-            let (output, report) =
-                Session::new(req.model.as_ref(), &mut w.backend, cfg.driver.threads)
-                    .run(&req.input);
-            let finished = started + report.overall();
-            metrics.record_request(req.arrival, started, finished);
-            done.push(Completion {
-                id: req.id,
-                worker: widx,
-                arrival: req.arrival,
-                started,
-                finished,
-                batch_size: size,
-                output,
-                report,
-            });
-            w.busy += finished.saturating_sub(started);
-            w.served += 1;
-            t = finished;
-            warm = true;
+        let completions = execute_batch_on(w, widx, batch, cfg.driver.threads);
+        for c in &completions {
+            metrics.record_request(c.arrival, c.started, c.finished);
         }
-        w.backend.set_warm(false);
-        w.free_at = t;
+        done.extend(completions);
     }
     done
 }

@@ -1,0 +1,384 @@
+//! OS-thread execution of the worker pool — the
+//! [`super::ExecMode::Threaded`] drain.
+//!
+//! The modeled scheduler ([`super::scheduler::drain`]) interleaves all
+//! workers on one host thread, so modeled throughput can never become
+//! wall-clock throughput. This module runs each pool worker on its own
+//! [`std::thread`] instead, with the classic work-stealing topology:
+//!
+//! * a **shared injector queue** — every queued request, in arrival
+//!   order, behind one [`Mutex`];
+//! * **per-worker deques** — each worker refills its own deque with a
+//!   FIFO chunk from the injector, executes the same-model run at its
+//!   head, and leaves the tail stealable;
+//! * **work stealing** — a worker that finds its deque and the
+//!   injector empty steals the oldest waiting run from the sibling
+//!   whose deque head has been queued longest (the same
+//!   oldest-first fairness rule as the modeled path);
+//! * **graceful shutdown** — a worker exits its loop only when the
+//!   injector and every deque are empty; queues only ever shrink
+//!   during a drain, so termination needs no signalling. The scope
+//!   join then collects every thread before `drain` returns.
+//!
+//! Shared pool state is already thread-safe
+//! ([`std::sync::Arc`]`<`[`Mutex`]`<_>>` for the executable-cache
+//! model and the cross-check hook, atomics
+//! for the steal counter), and each worker owns its accelerator
+//! instance exclusively (`&mut Worker` moves into the thread), so the
+//! per-instance driver state needs no locks at all.
+//!
+//! Functional outputs are bit-identical to [`super::ExecMode::Modeled`]
+//! — both modes run the same [`super::scheduler::execute_batch_on`]
+//! core and the math depends only on (model, input) — but batch
+//! composition and worker assignment are scheduling-dependent, so
+//! modeled percentiles are *not* pinned in this mode; wall-clock
+//! throughput ([`super::ServingMetrics::wall_throughput_rps`]) is the
+//! number this mode exists to produce.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::sysc::SimTime;
+
+use super::metrics::ServingMetrics;
+use super::pool::{pop_batch, WorkerPool};
+use super::scheduler::execute_batch_on;
+use super::{Completion, CoordinatorConfig, InferenceRequest};
+
+/// The shared work-distribution state of one threaded drain.
+struct Queues {
+    /// All pending requests in arrival order (the injector).
+    injector: Mutex<VecDeque<InferenceRequest>>,
+    /// Per-worker deques; the tail of a refilled chunk is stealable.
+    locals: Vec<Mutex<VecDeque<InferenceRequest>>>,
+    /// Runs taken from a sibling's deque.
+    steals: AtomicU64,
+}
+
+/// Get worker `widx`'s next batch: own deque first, then a FIFO chunk
+/// refilled from the injector, then a steal from the sibling whose
+/// deque head has been waiting longest. `None` means the drain is
+/// complete for this worker (no work anywhere it may take).
+///
+/// Batches form through [`pop_batch`] — the same grouping rule as the
+/// modeled path, anchored at `free_at` (the calling worker's modeled
+/// horizon: the caller executes whatever it pops, including steals).
+fn next_batch(
+    qs: &Queues,
+    widx: usize,
+    cfg: &CoordinatorConfig,
+    free_at: SimTime,
+) -> Option<Vec<InferenceRequest>> {
+    // 1+2. own deque, refilling from the injector when it runs dry:
+    //    move a FIFO chunk (two batches' worth) into the local deque;
+    //    the head run executes now, the tail stays visible to
+    //    stealing siblings. The move happens with BOTH locks held
+    //    (own-local → injector nesting; the only nested acquisition
+    //    in this module, so no ordering cycle) so in-flight work is
+    //    never invisible to sibling scans — siblings block on one of
+    //    the two locks and then see the requests.
+    {
+        let mut local = qs.locals[widx].lock().expect("own deque");
+        if local.is_empty() {
+            let mut inj = qs.injector.lock().expect("injector");
+            let take = inj.len().min(cfg.max_batch.max(1).saturating_mul(2));
+            local.extend(inj.drain(..take));
+        }
+        let batch = pop_batch(&mut local, cfg, free_at);
+        if !batch.is_empty() {
+            return Some(batch);
+        }
+    }
+    // 3. steal: oldest-waiting sibling deque head first (fairness rule
+    //    shared with the modeled path). Scan locks are taken one at a
+    //    time; losing the race to a victim (its queue drained between
+    //    the scan and the re-lock) re-scans instead of giving up —
+    //    a worker exits only after a scan finds every deque empty.
+    //    Each failed attempt implies some sibling made progress, so
+    //    the retry loop terminates.
+    if cfg.steal {
+        loop {
+            let mut best: Option<(SimTime, u64, usize)> = None;
+            for (i, l) in qs.locals.iter().enumerate() {
+                if i == widx {
+                    continue;
+                }
+                let q = l.lock().expect("sibling deque");
+                if let Some(front) = q.front() {
+                    let key = (front.arrival, front.id, i);
+                    if best.map_or(true, |(a, id, _)| (front.arrival, front.id) < (a, id)) {
+                        best = Some(key);
+                    }
+                }
+            }
+            let Some((_, _, victim)) = best else { break };
+            let mut q = qs.locals[victim].lock().expect("victim deque");
+            let batch = pop_batch(&mut q, cfg, free_at);
+            if !batch.is_empty() {
+                qs.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(batch);
+            }
+        }
+    }
+    None
+}
+
+/// Run every queued request to completion on OS threads, one thread
+/// per pool worker, and merge the per-thread results back into the
+/// coordinator's metrics (including the host wall-clock span of the
+/// drain). Completions are returned sorted by request id.
+///
+/// Requests queued on the per-worker admission queues are moved into
+/// the shared injector in arrival order first — under
+/// [`super::ExecMode::Threaded`] the submit-time placement is only an
+/// admission bound; actual placement is decided by whichever thread
+/// pulls the work.
+pub fn drain(
+    pool: &mut WorkerPool,
+    cfg: &CoordinatorConfig,
+    metrics: &mut ServingMetrics,
+) -> Vec<Completion> {
+    let mut pending: Vec<InferenceRequest> = Vec::new();
+    for w in &mut pool.workers {
+        pending.extend(w.queue.drain(..));
+    }
+    if pending.is_empty() {
+        return Vec::new();
+    }
+    pending.sort_by_key(|r| (r.arrival, r.id));
+
+    let n_workers = pool.workers.len();
+    let qs = Queues {
+        injector: Mutex::new(pending.into()),
+        locals: (0..n_workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+        steals: AtomicU64::new(0),
+    };
+    let threads = cfg.driver.threads;
+
+    // (completions, per-batch records) per worker thread
+    type WorkerResult = (Vec<Completion>, Vec<(String, usize, SimTime)>);
+    let t0 = Instant::now();
+    let results: Vec<WorkerResult> = std::thread::scope(|s| {
+        let handles: Vec<_> = pool
+            .workers
+            .iter_mut()
+            .enumerate()
+            .map(|(widx, w)| {
+                let qs = &qs;
+                std::thread::Builder::new()
+                    .name(format!("secda-pool-{}", w.label()))
+                    .spawn_scoped(s, move || {
+                        let mut done: Vec<Completion> = Vec::new();
+                        let mut batches = Vec::new();
+                        while let Some(batch) = next_batch(qs, widx, cfg, w.free_at) {
+                            batches.push((
+                                batch[0].model.name.clone(),
+                                batch.len(),
+                                w.free_at.max(batch[0].arrival),
+                            ));
+                            done.extend(execute_batch_on(w, widx, batch, threads));
+                        }
+                        (done, batches)
+                    })
+                    .expect("spawn coordinator worker thread")
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("coordinator worker thread panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+    metrics.steals += qs.steals.load(Ordering::Relaxed);
+
+    let mut done = Vec::new();
+    for (widx, (completions, batches)) in results.into_iter().enumerate() {
+        for (model, size, start) in batches {
+            metrics.record_batch(widx, &model, size, start);
+        }
+        for c in &completions {
+            metrics.record_request(c.arrival, c.started, c.finished);
+        }
+        done.extend(completions);
+    }
+    metrics.record_wall(wall, done.len() as u64);
+    done.sort_by_key(|c| c.id);
+    done
+}
+
+/// Compile-time guarantee that everything a worker thread touches is
+/// [`Send`] — the property the whole `ExecMode::Threaded` path rests
+/// on (drivers, planners and queues move into worker threads).
+#[allow(dead_code)]
+fn assert_worker_state_is_send() {
+    fn is_send<T: Send>() {}
+    is_send::<super::pool::Worker>();
+    is_send::<InferenceRequest>();
+    is_send::<crate::driver::DriverHandle>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{convnet, cpu_reference, image};
+    use super::super::{Coordinator, CoordinatorConfig, ExecMode, SubmitError};
+    use crate::framework::graph::Graph;
+    use crate::sysc::SimTime;
+    use std::sync::Arc;
+
+    /// Serve the same deterministic mixed-model stream in a given mode.
+    fn serve_stream(
+        mode: ExecMode,
+        n: u64,
+        g1: &Arc<Graph>,
+        g2: &Arc<Graph>,
+    ) -> Vec<super::Completion> {
+        let mut cfg = CoordinatorConfig::default();
+        cfg.exec_mode = mode;
+        cfg.queue_depth = n as usize; // open loop: accept the full stream
+        let mut coord = Coordinator::new(cfg);
+        for i in 0..n {
+            let g = if i % 3 == 0 { g2.clone() } else { g1.clone() };
+            let input = image(&g, 500 + i);
+            coord.submit(g, input).unwrap();
+            coord.advance(SimTime::us(250));
+        }
+        let mut done = coord.run_until_idle();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(coord.metrics().completed, n);
+        done
+    }
+
+    #[test]
+    fn threaded_matches_modeled_bit_exact() {
+        let g1 = Arc::new(convnet("net_a", 16, 31));
+        let g2 = Arc::new(convnet("net_b", 24, 37));
+        let modeled = serve_stream(ExecMode::Modeled, 12, &g1, &g2);
+        let threaded = serve_stream(ExecMode::Threaded, 12, &g1, &g2);
+        assert_eq!(modeled.len(), threaded.len());
+        for (m, t) in modeled.iter().zip(&threaded) {
+            assert_eq!(m.id, t.id);
+            assert_eq!(
+                m.output.data, t.output.data,
+                "request {} diverged between exec modes",
+                m.id
+            );
+            assert_eq!(m.output.shape, t.output.shape);
+        }
+        // ... and both agree with the independent CPU reference
+        for (i, t) in threaded.iter().enumerate() {
+            let g = if (i as u64) % 3 == 0 { &g2 } else { &g1 };
+            let input = image(g, 500 + i as u64);
+            assert_eq!(t.output.data, cpu_reference(g, &input).data);
+        }
+    }
+
+    #[test]
+    fn threaded_completes_everything_under_concurrent_load() {
+        let g = Arc::new(convnet("net", 32, 41));
+        let mut cfg = CoordinatorConfig::sa_pool(4);
+        cfg.exec_mode = ExecMode::Threaded;
+        cfg.queue_depth = 64;
+        cfg.max_batch = 4;
+        let mut coord = Coordinator::new(cfg);
+        let mut ids = Vec::new();
+        for i in 0..32u64 {
+            ids.push(coord.submit(g.clone(), image(&g, 900 + i)).unwrap());
+        }
+        let done = coord.run_until_idle();
+        // no starvation, no duplication: every accepted request
+        // completes exactly once, within the batch cap
+        let mut got: Vec<u64> = done.iter().map(|c| c.id).collect();
+        got.sort();
+        assert_eq!(got, ids);
+        for c in &done {
+            assert!(c.batch_size >= 1 && c.batch_size <= 4);
+            assert!(c.finished >= c.started);
+            assert!(c.started >= c.arrival);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 32);
+        assert!(m.wall_elapsed > std::time::Duration::ZERO);
+        assert!(m.wall_throughput_rps() > 0.0);
+        // every dispatch round respected the batch cap
+        assert!(m.batches.iter().all(|b| b.size <= 4));
+        let batched: usize = m.batches.iter().map(|b| b.size).sum();
+        assert_eq!(batched, 32);
+    }
+
+    #[test]
+    fn threaded_backpressure_still_enforced() {
+        let g = Arc::new(convnet("net", 16, 43));
+        let mut cfg = CoordinatorConfig::sa_pool(2);
+        cfg.exec_mode = ExecMode::Threaded;
+        cfg.queue_depth = 2;
+        let mut coord = Coordinator::new(cfg);
+        let mut accepted = Vec::new();
+        let mut rejected = 0;
+        for i in 0..10u64 {
+            match coord.submit(g.clone(), image(&g, 70 + i)) {
+                Ok(id) => accepted.push(id),
+                Err(SubmitError::Backpressure { .. }) => rejected += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert_eq!(accepted.len(), 4);
+        assert_eq!(rejected, 6);
+        let done = coord.run_until_idle();
+        let mut got: Vec<u64> = done.iter().map(|c| c.id).collect();
+        got.sort();
+        assert_eq!(got, accepted);
+    }
+
+    #[test]
+    fn pop_batch_window_anchors_at_free_at_in_both_modes() {
+        // regression: the threaded path must use the same batch-window
+        // anchor as the modeled take_batch — free_at.max(head.arrival),
+        // not head.arrival alone — or a backlogged worker loses warm
+        // batching it would have had under ExecMode::Modeled.
+        use super::super::pool::pop_batch;
+        use std::collections::VecDeque;
+        let g = Arc::new(convnet("net", 16, 53));
+        let mut cfg = CoordinatorConfig::sa_pool(1);
+        cfg.batch_window = SimTime::ms(5);
+        cfg.max_batch = 8;
+        let req = |id: u64, arrival| super::InferenceRequest {
+            id,
+            model: g.clone(),
+            input: image(&g, 60 + id),
+            arrival,
+        };
+        let q: VecDeque<_> = [req(0, SimTime::ZERO), req(1, SimTime::ms(7))]
+            .into_iter()
+            .collect();
+        // worker busy until t=100ms: window closes at 105ms, both ride
+        let batch = pop_batch(&mut q.clone(), &cfg, SimTime::ms(100));
+        assert_eq!(batch.len(), 2);
+        // idle worker: window closes at 5ms, the 7ms arrival waits
+        let mut q2 = q;
+        let batch = pop_batch(&mut q2, &cfg, SimTime::ZERO);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q2.len(), 1);
+    }
+
+    #[test]
+    fn threaded_drain_is_repeatable_after_idle() {
+        // a second wave through the same (already joined) coordinator
+        // must work: threads are per-drain, not per-coordinator
+        let g = Arc::new(convnet("net", 16, 47));
+        let mut cfg = CoordinatorConfig::sa_pool(2);
+        cfg.exec_mode = ExecMode::Threaded;
+        let mut coord = Coordinator::new(cfg);
+        for wave in 0..3u64 {
+            for i in 0..4u64 {
+                coord
+                    .submit(g.clone(), image(&g, 1000 + wave * 10 + i))
+                    .unwrap();
+            }
+            let done = coord.run_until_idle();
+            assert_eq!(done.len(), 4);
+        }
+        assert_eq!(coord.metrics().completed, 12);
+    }
+}

@@ -41,7 +41,10 @@
 //!   request in the pool (the donor is the sibling whose queue head
 //!   has been waiting longest);
 //! * `compile_cost` — modeled one-time cost charged on the first GEMM
-//!   that hits a given AOT shape bucket.
+//!   that hits a given AOT shape bucket;
+//! * `exec_mode` — how the pool executes: the deterministic
+//!   discrete-event model, or one OS thread per worker
+//!   ([`crate::coordinator::ExecMode`]).
 
 pub mod tiling;
 
@@ -55,7 +58,12 @@ use tiling::TilingStrategy;
 /// Driver configuration knobs (the co-design levers of §IV-B/E).
 #[derive(Debug, Clone)]
 pub struct DriverConfig {
+    /// CPU threads the driver may use for prep/unpack/fallback (the
+    /// PYNQ-Z1 has two A9 cores; the paper uses 1 or 2).
     pub threads: usize,
+    /// Simulation fidelity of the wrapped accelerator
+    /// ([`ExecMode::Simulation`] skips off-chip transfers,
+    /// [`ExecMode::HardwareEval`] models them — paper §III-C/D).
     pub mode: ExecMode,
     /// Pipeline CPU prep with accelerator execution (§IV-B).
     pub pipelined: bool,
@@ -78,6 +86,7 @@ impl Default for DriverConfig {
 }
 
 impl DriverConfig {
+    /// The default configuration with a given CPU thread count.
     pub fn with_threads(threads: usize) -> Self {
         DriverConfig {
             threads,
@@ -89,10 +98,16 @@ impl DriverConfig {
 /// Statistics the driver accumulates over a session (for reports).
 #[derive(Debug, Clone, Default)]
 pub struct DriverStats {
+    /// GEMMs offloaded to the accelerator.
     pub offloads: u64,
+    /// GEMMs the driver ran on the CPU because the design cannot hold
+    /// them (e.g. K exceeding the VM local buffers).
     pub cpu_fallbacks: u64,
+    /// Offloaded layers that needed weight tiling (§IV-E4).
     pub tiled_layers: u64,
+    /// Bytes DMA'd to the accelerator (weights + inputs).
     pub bytes_to_accel: u64,
+    /// Bytes DMA'd back from the accelerator (outputs).
     pub bytes_from_accel: u64,
     /// Cumulative fabric-active time (energy model input).
     pub accel_active: SimTime,
@@ -105,13 +120,18 @@ pub struct DriverStats {
 /// The accelerator-backed [`GemmBackend`]: wraps a [`GemmAccel`] design
 /// with the co-designed driver logic.
 pub struct AccelBackend<A: GemmAccel> {
+    /// The wrapped accelerator design (its own simulated fabric).
     pub accel: A,
+    /// This driver instance's configuration.
     pub cfg: DriverConfig,
+    /// Calibrated CPU model for prep/unpack/fallback timing.
     pub cpu: CpuModel,
+    /// Accumulated per-instance statistics.
     pub stats: DriverStats,
 }
 
 impl<A: GemmAccel> AccelBackend<A> {
+    /// A driver instance over a fresh accelerator design.
     pub fn new(accel: A, cfg: DriverConfig) -> Self {
         AccelBackend {
             accel,
@@ -307,16 +327,26 @@ impl<A: GemmAccel> GemmBackend for AccelBackend<A> {
 /// each worker holds exactly one handle and runs requests against it,
 /// so per-instance stats (offloads, fallbacks, bytes moved) stay
 /// attributable to a physical accelerator.
+///
+/// The boxed backend is [`Send`] so a handle can move onto an OS
+/// worker thread under
+/// [`crate::coordinator::ExecMode::Threaded`] — each thread owns its
+/// instance exclusively, so no locking is involved.
 pub struct DriverHandle {
+    /// Stable instance id (the pool index it was built for).
     pub id: usize,
     /// Human-readable instance label, e.g. `sa0`, `vm1`.
     pub label: String,
-    backend: Box<dyn GemmBackend>,
+    backend: Box<dyn GemmBackend + Send>,
 }
 
 impl DriverHandle {
     /// Wrap an arbitrary backend as a pool instance.
-    pub fn new(id: usize, label: impl Into<String>, backend: Box<dyn GemmBackend>) -> Self {
+    pub fn new(
+        id: usize,
+        label: impl Into<String>,
+        backend: Box<dyn GemmBackend + Send>,
+    ) -> Self {
         DriverHandle {
             id,
             label: label.into(),
@@ -345,10 +375,11 @@ impl DriverHandle {
     }
 
     /// The driver instance as a [`GemmBackend`].
-    pub fn backend_mut(&mut self) -> &mut dyn GemmBackend {
+    pub fn backend_mut(&mut self) -> &mut (dyn GemmBackend + Send) {
         self.backend.as_mut()
     }
 
+    /// The wrapped design's name (`sa`, `vm`, `cpu`, ...).
     pub fn design_name(&self) -> String {
         self.backend.name().to_string()
     }

@@ -22,7 +22,9 @@ pub enum TilingStrategy {
 /// An M-range chunk of a tiled GEMM.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Chunk {
+    /// First weight row of the chunk (inclusive).
     pub m0: usize,
+    /// One past the last weight row of the chunk (exclusive).
     pub m1: usize,
 }
 

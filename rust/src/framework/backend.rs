@@ -50,7 +50,13 @@ pub struct GemmTiming {
 }
 
 /// Where a conv/FC layer's GEMM runs.
+///
+/// Implementations that should be poolable under
+/// [`crate::coordinator::ExecMode::Threaded`] must also be [`Send`]
+/// (see [`crate::driver::DriverHandle`], which boxes backends as
+/// `dyn GemmBackend + Send` so worker threads can own them).
 pub trait GemmBackend {
+    /// Short backend label (`cpu`, `sa`, `vm`, `coordinator`, ...).
     fn name(&self) -> &str;
     /// Execute the GEMM, returning the int8 output (`m*n`) and the
     /// modeled timing.

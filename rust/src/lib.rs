@@ -25,17 +25,32 @@
 //! kernels once to HLO text; the Rust binary loads and executes them via
 //! the PJRT C API.
 //!
-//! See `DESIGN.md` for the paper↔module map and the experiment index,
-//! and `EXPERIMENTS.md` for reproduced tables/figures.
+//! See `ARCHITECTURE.md` for the layer map and a request's life
+//! through the serving stack, and `README.md` for the quickstart
+//! (build/test/bench commands and feature flags).
 
+// The serving surface (coordinator, driver, runtime) is held to full
+// rustdoc coverage; `cargo doc` runs with `-D warnings` in CI. The
+// simulation/framework layers below carry module-level docs but are
+// exempted item-by-item until their own doc pass (ROADMAP).
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod accel;
+#[allow(missing_docs)]
 pub mod cli;
 pub mod coordinator;
 pub mod driver;
+#[allow(missing_docs)]
 pub mod framework;
+#[allow(missing_docs)]
 pub mod gemm;
+#[allow(missing_docs)]
 pub mod perf;
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod synth;
+#[allow(missing_docs)]
 pub mod sysc;
+#[allow(missing_docs)]
 pub mod vta;

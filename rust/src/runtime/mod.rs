@@ -21,7 +21,8 @@
 //! grid) is dependency-free and always compiled: the L3 serving
 //! coordinator ([`crate::coordinator`]) shares it to group queued GEMM
 //! tasks by AOT bucket so executable reuse amortizes across requests.
-//! The *execution* half ([`ArtifactRuntime`]) needs the vendored `xla`
+//! The *execution* half (`ArtifactRuntime`, not linked here because it
+//! is compiled out of the default build) needs the vendored `xla`
 //! crate (PJRT C API bindings over xla_extension 0.5.1) and is gated
 //! behind the `pjrt` cargo feature; enable it only after re-adding
 //! that dependency to `Cargo.toml` (see the manifest's comment).
@@ -31,7 +32,10 @@ use std::path::{Path, PathBuf};
 
 /// Runtime error (std-only; the default build carries no anyhow).
 #[derive(Debug)]
-pub struct RuntimeError(pub String);
+pub struct RuntimeError(
+    /// Human-readable error message.
+    pub String,
+);
 
 impl fmt::Display for RuntimeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -51,17 +55,24 @@ fn err(msg: impl Into<String>) -> RuntimeError {
 /// One AOT shape bucket from the manifest.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bucket {
+    /// Padded M (weight rows) the executable was compiled for.
     pub m: usize,
+    /// Padded K (reduction depth).
     pub k: usize,
+    /// Padded N (im2col columns).
     pub n: usize,
+    /// HLO text file of this bucket, relative to the artifacts dir.
     pub file: String,
 }
 
 impl Bucket {
+    /// True when a logical GEMM `(m, k, n)` fits in this bucket (every
+    /// axis no larger than the compiled shape).
     pub fn covers(&self, m: usize, k: usize, n: usize) -> bool {
         self.m >= m && self.k >= k && self.n >= n
     }
 
+    /// Padded element count — the tie-breaker for bucket selection.
     pub fn volume(&self) -> u128 {
         self.m as u128 * self.k as u128 * self.n as u128
     }
@@ -78,6 +89,19 @@ impl Bucket {
 /// round to the Pallas/MXU tile grid (multiples of 32 below 128,
 /// multiples of 128 above); K (the reduction) rounds to 32. Used as
 /// the batching key when no artifact manifest is on disk.
+///
+/// # Examples
+///
+/// ```
+/// use secda::runtime::bucket_shape;
+///
+/// // MobileNetV1's first conv GEMM rounds to the 32-grid
+/// assert_eq!(bucket_shape(32, 27, 12544), (32, 32, 12544));
+/// // at/above 128, M and N round to the 128-grid instead
+/// assert_eq!(bucket_shape(129, 64, 200), (256, 64, 256));
+/// // K always rounds to 32, independent of magnitude
+/// assert_eq!(bucket_shape(1, 1, 1), (32, 32, 32));
+/// ```
 pub fn bucket_shape(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
     fn round_up(v: usize, to: usize) -> usize {
         v.div_ceil(to) * to
@@ -89,8 +113,25 @@ pub fn bucket_shape(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
 }
 
 /// Smallest bucket (by [`Bucket::volume`]) covering a logical GEMM
-/// shape. Shared by [`ArtifactRuntime::pick_bucket`] and the serving
-/// coordinator's batcher so both agree on executable identity.
+/// shape. Shared by `ArtifactRuntime::pick_bucket` (the `pjrt` execution
+/// half) and the serving coordinator's batcher so both agree on
+/// executable identity.
+///
+/// # Examples
+///
+/// ```
+/// use secda::runtime::{smallest_covering, Bucket};
+///
+/// let buckets = vec![
+///     Bucket { m: 128, k: 64, n: 128, file: "big.hlo".into() },
+///     Bucket { m: 64, k: 32, n: 64, file: "small.hlo".into() },
+/// ];
+/// // both buckets cover (60, 30, 60); the smaller volume wins
+/// let b = smallest_covering(&buckets, 60, 30, 60).unwrap();
+/// assert_eq!(b.file, "small.hlo");
+/// // nothing covers an oversized shape
+/// assert!(smallest_covering(&buckets, 256, 32, 32).is_none());
+/// ```
 pub fn smallest_covering(buckets: &[Bucket], m: usize, k: usize, n: usize) -> Option<&Bucket> {
     buckets
         .iter()
@@ -102,8 +143,11 @@ pub fn smallest_covering(buckets: &[Bucket], m: usize, k: usize, n: usize) -> Op
 /// shape so serving logs identify the offending layer immediately.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NoBucketError {
+    /// Requested M (weight rows).
     pub m: usize,
+    /// Requested K (reduction depth).
     pub k: usize,
+    /// Requested N (im2col columns).
     pub n: usize,
 }
 
@@ -120,6 +164,20 @@ impl fmt::Display for NoBucketError {
 impl std::error::Error for NoBucketError {}
 
 /// [`smallest_covering`], or a [`NoBucketError`] naming the shape.
+///
+/// # Examples
+///
+/// ```
+/// use secda::runtime::{require_covering, Bucket, NoBucketError};
+///
+/// let buckets = vec![Bucket { m: 64, k: 32, n: 64, file: "a.hlo".into() }];
+/// assert_eq!(require_covering(&buckets, 60, 30, 60).unwrap().file, "a.hlo");
+///
+/// // the error names the uncovered shape for serving logs
+/// let err = require_covering(&buckets, 4096, 27, 12544).unwrap_err();
+/// assert_eq!(err, NoBucketError { m: 4096, k: 27, n: 12544 });
+/// assert_eq!(err.to_string(), "no AOT bucket covers GEMM (4096,27,12544)");
+/// ```
 pub fn require_covering(
     buckets: &[Bucket],
     m: usize,
