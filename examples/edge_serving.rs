@@ -22,13 +22,23 @@
 //! cross-check runs identically in both modes (the hook is `Send` and
 //! serialized by its mutex).
 //!
-//! Run: `cargo run --release --example edge_serving [n_requests] [model] [sa_workers] [modeled|threaded]`
+//! The 5th argument picks the scheduling policy: `fifo` (default),
+//! `edf` (deadline-ordered queues) or `admission` (EDF plus
+//! predictive load shedding). Under `edf`/`admission` every request
+//! carries a 400 ms modeled SLO, and the run reports SLO attainment
+//! and predicted-miss sheds.
+//!
+//! Run: `cargo run --release --example edge_serving \
+//!     [n_requests] [model] [sa_workers] [modeled|threaded] [fifo|edf|admission]`
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use secda::coordinator::{Coordinator, CoordinatorConfig, ExecMode, SubmitError};
+use secda::coordinator::{
+    AdmissionPolicy, Coordinator, CoordinatorConfig, DeadlinePolicy, ExecMode, FifoPolicy,
+    SchedulePolicy, SubmitError,
+};
 use secda::framework::models;
 use secda::framework::tensor::Tensor;
 use secda::gemm;
@@ -95,18 +105,33 @@ fn main() {
         Some("modeled") | None => ExecMode::Modeled,
         Some(other) => panic!("unknown exec mode {other:?}: use `modeled` or `threaded`"),
     };
+    let policy_name = args.get(4).map(String::as_str).unwrap_or("fifo");
+    let policy: Arc<dyn SchedulePolicy> = match policy_name {
+        "fifo" => Arc::new(FifoPolicy),
+        "edf" => Arc::new(DeadlinePolicy),
+        "admission" => Arc::new(AdmissionPolicy),
+        other => panic!("unknown policy {other:?}: use `fifo`, `edf` or `admission`"),
+    };
+    // SLO budget attached to every request under the deadline-aware
+    // policies; `fifo` submits best-effort (no deadline), exactly the
+    // pre-policy behavior.
+    let slo = (policy_name != "fifo").then_some(SimTime::ms(400));
 
     let g = Arc::new(models::by_name(model).expect("model"));
-    let mut cfg = CoordinatorConfig::default();
-    cfg.sa_workers = sa_workers;
-    cfg.exec_mode = exec_mode;
+    let cfg = CoordinatorConfig {
+        sa_workers,
+        exec_mode,
+        policy,
+        ..CoordinatorConfig::default()
+    };
     let mut coord =
         Coordinator::with_artifact_manifest(cfg, &default_dir()).expect("artifact manifest");
     let checks = Arc::new(AtomicU64::new(0));
     let reference = install_cross_check(&mut coord, checks.clone());
     println!(
-        "serving {model} through the L3 coordinator [{exec_mode}]: {} SA + {} VM + {} CPU \
-         workers (batch window {}, queue depth {}); cross-check vs {reference}",
+        "serving {model} through the L3 coordinator [{exec_mode}, {policy_name} policy]: \
+         {} SA + {} VM + {} CPU workers (batch window {}, queue depth {}); \
+         cross-check vs {reference}",
         coord.cfg.sa_workers,
         coord.cfg.vm_workers,
         coord.cfg.cpu_workers,
@@ -131,7 +156,11 @@ fn main() {
         let mut model = g.clone();
         let mut input = Tensor::new(g.input_shape.clone(), data, g.input_qp);
         loop {
-            match coord.submit(model, input) {
+            let attempt = match slo {
+                Some(s) => coord.submit_with_slo(model, input, s),
+                None => coord.submit(model, input),
+            };
+            match attempt {
                 Ok(_) => break,
                 // closed-loop client: drain the pool, then resubmit
                 // the request that was handed back
@@ -140,6 +169,10 @@ fn main() {
                     model = request.model;
                     input = request.input;
                 }
+                // admission control says this request cannot make its
+                // deadline: drop it (a real client would fail fast);
+                // counted by the coordinator as metrics.shed_predicted
+                Err(SubmitError::ShedPredicted { .. }) => break,
                 Err(e) => panic!("submit failed: {e}"),
             }
         }
@@ -184,6 +217,16 @@ fn main() {
         checks.load(Ordering::Relaxed),
         completions.len()
     );
+    if let Some(s) = slo {
+        let m = coord.metrics();
+        println!(
+            "SLO ({s}): {}/{} attained ({:.1}%), {} shed by admission control",
+            m.slo_attained,
+            m.slo_attained + m.slo_missed,
+            100.0 * m.slo_attainment(),
+            m.shed_predicted,
+        );
+    }
     if exec_mode == ExecMode::Threaded {
         println!(
             "threaded drains: {:.1} ms wall -> {:.1} req/s real",

@@ -96,8 +96,10 @@ fn main() {
         ("co-designed", TilingStrategy::CoDesigned),
         ("naive", TilingStrategy::Naive),
     ] {
-        let mut cfg = DriverConfig::default();
-        cfg.tiling = strat;
+        let cfg = DriverConfig {
+            tiling: strat,
+            ..DriverConfig::default()
+        };
         let mut sa = SaDesign::paper();
         sa.cfg.global_weight_buf.capacity_bytes = 128 * 1024; // force tiling
         let mut b = AccelBackend::new(sa, cfg);

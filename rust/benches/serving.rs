@@ -2,12 +2,15 @@
 //! batch window (hand-rolled harness like `hotpath.rs`; criterion is
 //! not in the offline vendor set).
 //!
-//! Two sweeps, one per exec mode:
+//! Three modeled sweeps plus a threaded one:
 //!
 //! * **modeled** — numbers in *modeled PYNQ-Z1 time* (the coordinator
-//!   as a discrete-event model): a pool of N instances overlaps N
-//!   requests in modeled time; deterministic and reproducible. Host
-//!   wall time is printed per sweep for harness-cost visibility.
+//!   as a discrete-event model): pool-size and batch-window sweeps,
+//!   plus a scheduling-policy sweep (FIFO vs deadline-EDF vs
+//!   EDF+admission-control at three offered loads, reporting
+//!   throughput, p99, SLO attainment and shed counts); deterministic
+//!   and reproducible. Host wall time is printed per sweep for
+//!   harness-cost visibility.
 //! * **threaded** — the same pool with one OS thread per worker
 //!   (`ExecMode::Threaded`): wall req/s is *real* host throughput and
 //!   should scale with the worker count on a multi-core machine.
@@ -19,7 +22,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use secda::coordinator::{Coordinator, CoordinatorConfig, ExecMode};
+use secda::coordinator::{
+    AdmissionPolicy, Coordinator, CoordinatorConfig, DeadlinePolicy, ExecMode, FifoPolicy,
+    SchedulePolicy, SubmitError,
+};
 use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::models;
 use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
@@ -148,8 +154,10 @@ fn pool_scaling(g: &Arc<Graph>, n_requests: usize) {
         );
     }
     // heterogeneous pool for comparison
-    let mut cfg = CoordinatorConfig::default(); // 2 SA + 1 VM + 1 CPU
-    cfg.queue_depth = n_requests;
+    let cfg = CoordinatorConfig {
+        queue_depth: n_requests,
+        ..CoordinatorConfig::default() // 2 SA + 1 VM + 1 CPU
+    };
     let s = serve(g, cfg, n_requests, SimTime::ms(1));
     println!(
         "{:<22} {:>10.2} {:>8.2}x {:>10} {:>10} {:>7} {:>9.0}",
@@ -197,6 +205,90 @@ fn threaded_pool_scaling(g: &Arc<Graph>, n_requests: usize) {
         s.steals,
         s.host_ms
     );
+    println!();
+}
+
+/// Serve `n_requests`, every one carrying the same SLO budget, under a
+/// given policy; admission-control sheds are tolerated and counted.
+struct SloStats {
+    throughput: f64,
+    p99: SimTime,
+    attainment: f64,
+    shed: u64,
+    completed: u64,
+}
+
+fn serve_slo(
+    g: &Arc<Graph>,
+    policy: Arc<dyn SchedulePolicy>,
+    n_requests: usize,
+    gap: SimTime,
+    slo: SimTime,
+) -> SloStats {
+    let cfg = CoordinatorConfig {
+        queue_depth: n_requests.max(16), // open-loop: only policy sheds
+        policy,
+        ..CoordinatorConfig::sa_pool(2)
+    };
+    let mut coord = Coordinator::new(cfg);
+    let mut st = 0x510u64;
+    for _ in 0..n_requests {
+        let input = image(g, &mut st);
+        match coord.submit_with_slo(g.clone(), input, slo) {
+            Ok(_) | Err(SubmitError::ShedPredicted { .. }) => {}
+            Err(e) => panic!("submit failed: {e}"),
+        }
+        coord.advance(gap);
+    }
+    coord.run_until_idle();
+    let m = coord.metrics();
+    SloStats {
+        throughput: m.throughput_rps(),
+        p99: m.latency_pct(0.99),
+        attainment: m.slo_attainment(),
+        shed: m.shed_predicted,
+        completed: m.completed,
+    }
+}
+
+/// FIFO vs deadline-EDF vs EDF+admission at three offered loads
+/// (inter-arrival gaps), every request carrying the same SLO. The
+/// numbers to watch: EDF trades p99 tail for SLO attainment under
+/// overload; admission control sheds doomed requests instead of
+/// letting them poison the queue, lifting attainment of the rest.
+fn policy_sweep(g: &Arc<Graph>, n_requests: usize) {
+    let slo = SimTime::ms(400);
+    println!(
+        "--- policy sweep ({n_requests} edge_cam requests, SLO {slo}, pool = 2x SA) ---"
+    );
+    println!(
+        "{:<10} {:<11} {:>10} {:>10} {:>7} {:>11} {:>7}",
+        "load", "policy", "req/s", "p99", "SLO%", "completed", "shed"
+    );
+    for (load, gap) in [
+        ("light", SimTime::ms(60)),
+        ("medium", SimTime::ms(25)),
+        ("heavy", SimTime::ms(8)),
+    ] {
+        let policies: [(&str, Arc<dyn SchedulePolicy>); 3] = [
+            ("fifo", Arc::new(FifoPolicy)),
+            ("edf", Arc::new(DeadlinePolicy)),
+            ("admission", Arc::new(AdmissionPolicy)),
+        ];
+        for (name, policy) in policies {
+            let s = serve_slo(g, policy, n_requests, gap, slo);
+            println!(
+                "{:<10} {:<11} {:>10.2} {:>10} {:>6.1}% {:>11} {:>7}",
+                load,
+                name,
+                s.throughput,
+                format!("{}", s.p99),
+                100.0 * s.attainment,
+                s.completed,
+                s.shed,
+            );
+        }
+    }
     println!();
 }
 
@@ -252,6 +344,7 @@ fn main() {
         println!("== ExecMode::Modeled (deterministic, modeled PYNQ-Z1 time) ==\n");
         pool_scaling(&g, 96);
         batch_window_sweep(&g, 48);
+        policy_sweep(&g, 64);
     }
     if both || only("threaded") {
         println!("== ExecMode::Threaded (OS threads, host wall-clock) ==\n");

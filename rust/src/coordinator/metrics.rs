@@ -37,8 +37,18 @@ pub struct ServingMetrics {
     pub submitted: u64,
     /// Submissions rejected with backpressure (every queue full).
     pub rejected: u64,
+    /// Submissions shed by admission control: predicted completion
+    /// past the deadline. Distinct from `rejected` (queue-full) —
+    /// sheds are a policy verdict, not a capacity wall.
+    pub shed_predicted: u64,
     /// Requests that finished executing.
     pub completed: u64,
+    /// Completed requests that carried an SLO deadline and finished on
+    /// or before it.
+    pub slo_attained: u64,
+    /// Completed requests that carried an SLO deadline and finished
+    /// after it.
+    pub slo_missed: u64,
     /// Requests an idle worker stole from a sibling's queue (modeled
     /// mode counts stolen requests; threaded mode counts stolen runs).
     pub steals: u64,
@@ -77,6 +87,11 @@ impl ServingMetrics {
         self.rejected += 1;
     }
 
+    /// Count an admission-control shed (predicted deadline miss).
+    pub fn record_shed(&mut self) {
+        self.shed_predicted += 1;
+    }
+
     /// Record one dispatch round.
     pub fn record_batch(&mut self, worker: usize, model: &str, size: usize, start: SimTime) {
         self.batches.push(BatchRecord {
@@ -87,12 +102,39 @@ impl ServingMetrics {
         });
     }
 
-    /// Record one completed request's modeled timeline.
-    pub fn record_request(&mut self, arrival: SimTime, start: SimTime, finish: SimTime) {
+    /// Record one completed request's modeled timeline, judging its
+    /// SLO when it carried a deadline.
+    pub fn record_request(
+        &mut self,
+        arrival: SimTime,
+        start: SimTime,
+        finish: SimTime,
+        deadline: Option<SimTime>,
+    ) {
         self.completed += 1;
         self.latencies.push(finish.saturating_sub(arrival));
         self.waits.push(start.saturating_sub(arrival));
         self.last_finish = self.last_finish.max(finish);
+        if let Some(d) = deadline {
+            if finish <= d {
+                self.slo_attained += 1;
+            } else {
+                self.slo_missed += 1;
+            }
+        }
+    }
+
+    /// Share of deadline-carrying completions that met their SLO.
+    /// With zero judged completions: 1.0 when nothing was shed either
+    /// (no SLO traffic at all — nothing was missed), but 0.0 when
+    /// admission control shed deadline-carrying requests (a run that
+    /// shed everything must not read as perfect attainment).
+    pub fn slo_attainment(&self) -> f64 {
+        let judged = self.slo_attained + self.slo_missed;
+        if judged == 0 {
+            return if self.shed_predicted > 0 { 0.0 } else { 1.0 };
+        }
+        self.slo_attained as f64 / judged as f64
     }
 
     /// Accumulate one threaded drain: its host wall-clock span and the
@@ -190,10 +232,21 @@ impl ServingMetrics {
         } else {
             String::new()
         };
+        let slo = if self.slo_attained + self.slo_missed + self.shed_predicted > 0 {
+            format!(
+                "; SLO {}/{} attained ({:.1}%), {} shed",
+                self.slo_attained,
+                self.slo_attained + self.slo_missed,
+                100.0 * self.slo_attainment(),
+                self.shed_predicted,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "served {}/{} requests ({} rejected) in {} makespan -> {:.2} req/s; \
              latency p50 {} p99 {}; wait p50 {} max {}; \
-             {} batches (mean size {:.2}), {} steals, queue peak {}{}",
+             {} batches (mean size {:.2}), {} steals, queue peak {}{}{}",
             self.completed,
             self.submitted,
             self.rejected,
@@ -207,6 +260,7 @@ impl ServingMetrics {
             self.mean_batch_size(),
             self.steals,
             self.queue_peak,
+            slo,
             wall,
         )
     }
@@ -224,7 +278,7 @@ mod tests {
             m.record_submit(arrival);
             let start = arrival + SimTime::ms(1);
             let finish = start + SimTime::ms(10 + i);
-            m.record_request(arrival, start, finish);
+            m.record_request(arrival, start, finish, None);
         }
         assert_eq!(m.completed, 10);
         // latencies are 11..=20 ms
@@ -251,7 +305,7 @@ mod tests {
     fn wall_throughput_accumulates_across_drains() {
         let mut m = ServingMetrics::default();
         m.record_submit(SimTime::ZERO);
-        m.record_request(SimTime::ZERO, SimTime::ZERO, SimTime::ms(1));
+        m.record_request(SimTime::ZERO, SimTime::ZERO, SimTime::ms(1), None);
         m.record_wall(Duration::from_millis(250), 1);
         m.record_wall(Duration::from_millis(250), 1);
         assert_eq!(m.wall_elapsed, Duration::from_millis(500));
@@ -266,10 +320,33 @@ mod tests {
         // threaded, must report 1-request wall throughput — not 97
         let mut m = ServingMetrics::default();
         for i in 0..96u64 {
-            m.record_request(SimTime::ms(i), SimTime::ms(i), SimTime::ms(i + 10));
+            m.record_request(SimTime::ms(i), SimTime::ms(i), SimTime::ms(i + 10), None);
         }
-        m.record_request(SimTime::ms(100), SimTime::ms(100), SimTime::ms(110));
+        m.record_request(SimTime::ms(100), SimTime::ms(100), SimTime::ms(110), None);
         m.record_wall(Duration::from_millis(5), 1);
         assert!((m.wall_throughput_rps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_and_shed_accounting() {
+        let mut m = ServingMetrics::default();
+        // no deadlines anywhere -> vacuous full attainment, no line
+        assert!((m.slo_attainment() - 1.0).abs() < 1e-12);
+        assert!(!m.summary().contains("SLO"), "{}", m.summary());
+        // attained: finished exactly at the deadline counts as met
+        m.record_request(SimTime::ZERO, SimTime::ZERO, SimTime::ms(10), Some(SimTime::ms(10)));
+        // missed by 1 ms
+        m.record_request(SimTime::ZERO, SimTime::ms(1), SimTime::ms(21), Some(SimTime::ms(20)));
+        // best-effort request: not judged
+        m.record_request(SimTime::ZERO, SimTime::ms(2), SimTime::ms(99), None);
+        m.record_shed();
+        assert_eq!(m.slo_attained, 1);
+        assert_eq!(m.slo_missed, 1);
+        assert_eq!(m.shed_predicted, 1);
+        assert_eq!(m.completed, 3);
+        assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("SLO 1/2 attained"), "{s}");
+        assert!(s.contains("1 shed"), "{s}");
     }
 }

@@ -19,8 +19,13 @@
 //!   only when the accelerator is predicted to beat the calibrated
 //!   [`crate::perf::CpuModel`]) and the work-stealing dispatch loop
 //!   with queue-depth backpressure;
+//! * [`policy`] — the pluggable scheduling-policy layer: every
+//!   queue-ordering, batch-close, placement and admit-or-shed decision
+//!   flows through a [`SchedulePolicy`] ([`FifoPolicy`] by default,
+//!   [`DeadlinePolicy`] for EDF, [`AdmissionPolicy`] for predictive
+//!   load shedding), backed by the unified [`CostModel`];
 //! * [`metrics`] — latency percentiles, throughput, utilization,
-//!   batching and stealing telemetry, all in modeled PYNQ-Z1 time
+//!   batching, stealing and SLO telemetry, all in modeled PYNQ-Z1 time
 //!   (plus host wall-clock for the threaded mode);
 //! * [`threaded`] — the OS-thread worker loop behind
 //!   [`ExecMode::Threaded`]: a shared injector queue, per-worker
@@ -57,6 +62,7 @@
 
 pub mod batch;
 pub mod metrics;
+pub mod policy;
 pub mod pool;
 pub mod scheduler;
 pub mod threaded;
@@ -75,6 +81,10 @@ use crate::sysc::SimTime;
 
 pub use batch::{BucketBatcher, BucketKey};
 pub use metrics::{BatchRecord, ServingMetrics};
+pub use policy::{
+    Admission, AdmissionPolicy, CostModel, DeadlinePolicy, FifoPolicy, GemmShape, ModeledCost,
+    SchedulePolicy,
+};
 pub use pool::{PartitionedBackend, SharedCrossCheck, Worker, WorkerKind, WorkerPool};
 pub use scheduler::{OffloadPlanner, Route};
 
@@ -134,6 +144,11 @@ pub struct CoordinatorConfig {
     /// ([`ExecMode::Modeled`], default) or one OS thread per worker
     /// ([`ExecMode::Threaded`]).
     pub exec_mode: ExecMode,
+    /// The scheduling policy every queue-ordering, batching, placement
+    /// and admission decision flows through. The default
+    /// [`FifoPolicy`] reproduces the pre-policy coordinator
+    /// bit-for-bit; see [`DeadlinePolicy`] and [`AdmissionPolicy`].
+    pub policy: Arc<dyn SchedulePolicy>,
 }
 
 impl Default for CoordinatorConfig {
@@ -149,6 +164,7 @@ impl Default for CoordinatorConfig {
             steal: true,
             compile_cost: SimTime::ms(25),
             exec_mode: ExecMode::Modeled,
+            policy: Arc::new(FifoPolicy),
         }
     }
 }
@@ -170,6 +186,12 @@ impl CoordinatorConfig {
         self.exec_mode = mode;
         self
     }
+
+    /// The same configuration with a different [`SchedulePolicy`].
+    pub fn with_policy(mut self, policy: Arc<dyn SchedulePolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
 }
 
 /// One queued inference request.
@@ -184,6 +206,12 @@ pub struct InferenceRequest {
     pub input: Tensor,
     /// Modeled arrival time (the coordinator's clock at submit).
     pub arrival: SimTime,
+    /// Optional SLO deadline in absolute modeled time. `None` means
+    /// best-effort: [`FifoPolicy`] ignores deadlines entirely;
+    /// [`DeadlinePolicy`] serves earlier deadlines first (deadline-less
+    /// requests last); [`AdmissionPolicy`] additionally sheds requests
+    /// predicted to miss.
+    pub deadline: Option<SimTime>,
 }
 
 /// One finished request.
@@ -199,6 +227,9 @@ pub struct Completion {
     pub started: SimTime,
     /// Modeled completion time.
     pub finished: SimTime,
+    /// The request's SLO deadline, if it carried one (compare against
+    /// `finished` for attainment; [`ServingMetrics`] counts both).
+    pub deadline: Option<SimTime>,
     /// Size of the dispatch round this request rode in.
     pub batch_size: usize,
     /// The inference output tensor.
@@ -234,6 +265,18 @@ pub enum SubmitError {
         /// The rejected request, returned intact.
         request: Box<InferenceRequest>,
     },
+    /// The admission policy shed the request: its predicted completion
+    /// (queue backlog plus its own modeled cost) already exceeds its
+    /// deadline. Counted as [`ServingMetrics::shed_predicted`],
+    /// distinct from queue-full [`ServingMetrics::rejected`].
+    ShedPredicted {
+        /// Predicted completion time from the [`CostModel`].
+        predicted: SimTime,
+        /// The deadline the request would have missed.
+        deadline: SimTime,
+        /// The shed request, returned intact.
+        request: Box<InferenceRequest>,
+    },
 }
 
 impl fmt::Display for SubmitError {
@@ -247,6 +290,12 @@ impl fmt::Display for SubmitError {
                     f,
                     "input shape {got:?} does not match {}'s input shape {expected:?}",
                     request.model.name
+                )
+            }
+            SubmitError::ShedPredicted { predicted, deadline, .. } => {
+                write!(
+                    f,
+                    "admission control shed: predicted completion {predicted} past deadline {deadline}"
                 )
             }
         }
@@ -338,13 +387,39 @@ impl Coordinator {
         self.now += dt;
     }
 
-    /// Submit a request arriving at the current modeled time.
+    /// Submit a best-effort request (no SLO deadline) arriving at the
+    /// current modeled time.
     pub fn submit(&mut self, model: Arc<Graph>, input: Tensor) -> Result<u64, SubmitError> {
+        self.submit_with_deadline(model, input, None)
+    }
+
+    /// Submit a request with an SLO budget relative to now: its
+    /// deadline is the current modeled time plus `slo`.
+    pub fn submit_with_slo(
+        &mut self,
+        model: Arc<Graph>,
+        input: Tensor,
+        slo: SimTime,
+    ) -> Result<u64, SubmitError> {
+        let deadline = self.now + slo;
+        self.submit_with_deadline(model, input, Some(deadline))
+    }
+
+    /// Submit a request with an explicit absolute deadline (or none),
+    /// arriving at the current modeled time. How the deadline is
+    /// honored belongs to the configured [`SchedulePolicy`].
+    pub fn submit_with_deadline(
+        &mut self,
+        model: Arc<Graph>,
+        input: Tensor,
+        deadline: Option<SimTime>,
+    ) -> Result<u64, SubmitError> {
         let req = InferenceRequest {
             id: self.next_id,
             model,
             input,
             arrival: self.now,
+            deadline,
         };
         if req.input.shape != req.model.input_shape {
             // not counted in metrics.rejected: that counter means
@@ -357,7 +432,8 @@ impl Coordinator {
                 request: Box::new(req),
             });
         }
-        match self.pool.submit(req) {
+        // disjoint field borrows: &mut pool next to &cfg.policy
+        match self.pool.submit(req, self.cfg.policy.as_ref(), self.now) {
             Ok(widx) => {
                 let id = self.next_id;
                 self.next_id += 1;
@@ -366,11 +442,19 @@ impl Coordinator {
                 self.metrics.observe_queue_depth(depth);
                 Ok(id)
             }
-            Err(req) => {
+            Err(pool::SubmitRejection::Full(request)) => {
                 self.metrics.record_reject();
                 Err(SubmitError::Backpressure {
                     queued: self.pool.total_queued(),
-                    request: Box::new(req),
+                    request,
+                })
+            }
+            Err(pool::SubmitRejection::Shed { request, predicted, deadline }) => {
+                self.metrics.record_shed();
+                Err(SubmitError::ShedPredicted {
+                    predicted,
+                    deadline,
+                    request,
                 })
             }
         }
@@ -704,6 +788,7 @@ mod tests {
                 model: g.clone(),
                 input: image(&g, 80 + i),
                 arrival: SimTime::ZERO,
+                deadline: None,
             });
         }
         let mut metrics = ServingMetrics::default();

@@ -3,7 +3,9 @@
 //! A [`WorkerPool`] owns N workers; each worker is one *instance* —
 //! an SA or VM accelerator behind its own [`DriverHandle`] (its own
 //! simulated fabric and driver state), or a CPU-only worker — plus a
-//! bounded FIFO request queue and a `free_at` horizon in modeled time.
+//! bounded request queue (service order set by the configured
+//! [`SchedulePolicy`]: FIFO by default, deadline-ordered under EDF)
+//! and a `free_at` horizon in modeled time.
 //!
 //! Every worker executes requests through a [`PartitionedBackend`]:
 //! the [`GemmBackend`] that realizes per-layer HW/SW partitioning
@@ -26,9 +28,11 @@ use std::sync::{Arc, Mutex};
 
 use crate::driver::DriverHandle;
 use crate::framework::backend::{CpuBackend, GemmBackend, GemmTask, GemmTiming};
+use crate::framework::graph::Graph;
 use crate::sysc::SimTime;
 
 use super::batch::BucketBatcher;
+use super::policy::{Admission, SchedulePolicy};
 use super::scheduler::{OffloadPlanner, Route};
 use super::{CoordinatorConfig, InferenceRequest};
 
@@ -212,7 +216,9 @@ pub struct Worker {
     pub kind: WorkerKind,
     /// The worker's partitioned execution backend.
     pub backend: PartitionedBackend,
-    /// Bounded FIFO admission queue (drained by the scheduler).
+    /// Bounded admission queue, held in the configured policy's
+    /// service order (FIFO by default, deadline-ordered under EDF) and
+    /// drained by the scheduler.
     pub queue: VecDeque<InferenceRequest>,
     /// Modeled time at which this worker finishes its current work.
     pub free_at: SimTime,
@@ -312,12 +318,32 @@ impl WorkerPool {
         self.workers.iter().map(|w| w.queue.len()).sum()
     }
 
-    /// Arrival stamp of the oldest queued request across all workers.
-    pub fn oldest_queued_arrival(&self) -> Option<SimTime> {
+    /// THE donor rule, in one place: the worker (other than `exclude`,
+    /// the thief) whose non-empty queue head has the lowest
+    /// (policy key, worker index) — oldest-first under FIFO,
+    /// earliest-deadline-first under EDF. Shared by the actual steal
+    /// ([`Self::take_batch`]) and the modeled drain's start-time
+    /// estimate ([`Self::steal_candidate_arrival`]) so they can never
+    /// disagree; the threaded path mirrors the same rule over its
+    /// locked deques ([`super::threaded`]).
+    fn steal_donor(&self, exclude: Option<usize>, policy: &dyn SchedulePolicy) -> Option<usize> {
         self.workers
             .iter()
-            .filter_map(|w| w.queue.front().map(|r| r.arrival))
-            .min()
+            .enumerate()
+            .filter(|(i, w)| Some(*i) != exclude && !w.queue.is_empty())
+            .min_by_key(|(i, w)| {
+                (policy.key(w.queue.front().expect("non-empty")), *i)
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Arrival stamp of the request an idle worker would steal right
+    /// now (the [`Self::steal_donor`] queue head) — bounds the modeled
+    /// drain's start-time estimate for idle workers. Under FIFO this
+    /// is the oldest queued arrival in the pool.
+    pub fn steal_candidate_arrival(&self, policy: &dyn SchedulePolicy) -> Option<SimTime> {
+        self.steal_donor(None, policy)
+            .and_then(|d| self.workers[d].queue.front().map(|r| r.arrival))
     }
 
     /// Worker with the earliest `free_at` (per-layer dispatch target).
@@ -330,55 +356,86 @@ impl WorkerPool {
             .expect("non-empty pool")
     }
 
-    /// Admit a request, or hand it back when every queue is at depth.
+    /// Admit a request, or hand it back when the policy rejects it.
     ///
-    /// Placement is batch-affine: among workers with room, one whose
-    /// queue tail already holds the same model wins (if its queue is
-    /// no more than one deeper than the shortest), so same-model
-    /// requests land back to back and form batches; otherwise the
-    /// shortest queue wins.
-    pub fn submit(&mut self, req: InferenceRequest) -> Result<usize, InferenceRequest> {
-        let depth = self.queue_depth;
-        let min_len = match self
-            .workers
-            .iter()
-            .map(|w| w.queue.len())
-            .filter(|&l| l < depth)
-            .min()
-        {
-            Some(l) => l,
-            None => return Err(req),
+    /// Placement, queue ordering and the admission verdict all belong
+    /// to the [`SchedulePolicy`]: the default [`super::FifoPolicy`]
+    /// places batch-affine (among workers with room, one whose queue
+    /// tail already holds the same model wins if its queue is no more
+    /// than one deeper than the shortest, so same-model requests land
+    /// back to back and form batches; otherwise the shortest queue),
+    /// appends FIFO and admits everything that fits. Admission-control
+    /// policies additionally shed a request whose
+    /// [`Self::predicted_completion`] exceeds its deadline.
+    pub fn submit(
+        &mut self,
+        req: InferenceRequest,
+        policy: &dyn SchedulePolicy,
+        now: SimTime,
+    ) -> Result<usize, SubmitRejection> {
+        let Some(target) = policy.place(&self.workers, self.queue_depth, &req) else {
+            return Err(SubmitRejection::Full(Box::new(req)));
         };
-        let affine = self.workers.iter().position(|w| {
-            w.queue.len() < depth
-                && w.queue.len() <= min_len + 1
-                && w.queue
-                    .back()
-                    // graph identity, not name: two distinct graphs
-                    // sharing a name must never batch together
-                    .is_some_and(|r| Arc::ptr_eq(&r.model, &req.model))
-        });
-        let target = affine.unwrap_or_else(|| {
-            self.workers
-                .iter()
-                .position(|w| w.queue.len() == min_len)
-                .expect("min_len worker exists")
-        });
-        self.workers[target].queue.push_back(req);
+        if policy.admission_control() {
+            let predicted = self.predicted_completion(target, &req, policy, now);
+            if let Admission::Shed { predicted, deadline } = policy.admit(&req, predicted) {
+                return Err(SubmitRejection::Shed {
+                    request: Box::new(req),
+                    predicted,
+                    deadline,
+                });
+            }
+        }
+        policy.enqueue(&mut self.workers[target].queue, req);
         Ok(target)
     }
 
-    /// Move the oldest queued request from some other worker to
-    /// `widx`'s queue. Returns false when nothing is stealable.
-    fn steal_into(&mut self, widx: usize) -> bool {
-        let donor = self
-            .workers
-            .iter()
-            .enumerate()
-            .filter(|(i, w)| *i != widx && !w.queue.is_empty())
-            .min_by_key(|(i, w)| (w.queue.front().expect("non-empty").arrival, *i))
-            .map(|(i, _)| i);
-        match donor {
+    /// Predicted completion time of `req` if placed on worker `widx`
+    /// now: the worker's residual busy time, plus the modeled cost of
+    /// every queued request the policy would serve before `req`
+    /// (policy key less than or equal to its own), plus the request's
+    /// own modeled cost — all from the worker's own [`CostModel`]
+    /// (so observed simulator timings sharpen later predictions).
+    ///
+    /// [`CostModel`]: super::CostModel
+    pub fn predicted_completion(
+        &self,
+        widx: usize,
+        req: &InferenceRequest,
+        policy: &dyn SchedulePolicy,
+        now: SimTime,
+    ) -> SimTime {
+        let w = &self.workers[widx];
+        let cost = &w.backend.planner.cost;
+        // memoize per distinct model: request_cost walks the whole
+        // graph, and a backlog usually holds few distinct Arc<Graph>s
+        let mut memo: Vec<(*const Graph, SimTime)> = Vec::new();
+        let mut cost_of = |model: &Arc<Graph>| -> SimTime {
+            let p = Arc::as_ptr(model);
+            match memo.iter().find(|(q, _)| *q == p) {
+                Some(&(_, c)) => c,
+                None => {
+                    let c = cost.request_cost(model, w.kind);
+                    memo.push((p, c));
+                    c
+                }
+            }
+        };
+        let mut t = w.free_at.max(now);
+        let key = (policy.key(req), req.id);
+        for r in &w.queue {
+            if (policy.key(r), r.id) <= key {
+                t += cost_of(&r.model);
+            }
+        }
+        t + cost_of(&req.model)
+    }
+
+    /// Move the most urgent queued request (the [`Self::steal_donor`]
+    /// queue head) from some other worker to `widx`'s queue. Returns
+    /// false when nothing is stealable.
+    fn steal_into(&mut self, widx: usize, policy: &dyn SchedulePolicy) -> bool {
+        match self.steal_donor(Some(widx), policy) {
             Some(d) => {
                 let req = self.workers[d].queue.pop_front().expect("donor non-empty");
                 self.workers[widx].queue.push_back(req);
@@ -388,17 +445,21 @@ impl WorkerPool {
         }
     }
 
-    /// Pop the next batch for worker `widx`: consecutive same-model
-    /// requests from the head of its FIFO queue, arrived within the
-    /// batch window, up to `max_batch`. Steals first when idle with an
-    /// empty queue. Returns the batch and the number of steals.
+    /// Pop the next batch for worker `widx`: the head of its queue
+    /// plus every following request the policy lets join (same model
+    /// within the batch window under every shipped policy), up to
+    /// `max_batch`. Steals first when idle with an empty queue.
+    /// Returns the batch and the number of steals.
     pub fn take_batch(
         &mut self,
         widx: usize,
         cfg: &CoordinatorConfig,
     ) -> (Vec<InferenceRequest>, u64) {
         let mut steals = 0;
-        if self.workers[widx].queue.is_empty() && cfg.steal && self.steal_into(widx) {
+        if self.workers[widx].queue.is_empty()
+            && cfg.steal
+            && self.steal_into(widx, cfg.policy.as_ref())
+        {
             steals = 1;
         }
         let w = &mut self.workers[widx];
@@ -407,11 +468,31 @@ impl WorkerPool {
     }
 }
 
+/// Why [`WorkerPool::submit`] refused a request. The request rides
+/// along (boxed, keeping the error small) so the coordinator can hand
+/// it back to the caller intact.
+#[derive(Debug)]
+pub enum SubmitRejection {
+    /// Every queue the policy would place into is at `queue_depth`.
+    Full(Box<InferenceRequest>),
+    /// The admission policy predicts a deadline miss.
+    Shed {
+        /// The rejected request.
+        request: Box<InferenceRequest>,
+        /// Predicted completion that triggered the shed.
+        predicted: SimTime,
+        /// The deadline it would have missed.
+        deadline: SimTime,
+    },
+}
+
 /// Pop one batch from the front of a request queue: the head request
-/// plus consecutive same-model requests, up to `max_batch`, whose
-/// arrivals fall inside the batch window anchored at the earliest
-/// possible round start (`free_at.max(head.arrival)`) of the worker
-/// that will execute the batch.
+/// plus every following request the policy's
+/// [`SchedulePolicy::may_join`] admits — under every shipped policy,
+/// consecutive same-model requests, up to `max_batch`, whose arrivals
+/// fall inside the batch window anchored at the earliest possible
+/// round start (`free_at.max(head.arrival)`) of the worker that will
+/// execute the batch.
 ///
 /// This is THE batch-grouping rule, shared verbatim by the modeled
 /// path ([`WorkerPool::take_batch`]) and the OS-thread path
@@ -433,7 +514,7 @@ pub fn pop_batch(
     while batch.len() < cfg.max_batch {
         let take = q
             .front()
-            .is_some_and(|r| Arc::ptr_eq(&r.model, &model) && r.arrival <= window_close);
+            .is_some_and(|r| cfg.policy.may_join(r, &model, window_close));
         if !take {
             break;
         }

@@ -5,20 +5,24 @@
 //! paper (§IV-B) lifted to serving scale:
 //!
 //! * [`OffloadPlanner`] — *per layer*: offload a GEMM only when the
-//!   accelerator is predicted to beat the calibrated CPU model. A
-//!   layer whose CPU time cannot even cover the per-offload sync
-//!   overhead stays on the CPU outright; otherwise the planner
-//!   offloads once, records the simulator-measured total, and from
-//!   then on picks the measured winner per (shape, residency) — the
+//!   accelerator is predicted to beat the CPU. Both sides of that
+//!   comparison come from the worker's [`CostModel`] — the calibrated
+//!   CPU estimate on one side, observed simulator totals on the other
+//!   ("measure once, then pick the winner"): a layer whose CPU time
+//!   cannot even cover the per-offload sync overhead stays on the CPU
+//!   outright; otherwise the planner offloads once, records the
+//!   simulator-measured total into the cost model, and from then on
+//!   picks the measured winner per (shape, residency) — the
 //!   simulation-in-the-loop partitioning SECDA's methodology enables.
 //! * [`drain`] — *per request*: an event loop over modeled time. The
 //!   worker that can start earliest takes the next dispatch round,
-//!   forming a batch of consecutive same-model requests from its FIFO
-//!   queue (within `batch_window`, up to `max_batch`); an idle worker
-//!   with an empty queue steals the oldest queued request in the pool
-//!   (from the sibling whose queue head has been waiting longest).
-//!   Queues are strictly FIFO and batches never
-//!   reorder across a queue head, so no request can starve.
+//!   forming a batch from the head of its queue (grouping and window
+//!   rules from the [`super::SchedulePolicy`], up to `max_batch`); an
+//!   idle worker with an empty queue steals from the sibling whose
+//!   queue head has the lowest policy key (oldest-first under FIFO,
+//!   earliest-deadline-first under EDF). Queue order itself is the
+//!   policy's ([`super::SchedulePolicy::enqueue`]) and batches never
+//!   reorder across a queue head, so under FIFO no request can starve.
 //!
 //! [`drain`] is the [`super::ExecMode::Modeled`] path: fully
 //! deterministic, single-threaded, reproducible percentiles. Its
@@ -26,14 +30,11 @@
 //! OS-thread path in [`super::threaded`], so both modes produce
 //! bit-identical functional outputs per request.
 
-use std::collections::HashMap;
-
 use crate::framework::interpreter::Session;
-use crate::gemm;
-use crate::perf::CpuModel;
 use crate::sysc::SimTime;
 
 use super::metrics::ServingMetrics;
+use super::policy::{CostModel, GemmShape};
 use super::pool::{Worker, WorkerPool};
 use super::{Completion, CoordinatorConfig, InferenceRequest};
 
@@ -48,18 +49,17 @@ pub enum Route {
 
 /// The per-layer HW/SW partitioning policy of one worker.
 ///
-/// Decisions are driven by the calibrated [`CpuModel`] on one side and
-/// observed simulator timings on the other ("measure once, then pick
-/// the winner"): the first time a (shape, residency) is seen it is
+/// A thin decision rule over the worker's [`CostModel`] — the *only*
+/// source of latency estimates (there is exactly one cost path; a
+/// regression test below pins the planner's CPU prediction to the
+/// model's): the first time a (shape, residency) is seen it is
 /// offloaded optimistically and the driver's modeled total — DMA,
-/// compute, sync, everything — is recorded; later occurrences compare
-/// that observation against the CPU prediction.
+/// compute, sync, everything — is recorded into the model; later
+/// occurrences compare that observation against the CPU prediction.
 pub struct OffloadPlanner {
-    cpu: CpuModel,
-    threads: usize,
-    sync_overhead: SimTime,
-    /// Best observed accelerator total per (m, k, n, weights_resident).
-    observed: HashMap<(usize, usize, usize, bool), SimTime>,
+    /// The unified cost model backing every decision (and the
+    /// admission-control backlog predictions for this worker).
+    pub cost: CostModel,
     /// Layers routed to the accelerator.
     pub offloads: u64,
     /// Layers kept on the CPU by policy.
@@ -71,29 +71,30 @@ impl OffloadPlanner {
     /// per-offload synchronization overhead floor.
     pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
         OffloadPlanner {
-            cpu: CpuModel::pynq_a9(),
-            threads,
-            sync_overhead,
-            observed: HashMap::new(),
+            cost: CostModel::new(threads, sync_overhead),
             offloads: 0,
             cpu_routed: 0,
         }
     }
 
-    /// Predicted CPU (gemmlowp) time for a GEMM shape.
+    /// Predicted CPU (gemmlowp) time for a GEMM shape — the cost
+    /// model's CPU estimate, verbatim.
     pub fn predicted_cpu(&self, m: usize, k: usize, n: usize) -> SimTime {
-        self.cpu.gemm_time(gemm::mac_count(m, k, n), self.threads)
+        self.cost
+            .estimate(GemmShape { m, k, n }, super::pool::WorkerKind::Cpu)
+            .total()
     }
 
     /// Choose where a GEMM layer runs.
     pub fn decide(&mut self, m: usize, k: usize, n: usize, resident: bool) -> Route {
+        let shape = GemmShape { m, k, n };
         let cpu_t = self.predicted_cpu(m, k, n);
-        let route = if cpu_t <= self.sync_overhead {
+        let route = if cpu_t <= self.cost.sync_overhead() {
             // the offload round-trip alone costs more than the CPU run
             Route::Cpu
         } else {
-            match self.observed.get(&(m, k, n, resident)) {
-                Some(&accel_t) if accel_t >= cpu_t => Route::Cpu,
+            match self.cost.observed(shape, resident) {
+                Some(accel_t) if accel_t >= cpu_t => Route::Cpu,
                 _ => Route::Accel,
             }
         };
@@ -107,10 +108,7 @@ impl OffloadPlanner {
     /// Record a measured accelerator total for a shape (keeps the
     /// best, so one outlier never poisons the policy).
     pub fn observe(&mut self, m: usize, k: usize, n: usize, resident: bool, total: SimTime) {
-        self.observed
-            .entry((m, k, n, resident))
-            .and_modify(|t| *t = (*t).min(total))
-            .or_insert(total);
+        self.cost.observe(GemmShape { m, k, n }, resident, total);
     }
 }
 
@@ -148,6 +146,7 @@ pub fn execute_batch_on(
             arrival: req.arrival,
             started,
             finished,
+            deadline: req.deadline,
             batch_size: size,
             output,
             report,
@@ -177,18 +176,25 @@ pub fn drain(
 ) -> Vec<Completion> {
     let mut done = Vec::new();
     while pool.total_queued() > 0 {
-        // pick the worker that can start soonest
-        let oldest = pool.oldest_queued_arrival();
+        // pick the worker that can start soonest; an idle worker's
+        // start is bounded by the arrival of the request it would
+        // actually steal (the lowest-policy-key queue head — equal to
+        // the oldest arrival under FIFO)
+        let steal_arrival = pool.steal_candidate_arrival(cfg.policy.as_ref());
         let mut best: Option<(SimTime, usize)> = None;
         for (i, w) in pool.workers.iter().enumerate() {
             let arrival = match w.queue.front() {
                 Some(r) => Some(r.arrival),
-                None if cfg.steal => oldest,
+                None if cfg.steal => steal_arrival,
                 None => None,
             };
             if let Some(arr) = arrival {
                 let start = w.free_at.max(arr);
-                if best.map_or(true, |(s, _)| start < s) {
+                let better = match best {
+                    None => true,
+                    Some((s, _)) => start < s,
+                };
+                if better {
                     best = Some((start, i));
                 }
             }
@@ -206,7 +212,7 @@ pub fn drain(
         metrics.record_batch(widx, &batch[0].model.name, batch.len(), round_start);
         let completions = execute_batch_on(w, widx, batch, cfg.driver.threads);
         for c in &completions {
-            metrics.record_request(c.arrival, c.started, c.finished);
+            metrics.record_request(c.arrival, c.started, c.finished, c.deadline);
         }
         done.extend(completions);
     }
@@ -215,8 +221,11 @@ pub fn drain(
 
 #[cfg(test)]
 mod tests {
+    use super::super::pool::WorkerKind;
     use super::*;
     use crate::driver::DriverConfig;
+    use crate::gemm;
+    use crate::perf::CpuModel;
 
     #[test]
     fn tiny_layers_stay_on_cpu() {
@@ -261,5 +270,35 @@ mod tests {
         p.observe(m, k, n, true, cpu_t.saturating_sub(SimTime::us(500)));
         assert_eq!(p.decide(m, k, n, false), Route::Cpu);
         assert_eq!(p.decide(m, k, n, true), Route::Accel);
+    }
+
+    #[test]
+    fn planner_and_cost_model_share_one_cpu_path() {
+        // Regression for the pre-policy duplication: the scheduler
+        // must not re-derive CPU GEMM cost — its prediction, the cost
+        // model's CPU estimate and perf::CpuModel must agree exactly
+        // on every shape, at both thread counts.
+        for threads in [1usize, 2] {
+            let p = OffloadPlanner::new(threads, SimTime::us(150));
+            let reference = CpuModel::pynq_a9();
+            for (m, k, n) in [
+                (1, 1, 1),
+                (8, 8, 8),
+                (32, 27, 12544),
+                (64, 320, 12544),
+                (128, 1152, 3136),
+                (512, 4608, 49),
+            ] {
+                let direct = reference.gemm_time(gemm::mac_count(m, k, n), threads);
+                assert_eq!(p.predicted_cpu(m, k, n), direct, "({m},{k},{n}) x{threads}");
+                assert_eq!(
+                    p.cost
+                        .estimate(GemmShape { m, k, n }, WorkerKind::Cpu)
+                        .total(),
+                    direct,
+                    "cost model diverged on ({m},{k},{n}) x{threads}"
+                );
+            }
+        }
     }
 }

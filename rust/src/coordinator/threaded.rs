@@ -6,15 +6,16 @@
 //! wall-clock throughput. This module runs each pool worker on its own
 //! [`std::thread`] instead, with the classic work-stealing topology:
 //!
-//! * a **shared injector queue** — every queued request, in arrival
-//!   order, behind one [`Mutex`];
+//! * a **shared injector queue** — every queued request, in policy
+//!   service order (arrival under FIFO, deadline under EDF), behind
+//!   one [`Mutex`];
 //! * **per-worker deques** — each worker refills its own deque with a
 //!   FIFO chunk from the injector, executes the same-model run at its
 //!   head, and leaves the tail stealable;
 //! * **work stealing** — a worker that finds its deque and the
-//!   injector empty steals the oldest waiting run from the sibling
-//!   whose deque head has been queued longest (the same
-//!   oldest-first fairness rule as the modeled path);
+//!   injector empty steals the most urgent waiting run (lowest policy
+//!   key: queued longest under FIFO, earliest deadline under EDF) from
+//!   its siblings — the same fairness rule as the modeled path;
 //! * **graceful shutdown** — a worker exits its loop only when the
 //!   injector and every deque are empty; queues only ever shrink
 //!   during a drain, so termination needs no signalling. The scope
@@ -57,10 +58,11 @@ struct Queues {
     steals: AtomicU64,
 }
 
-/// Get worker `widx`'s next batch: own deque first, then a FIFO chunk
-/// refilled from the injector, then a steal from the sibling whose
-/// deque head has been waiting longest. `None` means the drain is
-/// complete for this worker (no work anywhere it may take).
+/// Get worker `widx`'s next batch: own deque first, then a chunk
+/// refilled from the injector (which holds requests in policy service
+/// order), then a steal from the sibling whose deque head has the
+/// lowest policy key. `None` means the drain is complete for this
+/// worker (no work anywhere it may take).
 ///
 /// Batches form through [`pop_batch`] — the same grouping rule as the
 /// modeled path, anchored at `free_at` (the calling worker's modeled
@@ -91,25 +93,30 @@ fn next_batch(
             return Some(batch);
         }
     }
-    // 3. steal: oldest-waiting sibling deque head first (fairness rule
-    //    shared with the modeled path). Scan locks are taken one at a
-    //    time; losing the race to a victim (its queue drained between
-    //    the scan and the re-lock) re-scans instead of giving up —
-    //    a worker exits only after a scan finds every deque empty.
-    //    Each failed attempt implies some sibling made progress, so
-    //    the retry loop terminates.
+    // 3. steal: the sibling deque head with the lowest policy key
+    //    first (oldest-waiting under FIFO, earliest deadline under
+    //    EDF — the same fairness rule as the modeled path). Scan locks
+    //    are taken one at a time; losing the race to a victim (its
+    //    queue drained between the scan and the re-lock) re-scans
+    //    instead of giving up — a worker exits only after a scan finds
+    //    every deque empty. Each failed attempt implies some sibling
+    //    made progress, so the retry loop terminates.
     if cfg.steal {
         loop {
-            let mut best: Option<(SimTime, u64, usize)> = None;
+            let mut best: Option<((SimTime, SimTime), u64, usize)> = None;
             for (i, l) in qs.locals.iter().enumerate() {
                 if i == widx {
                     continue;
                 }
                 let q = l.lock().expect("sibling deque");
                 if let Some(front) = q.front() {
-                    let key = (front.arrival, front.id, i);
-                    if best.map_or(true, |(a, id, _)| (front.arrival, front.id) < (a, id)) {
-                        best = Some(key);
+                    let key = cfg.policy.key(front);
+                    let better = match best {
+                        None => true,
+                        Some((bk, bid, _)) => (key, front.id) < (bk, bid),
+                    };
+                    if better {
+                        best = Some((key, front.id, i));
                     }
                 }
             }
@@ -131,7 +138,7 @@ fn next_batch(
 /// drain). Completions are returned sorted by request id.
 ///
 /// Requests queued on the per-worker admission queues are moved into
-/// the shared injector in arrival order first — under
+/// the shared injector in policy service order first — under
 /// [`super::ExecMode::Threaded`] the submit-time placement is only an
 /// admission bound; actual placement is decided by whichever thread
 /// pulls the work.
@@ -147,7 +154,9 @@ pub fn drain(
     if pending.is_empty() {
         return Vec::new();
     }
-    pending.sort_by_key(|r| (r.arrival, r.id));
+    // policy service order (arrival under FIFO, deadline under EDF),
+    // request id as the final tie-break
+    pending.sort_by_key(|r| (cfg.policy.key(r), r.id));
 
     let n_workers = pool.workers.len();
     let qs = Queues {
@@ -199,7 +208,7 @@ pub fn drain(
             metrics.record_batch(widx, &model, size, start);
         }
         for c in &completions {
-            metrics.record_request(c.arrival, c.started, c.finished);
+            metrics.record_request(c.arrival, c.started, c.finished, c.deadline);
         }
         done.extend(completions);
     }
@@ -234,9 +243,11 @@ mod tests {
         g1: &Arc<Graph>,
         g2: &Arc<Graph>,
     ) -> Vec<super::Completion> {
-        let mut cfg = CoordinatorConfig::default();
-        cfg.exec_mode = mode;
-        cfg.queue_depth = n as usize; // open loop: accept the full stream
+        let cfg = CoordinatorConfig {
+            exec_mode: mode,
+            queue_depth: n as usize, // open loop: accept the full stream
+            ..CoordinatorConfig::default()
+        };
         let mut coord = Coordinator::new(cfg);
         for i in 0..n {
             let g = if i % 3 == 0 { g2.clone() } else { g1.clone() };
@@ -348,6 +359,7 @@ mod tests {
             model: g.clone(),
             input: image(&g, 60 + id),
             arrival,
+            deadline: None,
         };
         let q: VecDeque<_> = [req(0, SimTime::ZERO), req(1, SimTime::ms(7))]
             .into_iter()

@@ -44,7 +44,13 @@
 //!   that hits a given AOT shape bucket;
 //! * `exec_mode` — how the pool executes: the deterministic
 //!   discrete-event model, or one OS thread per worker
-//!   ([`crate::coordinator::ExecMode`]).
+//!   ([`crate::coordinator::ExecMode`]);
+//! * `policy` — the scheduling policy every queue-ordering, batching,
+//!   placement and admission decision flows through
+//!   ([`crate::coordinator::SchedulePolicy`]: FIFO by default,
+//!   deadline-EDF, or EDF plus predictive admission control), backed
+//!   by the unified [`crate::coordinator::CostModel`] that wraps this
+//!   driver's calibrated CPU timing.
 
 pub mod tiling;
 
@@ -465,8 +471,10 @@ mod tests {
         sa1.cfg.global_weight_buf.capacity_bytes = 16 * 1024;
         let sa2 = sa1.clone();
         let mut co = AccelBackend::new(sa1, DriverConfig::default());
-        let mut naive_cfg = DriverConfig::default();
-        naive_cfg.tiling = TilingStrategy::Naive;
+        let naive_cfg = DriverConfig {
+            tiling: TilingStrategy::Naive,
+            ..DriverConfig::default()
+        };
         let mut naive = AccelBackend::new(sa2, naive_cfg);
         let (o1, t1) = co.run_gemm(&make_task(m, k, n, &w, &x, &p));
         let (o2, t2) = naive.run_gemm(&make_task(m, k, n, &w, &x, &p));
@@ -511,8 +519,10 @@ mod tests {
         let (m, k, n) = (64, 128, 128);
         let (w, x, p) = task_data(m, k, n, 13);
         let mut pip = AccelBackend::new(SaDesign::paper(), DriverConfig::default());
-        let mut ser_cfg = DriverConfig::default();
-        ser_cfg.pipelined = false;
+        let ser_cfg = DriverConfig {
+            pipelined: false,
+            ..DriverConfig::default()
+        };
         let mut ser = AccelBackend::new(SaDesign::paper(), ser_cfg);
         let t1 = pip.run_gemm(&make_task(m, k, n, &w, &x, &p)).1.total;
         let t2 = ser.run_gemm(&make_task(m, k, n, &w, &x, &p)).1.total;

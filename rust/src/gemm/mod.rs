@@ -24,11 +24,17 @@ use crate::framework::quant::ppu_requant;
 /// artifacts use (see python/compile/model.py).
 #[derive(Debug, Clone)]
 pub struct QGemmParams {
+    /// Per-output-channel int32 bias (zero-point fold included).
     pub bias: Vec<i32>,
+    /// Per-channel fixed-point requant multiplier (Q31).
     pub mult: Vec<i32>,
+    /// Per-channel requant shift (negative = right shift).
     pub shift: Vec<i32>,
+    /// Output zero point added after requantization.
     pub out_zp: i32,
+    /// Activation clamp floor (e.g. 0 for ReLU) in output quanta.
     pub act_min: i32,
+    /// Activation clamp ceiling (e.g. 6/scale for ReLU6).
     pub act_max: i32,
 }
 
@@ -102,6 +108,9 @@ pub fn accumulate_rows(
 /// Like [`accumulate_rows`] but over a column block `[n0, n1)` too:
 /// `acc[(i-m0)*(n1-n0) + (j-n0)]`. Used by the VM simulator, whose
 /// scheduler splits the N dimension across the four GEMM units.
+// the argument list IS the tile coordinate system; a params struct
+// would just rename the same nine values
+#[allow(clippy::too_many_arguments)]
 pub fn accumulate_block(
     w: &[i8],
     x: &[i8],

@@ -29,8 +29,9 @@
 //! through the serving stack, and `README.md` for the quickstart
 //! (build/test/bench commands and feature flags).
 
-// The serving surface (coordinator, driver, runtime) is held to full
-// rustdoc coverage; `cargo doc` runs with `-D warnings` in CI. The
+// The serving surface (coordinator, driver, runtime) and the modules
+// its cost model unifies (gemm, perf) are held to full rustdoc
+// coverage; `cargo doc` runs with `-D warnings` in CI. The
 // simulation/framework layers below carry module-level docs but are
 // exempted item-by-item until their own doc pass (ROADMAP).
 #![warn(missing_docs)]
@@ -43,9 +44,7 @@ pub mod coordinator;
 pub mod driver;
 #[allow(missing_docs)]
 pub mod framework;
-#[allow(missing_docs)]
 pub mod gemm;
-#[allow(missing_docs)]
 pub mod perf;
 pub mod runtime;
 #[allow(missing_docs)]

@@ -24,11 +24,18 @@
 use super::{CpuModel, EnergyModel};
 use crate::sysc::SimTime;
 
+/// Effective gemmlowp int8 GEMM throughput per A9 core (see module
+/// doc for the Table II fit).
 pub const GEMM_MACS_PER_SEC: f64 = 1.05e9;
+/// Depthwise-conv throughput per core (lower arithmetic intensity).
 pub const DWCONV_MACS_PER_SEC: f64 = 0.40e9;
+/// Streaming element-wise (add/pool/requant) throughput per core.
 pub const ELEMENTWISE_BYTES_PER_SEC: f64 = 100.0e6;
+/// im2col / accelerator-layout reshape throughput per core.
 pub const RESHAPE_BYTES_PER_SEC: f64 = 180.0e6;
+/// gemmlowp int32→int8 output-unpack throughput per core.
 pub const UNPACK_OUTPUTS_PER_SEC: f64 = 120.0e6;
+/// Fixed per-op dispatch overhead, microseconds.
 pub const OP_OVERHEAD_US: u64 = 20;
 /// Table II Non-CONV columns sit at 117-176 ms (1 thread) even for
 /// models with almost no non-conv compute (MobileNetV1's GAP+FC+softmax
@@ -36,12 +43,17 @@ pub const OP_OVERHEAD_US: u64 = 20;
 /// quantize/dequantize of the input/output, and allocator churn. We
 /// model it as a fixed per-inference cost.
 pub const FRAMEWORK_OVERHEAD_MS: u64 = 105;
+/// Marginal efficiency of the second A9 core (Table II CONV scaling).
 pub const SECOND_THREAD_SCALING: f64 = 0.92;
 
+/// Board idle power (SoC static + DRAM + peripherals), watts.
 pub const P_IDLE_W: f64 = 2.13;
+/// Marginal power per active A9 thread, watts.
 pub const P_PER_THREAD_W: f64 = 0.23;
+/// Marginal fabric power while the accelerator is active, watts.
 pub const P_FPGA_ACTIVE_W: f64 = 0.90;
 
+/// The calibrated [`CpuModel`] assembled from the constants above.
 pub fn cpu_model() -> CpuModel {
     CpuModel {
         gemm_macs_per_sec: GEMM_MACS_PER_SEC,
@@ -55,6 +67,7 @@ pub fn cpu_model() -> CpuModel {
     }
 }
 
+/// The calibrated [`EnergyModel`] assembled from the constants above.
 pub fn energy_model() -> EnergyModel {
     EnergyModel {
         p_idle_w: P_IDLE_W,

@@ -43,6 +43,8 @@ pub struct CpuModel {
 }
 
 impl CpuModel {
+    /// The calibrated PYNQ-Z1 Cortex-A9 model ([`calib`] constants,
+    /// fit against the paper's CPU-only Table II rows).
     pub fn pynq_a9() -> Self {
         calib::cpu_model()
     }
@@ -97,6 +99,7 @@ pub struct EnergyModel {
 }
 
 impl EnergyModel {
+    /// The calibrated PYNQ-Z1 board power model ([`calib`] constants).
     pub fn pynq() -> Self {
         calib::energy_model()
     }

@@ -12,6 +12,9 @@ pub struct SimTime(pub u64);
 
 impl SimTime {
     pub const ZERO: SimTime = SimTime(0);
+    /// The far-future sentinel (used e.g. as the effective deadline of
+    /// a request without an SLO under deadline-ordered scheduling).
+    pub const MAX: SimTime = SimTime(u64::MAX);
 
     pub fn ps(v: u64) -> Self {
         SimTime(v)

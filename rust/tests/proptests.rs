@@ -278,8 +278,10 @@ fn prop_coordinator_matches_single_driver_path() {
             Arc::new(random_convnet(&mut rng, "net_a")),
             Arc::new(random_convnet(&mut rng, "net_b")),
         ];
-        let mut cfg = CoordinatorConfig::default(); // 2 SA + 1 VM + 1 CPU
-        cfg.queue_depth = 64;
+        let cfg = CoordinatorConfig {
+            queue_depth: 64,
+            ..CoordinatorConfig::default() // 2 SA + 1 VM + 1 CPU
+        };
         let mut coord = Coordinator::new(cfg);
         let mut inputs = Vec::new();
         for i in 0..5usize {
@@ -301,6 +303,155 @@ fn prop_coordinator_matches_single_driver_path() {
                 "seed {seed} request {id}: coordinator diverged from single driver"
             );
         }
+    }
+}
+
+/// Property: scheduling policy is functionally invisible — for ANY
+/// request stream, all three shipped policies (FIFO, deadline-EDF,
+/// EDF + admission control) produce bit-identical outputs in BOTH
+/// exec modes (modeled discrete-event and OS threads), and the
+/// modeled-mode EDF service order is deterministic across reruns.
+#[test]
+fn prop_policies_agree_across_exec_modes() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{
+        AdmissionPolicy, Coordinator, CoordinatorConfig, DeadlinePolicy, ExecMode, FifoPolicy,
+        SchedulePolicy,
+    };
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    // one deterministic stream: (model index, input, slo)
+    struct Stream {
+        nets: [Arc<Graph>; 2],
+        items: Vec<(usize, Tensor, Option<SimTime>)>,
+        gaps: Vec<u64>,
+    }
+
+    fn build_stream(seed: u64) -> Stream {
+        let mut rng = Rng::new(seed * 0xed5);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let mut items = Vec::new();
+        let mut gaps = Vec::new();
+        for i in 0..6usize {
+            let which = (rng.next() % 2) as usize;
+            let g = &nets[which];
+            let n: usize = g.input_shape.iter().product();
+            let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+            // generous SLOs (seconds of modeled time): EDF gets real
+            // deadline diversity, admission control sheds nothing, so
+            // the accepted set is identical across policies
+            let slo = if i % 3 == 2 {
+                None
+            } else {
+                Some(SimTime::ms(2_000 + (rng.next() % 8) * 500))
+            };
+            items.push((which, input, slo));
+            gaps.push(50 + rng.next() % 3000);
+        }
+        Stream { nets, items, gaps }
+    }
+
+    fn serve(
+        stream: &Stream,
+        policy: Arc<dyn SchedulePolicy>,
+        mode: ExecMode,
+    ) -> Vec<(u64, Vec<i8>)> {
+        let cfg = CoordinatorConfig {
+            queue_depth: 64,
+            exec_mode: mode,
+            policy,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg);
+        for ((which, input, slo), gap) in stream.items.iter().zip(&stream.gaps) {
+            let g = stream.nets[*which].clone();
+            match slo {
+                Some(s) => coord.submit_with_slo(g, input.clone(), *s).expect("admitted"),
+                None => coord.submit(g, input.clone()).expect("admitted"),
+            };
+            coord.advance(SimTime::us(*gap));
+        }
+        let mut done = coord.run_until_idle();
+        assert_eq!(done.len(), stream.items.len());
+        done.sort_by_key(|c| c.id);
+        done.into_iter().map(|c| (c.id, c.output.data)).collect()
+    }
+
+    for seed in 1..=4u64 {
+        let stream = build_stream(seed);
+        let reference = serve(&stream, Arc::new(FifoPolicy), ExecMode::Modeled);
+        let policies: [Arc<dyn SchedulePolicy>; 3] = [
+            Arc::new(FifoPolicy),
+            Arc::new(DeadlinePolicy),
+            Arc::new(AdmissionPolicy),
+        ];
+        for policy in &policies {
+            for mode in [ExecMode::Modeled, ExecMode::Threaded] {
+                let got = serve(&stream, policy.clone(), mode);
+                assert_eq!(
+                    got, reference,
+                    "seed {seed}: outputs diverged under {policy:?} / {mode}"
+                );
+            }
+        }
+        // modeled-mode EDF service order is deterministic: identical
+        // (id, worker, started) sequences on a rerun
+        let order = || {
+            let cfg = CoordinatorConfig {
+                queue_depth: 64,
+                policy: Arc::new(DeadlinePolicy),
+                ..CoordinatorConfig::default()
+            };
+            let mut coord = Coordinator::new(cfg);
+            for ((which, input, slo), gap) in stream.items.iter().zip(&stream.gaps) {
+                let g = stream.nets[*which].clone();
+                match slo {
+                    Some(s) => coord.submit_with_slo(g, input.clone(), *s).expect("admitted"),
+                    None => coord.submit(g, input.clone()).expect("admitted"),
+                };
+                coord.advance(SimTime::us(*gap));
+            }
+            coord
+                .run_until_idle()
+                .iter()
+                .map(|c| (c.id, c.worker, c.started))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(order(), order(), "seed {seed}: modeled EDF order not deterministic");
     }
 }
 
