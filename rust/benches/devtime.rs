@@ -54,7 +54,10 @@ fn main() {
         params.synthesis.as_secs_f64() / params.compile.as_secs_f64()
     );
 
-    println!("\n{:>6} {:>7} | {:>12} {:>12} {:>12} | {:>8}", "#sim", "#synth", "SECDA (Eq.1)", "synth-only", "full-sys sim", "speedup");
+    println!(
+        "\n{:>6} {:>7} | {:>12} {:>12} {:>12} | {:>8}",
+        "#sim", "#synth", "SECDA (Eq.1)", "synth-only", "full-sys sim", "speedup"
+    );
     for (n_sim, n_synth) in [(10u64, 1u64), (20, 2), (50, 3), (100, 5)] {
         let e1 = devtime::eq1_secda(&params, n_sim, n_synth);
         let e2 = devtime::eq2_synth_only(&params, n_sim, n_synth);

@@ -15,8 +15,14 @@
 //!   (`ExecMode::Threaded`): wall req/s is *real* host throughput and
 //!   should scale with the worker count on a multi-core machine.
 //!
+//! The modeled section ends with an **elastic** sweep: the phase-shift
+//! workload (deep-K conv bursts, then FC bursts) served by the
+//! static-best pool, the static-worst pool, and an elastic pool that
+//! starts on the wrong bitstream and must reprovision itself
+//! ([`secda::elastic`]): req/s, p99, SLO attainment and swaps taken.
+//!
 //! Run: `cargo bench --bench serving`
-//! Restrict to one mode:  `-- modeled` or `-- threaded`
+//! Restrict:  `-- modeled`, `-- threaded` or `-- elastic`
 //! Add a heavier MobileNetV1 sweep with: `cargo bench --bench serving -- full`
 
 use std::sync::Arc;
@@ -26,9 +32,10 @@ use secda::coordinator::{
     AdmissionPolicy, Coordinator, CoordinatorConfig, DeadlinePolicy, ExecMode, FifoPolicy,
     SchedulePolicy, SubmitError,
 };
+use secda::elastic::ElasticConfig;
 use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::models;
-use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
 use secda::framework::quant::QParams;
 use secda::framework::tensor::Tensor;
 use secda::sysc::SimTime;
@@ -315,6 +322,178 @@ fn batch_window_sweep(g: &Arc<Graph>, n_requests: usize) {
     println!();
 }
 
+/// Deep-K conv model for the elastic sweep's day phase: the conv GEMM
+/// is (64, 4608, 196) — K=4608 exceeds the paper VM's local buffers,
+/// so a VM pool serves it at CPU-fallback speed while the SA runs it
+/// on fabric.
+fn deep_cam() -> Graph {
+    let mut st = 0xe1a5u64;
+    let cin = 512;
+    let cout = 64;
+    let mut b = GraphBuilder::new("deep_cam", vec![1, 14, 14, cin], QParams::new(0.05, 0));
+    let conv = Conv2d {
+        name: "c1".into(),
+        cout,
+        kh: 3,
+        kw: 3,
+        cin,
+        stride: 1,
+        pad: 1,
+        weights: (0..cout * 9 * cin)
+            .map(|_| (xorshift(&mut st) & 0xff) as u8 as i8)
+            .collect(),
+        bias: vec![5; cout],
+        w_scales: vec![0.02; cout],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c = b.push(Op::Conv(conv), vec![b.input()]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+/// Fabric-neutral MLP for the elastic sweep's night phase (FC layers
+/// only — the paper accelerates convolutions, so no composition is
+/// better than any other here).
+fn head_mlp() -> Graph {
+    let mut st = 0x3147u64;
+    let feat = 1024;
+    let mut b = GraphBuilder::new("head_mlp", vec![1, feat], QParams::new(0.05, 0));
+    let mut prev = b.input();
+    for i in 0..3 {
+        let fc = FullyConnected {
+            name: format!("fc{i}"),
+            in_features: feat,
+            out_features: feat,
+            weights: (0..feat * feat)
+                .map(|_| (xorshift(&mut st) & 0xff) as u8 as i8)
+                .collect(),
+            bias: vec![3; feat],
+            w_scale: 0.02,
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+        };
+        prev = b.push(Op::Fc(fc), vec![prev]);
+    }
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![prev]);
+    b.finish(s)
+}
+
+struct ElasticStats {
+    throughput: f64,
+    p99: SimTime,
+    attainment: f64,
+    swaps: u64,
+    host_ms: f64,
+}
+
+/// Replay the phase-shift stream (deep-K conv bursts, then FC bursts,
+/// every request under one SLO) against a pool configuration. Bursts
+/// drain to idle — the boundary where an elastic controller evaluates.
+fn serve_phase_shift(cfg: CoordinatorConfig, slo: SimTime) -> ElasticStats {
+    let day = Arc::new(deep_cam());
+    let night = Arc::new(head_mlp());
+    let mut coord = Coordinator::new(cfg);
+    let mut st = 0x5eedu64;
+    let t0 = Instant::now();
+    let phases: [(&Arc<Graph>, &[usize]); 2] = [(&day, &[4, 8, 8]), (&night, &[8])];
+    for (model, bursts) in phases {
+        for &burst in bursts {
+            for _ in 0..burst {
+                let input = image(model, &mut st);
+                coord
+                    .submit_with_slo((*model).clone(), input, slo)
+                    .expect("queue sized for the stream");
+                coord.advance(SimTime::ms(25));
+            }
+            coord.run_until_idle();
+        }
+        coord.advance(SimTime::ms(50));
+    }
+    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let m = coord.metrics();
+    ElasticStats {
+        throughput: m.throughput_rps(),
+        p99: m.latency_pct(0.99),
+        attainment: m.slo_attainment(),
+        swaps: coord.elastic_history().len() as u64,
+        host_ms,
+    }
+}
+
+/// Static-best vs elastic vs static-worst at the phase-shift workload.
+/// The elastic pool starts on the *wrong* bitstream (VM under deep-K
+/// conv traffic) and must earn its way back via a planner swap; the
+/// static pools show the ceiling and the floor it moves between.
+fn elastic_sweep() {
+    let slo = SimTime::ms(900);
+    println!(
+        "--- elastic reprovisioning (deep-K conv bursts then FC bursts, SLO {slo}) ---"
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>7} {:>7} {:>9}",
+        "pool", "req/s", "p99", "SLO%", "swaps", "host ms"
+    );
+    let base = CoordinatorConfig {
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    };
+    let elastic_cfg = ElasticConfig {
+        eval_interval: SimTime::ms(100),
+        window: SimTime::ms(2_500),
+        min_samples: 4,
+        hysteresis: SimTime::ms(10),
+        max_swaps: 1,
+        cpu_max: 0,
+        ..ElasticConfig::default()
+    };
+    let runs: [(&str, CoordinatorConfig); 3] = [
+        (
+            "static 1xSA (best)",
+            CoordinatorConfig {
+                sa_workers: 1,
+                vm_workers: 0,
+                cpu_workers: 0,
+                ..base.clone()
+            },
+        ),
+        (
+            "elastic (starts VM)",
+            CoordinatorConfig {
+                sa_workers: 0,
+                vm_workers: 1,
+                cpu_workers: 0,
+                elastic: Some(elastic_cfg),
+                ..base.clone()
+            },
+        ),
+        (
+            "static 1xVM (worst)",
+            CoordinatorConfig {
+                sa_workers: 0,
+                vm_workers: 1,
+                cpu_workers: 0,
+                ..base
+            },
+        ),
+    ];
+    for (label, cfg) in runs {
+        let s = serve_phase_shift(cfg, slo);
+        println!(
+            "{:<22} {:>10.2} {:>10} {:>6.1}% {:>7} {:>9.0}",
+            label,
+            s.throughput,
+            format!("{}", s.p99),
+            100.0 * s.attainment,
+            s.swaps,
+            s.host_ms
+        );
+    }
+    println!();
+}
+
 fn mobilenet_sweep() {
     println!("--- MobileNetV1 pool scaling (8 requests, 30 ms inter-arrival) ---");
     let g = Arc::new(models::by_name("mobilenet_v1").expect("model"));
@@ -337,14 +516,17 @@ fn mobilenet_sweep() {
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let only = |m: &str| args.iter().any(|a| a == m);
-    let both = !only("modeled") && !only("threaded");
+    let both = !only("modeled") && !only("threaded") && !only("elastic");
     println!("=== serving benchmarks ===\n");
     let g = Arc::new(edge_cam());
-    if both || only("modeled") {
+    if both || only("modeled") || only("elastic") {
         println!("== ExecMode::Modeled (deterministic, modeled PYNQ-Z1 time) ==\n");
-        pool_scaling(&g, 96);
-        batch_window_sweep(&g, 48);
-        policy_sweep(&g, 64);
+        if !only("elastic") {
+            pool_scaling(&g, 96);
+            batch_window_sweep(&g, 48);
+            policy_sweep(&g, 64);
+        }
+        elastic_sweep();
     }
     if both || only("threaded") {
         println!("== ExecMode::Threaded (OS threads, host wall-clock) ==\n");
@@ -353,6 +535,8 @@ fn main() {
     if only("full") {
         mobilenet_sweep();
     } else {
-        println!("(run with `-- full` for the MobileNetV1 sweep; `-- modeled` / `-- threaded` to restrict)");
+        println!(
+            "(run with `-- full` for the MobileNetV1 sweep; `-- modeled` / `-- threaded` / `-- elastic` to restrict)"
+        );
     }
 }

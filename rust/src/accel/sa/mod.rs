@@ -285,7 +285,9 @@ impl Module<Msg> for SystolicArray {
                     let j = r.jobs[job];
                     let (k, n) = (r.req.k, r.req.n);
                     let mut acc = vec![0i32; (j.m1 - j.m0) * n];
-                    gemm::accumulate_rows(&r.req.weights, &r.req.inputs, j.m0, j.m1, k, n, &mut acc);
+                    gemm::accumulate_rows(
+                        &r.req.weights, &r.req.inputs, j.m0, j.m1, k, n, &mut acc,
+                    );
                     let cycles = r.cfg.array.stripe_compute_cycles(k, n);
                     r.report.compute_cycles += cycles;
                     r.pending_acc[job] = Some(acc);

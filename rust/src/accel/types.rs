@@ -37,7 +37,14 @@ pub struct GemmRequest {
 }
 
 impl GemmRequest {
-    pub fn new(m: usize, k: usize, n: usize, weights: Vec<i8>, inputs: Vec<i8>, params: QGemmParams) -> Self {
+    pub fn new(
+        m: usize,
+        k: usize,
+        n: usize,
+        weights: Vec<i8>,
+        inputs: Vec<i8>,
+        params: QGemmParams,
+    ) -> Self {
         Self::from_shared(m, k, n, Arc::new(weights), Arc::new(inputs), params)
     }
 

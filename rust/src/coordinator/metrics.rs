@@ -52,6 +52,14 @@ pub struct ServingMetrics {
     /// Requests an idle worker stole from a sibling's queue (modeled
     /// mode counts stolen requests; threaded mode counts stolen runs).
     pub steals: u64,
+    /// Pool reconfigurations applied ([`crate::elastic`] swaps plus
+    /// any hand-driven [`crate::coordinator::Coordinator::reconfigure`]
+    /// calls).
+    pub reconfigs: u64,
+    /// Total modeled bitstream-load time charged across those
+    /// reconfigurations (swapped-in workers start late by their share
+    /// of it).
+    pub reconfig_time: SimTime,
     /// End-to-end modeled latency (finish - arrival) per request.
     latencies: Vec<SimTime>,
     /// Queue wait (start - arrival) per request.
@@ -90,6 +98,13 @@ impl ServingMetrics {
     /// Count an admission-control shed (predicted deadline miss).
     pub fn record_shed(&mut self) {
         self.shed_predicted += 1;
+    }
+
+    /// Count one applied pool reconfiguration and its modeled
+    /// bitstream-load cost.
+    pub fn record_reconfig(&mut self, cost: SimTime) {
+        self.reconfigs += 1;
+        self.reconfig_time += cost;
     }
 
     /// Record one dispatch round.
@@ -243,10 +258,18 @@ impl ServingMetrics {
         } else {
             String::new()
         };
+        let reconfig = if self.reconfigs > 0 {
+            format!(
+                "; {} reconfigs ({} bitstream time)",
+                self.reconfigs, self.reconfig_time
+            )
+        } else {
+            String::new()
+        };
         format!(
             "served {}/{} requests ({} rejected) in {} makespan -> {:.2} req/s; \
              latency p50 {} p99 {}; wait p50 {} max {}; \
-             {} batches (mean size {:.2}), {} steals, queue peak {}{}{}",
+             {} batches (mean size {:.2}), {} steals, queue peak {}{}{}{}",
             self.completed,
             self.submitted,
             self.rejected,
@@ -261,6 +284,7 @@ impl ServingMetrics {
             self.steals,
             self.queue_peak,
             slo,
+            reconfig,
             wall,
         )
     }
@@ -325,6 +349,17 @@ mod tests {
         m.record_request(SimTime::ms(100), SimTime::ms(100), SimTime::ms(110), None);
         m.record_wall(Duration::from_millis(5), 1);
         assert!((m.wall_throughput_rps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconfig_accounting() {
+        let mut m = ServingMetrics::default();
+        assert!(!m.summary().contains("reconfigs"), "{}", m.summary());
+        m.record_reconfig(SimTime::ms(30));
+        m.record_reconfig(SimTime::ms(38));
+        assert_eq!(m.reconfigs, 2);
+        assert_eq!(m.reconfig_time, SimTime::ms(68));
+        assert!(m.summary().contains("2 reconfigs"), "{}", m.summary());
     }
 
     #[test]

@@ -25,8 +25,15 @@
 //!   [`DeadlinePolicy`] for EDF, [`AdmissionPolicy`] for predictive
 //!   load shedding), backed by the unified [`CostModel`];
 //! * [`metrics`] — latency percentiles, throughput, utilization,
-//!   batching, stealing and SLO telemetry, all in modeled PYNQ-Z1 time
-//!   (plus host wall-clock for the threaded mode);
+//!   batching, stealing, SLO and reconfiguration telemetry, all in
+//!   modeled PYNQ-Z1 time (plus host wall-clock for the threaded
+//!   mode);
+//! * [`crate::elastic`] — traffic-aware pool reconfiguration: when
+//!   [`CoordinatorConfig::elastic`] is set, an elastic controller
+//!   observes completed traffic and swaps the pool composition (which
+//!   bitstream the fabric holds, how many CPU workers ride along)
+//!   through [`Coordinator::reconfigure`] whenever the projected win
+//!   amortizes the modeled bitstream-load cost;
 //! * [`threaded`] — the OS-thread worker loop behind
 //!   [`ExecMode::Threaded`]: a shared injector queue, per-worker
 //!   deques, work stealing, and a clean scope-join shutdown.
@@ -149,6 +156,13 @@ pub struct CoordinatorConfig {
     /// [`FifoPolicy`] reproduces the pre-policy coordinator
     /// bit-for-bit; see [`DeadlinePolicy`] and [`AdmissionPolicy`].
     pub policy: Arc<dyn SchedulePolicy>,
+    /// Traffic-aware pool reconfiguration ([`crate::elastic`]): when
+    /// set, the coordinator owns an elastic controller that observes
+    /// completed traffic and, at drain boundaries, may swap the pool
+    /// composition (which design the fabric holds, how many CPU
+    /// workers ride along) through [`Coordinator::reconfigure`].
+    /// `None` (the default) keeps the pool exactly as constructed.
+    pub elastic: Option<crate::elastic::ElasticConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -165,6 +179,7 @@ impl Default for CoordinatorConfig {
             compile_cost: SimTime::ms(25),
             exec_mode: ExecMode::Modeled,
             policy: Arc::new(FifoPolicy),
+            elastic: None,
         }
     }
 }
@@ -190,6 +205,13 @@ impl CoordinatorConfig {
     /// The same configuration with a different [`SchedulePolicy`].
     pub fn with_policy(mut self, policy: Arc<dyn SchedulePolicy>) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// The same configuration with elastic pool reconfiguration
+    /// enabled ([`crate::elastic::ElasticConfig`]).
+    pub fn with_elastic(mut self, elastic: crate::elastic::ElasticConfig) -> Self {
+        self.elastic = Some(elastic);
         self
     }
 }
@@ -219,6 +241,9 @@ pub struct InferenceRequest {
 pub struct Completion {
     /// The request id this completion answers.
     pub id: u64,
+    /// The model the request ran (graph identity; the elastic
+    /// estimator folds its GEMM shapes into the traffic profile).
+    pub model: Arc<Graph>,
     /// Pool worker that served it.
     pub worker: usize,
     /// Modeled arrival time (copied from the request).
@@ -309,12 +334,16 @@ impl std::error::Error for SubmitError {}
 /// scheduler ([`ExecMode::Modeled`]) or the OS-thread worker loop
 /// ([`ExecMode::Threaded`]).
 pub struct Coordinator {
-    /// The policy this coordinator was built with.
+    /// The policy this coordinator was built with. The worker counts
+    /// track the *live* composition: [`Coordinator::reconfigure`]
+    /// updates them when the elastic layer swaps the pool.
     pub cfg: CoordinatorConfig,
     pool: WorkerPool,
     batcher: pool::SharedBatcher,
     check: SharedCrossCheck,
     metrics: ServingMetrics,
+    /// Traffic-aware reprovisioning, when configured.
+    elastic: Option<crate::elastic::ElasticController>,
     /// The modeled "now": arrivals are stamped with it; `advance`
     /// moves it (load generation), `run_until_idle` never rewinds it.
     now: SimTime,
@@ -333,12 +362,16 @@ impl Coordinator {
         let batcher = Arc::new(Mutex::new(BucketBatcher::new(buckets, cfg.compile_cost)));
         let check: SharedCrossCheck = Arc::new(Mutex::new(None));
         let pool = WorkerPool::build(&cfg, batcher.clone(), check.clone());
+        let elastic = cfg.elastic.clone().map(|e| {
+            crate::elastic::ElasticController::new(e, cfg.driver.threads, cfg.driver.sync_overhead)
+        });
         Coordinator {
             cfg,
             pool,
             batcher,
             check,
             metrics: ServingMetrics::default(),
+            elastic,
             now: SimTime::ZERO,
             next_id: 0,
         }
@@ -482,7 +515,69 @@ impl Coordinator {
         if let Some(last) = done.iter().map(|c| c.finished).max() {
             self.now = self.now.max(last);
         }
+        // elastic evaluation at the drain boundary: the pool is idle
+        // (threaded workers have joined), so a reconfiguration never
+        // races in-flight work in either exec mode
+        if let Some(mut ctrl) = self.elastic.take() {
+            for c in &done {
+                ctrl.observe(c);
+            }
+            if let Some(plan) = ctrl.evaluate(self.now, self.composition(), &self.pool) {
+                self.reconfigure(&plan);
+                ctrl.commit(&plan, self.now);
+            }
+            self.elastic = Some(ctrl);
+        }
         done
+    }
+
+    /// The pool's live composition (workers per kind).
+    pub fn composition(&self) -> crate::elastic::Composition {
+        let mut c = crate::elastic::Composition::default();
+        for w in &self.pool.workers {
+            match w.kind {
+                WorkerKind::Sa => c.sa += 1,
+                WorkerKind::Vm => c.vm += 1,
+                WorkerKind::Cpu => c.cpu += 1,
+            }
+        }
+        c
+    }
+
+    /// Migrate the pool to `plan.to`: retire surplus workers (their
+    /// queued requests are re-placed on the surviving pool through the
+    /// configured policy — an admitted request is never dropped or
+    /// re-subjected to admission control), spawn the missing
+    /// instances, and delay every swapped-in accelerator by its
+    /// modeled bitstream-load time ([`crate::synth::reconfig_time`]).
+    /// Works identically in both exec modes — threaded workers are
+    /// per-drain, so they park at the drain's scope join and respawn
+    /// on the reconfigured pool at the next drain.
+    ///
+    /// Normally driven by the elastic controller, but public: a caller
+    /// may apply a hand-built plan (e.g. scheduled maintenance to a
+    /// CPU-only pool).
+    pub fn reconfigure(&mut self, plan: &crate::elastic::ReconfigPlan) {
+        let displaced = self.pool.apply_composition(
+            &plan.to,
+            &self.cfg,
+            self.batcher.clone(),
+            self.check.clone(),
+            self.now,
+        );
+        for req in displaced {
+            self.pool.migrate(req, self.cfg.policy.as_ref());
+        }
+        self.cfg.sa_workers = plan.to.sa;
+        self.cfg.vm_workers = plan.to.vm;
+        self.cfg.cpu_workers = plan.to.cpu;
+        self.metrics.record_reconfig(plan.reconfig_cost);
+    }
+
+    /// The composition timeline: every reconfiguration the elastic
+    /// controller committed (empty without an elastic config).
+    pub fn elastic_history(&self) -> &[crate::elastic::SwapRecord] {
+        self.elastic.as_ref().map(|c| c.history()).unwrap_or(&[])
     }
 
     /// Accumulated serving telemetry.
@@ -621,6 +716,38 @@ pub(crate) mod testutil {
                 .map(|_| (rnd(&mut st) & 0xff) as u8 as i8)
                 .collect(),
             bias: vec![7; cout],
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    /// A convnet whose single conv GEMM is (cout, 4608, 49): K = 4608
+    /// exceeds the paper VM's local buffers (`max_k` 4096), so a VM
+    /// worker's driver falls back to the CPU on it while the SA runs
+    /// it on fabric — the shape class the elastic tests provision
+    /// around.
+    pub(crate) fn deep_convnet(name: &str, cout: usize, seed: u64) -> Graph {
+        let mut st = seed.max(1);
+        let cin = 512;
+        let mut b = GraphBuilder::new(name, vec![1, 7, 7, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: (0..cout * 9 * cin)
+                .map(|_| (rnd(&mut st) & 0xff) as u8 as i8)
+                .collect(),
+            bias: vec![3; cout],
             w_scales: vec![0.02; cout],
             out_qp: QParams::new(0.05, 0),
             act: Activation::Relu,
@@ -837,6 +964,96 @@ mod tests {
         let b = coord.batcher();
         assert_eq!(b.compiles, 1);
         assert_eq!(b.hits, 5);
+    }
+
+    #[test]
+    fn manual_reconfigure_migrates_queued_requests() {
+        use crate::elastic::{Composition, ReconfigPlan};
+        let g = Arc::new(convnet("net", 16, 31));
+        let mut coord = Coordinator::new(CoordinatorConfig::sa_pool(2));
+        let mut ids = Vec::new();
+        for i in 0..6u64 {
+            ids.push(coord.submit(g.clone(), image(&g, 200 + i)).unwrap());
+        }
+        let from = coord.composition();
+        assert_eq!(from, Composition::new(2, 0, 0));
+        let plan = ReconfigPlan {
+            from,
+            to: Composition::new(1, 0, 1),
+            projected_current: SimTime::ZERO,
+            projected_best: SimTime::ZERO,
+            reconfig_cost: SimTime::ms(30),
+            swaps: 1,
+        };
+        coord.reconfigure(&plan);
+        assert_eq!(coord.composition(), Composition::new(1, 0, 1));
+        assert_eq!(coord.cfg.sa_workers, 1);
+        assert_eq!(coord.cfg.cpu_workers, 1);
+        assert_eq!(coord.queued(), 6, "a queued request was lost in migration");
+        assert_eq!(coord.metrics().reconfigs, 1);
+        assert_eq!(coord.metrics().reconfig_time, SimTime::ms(30));
+        let done = coord.run_until_idle();
+        let mut got: Vec<u64> = done.iter().map(|c| c.id).collect();
+        got.sort();
+        assert_eq!(got, ids, "every admitted request completes exactly once");
+        for c in &done {
+            let reference = cpu_reference(&g, &image(&g, 200 + c.id));
+            assert_eq!(c.output.data, reference.data, "request {} diverged", c.id);
+        }
+    }
+
+    #[test]
+    fn elastic_controller_swaps_vm_for_sa_under_conv_load() {
+        use super::testutil::deep_convnet;
+        use crate::elastic::{Composition, ElasticConfig};
+        // Deliberately mis-provisioned: the fabric holds the VM while
+        // the traffic is deep-K conv (K=4608 > the VM's max_k), which
+        // the VM driver can only serve at CPU-fallback speed.
+        let g = Arc::new(deep_convnet("deep", 96, 33));
+        let cfg = CoordinatorConfig {
+            sa_workers: 0,
+            vm_workers: 1,
+            cpu_workers: 0,
+            queue_depth: 64,
+            elastic: Some(ElasticConfig {
+                eval_interval: SimTime::ZERO,
+                window: SimTime::ms(60_000),
+                min_samples: 4,
+                hysteresis: SimTime::ms(1),
+                max_swaps: 1,
+                cpu_max: 0,
+                ..ElasticConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg);
+        assert_eq!(coord.composition(), Composition::new(0, 1, 0));
+        // wave 1: served by the mis-provisioned VM, observed by the
+        // controller
+        for i in 0..4u64 {
+            coord.submit(g.clone(), image(&g, 300 + i)).unwrap();
+        }
+        let wave1 = coord.run_until_idle();
+        assert_eq!(wave1.len(), 4);
+        // the drain boundary evaluated the planner: bitstream swapped
+        assert_eq!(coord.composition(), Composition::new(1, 0, 0));
+        let first = &coord.elastic_history()[0];
+        assert_eq!(first.from, Composition::new(0, 1, 0));
+        assert_eq!(first.to, Composition::new(1, 0, 0));
+        assert!(first.projected_win > first.reconfig_cost);
+        assert_eq!(coord.metrics().reconfigs, 1);
+        assert_eq!(coord.cfg.sa_workers, 1);
+        // wave 2 on the SA: correct bits, and no further churn
+        for i in 0..4u64 {
+            coord.submit(g.clone(), image(&g, 400 + i)).unwrap();
+        }
+        let wave2 = coord.run_until_idle();
+        assert_eq!(wave2.len(), 4);
+        assert_eq!(coord.elastic_history().len(), 1, "swap churn");
+        for c in &wave2 {
+            let reference = cpu_reference(&g, &image(&g, 400 + (c.id - 4)));
+            assert_eq!(c.output.data, reference.data, "request {} diverged", c.id);
+        }
     }
 
     #[test]

@@ -32,11 +32,13 @@ use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::Arc;
 
+use crate::accel::components::{SaArrayModel, VmUnitModel};
+use crate::accel::{SaConfig, VmConfig};
 use crate::framework::graph::Graph;
 use crate::framework::models::gemm_shapes;
 use crate::gemm::mac_count;
 use crate::perf::CpuModel;
-use crate::sysc::SimTime;
+use crate::sysc::{Clock, SimTime};
 
 use super::pool::{Worker, WorkerKind};
 use super::InferenceRequest;
@@ -94,12 +96,6 @@ impl ModeledCost {
     }
 }
 
-/// Analytic accelerator prior: both paper designs peak at 256
-/// MAC/cycle @ 100 MHz = 25.6 GMAC/s; sustained throughput on real
-/// layer shapes sits near half of peak (drain bubbles, edge tiles).
-/// Only a *prior* — the first observed simulator run replaces it.
-const ACCEL_SUSTAINED_MACS_PER_SEC: f64 = 12.8e9;
-
 /// Analytic DMA prior: one AXI HP port at ~400 MB/s effective.
 const ACCEL_DMA_BYTES_PER_SEC: f64 = 400.0e6;
 
@@ -110,15 +106,33 @@ const ACCEL_DMA_BYTES_PER_SEC: f64 = 400.0e6;
 /// (`perf::calib`), the accelerator side returns the best observed
 /// simulator total for the shape when one exists ("measure once, then
 /// pick the winner" — the simulation-in-the-loop partitioning SECDA
-/// enables) and an analytic roofline prior otherwise. The
-/// [`super::OffloadPlanner`], the admission policies and the
-/// backlog predictions all consult this struct — never `perf`
+/// enables) and an analytic prior otherwise. The prior is *design
+/// aware*: it runs the paper designs' own component cycle models
+/// ([`SaArrayModel`], [`VmUnitModel`]) over the shape, so the SA's
+/// column parallelism, the VM's serialized input fetch and the VM's
+/// `max_k` local-buffer cliff (beyond which the driver falls back to
+/// the CPU, §IV-E4) are all visible to scheduling *before* anything
+/// has run — this is what lets the elastic planner
+/// ([`crate::elastic`]) rank pool compositions against a traffic
+/// profile. The [`super::OffloadPlanner`], the admission policies and
+/// the backlog predictions all consult this struct — never `perf`
 /// directly.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     cpu: CpuModel,
     threads: usize,
     sync_overhead: SimTime,
+    /// Cycle model of the paper SA array (prior for [`WorkerKind::Sa`]).
+    sa_array: SaArrayModel,
+    /// Cycle model of one paper VM GEMM unit.
+    vm_unit: VmUnitModel,
+    /// GEMM units in the paper VM design (N is split across them).
+    vm_units: usize,
+    /// Largest K a paper-VM job holds natively; beyond it the driver
+    /// falls back to CPU gemmlowp (§IV-E4).
+    vm_max_k: usize,
+    /// Fabric clock both paper designs run at.
+    accel_clock: Clock,
     /// Best observed accelerator total per (shape, weights_resident).
     observed: HashMap<(GemmShape, bool), SimTime>,
 }
@@ -127,10 +141,17 @@ impl CostModel {
     /// A cost model for a worker with `threads` CPU threads and the
     /// given per-offload synchronization overhead floor.
     pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
+        let sa = SaConfig::paper();
+        let vm = VmConfig::paper();
         CostModel {
             cpu: CpuModel::pynq_a9(),
             threads,
             sync_overhead,
+            sa_array: sa.array,
+            vm_unit: vm.unit,
+            vm_units: vm.units,
+            vm_max_k: vm.max_k(),
+            accel_clock: Clock::from_mhz(sa.clock_mhz),
             observed: HashMap::new(),
         }
     }
@@ -159,6 +180,17 @@ impl CostModel {
                 overhead: SimTime::ZERO,
                 measured: false,
             },
+            WorkerKind::Vm if shape.k > self.vm_max_k => {
+                // the design cannot hold the reduction natively: the
+                // driver runs this GEMM on the CPU (§IV-E4), so a VM
+                // worker serves it at gemmlowp speed with no offload
+                // overhead
+                ModeledCost {
+                    busy: self.cpu.gemm_time(shape.macs(), self.threads),
+                    overhead: SimTime::ZERO,
+                    measured: false,
+                }
+            }
             WorkerKind::Sa | WorkerKind::Vm => {
                 match self.observed.get(&(shape, weights_resident)) {
                     Some(&t) => ModeledCost {
@@ -167,17 +199,40 @@ impl CostModel {
                         measured: true,
                     },
                     None => {
-                        let secs = shape.macs() as f64 / ACCEL_SUSTAINED_MACS_PER_SEC
-                            + shape.dma_bytes(weights_resident) as f64
-                                / ACCEL_DMA_BYTES_PER_SEC;
+                        let cycles = self.accel_compute_cycles(shape, kind);
+                        let compute = self.accel_clock.cycles(cycles);
+                        let dma_secs = shape.dma_bytes(weights_resident) as f64
+                            / ACCEL_DMA_BYTES_PER_SEC;
                         ModeledCost {
-                            busy: SimTime::ps((secs * 1e12).round() as u64),
+                            busy: compute + SimTime::ps((dma_secs * 1e12).round() as u64),
                             overhead: self.sync_overhead,
                             measured: false,
                         }
                     }
                 }
             }
+        }
+    }
+
+    /// Analytic compute-cycle prior for one GEMM on a paper design:
+    /// the design's own component cycle model applied to the shape
+    /// (edge-tile padding, the SA's fill/drain skew and the VM's
+    /// serialized input fetch included). Replaced by the first
+    /// observed simulator total.
+    fn accel_compute_cycles(&self, shape: GemmShape, kind: WorkerKind) -> u64 {
+        match kind {
+            WorkerKind::Sa => {
+                let stripes = shape.m.div_ceil(self.sa_array.dim) as u64;
+                stripes * self.sa_array.stripe_compute_cycles(shape.k, shape.n)
+            }
+            WorkerKind::Vm => {
+                // N splits across the units; the wall clock is the
+                // per-unit share (all units run in parallel)
+                let n_unit = shape.n.div_ceil(self.vm_units).max(1);
+                let stripes = shape.m.div_ceil(self.vm_unit.tile_m) as u64;
+                stripes * self.vm_unit.stripe_compute_cycles(shape.k, n_unit, 1.0)
+            }
+            WorkerKind::Cpu => 0,
         }
     }
 
@@ -195,6 +250,32 @@ impl CostModel {
         self.observed.get(&(shape, weights_resident)).copied()
     }
 
+    /// Merge another model's observations into this one, keeping the
+    /// best total per (shape, residency). The elastic controller uses
+    /// this to pool what every worker of one design kind has measured
+    /// into a per-design cost view that outlives the workers
+    /// themselves (observations must survive a reconfiguration that
+    /// retires the instance that made them).
+    pub fn absorb(&mut self, other: &CostModel) {
+        for (&key, &t) in &other.observed {
+            self.observed
+                .entry(key)
+                .and_modify(|best| *best = (*best).min(t))
+                .or_insert(t);
+        }
+    }
+
+    /// Modeled per-request framework overhead (interpreter dispatch,
+    /// (de)quantization), scaled by effective thread parallelism the
+    /// way the interpreter scales it — the request-level constant
+    /// every [`CostModel::request_cost`] estimate starts from.
+    pub fn request_overhead(&self) -> SimTime {
+        let ps = (self.cpu.framework_overhead.as_ps() as f64
+            / self.cpu.eff_threads(self.threads))
+        .round() as u64;
+        SimTime::ps(ps)
+    }
+
     /// Predicted service time of one whole inference request of model
     /// `g` on a worker of the given kind: the per-inference framework
     /// overhead (scaled by effective thread parallelism, mirroring the
@@ -204,10 +285,7 @@ impl CostModel {
     /// (non-GEMM op time beyond the framework constant is ignored) but
     /// deterministic: admission verdicts must be reproducible.
     pub fn request_cost(&self, g: &Graph, kind: WorkerKind) -> SimTime {
-        let overhead_ps =
-            (self.cpu.framework_overhead.as_ps() as f64 / self.cpu.eff_threads(self.threads))
-                .round() as u64;
-        let mut t = SimTime::ps(overhead_ps);
+        let mut t = self.request_overhead();
         for (m, k, n) in gemm_shapes(g) {
             let shape = GemmShape { m, k, n };
             let cpu = self.estimate(shape, WorkerKind::Cpu).total();
@@ -436,7 +514,12 @@ mod tests {
     use crate::driver::DriverConfig;
     use crate::gemm;
 
-    fn req(id: u64, model: &Arc<Graph>, arrival: SimTime, deadline: Option<SimTime>) -> InferenceRequest {
+    fn req(
+        id: u64,
+        model: &Arc<Graph>,
+        arrival: SimTime,
+        deadline: Option<SimTime>,
+    ) -> InferenceRequest {
         InferenceRequest {
             id,
             model: model.clone(),
@@ -474,6 +557,56 @@ mod tests {
         assert_eq!(cm.observed(shape, false), Some(SimTime::us(700)));
         // residency tracked separately: still the prior
         assert!(!cm.estimate_resident(shape, WorkerKind::Sa, true).measured);
+    }
+
+    #[test]
+    fn prior_is_design_aware() {
+        let cm = CostModel::new(1, SimTime::us(150));
+        // A deep-K conv GEMM both designs can hold: the VM's
+        // serialized input fetch (no prefetch overlap, §V-B) makes its
+        // cycle prior slower than the SA's.
+        let conv = GemmShape { m: 96, k: 2304, n: 196 };
+        let sa = cm.estimate(conv, WorkerKind::Sa);
+        let vm = cm.estimate(conv, WorkerKind::Vm);
+        assert!(!sa.measured && !vm.measured);
+        assert!(
+            vm.total() > sa.total(),
+            "vm prior {} not slower than sa prior {}",
+            vm.total(),
+            sa.total()
+        );
+        // K beyond the VM local buffers (§IV-E4): the prior must price
+        // the driver's CPU fallback — gemmlowp speed, no offload
+        // overhead — while the SA still prices it as (much cheaper)
+        // fabric work.
+        let deep = GemmShape { m: 96, k: 4608, n: 196 };
+        let vm_deep = cm.estimate(deep, WorkerKind::Vm);
+        assert_eq!(vm_deep.overhead, SimTime::ZERO);
+        assert_eq!(vm_deep.busy, cm.estimate(deep, WorkerKind::Cpu).busy);
+        let sa_deep = cm.estimate(deep, WorkerKind::Sa);
+        assert!(
+            sa_deep.total().as_ps() * 4 < vm_deep.total().as_ps(),
+            "sa {} not well under vm-fallback {}",
+            sa_deep.total(),
+            vm_deep.total()
+        );
+    }
+
+    #[test]
+    fn absorb_merges_best_observations() {
+        let mut a = CostModel::new(1, SimTime::us(150));
+        let mut b = CostModel::new(1, SimTime::us(150));
+        let s = GemmShape { m: 32, k: 64, n: 32 };
+        a.observe(s, false, SimTime::us(900));
+        b.observe(s, false, SimTime::us(700));
+        b.observe(s, true, SimTime::us(500));
+        a.absorb(&b);
+        assert_eq!(a.observed(s, false), Some(SimTime::us(700)));
+        assert_eq!(a.observed(s, true), Some(SimTime::us(500)));
+        // absorbing never makes an estimate worse
+        a.observe(s, true, SimTime::us(400));
+        a.absorb(&b);
+        assert_eq!(a.observed(s, true), Some(SimTime::us(400)));
     }
 
     #[test]

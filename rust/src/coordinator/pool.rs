@@ -261,6 +261,10 @@ pub struct WorkerPool {
     /// The pool members, in `[SA.., VM.., CPU..]` construction order.
     pub workers: Vec<Worker>,
     queue_depth: usize,
+    /// Instances ever spawned on this pool (label counter: a worker
+    /// added by a reconfiguration gets a fresh label, never a retired
+    /// sibling's).
+    spawned: usize,
 }
 
 impl WorkerPool {
@@ -307,10 +311,119 @@ impl WorkerPool {
             }
         }
         assert!(!workers.is_empty(), "coordinator pool must have at least one worker");
+        let spawned = workers.len();
         WorkerPool {
             workers,
             queue_depth: cfg.queue_depth.max(1),
+            spawned,
         }
+    }
+
+    /// Rebuild the pool to a target composition (the elastic layer's
+    /// [`crate::coordinator::Coordinator::reconfigure`] core).
+    ///
+    /// Per kind, the first `target` workers are retained *with their
+    /// state* — driver instances, cost-model observations, queues and
+    /// horizons survive; surplus workers are retired and their queued
+    /// requests returned for migration; missing instances are spawned
+    /// fresh. A swapped-in accelerator becomes usable only at `now`
+    /// plus its design's modeled bitstream-load time
+    /// ([`crate::synth::reconfig_time`]); CPU workers need no fabric
+    /// and start immediately. Pool order stays `[SA.., VM.., CPU..]`
+    /// and worker ids are re-stamped to pool indices.
+    pub fn apply_composition(
+        &mut self,
+        target: &crate::elastic::Composition,
+        cfg: &CoordinatorConfig,
+        batcher: SharedBatcher,
+        check: SharedCrossCheck,
+        now: SimTime,
+    ) -> Vec<InferenceRequest> {
+        assert!(target.total() >= 1, "coordinator pool must have at least one worker");
+        let threads = cfg.driver.threads;
+        let sync = cfg.driver.sync_overhead;
+        let mut displaced = Vec::new();
+        let mut sa: Vec<Worker> = Vec::new();
+        let mut vm: Vec<Worker> = Vec::new();
+        let mut cpu: Vec<Worker> = Vec::new();
+        for mut w in std::mem::take(&mut self.workers) {
+            let (kept, cap) = match w.kind {
+                WorkerKind::Sa => (&mut sa, target.sa),
+                WorkerKind::Vm => (&mut vm, target.vm),
+                WorkerKind::Cpu => (&mut cpu, target.cpu),
+            };
+            if kept.len() < cap {
+                kept.push(w);
+            } else {
+                displaced.extend(w.queue.drain(..));
+            }
+        }
+        while sa.len() < target.sa {
+            let label = self.spawned;
+            self.spawned += 1;
+            let backend = PartitionedBackend::with_accel(
+                DriverHandle::sa(label, cfg.driver.clone()),
+                threads,
+                sync,
+                batcher.clone(),
+                check.clone(),
+            );
+            let mut w = Worker::new(0, WorkerKind::Sa, backend);
+            w.free_at = now
+                + crate::synth::reconfig_time(&crate::synth::sa_resources(
+                    &crate::accel::SaConfig::paper(),
+                ));
+            sa.push(w);
+        }
+        while vm.len() < target.vm {
+            let label = self.spawned;
+            self.spawned += 1;
+            let backend = PartitionedBackend::with_accel(
+                DriverHandle::vm(label, cfg.driver.clone()),
+                threads,
+                sync,
+                batcher.clone(),
+                check.clone(),
+            );
+            let mut w = Worker::new(0, WorkerKind::Vm, backend);
+            w.free_at = now
+                + crate::synth::reconfig_time(&crate::synth::vm_resources(
+                    &crate::accel::VmConfig::paper(),
+                ));
+            vm.push(w);
+        }
+        while cpu.len() < target.cpu {
+            let label = self.spawned;
+            self.spawned += 1;
+            let backend =
+                PartitionedBackend::cpu_only(label, threads, batcher.clone(), check.clone());
+            let mut w = Worker::new(0, WorkerKind::Cpu, backend);
+            w.free_at = now;
+            cpu.push(w);
+        }
+        self.workers = sa.into_iter().chain(vm).chain(cpu).collect();
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            w.id = i;
+        }
+        displaced
+    }
+
+    /// Re-place a request displaced by a reconfiguration. Placement
+    /// and queue order follow the policy, but admission does not run
+    /// again — the request was already admitted once — and a full pool
+    /// overflows onto the shortest queue rather than dropping it.
+    pub fn migrate(&mut self, req: InferenceRequest, policy: &dyn SchedulePolicy) {
+        let target = policy
+            .place(&self.workers, self.queue_depth, &req)
+            .unwrap_or_else(|| {
+                self.workers
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, w)| (w.queue.len(), *i))
+                    .map(|(i, _)| i)
+                    .expect("non-empty pool")
+            });
+        policy.enqueue(&mut self.workers[target].queue, req);
     }
 
     /// Requests currently queued across all workers.

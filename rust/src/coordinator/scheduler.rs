@@ -142,6 +142,7 @@ pub fn execute_batch_on(
         let finished = started + report.overall();
         done.push(Completion {
             id: req.id,
+            model: req.model,
             worker: widx,
             arrival: req.arrival,
             started,

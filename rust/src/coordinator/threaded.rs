@@ -21,6 +21,12 @@
 //!   during a drain, so termination needs no signalling. The scope
 //!   join then collects every thread before `drain` returns.
 //!
+//! Threads being per-drain is also what makes the elastic layer
+//! ([`crate::elastic`]) exec-mode-agnostic: at the drain boundary all
+//! worker threads have parked (joined), so a reconfiguration mutates
+//! the pool with no thread alive to race it, and the swapped pool's
+//! workers respawn as fresh threads at the next drain.
+//!
 //! Shared pool state is already thread-safe
 //! ([`std::sync::Arc`]`<`[`Mutex`]`<_>>` for the executable-cache
 //! model and the cross-check hook, atomics
@@ -372,6 +378,61 @@ mod tests {
         let batch = pop_batch(&mut q2, &cfg, SimTime::ZERO);
         assert_eq!(batch.len(), 1);
         assert_eq!(q2.len(), 1);
+    }
+
+    #[test]
+    fn elastic_swap_works_on_os_threads() {
+        use super::super::testutil::deep_convnet;
+        use crate::elastic::{Composition, ElasticConfig};
+        // Same scenario as the modeled-mode elastic test: a VM pool
+        // under deep-K conv traffic must swap to the SA — here with
+        // the pool on OS threads, where the swap lands between drains
+        // (threads are per-drain, so nothing races the pool surgery).
+        let g = Arc::new(deep_convnet("deep", 96, 59));
+        let serve = |elastic: bool| {
+            let cfg = CoordinatorConfig {
+                sa_workers: 0,
+                vm_workers: 1,
+                cpu_workers: 0,
+                queue_depth: 64,
+                exec_mode: ExecMode::Threaded,
+                elastic: elastic.then(|| ElasticConfig {
+                    eval_interval: SimTime::ZERO,
+                    window: SimTime::ms(60_000),
+                    min_samples: 4,
+                    hysteresis: SimTime::ms(1),
+                    max_swaps: 1,
+                    cpu_max: 0,
+                    ..ElasticConfig::default()
+                }),
+                ..CoordinatorConfig::default()
+            };
+            let mut coord = Coordinator::new(cfg);
+            let mut done = Vec::new();
+            for wave in 0..2u64 {
+                for i in 0..4u64 {
+                    coord
+                        .submit(g.clone(), image(&g, 700 + wave * 10 + i))
+                        .unwrap();
+                }
+                done.extend(coord.run_until_idle());
+            }
+            done.sort_by_key(|c| c.id);
+            let swaps = coord.elastic_history().len();
+            let comp = coord.composition();
+            (done, swaps, comp)
+        };
+        let (elastic_done, swaps, comp) = serve(true);
+        let (static_done, _, _) = serve(false);
+        assert_eq!(swaps, 1, "threaded elastic pool never swapped");
+        assert_eq!(comp, Composition::new(1, 0, 0));
+        // reconfiguration is functionally invisible: bit-identical to
+        // the static pool on every request
+        assert_eq!(elastic_done.len(), static_done.len());
+        for (e, s) in elastic_done.iter().zip(&static_done) {
+            assert_eq!(e.id, s.id);
+            assert_eq!(e.output.data, s.output.data, "request {} diverged", e.id);
+        }
     }
 
     #[test]

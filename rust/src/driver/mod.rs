@@ -50,7 +50,13 @@
 //!   ([`crate::coordinator::SchedulePolicy`]: FIFO by default,
 //!   deadline-EDF, or EDF plus predictive admission control), backed
 //!   by the unified [`crate::coordinator::CostModel`] that wraps this
-//!   driver's calibrated CPU timing.
+//!   driver's calibrated CPU timing;
+//! * `elastic` — traffic-aware pool reconfiguration
+//!   ([`crate::elastic::ElasticConfig`]): when set, the coordinator
+//!   may swap the pool composition (which design's bitstream the
+//!   fabric holds, how many CPU workers ride along) to match the
+//!   observed traffic, charging a modeled bitstream-load cost per
+//!   swapped-in instance.
 
 pub mod tiling;
 

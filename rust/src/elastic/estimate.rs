@@ -1,0 +1,265 @@
+//! The workload estimator: completed requests in, traffic profile out.
+//!
+//! The estimator keeps a sliding window of completed-request samples —
+//! each sample is the request's arrival/finish stamps, its SLO outcome
+//! and the GEMM shapes of the model it ran (resolved once per distinct
+//! graph and shared via `Arc`) — and folds the window into a
+//! [`TrafficProfile`]: per-shape demand, arrival rate and SLO
+//! pressure. The profile is everything the composition planner
+//! ([`super::plan`]) needs to rank pool compositions; no raw requests
+//! or tensors are retained.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::coordinator::{Completion, GemmShape};
+use crate::framework::graph::Graph;
+use crate::framework::models::gemm_shapes;
+use crate::sysc::SimTime;
+
+/// What the serving pool observed over the estimator window — the
+/// planner's entire view of the live workload.
+#[derive(Debug, Clone)]
+pub struct TrafficProfile {
+    /// Completed requests inside the window.
+    pub requests: usize,
+    /// Modeled span the window's samples cover (first arrival to last
+    /// finish).
+    pub span: SimTime,
+    /// Arrival rate over the window, requests per modeled second
+    /// (zero when the window holds fewer than two samples).
+    pub arrival_rate_rps: f64,
+    /// Per-GEMM-shape demand: how many times each distinct shape was
+    /// served inside the window, in first-seen order (deterministic —
+    /// the planner iterates this).
+    pub demand: Vec<(GemmShape, u64)>,
+    /// Samples that carried an SLO deadline.
+    pub slo_carrying: usize,
+    /// Deadline-carrying samples that finished past their deadline.
+    pub slo_missed: usize,
+}
+
+impl TrafficProfile {
+    /// SLO pressure in [0, 1]: share of deadline-carrying completions
+    /// that missed. Zero when nothing carried a deadline.
+    pub fn slo_pressure(&self) -> f64 {
+        if self.slo_carrying == 0 {
+            return 0.0;
+        }
+        self.slo_missed as f64 / self.slo_carrying as f64
+    }
+}
+
+/// One windowed sample (internal).
+#[derive(Debug, Clone)]
+struct Sample {
+    arrival: SimTime,
+    finished: SimTime,
+    deadline: Option<SimTime>,
+    shapes: Arc<Vec<GemmShape>>,
+}
+
+/// GEMM shapes per distinct graph, resolved once. Holding the
+/// `Arc<Graph>` pins the graph alive so pointer identity can never
+/// alias a dropped model.
+type ShapeMemo = Vec<(Arc<Graph>, Arc<Vec<GemmShape>>)>;
+
+/// Folds completed requests into a windowed [`TrafficProfile`].
+#[derive(Debug)]
+pub struct WorkloadEstimator {
+    window: SimTime,
+    samples: VecDeque<Sample>,
+    shape_memo: ShapeMemo,
+}
+
+impl WorkloadEstimator {
+    /// An estimator whose profile covers the trailing `window` of
+    /// modeled time.
+    pub fn new(window: SimTime) -> Self {
+        WorkloadEstimator {
+            window,
+            samples: VecDeque::new(),
+            shape_memo: Vec::new(),
+        }
+    }
+
+    /// Fold one completion into the window.
+    pub fn observe(&mut self, c: &Completion) {
+        self.observe_request(&c.model, c.arrival, c.finished, c.deadline);
+    }
+
+    /// Fold one completed request by its parts (what [`Self::observe`]
+    /// extracts from a [`Completion`]).
+    pub fn observe_request(
+        &mut self,
+        model: &Arc<Graph>,
+        arrival: SimTime,
+        finished: SimTime,
+        deadline: Option<SimTime>,
+    ) {
+        let shapes = self.shapes_of(model);
+        self.samples.push_back(Sample {
+            arrival,
+            finished,
+            deadline,
+            shapes,
+        });
+    }
+
+    /// Samples currently inside the estimator (before eviction).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no samples are held.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn shapes_of(&mut self, model: &Arc<Graph>) -> Arc<Vec<GemmShape>> {
+        if let Some((_, shapes)) = self
+            .shape_memo
+            .iter()
+            .find(|(g, _)| Arc::ptr_eq(g, model))
+        {
+            return shapes.clone();
+        }
+        let shapes: Vec<GemmShape> = gemm_shapes(model)
+            .into_iter()
+            .map(|(m, k, n)| GemmShape { m, k, n })
+            .collect();
+        let shapes = Arc::new(shapes);
+        self.shape_memo.push((model.clone(), shapes.clone()));
+        shapes
+    }
+
+    /// Evict samples older than the window (by finish time) and fold
+    /// the survivors into a profile. `None` when the window is empty —
+    /// the planner has nothing to plan against. Eviction is a full
+    /// retain, not a front-pop: completions are observed in drain
+    /// order (execution order under the modeled drain, id order under
+    /// the threaded one), which is *not* finish-time order, so an
+    /// expired sample can sit behind a fresher front.
+    pub fn profile(&mut self, now: SimTime) -> Option<TrafficProfile> {
+        let horizon = now.saturating_sub(self.window);
+        self.samples.retain(|s| s.finished >= horizon);
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut demand: Vec<(GemmShape, u64)> = Vec::new();
+        let mut first_arrival = SimTime::MAX;
+        let mut last_arrival = SimTime::ZERO;
+        let mut last_finish = SimTime::ZERO;
+        let mut slo_carrying = 0usize;
+        let mut slo_missed = 0usize;
+        for s in &self.samples {
+            first_arrival = first_arrival.min(s.arrival);
+            last_arrival = last_arrival.max(s.arrival);
+            last_finish = last_finish.max(s.finished);
+            if let Some(d) = s.deadline {
+                slo_carrying += 1;
+                if s.finished > d {
+                    slo_missed += 1;
+                }
+            }
+            for &shape in s.shapes.iter() {
+                match demand.iter_mut().find(|(sh, _)| *sh == shape) {
+                    Some((_, count)) => *count += 1,
+                    None => demand.push((shape, 1)),
+                }
+            }
+        }
+        let requests = self.samples.len();
+        let arrival_span = last_arrival.saturating_sub(first_arrival);
+        let arrival_rate_rps = if requests >= 2 && arrival_span > SimTime::ZERO {
+            (requests - 1) as f64 / arrival_span.as_secs_f64()
+        } else {
+            0.0
+        };
+        Some(TrafficProfile {
+            requests,
+            span: last_finish.saturating_sub(first_arrival),
+            arrival_rate_rps,
+            demand,
+            slo_carrying,
+            slo_missed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::convnet;
+
+    #[test]
+    fn window_evicts_and_aggregates() {
+        let g1 = Arc::new(convnet("net_a", 16, 3));
+        let g2 = Arc::new(convnet("net_b", 24, 5));
+        let mut est = WorkloadEstimator::new(SimTime::ms(100));
+        // two old samples that must fall out of the window
+        est.observe_request(&g1, SimTime::ZERO, SimTime::ms(1), None);
+        est.observe_request(&g1, SimTime::ms(1), SimTime::ms(2), None);
+        // three fresh ones: 2x net_a, 1x net_b
+        for (i, g) in [&g1, &g1, &g2].into_iter().enumerate() {
+            let at = SimTime::ms(460 + 10 * i as u64);
+            est.observe_request(g, at, at + SimTime::ms(5), Some(at + SimTime::ms(1)));
+        }
+        assert_eq!(est.len(), 5);
+        let p = est.profile(SimTime::ms(500)).expect("profile");
+        assert_eq!(p.requests, 3, "old samples evicted");
+        assert_eq!(est.len(), 3);
+        // one conv per net: net_a's shape counted twice, net_b's once
+        assert_eq!(p.demand.len(), 2);
+        assert_eq!(p.demand[0].1, 2);
+        assert_eq!(p.demand[1].1, 1);
+        // every sample carried (and missed) its deadline
+        assert_eq!(p.slo_carrying, 3);
+        assert_eq!(p.slo_missed, 3);
+        assert!((p.slo_pressure() - 1.0).abs() < 1e-12);
+        // 2 inter-arrival gaps of 10 ms -> 100 req/s
+        assert!((p.arrival_rate_rps - 100.0).abs() < 1.0, "{}", p.arrival_rate_rps);
+    }
+
+    #[test]
+    fn eviction_handles_out_of_finish_order_observation() {
+        let g = Arc::new(convnet("net", 16, 13));
+        let mut est = WorkloadEstimator::new(SimTime::ms(100));
+        // observed in drain order, NOT finish order: the late finisher
+        // lands at the front of the deque
+        est.observe_request(&g, SimTime::ZERO, SimTime::ms(450), None);
+        est.observe_request(&g, SimTime::ZERO, SimTime::ms(50), None);
+        let p = est.profile(SimTime::ms(500)).expect("profile");
+        assert_eq!(
+            p.requests, 1,
+            "expired sample behind a fresher front must still evict"
+        );
+        assert_eq!(est.len(), 1);
+    }
+
+    #[test]
+    fn empty_window_yields_no_profile() {
+        let g = Arc::new(convnet("net", 16, 7));
+        let mut est = WorkloadEstimator::new(SimTime::ms(10));
+        assert!(est.profile(SimTime::ms(1)).is_none());
+        est.observe_request(&g, SimTime::ZERO, SimTime::ms(1), None);
+        // sample aged out entirely
+        assert!(est.profile(SimTime::ms(500)).is_none());
+        assert!(est.is_empty());
+    }
+
+    #[test]
+    fn shape_memo_dedupes_by_graph_identity() {
+        let g = Arc::new(convnet("net", 16, 9));
+        let same_name = Arc::new(convnet("net", 16, 11));
+        let mut est = WorkloadEstimator::new(SimTime::ms(1000));
+        est.observe_request(&g, SimTime::ZERO, SimTime::ms(1), None);
+        est.observe_request(&g, SimTime::ms(1), SimTime::ms(2), None);
+        est.observe_request(&same_name, SimTime::ms(2), SimTime::ms(3), None);
+        assert_eq!(est.shape_memo.len(), 2, "identity is the Arc, not the name");
+        let p = est.profile(SimTime::ms(3)).expect("profile");
+        // identical shapes from distinct graphs still merge in demand
+        assert_eq!(p.demand.len(), 1);
+        assert_eq!(p.demand[0].1, 3);
+    }
+}

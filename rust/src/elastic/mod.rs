@@ -1,0 +1,127 @@
+//! Elastic pool reconfiguration — traffic-aware FPGA reprovisioning
+//! that closes the co-design loop at serving time.
+//!
+//! SECDA's point is that the SA and VM designs have different sweet
+//! spots, and that the Zynq-7020 budget caps what fits on the fabric
+//! ([`crate::synth::Resources::zynq7020`]): one paper design consumes
+//! most of the DSP budget, so the fabric holds the SA *or* the VM at
+//! any moment. The serving coordinator nevertheless froze its pool
+//! composition at construction — every traffic mix got whatever
+//! `sa_workers`/`vm_workers`/`cpu_workers` said at startup. Related
+//! co-design work (Hao et al., arXiv:1904.04421) and the FPGA
+//! accelerator survey (Guo et al., arXiv:1712.08934) both treat
+//! reconfigurability as the FPGA's defining advantage; this subsystem
+//! exploits it with three parts:
+//!
+//! * [`estimate`] — a **workload estimator**: folds completed-request
+//!   GEMM shapes, arrival gaps and SLO outcomes into a windowed
+//!   [`TrafficProfile`] (per-shape demand, arrival rate, SLO
+//!   pressure).
+//! * [`plan`] — a **composition planner**: enumerates `(n_sa, n_vm,
+//!   n_cpu)` pool compositions gated by
+//!   [`crate::synth::Resources::fits_in`] against the device budget,
+//!   scores each with the PR-4 cost model
+//!   ([`crate::coordinator::CostModel`]) against the observed profile,
+//!   and charges a modeled bitstream-reprogramming cost
+//!   ([`crate::synth::reconfig_time`]) per swapped-in instance — a
+//!   migration is proposed only when the projected steady-state win
+//!   over the profile window exceeds that cost plus a hysteresis
+//!   margin.
+//! * [`controller`] — the **elastic controller** wired into
+//!   [`crate::coordinator::Coordinator`]: it observes completions,
+//!   pools per-design cost observations across workers (so
+//!   measurements survive the instance that made them), evaluates the
+//!   planner on a configurable interval, and records the composition
+//!   timeline. The coordinator applies an emitted plan through
+//!   [`crate::coordinator::Coordinator::reconfigure`], which retires /
+//!   spawns workers, migrates queued requests, and delays swapped-in
+//!   instances by the bitstream load time — in both execution modes
+//!   (threaded workers are per-drain, so they park at the scope join
+//!   and respawn on the reconfigured pool at the next drain).
+//!
+//! Configuration lives on
+//! [`crate::coordinator::CoordinatorConfig::elastic`]
+//! ([`ElasticConfig`]): evaluation interval, estimator window,
+//! hysteresis margin, maximum swaps per step, CPU-worker bound and the
+//! resource budget. `elastic: None` (the default) reproduces the
+//! static coordinator exactly; so does `max_swaps: 0` (pinned by a
+//! property test).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use secda::coordinator::{Coordinator, CoordinatorConfig};
+//! use secda::elastic::ElasticConfig;
+//! use secda::framework::{models, tensor::Tensor};
+//!
+//! let g = Arc::new(models::by_name("mobilenet_v1").unwrap());
+//! let cfg = CoordinatorConfig {
+//!     sa_workers: 0,
+//!     vm_workers: 1, // mis-provisioned on purpose
+//!     cpu_workers: 0,
+//!     elastic: Some(ElasticConfig::default()),
+//!     ..CoordinatorConfig::default()
+//! };
+//! let mut coord = Coordinator::new(cfg);
+//! let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+//! coord.submit(g.clone(), input).unwrap();
+//! coord.run_until_idle();
+//! // after enough traffic the controller swaps the bitstream:
+//! for swap in coord.elastic_history() {
+//!     println!("{} -> {} at {}", swap.from, swap.to, swap.at);
+//! }
+//! ```
+
+pub mod controller;
+pub mod estimate;
+pub mod plan;
+
+pub use controller::{ElasticController, SwapRecord};
+pub use estimate::{TrafficProfile, WorkloadEstimator};
+pub use plan::{Composition, CompositionPlanner, DesignCosts, ReconfigPlan};
+
+use crate::sysc::SimTime;
+
+/// Policy knobs of the elastic layer, carried on
+/// [`crate::coordinator::CoordinatorConfig::elastic`].
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Minimum modeled time between planner evaluations (evaluations
+    /// happen at drain boundaries, rate-limited by this interval).
+    pub eval_interval: SimTime,
+    /// Estimator window: completions older than this no longer shape
+    /// the traffic profile.
+    pub window: SimTime,
+    /// Minimum completions inside the window before the planner is
+    /// consulted at all (no reprovisioning off a handful of samples).
+    pub min_samples: usize,
+    /// Hysteresis margin: a reconfiguration is taken only when the
+    /// projected win over the profile window exceeds the modeled
+    /// reconfiguration cost *plus* this margin. Guards against
+    /// swap churn on noise-level wins.
+    pub hysteresis: SimTime,
+    /// Maximum instances swapped (added or removed) per planner step.
+    /// `0` pins the pool: the controller observes but never migrates
+    /// (bit-identical to a static pool, pinned by a property test).
+    pub max_swaps: usize,
+    /// Upper bound on CPU-only workers the planner may provision. CPU
+    /// workers consume no fabric, but on the two-core PYNQ A9 they
+    /// contend with the drivers' own prep threads — this knob bounds
+    /// that (`0` makes planning a pure which-bitstream decision).
+    pub cpu_max: usize,
+    /// Device resource budget every emitted composition must fit.
+    pub budget: crate::synth::Resources,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            eval_interval: SimTime::ms(250),
+            window: SimTime::ms(2_000),
+            min_samples: 8,
+            hysteresis: SimTime::ms(25),
+            max_swaps: 1,
+            cpu_max: 1,
+            budget: crate::synth::Resources::zynq7020(),
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! The composition planner: which pool composition should the fabric
+//! hold for the observed traffic?
+//!
+//! A [`CompositionPlanner`] enumerates every `(n_sa, n_vm, n_cpu)`
+//! pool composition whose fabric footprint fits the device budget
+//! (the SECDA feasibility gate, [`crate::synth::Resources::fits_in`] —
+//! on the Zynq-7020 each paper design consumes most of the DSP budget,
+//! so the accelerator part degenerates to *which* bitstream, SA or VM,
+//! plus CPU workers), scores each against a [`TrafficProfile`] with
+//! the per-design [`CostModel`]s, and proposes a [`ReconfigPlan`] only
+//! when the projected win over the profile window exceeds the modeled
+//! bitstream-reprogramming cost ([`crate::synth::reconfig_time`]) plus
+//! the configured hysteresis margin.
+//!
+//! Scoring model: for each worker kind the planner computes the mean
+//! modeled request service time over the profile — the per-request
+//! framework overhead plus, per GEMM in the demand histogram, the
+//! cheaper of the CPU estimate and the *weights-resident* accelerator
+//! estimate (steady-state serving batches same-model requests warm;
+//! the cold first touch is part of what the hysteresis margin
+//! absorbs). A composition's capacity is the sum of its workers'
+//! service rates; its score is the time that capacity needs to serve
+//! the window's demand. Lower is better. The estimates come from the
+//! same [`CostModel`] the offload planner and admission control use,
+//! sharpened by pooled per-design observations ([`DesignCosts`]).
+
+use std::fmt;
+
+use crate::accel::{SaConfig, VmConfig};
+use crate::coordinator::{CostModel, WorkerKind};
+use crate::synth::{self, Resources};
+use crate::sysc::SimTime;
+
+use super::estimate::TrafficProfile;
+use super::ElasticConfig;
+
+/// A pool composition: how many instances of each worker kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Composition {
+    /// Systolic-array instances.
+    pub sa: usize,
+    /// Vector-MAC instances.
+    pub vm: usize,
+    /// CPU-only workers.
+    pub cpu: usize,
+}
+
+impl Composition {
+    /// A composition from explicit counts.
+    pub fn new(sa: usize, vm: usize, cpu: usize) -> Self {
+        Composition { sa, vm, cpu }
+    }
+
+    /// Total workers of any kind.
+    pub fn total(&self) -> usize {
+        self.sa + self.vm + self.cpu
+    }
+
+    /// Fabric footprint of this composition: the paper designs'
+    /// per-instance estimates scaled by instance count (CPU workers
+    /// consume no fabric).
+    pub fn resources(&self) -> Resources {
+        let sa = synth::sa_resources(&SaConfig::paper()).scaled(self.sa as u32);
+        let vm = synth::vm_resources(&VmConfig::paper()).scaled(self.vm as u32);
+        sa.add(&vm)
+    }
+
+    /// Does this composition's fabric footprint fit `budget`?
+    pub fn fits(&self, budget: &Resources) -> bool {
+        self.resources().fits_in(budget)
+    }
+
+    /// Instances swapped getting here from `from`: the larger of the
+    /// adds and the removals (an SA→VM exchange is one swap — one
+    /// instance retired, one programmed in its place).
+    pub fn swaps_from(&self, from: &Composition) -> usize {
+        let added = self.sa.saturating_sub(from.sa)
+            + self.vm.saturating_sub(from.vm)
+            + self.cpu.saturating_sub(from.cpu);
+        let removed = from.sa.saturating_sub(self.sa)
+            + from.vm.saturating_sub(self.vm)
+            + from.cpu.saturating_sub(self.cpu);
+        added.max(removed)
+    }
+}
+
+impl fmt::Display for Composition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}xSA {}xVM {}xCPU", self.sa, self.vm, self.cpu)
+    }
+}
+
+/// Per-design cost views: one [`CostModel`] per worker kind, pooled
+/// from every worker of that kind that has ever run. Observations a
+/// retired instance made keep informing the planner after a
+/// reconfiguration — without this, swapping a design out would also
+/// forget why it was (or wasn't) worth having.
+#[derive(Debug, Clone)]
+pub struct DesignCosts {
+    sa: CostModel,
+    vm: CostModel,
+    cpu: CostModel,
+}
+
+impl DesignCosts {
+    /// Fresh per-design models (analytic priors only) for workers with
+    /// `threads` CPU threads and the given offload sync overhead.
+    pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
+        DesignCosts {
+            sa: CostModel::new(threads, sync_overhead),
+            vm: CostModel::new(threads, sync_overhead),
+            cpu: CostModel::new(threads, sync_overhead),
+        }
+    }
+
+    /// Pool a worker's observations into its kind's model.
+    pub fn absorb(&mut self, kind: WorkerKind, observed: &CostModel) {
+        self.model_mut(kind).absorb(observed);
+    }
+
+    /// The cost model for one worker kind.
+    pub fn model(&self, kind: WorkerKind) -> &CostModel {
+        match kind {
+            WorkerKind::Sa => &self.sa,
+            WorkerKind::Vm => &self.vm,
+            WorkerKind::Cpu => &self.cpu,
+        }
+    }
+
+    /// Mutable access (tests inject synthetic observations through
+    /// [`CostModel::observe`]).
+    pub fn model_mut(&mut self, kind: WorkerKind) -> &mut CostModel {
+        match kind {
+            WorkerKind::Sa => &mut self.sa,
+            WorkerKind::Vm => &mut self.vm,
+            WorkerKind::Cpu => &mut self.cpu,
+        }
+    }
+}
+
+/// A proposed reconfiguration, with the projection that justified it.
+#[derive(Debug, Clone)]
+pub struct ReconfigPlan {
+    /// Composition the pool held when the plan was made.
+    pub from: Composition,
+    /// Composition to migrate to.
+    pub to: Composition,
+    /// Projected time for `from` to serve the profile window's demand.
+    pub projected_current: SimTime,
+    /// Projected time for `to` to serve the same demand.
+    pub projected_best: SimTime,
+    /// Modeled bitstream-load cost of the migration (per swapped-in
+    /// accelerator instance; retiring an instance is free).
+    pub reconfig_cost: SimTime,
+    /// Instances swapped ([`Composition::swaps_from`]).
+    pub swaps: usize,
+}
+
+impl ReconfigPlan {
+    /// The projected steady-state win: current minus best.
+    pub fn projected_win(&self) -> SimTime {
+        self.projected_current.saturating_sub(self.projected_best)
+    }
+}
+
+/// Enumerates and scores resource-feasible pool compositions.
+#[derive(Debug, Clone)]
+pub struct CompositionPlanner {
+    budget: Resources,
+    sa_unit: Resources,
+    vm_unit: Resources,
+}
+
+impl CompositionPlanner {
+    /// A planner gated by the given device budget (normally
+    /// [`Resources::zynq7020`]).
+    pub fn new(budget: Resources) -> Self {
+        CompositionPlanner {
+            budget,
+            sa_unit: synth::sa_resources(&SaConfig::paper()),
+            vm_unit: synth::vm_resources(&VmConfig::paper()),
+        }
+    }
+
+    /// Every composition whose fabric footprint fits the budget, with
+    /// at most `cpu_max` CPU workers and at least one worker total, in
+    /// a fixed deterministic order (SA count, then VM count, then CPU
+    /// count, each ascending).
+    pub fn enumerate(&self, cpu_max: usize) -> Vec<Composition> {
+        let mut out = Vec::new();
+        for sa in 0..=16usize {
+            if !self.sa_unit.scaled(sa as u32).fits_in(&self.budget) {
+                break;
+            }
+            for vm in 0..=16usize {
+                let fabric = self
+                    .sa_unit
+                    .scaled(sa as u32)
+                    .add(&self.vm_unit.scaled(vm as u32));
+                if !fabric.fits_in(&self.budget) {
+                    break;
+                }
+                for cpu in 0..=cpu_max {
+                    let comp = Composition::new(sa, vm, cpu);
+                    if comp.total() >= 1 {
+                        out.push(comp);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Projected time for `comp` to serve the profile window's demand
+    /// (see the module doc for the capacity model). [`SimTime::MAX`]
+    /// for a composition with no workers.
+    pub fn score(
+        &self,
+        comp: &Composition,
+        profile: &TrafficProfile,
+        costs: &DesignCosts,
+    ) -> SimTime {
+        let kinds = [
+            (WorkerKind::Sa, comp.sa),
+            (WorkerKind::Vm, comp.vm),
+            (WorkerKind::Cpu, comp.cpu),
+        ];
+        let mut capacity_rps = 0.0f64;
+        for (kind, count) in kinds {
+            if count == 0 {
+                continue;
+            }
+            let t = Self::mean_request_secs(costs.model(kind), kind, profile);
+            if t > 0.0 {
+                capacity_rps += count as f64 / t;
+            }
+        }
+        if capacity_rps <= 0.0 || profile.requests == 0 {
+            return SimTime::MAX;
+        }
+        let secs = profile.requests as f64 / capacity_rps;
+        SimTime::ps((secs * 1e12).round() as u64)
+    }
+
+    /// Mean modeled service time of one profile request on a worker of
+    /// `kind`: framework overhead plus, per demanded GEMM, the cheaper
+    /// of the CPU route and the weights-resident accelerator route —
+    /// the same better-of-two rule the offload planner applies live.
+    fn mean_request_secs(cm: &CostModel, kind: WorkerKind, profile: &TrafficProfile) -> f64 {
+        let n = profile.requests.max(1) as f64;
+        let mut total = cm.request_overhead().as_secs_f64() * n;
+        for &(shape, count) in &profile.demand {
+            let cpu_t = cm.estimate(shape, WorkerKind::Cpu).total();
+            let best = match kind {
+                WorkerKind::Cpu => cpu_t,
+                WorkerKind::Sa | WorkerKind::Vm => {
+                    cpu_t.min(cm.estimate_resident(shape, kind, true).total())
+                }
+            };
+            total += best.as_secs_f64() * count as f64;
+        }
+        total / n
+    }
+
+    /// Modeled migration cost `from` → `to`: one bitstream load
+    /// ([`synth::reconfig_time`]) per *added* accelerator instance.
+    /// Retiring an instance (or changing CPU workers) is free.
+    pub fn reconfig_cost(&self, from: &Composition, to: &Composition) -> SimTime {
+        let added_sa = to.sa.saturating_sub(from.sa) as u64;
+        let added_vm = to.vm.saturating_sub(from.vm) as u64;
+        SimTime::ps(
+            synth::reconfig_time(&self.sa_unit).as_ps() * added_sa
+                + synth::reconfig_time(&self.vm_unit).as_ps() * added_vm,
+        )
+    }
+
+    /// The planning step: among feasible compositions within
+    /// `cfg.max_swaps` of `current`, pick the best-scoring one and
+    /// propose it iff the projected win strictly exceeds the modeled
+    /// reconfiguration cost plus the hysteresis margin. `None` means
+    /// "stay put" — including always when `max_swaps` is zero.
+    pub fn plan(
+        &self,
+        current: Composition,
+        profile: &TrafficProfile,
+        costs: &DesignCosts,
+        cfg: &ElasticConfig,
+    ) -> Option<ReconfigPlan> {
+        let projected_current = self.score(&current, profile, costs);
+        let mut best: Option<(SimTime, Composition)> = None;
+        for comp in self.enumerate(cfg.cpu_max) {
+            if comp.swaps_from(&current) > cfg.max_swaps {
+                continue;
+            }
+            let s = self.score(&comp, profile, costs);
+            let better = match &best {
+                None => true,
+                Some((bs, _)) => s < *bs,
+            };
+            if better {
+                best = Some((s, comp));
+            }
+        }
+        let (projected_best, to) = best?;
+        if to == current {
+            return None;
+        }
+        let reconfig_cost = self.reconfig_cost(&current, &to);
+        let win = projected_current.saturating_sub(projected_best);
+        if win > reconfig_cost + cfg.hysteresis {
+            Some(ReconfigPlan {
+                from: current,
+                to,
+                projected_current,
+                projected_best,
+                reconfig_cost,
+                swaps: to.swaps_from(&current),
+            })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GemmShape;
+    use crate::driver::DriverConfig;
+
+    fn planner() -> CompositionPlanner {
+        CompositionPlanner::new(Resources::zynq7020())
+    }
+
+    fn costs() -> DesignCosts {
+        DesignCosts::new(1, DriverConfig::default().sync_overhead)
+    }
+
+    fn ecfg() -> ElasticConfig {
+        // cpu_max 0: a pure which-bitstream decision, so the planner
+        // cannot paper over a wrong design by adding CPU workers
+        ElasticConfig {
+            hysteresis: SimTime::ms(1),
+            cpu_max: 0,
+            max_swaps: 1,
+            ..ElasticConfig::default()
+        }
+    }
+
+    /// A conv-heavy profile whose K exceeds the VM local buffers: the
+    /// design-aware cost model prices a VM worker at CPU-fallback
+    /// speed while the SA runs it on fabric.
+    fn deep_conv_profile(requests: usize) -> TrafficProfile {
+        TrafficProfile {
+            requests,
+            span: SimTime::ms(500),
+            arrival_rate_rps: requests as f64 / 0.5,
+            demand: vec![(GemmShape { m: 96, k: 4608, n: 196 }, requests as u64)],
+            slo_carrying: 0,
+            slo_missed: 0,
+        }
+    }
+
+    #[test]
+    fn enumeration_respects_the_zynq_budget() {
+        let p = planner();
+        let comps = p.enumerate(2);
+        assert!(!comps.is_empty());
+        let budget = Resources::zynq7020();
+        for c in &comps {
+            assert!(c.fits(&budget), "{c} exceeds the device budget");
+            assert!(c.total() >= 1);
+            assert!(c.cpu <= 2);
+        }
+        // the paper designs' serving-time reality: the fabric holds
+        // one of them at a time, so no feasible composition mixes or
+        // doubles accelerators
+        assert!(comps.iter().all(|c| c.sa + c.vm <= 1));
+        assert!(comps.iter().any(|c| c.sa == 1));
+        assert!(comps.iter().any(|c| c.vm == 1));
+        assert!(comps.iter().any(|c| c.sa == 0 && c.vm == 0 && c.cpu > 0));
+    }
+
+    #[test]
+    fn deep_k_traffic_swaps_vm_for_sa() {
+        let p = planner();
+        let profile = deep_conv_profile(8);
+        let plan = p
+            .plan(Composition::new(0, 1, 0), &profile, &costs(), &ecfg())
+            .expect("deep-K conv traffic must justify the SA bitstream");
+        assert_eq!(plan.to, Composition::new(1, 0, 0));
+        assert_eq!(plan.swaps, 1);
+        assert!(plan.projected_win() > plan.reconfig_cost);
+        assert!(plan.to.fits(&Resources::zynq7020()));
+        // and the SA pool is already the right place to be: no churn
+        assert!(p
+            .plan(Composition::new(1, 0, 0), &profile, &costs(), &ecfg())
+            .is_none());
+    }
+
+    #[test]
+    fn reconfiguration_needs_win_beyond_cost_plus_hysteresis() {
+        // Pin the decision rule exactly: win > cost + hysteresis.
+        let p = planner();
+        let profile = deep_conv_profile(8);
+        let current = Composition::new(0, 1, 0);
+        let target = Composition::new(1, 0, 0);
+        let cur = p.score(&current, &profile, &costs());
+        let best = p.score(&target, &profile, &costs());
+        let win = cur.saturating_sub(best);
+        let cost = p.reconfig_cost(&current, &target);
+        assert!(win > cost, "profile must make the swap worthwhile");
+        let slack = win.saturating_sub(cost);
+        // hysteresis one tick below the slack: the swap still fires
+        let mut cfg = ecfg();
+        cfg.hysteresis = slack.saturating_sub(SimTime::ps(1));
+        assert!(p.plan(current, &profile, &costs(), &cfg).is_some());
+        // hysteresis exactly at the slack: win == cost + hysteresis is
+        // NOT strictly greater — the planner must stay put
+        cfg.hysteresis = slack;
+        assert!(p.plan(current, &profile, &costs(), &cfg).is_none());
+    }
+
+    #[test]
+    fn max_swaps_zero_never_plans() {
+        let p = planner();
+        let profile = deep_conv_profile(32);
+        let mut cfg = ecfg();
+        cfg.max_swaps = 0;
+        cfg.hysteresis = SimTime::ZERO;
+        for current in [Composition::new(0, 1, 0), Composition::new(0, 0, 1)] {
+            assert!(
+                p.plan(current, &profile, &costs(), &cfg).is_none(),
+                "max_swaps=0 must pin {current}"
+            );
+        }
+    }
+
+    #[test]
+    fn observations_override_priors_in_scoring() {
+        let p = planner();
+        let shape = GemmShape { m: 96, k: 2304, n: 196 };
+        let profile = TrafficProfile {
+            requests: 8,
+            span: SimTime::ms(500),
+            arrival_rate_rps: 16.0,
+            demand: vec![(shape, 8)],
+            slo_carrying: 0,
+            slo_missed: 0,
+        };
+        let mut c = costs();
+        let sa_prior = p.score(&Composition::new(1, 0, 0), &profile, &c);
+        // the simulator measured the SA much slower than its prior on
+        // this shape (warm): scoring must track the measurement
+        c.model_mut(WorkerKind::Sa)
+            .observe(shape, true, SimTime::ms(400));
+        let sa_measured = p.score(&Composition::new(1, 0, 0), &profile, &c);
+        assert!(
+            sa_measured > sa_prior,
+            "measured {sa_measured} not above prior {sa_prior}"
+        );
+    }
+
+    #[test]
+    fn swaps_from_counts_exchanges_once() {
+        let a = Composition::new(0, 1, 0);
+        let b = Composition::new(1, 0, 0);
+        assert_eq!(b.swaps_from(&a), 1, "SA<->VM exchange is one swap");
+        assert_eq!(a.swaps_from(&a), 0);
+        assert_eq!(Composition::new(1, 0, 2).swaps_from(&a), 2);
+        assert_eq!(Composition::new(0, 0, 0).swaps_from(&b), 1);
+    }
+}

@@ -29,7 +29,9 @@ fn basic_block(
 ) -> SlotId {
     let qp = act_qp();
     let c1 = b.push(
-        Op::Conv(conv(M, &format!("{name}_conv1"), cin, cout, 3, stride, 1, Activation::Relu, qp, qp)),
+        Op::Conv(conv(
+            M, &format!("{name}_conv1"), cin, cout, 3, stride, 1, Activation::Relu, qp, qp,
+        )),
         vec![x],
     );
     let c2 = b.push(
@@ -38,7 +40,9 @@ fn basic_block(
     );
     let skip = if stride != 1 || cin != cout {
         b.push(
-            Op::Conv(conv(M, &format!("{name}_down"), cin, cout, 1, stride, 0, Activation::None, qp, qp)),
+            Op::Conv(conv(
+                M, &format!("{name}_down"), cin, cout, 1, stride, 0, Activation::None, qp, qp,
+            )),
             vec![x],
         )
     } else {

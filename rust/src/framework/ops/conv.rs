@@ -142,8 +142,8 @@ impl Conv2d {
         let (out_mn, mut timing) = ctx.backend.run_gemm(&task);
         // The CPU baseline path pays im2col here; accelerator drivers
         // already include data prep in their own timing.
-        if timing.accel_active.as_ps() == 0 && timing.breakdown.iter().any(|(n, _)| *n == "cpu_gemm")
-        {
+        let cpu_path = timing.breakdown.iter().any(|(n, _)| *n == "cpu_gemm");
+        if timing.accel_active.as_ps() == 0 && cpu_path {
             timing.total += ctx.cpu.reshape_time((k * n) as u64, ctx.threads);
         }
         ctx.accel_active += timing.accel_active;

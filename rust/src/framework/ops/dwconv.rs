@@ -78,8 +78,9 @@ impl DepthwiseConv2d {
                             acc += wv * xv;
                         }
                     }
+                    let zp = self.out_qp.zero_point;
                     out[(oy * ow + ox) * c + cc] =
-                        ppu_requant(acc, mult[cc], shift[cc], self.out_qp.zero_point, act_min, act_max);
+                        ppu_requant(acc, mult[cc], shift[cc], zp, act_min, act_max);
                 }
             }
         }

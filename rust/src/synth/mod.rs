@@ -1,14 +1,21 @@
 //! Hardware-synthesis model (paper §III-D) — the substitute for the
 //! Vivado HLS + logic-synthesis flow.
 //!
-//! Two roles:
+//! Three roles:
 //! 1. **Resource estimation**: LUT/FF/DSP/BRAM usage of a design
 //!    configuration, checked against the PYNQ-Z1's Zynq-7020 budget.
 //!    This is the feasibility gate SECDA's hardware-synthesis step
 //!    enforces (e.g. "we are limited to four GEMM units by the
-//!    resource constraints of the target device", §IV-C1).
+//!    resource constraints of the target device", §IV-C1) — and, at
+//!    serving time, the gate the elastic pool planner
+//!    ([`crate::elastic`]) applies to every candidate pool
+//!    composition.
 //! 2. **Synthesis-time model** (S_t of Eq. 1/2): scales with resource
 //!    usage, anchored at the paper's observed S_t ≈ 25 x C_t.
+//! 3. **Reconfiguration-time model** ([`reconfig_time`]): how long
+//!    reprogramming the fabric with an already-synthesized bitstream
+//!    takes — the cost the elastic controller charges per swapped-in
+//!    instance before a reprovisioning pays off.
 
 use crate::accel::components::BramArray;
 use crate::accel::{SaConfig, VmConfig};
@@ -17,19 +24,35 @@ use crate::sysc::SimTime;
 /// FPGA resource vector.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Resources {
+    /// Look-up tables.
     pub luts: u32,
+    /// Flip-flops.
     pub ffs: u32,
+    /// DSP48 slices.
     pub dsps: u32,
+    /// 36Kb block-RAM tiles.
     pub bram36: u32,
 }
 
 impl Resources {
+    /// Component-wise sum of two resource vectors.
     pub fn add(&self, o: &Resources) -> Resources {
         Resources {
             luts: self.luts + o.luts,
             ffs: self.ffs + o.ffs,
             dsps: self.dsps + o.dsps,
             bram36: self.bram36 + o.bram36,
+        }
+    }
+
+    /// This vector scaled by an instance count (the footprint of `n`
+    /// identical design instances on one fabric).
+    pub fn scaled(&self, n: u32) -> Resources {
+        Resources {
+            luts: self.luts * n,
+            ffs: self.ffs * n,
+            dsps: self.dsps * n,
+            bram36: self.bram36 * n,
         }
     }
 
@@ -43,6 +66,7 @@ impl Resources {
         }
     }
 
+    /// Does this usage fit inside `budget` on every resource class?
     pub fn fits_in(&self, budget: &Resources) -> bool {
         self.luts <= budget.luts
             && self.ffs <= budget.ffs
@@ -91,7 +115,9 @@ pub fn vm_resources(cfg: &VmConfig) -> Resources {
         luts: CONTROL_LUTS + macs * LUTS_PER_MAC + ppu_lanes * LUTS_PER_PPU_LANE,
         ffs: CONTROL_FFS + macs * FFS_PER_MAC + ppu_lanes * FFS_PER_PPU_LANE,
         dsps: macs / 2 + ppu_lanes * DSPS_PER_PPU_LANE,
-        bram36: bram_blocks(&cfg.global_weight_buf) + bram_blocks(&cfg.global_input_buf) + local_bufs,
+        bram36: bram_blocks(&cfg.global_weight_buf)
+            + bram_blocks(&cfg.global_input_buf)
+            + local_bufs,
     }
 }
 
@@ -122,19 +148,45 @@ pub fn synthesis_time(r: &Resources) -> SimTime {
     SimTime::ms(((base_min + scale_min * util) * 60_000.0) as u64)
 }
 
+/// Bitstream-reprogramming time for a design occupying `r` — the
+/// *serving-time* cost of swapping what the fabric holds, as opposed
+/// to [`synthesis_time`], the *design-time* cost of producing the
+/// bitstream in the first place.
+///
+/// Model: the Zynq-7020 full bitstream (~4 MB) loads through the PCAP
+/// port at ~128 MB/s in roughly 30 ms; partial reconfiguration scales
+/// with the region being rewritten, so we charge a fixed setup plus a
+/// term proportional to device utilization. The paper designs (~73%
+/// utilized) land around 30 ms per swap — two orders of magnitude
+/// above a single offload sync, three below a synthesis run, which is
+/// exactly the regime where an elastic reprovisioner must amortize
+/// swaps against a traffic window rather than per request.
+pub fn reconfig_time(r: &Resources) -> SimTime {
+    let util = r.max_utilization(&Resources::zynq7020());
+    SimTime::ms((8.0 + 30.0 * util).round() as u64)
+}
+
 /// Outcome of a "synthesis run" on a design config.
 #[derive(Debug, Clone)]
 pub struct SynthReport {
+    /// Estimated resource usage of the design.
     pub resources: Resources,
+    /// Whether it fits the Zynq-7020 budget.
     pub fits: bool,
+    /// Highest utilization fraction across resource classes.
     pub utilization: f64,
+    /// Modeled synthesis (place-and-route) time.
     pub synth_time: SimTime,
 }
 
+/// "Synthesize" a VM configuration: estimate resources and check them
+/// against the device budget.
 pub fn synthesize_vm(cfg: &VmConfig) -> SynthReport {
     report(vm_resources(cfg))
 }
 
+/// "Synthesize" an SA configuration: estimate resources and check them
+/// against the device budget.
 pub fn synthesize_sa(cfg: &SaConfig) -> SynthReport {
     report(sa_resources(cfg))
 }
@@ -208,5 +260,33 @@ mod tests {
         // same compute resources, BRAM redistributed
         assert_eq!(base.dsps, variant.dsps);
         assert!(variant.fits_in(&Resources::zynq7020()));
+    }
+
+    #[test]
+    fn one_paper_design_per_fabric() {
+        // The serving-time reality the elastic planner enforces: one
+        // paper design consumes most of the DSP budget, so the fabric
+        // holds the SA *or* the VM, never both (and never two SAs).
+        let sa = sa_resources(&SaConfig::paper());
+        let vm = vm_resources(&VmConfig::paper());
+        let budget = Resources::zynq7020();
+        assert!(sa.fits_in(&budget) && vm.fits_in(&budget));
+        assert!(!sa.add(&vm).fits_in(&budget), "SA+VM must not co-reside");
+        assert!(!sa.scaled(2).fits_in(&budget), "2x SA must not fit");
+        assert!(!vm.scaled(2).fits_in(&budget), "2x VM must not fit");
+    }
+
+    #[test]
+    fn reconfig_time_sits_between_sync_and_synthesis() {
+        let r = sa_resources(&SaConfig::paper());
+        let t = reconfig_time(&r);
+        // tens of milliseconds: far above an offload sync (~150 us),
+        // far below a synthesis run (tens of minutes)
+        assert!(t >= SimTime::ms(10), "{t}");
+        assert!(t <= SimTime::ms(100), "{t}");
+        assert!(t < synthesis_time(&r));
+        // denser designs reprogram slower
+        let small = reconfig_time(&sa_resources(&SaConfig::with_dim(4)));
+        assert!(small < t, "{small} vs {t}");
     }
 }

@@ -17,6 +17,7 @@ pub struct Fifo<T> {
 }
 
 impl<T> Fifo<T> {
+    /// A FIFO holding at most `capacity` items (must be non-zero).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "zero-capacity fifo");
         Fifo {
@@ -26,18 +27,22 @@ impl<T> Fifo<T> {
         }
     }
 
+    /// The bound this FIFO was created with.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
+    /// True when at capacity (pushes will be rejected).
     pub fn is_full(&self) -> bool {
         self.items.len() == self.capacity
     }
@@ -67,10 +72,12 @@ impl<T> Fifo<T> {
         item
     }
 
+    /// The front item without popping it.
     pub fn peek(&self) -> Option<&T> {
         self.items.front()
     }
 
+    /// Occupancy statistics accumulated over this FIFO's lifetime.
     pub fn stats(&self) -> &FifoStats {
         &self.stats
     }

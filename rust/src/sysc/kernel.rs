@@ -16,14 +16,19 @@ use super::fifo::Fifo;
 use super::time::SimTime;
 use super::trace::Trace;
 
+/// Handle of a module registered with a [`Simulator`].
 pub type ModuleId = usize;
+/// Handle of a FIFO created on a [`Simulator`].
 pub type FifoId = usize;
 
 /// A scheduled event: deliver `payload` to `target` at `time`.
 #[derive(Debug, Clone)]
 pub struct Event<M> {
+    /// Delivery time.
     pub time: SimTime,
+    /// Receiving module.
     pub target: ModuleId,
+    /// The design-defined message delivered.
     pub payload: M,
 }
 
@@ -54,6 +59,7 @@ impl<M> Ord for QEntry<M> {
 
 /// A simulated hardware module (SystemC `sc_module` analogue).
 pub trait Module<M> {
+    /// Human-readable module name (reports, traces).
     fn name(&self) -> &str;
     /// React to a delivered event. All further activity is expressed by
     /// scheduling events / touching FIFOs through `ctx`.
@@ -69,7 +75,9 @@ pub trait Module<M> {
 /// is scheduled for `module` in the next delta.
 #[derive(Debug, Clone)]
 pub struct Wake<M> {
+    /// The module to wake.
     pub module: ModuleId,
+    /// The message delivered by the wake.
     pub payload: M,
 }
 
@@ -85,12 +93,14 @@ pub struct Ctx<'a, M> {
     seq: &'a mut u64,
     queue: &'a mut BinaryHeap<Reverse<QEntry<M>>>,
     fifos: &'a mut Vec<FifoSlot<M>>,
+    /// The run's event trace (modules record through it directly).
     pub trace: &'a mut Trace,
     stop: &'a mut bool,
     current: ModuleId,
 }
 
 impl<M: Clone> Ctx<'_, M> {
+    /// The current simulated time.
     pub fn now(&self) -> SimTime {
         self.now
     }
@@ -144,14 +154,17 @@ impl<M: Clone> Ctx<'_, M> {
         Some(item)
     }
 
+    /// Items currently queued in a FIFO.
     pub fn fifo_len(&self, fid: FifoId) -> usize {
         self.fifos[fid].fifo.len()
     }
 
+    /// True when the FIFO is at capacity.
     pub fn fifo_is_full(&self, fid: FifoId) -> bool {
         self.fifos[fid].fifo.is_full()
     }
 
+    /// True when the FIFO holds nothing.
     pub fn fifo_is_empty(&self, fid: FifoId) -> bool {
         self.fifos[fid].fifo.is_empty()
     }
@@ -170,6 +183,7 @@ pub struct Simulator<M> {
     modules: Vec<Option<Box<dyn Module<M>>>>,
     names: Vec<String>,
     fifos: Vec<FifoSlot<M>>,
+    /// Event trace of this run ([`Trace::disabled`] by default).
     pub trace: Trace,
     stop: bool,
     events_dispatched: u64,
@@ -182,6 +196,7 @@ impl<M: Clone> Default for Simulator<M> {
 }
 
 impl<M: Clone> Simulator<M> {
+    /// An empty simulator (no modules, trace disabled).
     pub fn new() -> Self {
         Simulator {
             now: SimTime::ZERO,
@@ -196,11 +211,13 @@ impl<M: Clone> Simulator<M> {
         }
     }
 
+    /// The same simulator with an event trace installed.
     pub fn with_trace(mut self, trace: Trace) -> Self {
         self.trace = trace;
         self
     }
 
+    /// Register a module, returning its dispatch handle.
     pub fn add_module(&mut self, m: Box<dyn Module<M>>) -> ModuleId {
         self.names.push(m.name().to_string());
         self.modules.push(Some(m));
@@ -233,6 +250,7 @@ impl<M: Clone> Simulator<M> {
         self.fifos[fid].on_pop = on_pop;
     }
 
+    /// Schedule `payload` for `target` at absolute time `time`.
     pub fn schedule(&mut self, time: SimTime, target: ModuleId, payload: M) {
         let e = QEntry {
             time,
@@ -244,18 +262,22 @@ impl<M: Clone> Simulator<M> {
         self.queue.push(Reverse(e));
     }
 
+    /// The current simulated time.
     pub fn now(&self) -> SimTime {
         self.now
     }
 
+    /// Events dispatched over this simulator's lifetime.
     pub fn events_dispatched(&self) -> u64 {
         self.events_dispatched
     }
 
+    /// Name a module registered itself under.
     pub fn module_name(&self, id: ModuleId) -> &str {
         &self.names[id]
     }
 
+    /// Occupancy statistics of a FIFO.
     pub fn fifo_stats(&self, fid: FifoId) -> &super::stats::FifoStats {
         self.fifos[fid].fifo.stats()
     }
@@ -265,6 +287,7 @@ impl<M: Clone> Simulator<M> {
         self.modules[id].as_deref().expect("module in flight")
     }
 
+    /// Mutably borrow a module back.
     pub fn module_mut(&mut self, id: ModuleId) -> &mut (dyn Module<M> + '_) {
         self.modules[id].as_deref_mut().expect("module in flight")
     }
@@ -299,6 +322,7 @@ impl<M: Clone> Simulator<M> {
         self.now
     }
 
+    /// Run until the queue drains or `stop()` is called.
     pub fn run(&mut self) -> SimTime {
         self.run_with_limit(u64::MAX)
     }

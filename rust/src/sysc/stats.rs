@@ -18,14 +18,17 @@ pub struct ModuleStats {
     pub bytes: u64,
     /// Work cycles in the component's own clock domain.
     pub cycles: u64,
-    /// First/last activity timestamps (utilization window).
+    /// First activity timestamp (start of the utilization window).
     pub first_activity: Option<SimTime>,
+    /// Last activity timestamp (end of the utilization window).
     pub last_activity: SimTime,
     /// Cycles the component wanted to work but was starved/blocked.
     pub stall_cycles: u64,
 }
 
 impl ModuleStats {
+    /// Charge `dur` of busy time (and `cycles` work cycles) starting
+    /// at `start`, extending the activity window.
     pub fn busy_for(&mut self, start: SimTime, dur: SimTime, cycles: u64) {
         self.busy += dur;
         self.cycles += cycles;
@@ -35,11 +38,13 @@ impl ModuleStats {
         self.last_activity = self.last_activity.max(start + dur);
     }
 
+    /// Count one transaction moving `bytes` through the component.
     pub fn add_transaction(&mut self, bytes: u64) {
         self.transactions += 1;
         self.bytes += bytes;
     }
 
+    /// Count cycles lost to starvation/backpressure.
     pub fn add_stall(&mut self, cycles: u64) {
         self.stall_cycles += cycles;
     }
@@ -68,11 +73,17 @@ impl ModuleStats {
 /// Occupancy statistics of a [`super::fifo::Fifo`].
 #[derive(Debug, Clone, Default)]
 pub struct FifoStats {
+    /// Successful pushes.
     pub pushes: u64,
+    /// Successful pops.
     pub pops: u64,
+    /// Pushes rejected because the FIFO was full.
     pub push_rejects: u64,
+    /// Pops attempted on an empty FIFO.
     pub pop_misses: u64,
+    /// Highest occupancy ever observed.
     pub high_water: usize,
+    /// Timestamp of the most recent push or pop.
     pub last_activity: SimTime,
 }
 

@@ -11,40 +11,51 @@ use std::ops::{Add, AddAssign, Sub};
 pub struct SimTime(pub u64);
 
 impl SimTime {
+    /// The start of simulated time.
     pub const ZERO: SimTime = SimTime(0);
     /// The far-future sentinel (used e.g. as the effective deadline of
     /// a request without an SLO under deadline-ordered scheduling).
     pub const MAX: SimTime = SimTime(u64::MAX);
 
+    /// A duration of `v` picoseconds.
     pub fn ps(v: u64) -> Self {
         SimTime(v)
     }
+    /// A duration of `v` nanoseconds.
     pub fn ns(v: u64) -> Self {
         SimTime(v * 1_000)
     }
+    /// A duration of `v` microseconds.
     pub fn us(v: u64) -> Self {
         SimTime(v * 1_000_000)
     }
+    /// A duration of `v` milliseconds.
     pub fn ms(v: u64) -> Self {
         SimTime(v * 1_000_000_000)
     }
 
+    /// This time as integer picoseconds (the underlying count).
     pub fn as_ps(self) -> u64 {
         self.0
     }
+    /// This time in nanoseconds, as a float.
     pub fn as_ns_f64(self) -> f64 {
         self.0 as f64 / 1e3
     }
+    /// This time in microseconds, as a float.
     pub fn as_us_f64(self) -> f64 {
         self.0 as f64 / 1e6
     }
+    /// This time in milliseconds, as a float.
     pub fn as_ms_f64(self) -> f64 {
         self.0 as f64 / 1e9
     }
+    /// This time in seconds, as a float.
     pub fn as_secs_f64(self) -> f64 {
         self.0 as f64 / 1e12
     }
 
+    /// `self - rhs`, clamped at zero instead of underflowing.
     pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
         SimTime(self.0.saturating_sub(rhs.0))
     }
@@ -102,6 +113,7 @@ pub struct Clock {
 }
 
 impl Clock {
+    /// A clock domain running at `mhz` megahertz.
     pub fn from_mhz(mhz: f64) -> Self {
         assert!(mhz > 0.0);
         Clock {
@@ -109,6 +121,7 @@ impl Clock {
         }
     }
 
+    /// The domain frequency in megahertz.
     pub fn freq_mhz(&self) -> f64 {
         1e6 / self.period_ps as f64
     }

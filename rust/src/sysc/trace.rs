@@ -6,22 +6,29 @@
 
 use super::time::SimTime;
 
+/// One recorded simulation event.
 #[derive(Debug, Clone)]
 pub struct TraceEntry {
+    /// When it happened.
     pub time: SimTime,
+    /// The module that recorded it.
     pub module: String,
+    /// Free-form event label.
     pub label: String,
 }
 
+/// A bounded event recorder attached to a simulation run.
 #[derive(Debug)]
 pub struct Trace {
     enabled: bool,
     cap: usize,
+    /// Recorded entries, in record order (up to the cap).
     pub entries: Vec<TraceEntry>,
     dropped: u64,
 }
 
 impl Trace {
+    /// A disabled trace: records nothing, costs one branch per call.
     pub fn disabled() -> Self {
         Trace {
             enabled: false,
@@ -31,6 +38,8 @@ impl Trace {
         }
     }
 
+    /// An enabled trace keeping at most `cap` entries (later events
+    /// are counted as dropped).
     pub fn enabled(cap: usize) -> Self {
         Trace {
             enabled: true,
@@ -40,10 +49,13 @@ impl Trace {
         }
     }
 
+    /// Whether this trace records anything.
     pub fn is_enabled(&self) -> bool {
         self.enabled
     }
 
+    /// Record one event. `label` is a closure so a disabled trace
+    /// never pays for formatting.
     #[inline]
     pub fn record(&mut self, time: SimTime, module: &str, label: impl FnOnce() -> String) {
         if !self.enabled {
@@ -60,6 +72,7 @@ impl Trace {
         });
     }
 
+    /// Events dropped after the cap filled.
     pub fn dropped(&self) -> u64 {
         self.dropped
     }

@@ -493,6 +493,221 @@ fn prop_coordinator_backend_gemm_bit_exact() {
     }
 }
 
+/// Property: the elastic composition planner only ever emits
+/// resource-feasible plans — for ANY traffic profile, observation set,
+/// current composition and knob setting, every enumerated composition
+/// and every planned target fits the Zynq-7020 budget, stays within
+/// `max_swaps`, and clears the cost-plus-hysteresis bar.
+#[test]
+fn prop_elastic_planner_emits_only_feasible_compositions() {
+    use secda::coordinator::{GemmShape, WorkerKind};
+    use secda::elastic::{
+        Composition, CompositionPlanner, DesignCosts, ElasticConfig, TrafficProfile,
+    };
+    use secda::synth::Resources;
+
+    let budget = Resources::zynq7020();
+    let planner = CompositionPlanner::new(budget);
+    for seed in 1..=40u64 {
+        let mut rng = Rng::new(seed * 0xe1a);
+        let n_shapes = rng.range(1, 4);
+        let mut demand = Vec::new();
+        for _ in 0..n_shapes {
+            let shape = GemmShape {
+                m: rng.range(1, 512),
+                k: rng.range(1, 8192),
+                n: rng.range(1, 4096),
+            };
+            demand.push((shape, rng.range(1, 64) as u64));
+        }
+        let requests = rng.range(1, 64);
+        let profile = TrafficProfile {
+            requests,
+            span: SimTime::ms(rng.range(50, 5000) as u64),
+            arrival_rate_rps: requests as f64,
+            demand,
+            slo_carrying: 0,
+            slo_missed: 0,
+        };
+        let mut costs = DesignCosts::new(rng.range(1, 2), SimTime::us(150));
+        for _ in 0..rng.range(0, 6) {
+            let kind = match rng.next() % 3 {
+                0 => WorkerKind::Sa,
+                1 => WorkerKind::Vm,
+                _ => WorkerKind::Cpu,
+            };
+            let shape = GemmShape {
+                m: rng.range(1, 256),
+                k: rng.range(1, 4096),
+                n: rng.range(1, 256),
+            };
+            costs.model_mut(kind).observe(
+                shape,
+                rng.next() % 2 == 0,
+                SimTime::us(rng.range(10, 100_000) as u64),
+            );
+        }
+        let cfg = ElasticConfig {
+            max_swaps: rng.range(0, 3),
+            cpu_max: rng.range(0, 3),
+            hysteresis: SimTime::us(rng.range(0, 50_000) as u64),
+            ..ElasticConfig::default()
+        };
+        for comp in planner.enumerate(cfg.cpu_max) {
+            assert!(comp.fits(&budget), "seed {seed}: enumerated {comp} infeasible");
+            assert!(comp.total() >= 1, "seed {seed}");
+            assert!(comp.cpu <= cfg.cpu_max, "seed {seed}");
+        }
+        let current =
+            Composition::new(rng.range(0, 2), rng.range(0, 2), rng.range(0, 2));
+        if let Some(plan) = planner.plan(current, &profile, &costs, &cfg) {
+            assert!(
+                plan.to.fits(&budget),
+                "seed {seed}: planned target {} infeasible",
+                plan.to
+            );
+            assert!(plan.to.total() >= 1, "seed {seed}");
+            assert!(plan.to != current, "seed {seed}: no-op plan emitted");
+            assert!(
+                plan.swaps <= cfg.max_swaps,
+                "seed {seed}: {} swaps over the {} cap",
+                plan.swaps,
+                cfg.max_swaps
+            );
+            assert!(
+                plan.projected_win() > plan.reconfig_cost + cfg.hysteresis,
+                "seed {seed}: win {} does not clear cost {} + hysteresis {}",
+                plan.projected_win(),
+                plan.reconfig_cost,
+                cfg.hysteresis
+            );
+        }
+    }
+}
+
+/// Property: an elastic controller with `max_swaps = 0` is
+/// bit-identical to today's static pool in BOTH exec modes — same
+/// outputs, and in the deterministic modeled mode the same workers and
+/// the same timeline — and it never records a reconfiguration.
+#[test]
+fn prop_elastic_max_swaps_zero_is_static() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{Completion, Coordinator, CoordinatorConfig, ExecMode};
+    use secda::elastic::ElasticConfig;
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    fn serve(
+        nets: &[Arc<Graph>; 2],
+        inputs: &[(usize, Tensor)],
+        mode: ExecMode,
+        elastic: bool,
+    ) -> (Vec<Completion>, usize, u64) {
+        let cfg = CoordinatorConfig {
+            queue_depth: 64,
+            exec_mode: mode,
+            elastic: elastic.then(|| ElasticConfig {
+                eval_interval: SimTime::ZERO,
+                min_samples: 1,
+                hysteresis: SimTime::ZERO,
+                max_swaps: 0, // observe everything, touch nothing
+                cpu_max: 2,
+                ..ElasticConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg);
+        let mut done = Vec::new();
+        for (i, (which, input)) in inputs.iter().enumerate() {
+            coord
+                .submit(nets[*which].clone(), input.clone())
+                .expect("queue sized");
+            coord.advance(SimTime::us(400));
+            if i % 3 == 2 {
+                // drain mid-stream so the controller gets evaluation
+                // opportunities it must decline
+                done.extend(coord.run_until_idle());
+            }
+        }
+        done.extend(coord.run_until_idle());
+        done.sort_by_key(|c| c.id);
+        (
+            done,
+            coord.elastic_history().len(),
+            coord.metrics().reconfigs,
+        )
+    }
+
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed * 0x51a);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let inputs: Vec<(usize, Tensor)> = (0..6)
+            .map(|_| {
+                let which = (rng.next() % 2) as usize;
+                let g = &nets[which];
+                let n: usize = g.input_shape.iter().product();
+                (which, Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp))
+            })
+            .collect();
+        for mode in [ExecMode::Modeled, ExecMode::Threaded] {
+            let (stat, _, _) = serve(&nets, &inputs, mode, false);
+            let (elas, history, reconfigs) = serve(&nets, &inputs, mode, true);
+            assert_eq!(history, 0, "seed {seed}: pinned pool recorded a swap");
+            assert_eq!(reconfigs, 0, "seed {seed}");
+            assert_eq!(stat.len(), elas.len());
+            for (s, e) in stat.iter().zip(&elas) {
+                assert_eq!(s.id, e.id, "seed {seed}");
+                assert_eq!(
+                    s.output.data, e.output.data,
+                    "seed {seed}: request {} bits diverged under {mode}",
+                    s.id
+                );
+                if mode == ExecMode::Modeled {
+                    // deterministic mode: the whole timeline must match
+                    assert_eq!(
+                        (s.worker, s.started, s.finished),
+                        (e.worker, e.started, e.finished),
+                        "seed {seed}: request {} timeline diverged",
+                        s.id
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Failure injection: a livelocked module graph (self-rescheduling
 /// forever) must be contained by the kernel's event budget instead of
 /// hanging the design loop.
