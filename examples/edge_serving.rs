@@ -30,6 +30,15 @@
 //!
 //! Run: `cargo run --release --example edge_serving \
 //!     [n_requests] [model] [sa_workers] [modeled|threaded] [fifo|edf|admission]`
+//!
+//! Observability: `--trace-out trace.json` turns the span recorder on
+//! and writes a Chrome trace-event file at the end — load it in
+//! <https://ui.perfetto.dev> to see one track per pool worker, async
+//! queue-wait arrows and per-GEMM accelerator events.
+//! `--metrics-out metrics.json` writes the flat metrics snapshot
+//! (`secda-metrics-v1`). Tracing is inert: the served outputs are
+//! bit-identical with or without the flags (pinned by
+//! `prop_tracing_is_inert`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -42,8 +51,19 @@ use secda::coordinator::{
 use secda::framework::models;
 use secda::framework::tensor::Tensor;
 use secda::gemm;
+use secda::obs::export::{chrome_trace, metrics_json};
 use secda::runtime::default_dir;
 use secda::sysc::SimTime;
+
+/// Strip a `--flag <value>` pair from the arg vector, so the
+/// positional arguments keep their historical indices.
+fn take_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    assert!(i + 1 < args.len(), "{flag} needs a path argument");
+    let v = args.remove(i + 1);
+    args.remove(i);
+    Some(v)
+}
 
 /// Install the per-GEMM bit-identity assertion; returns the name of
 /// the reference path it checks the pool against.
@@ -96,7 +116,9 @@ fn install_cross_check(coord: &mut Coordinator, checks: Arc<AtomicU64>) -> &'sta
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_out = take_flag(&mut args, "--trace-out");
+    let metrics_out = take_flag(&mut args, "--metrics-out");
     let n_requests: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(8);
     let model = args.get(1).map(String::as_str).unwrap_or("mobilenet_v1");
     let sa_workers: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(2);
@@ -118,12 +140,15 @@ fn main() {
     let slo = (policy_name != "fifo").then_some(SimTime::ms(400));
 
     let g = Arc::new(models::by_name(model).expect("model"));
-    let cfg = CoordinatorConfig {
+    let mut cfg = CoordinatorConfig {
         sa_workers,
         exec_mode,
         policy,
         ..CoordinatorConfig::default()
     };
+    if trace_out.is_some() || metrics_out.is_some() {
+        cfg = cfg.with_tracing(1 << 16);
+    }
     let mut coord =
         Coordinator::with_artifact_manifest(cfg, &default_dir()).expect("artifact manifest");
     let checks = Arc::new(AtomicU64::new(0));
@@ -233,6 +258,18 @@ fn main() {
             coord.metrics().wall_elapsed.as_secs_f64() * 1e3,
             coord.metrics().wall_throughput_rps(),
         );
+    }
+    if let Some(path) = &trace_out {
+        let spans = coord.spans().snapshot();
+        std::fs::write(path, chrome_trace(&spans)).expect("write trace");
+        println!(
+            "chrome trace: {} spans -> {path} (load in https://ui.perfetto.dev)",
+            spans.len()
+        );
+    }
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, metrics_json(&coord.metrics().registry())).expect("write metrics");
+        println!("metrics snapshot -> {path}");
     }
     println!("host wall: {:.1} s", wall.as_secs_f64());
 }

@@ -26,6 +26,12 @@
 //! worth its cost.
 //!
 //! Run: `cargo run --release --example elastic_serving`
+//!
+//! Observability: `--trace-out trace.json` records the elastic pool's
+//! run as a Chrome trace (Perfetto-loadable) — the estimator windows,
+//! plan decisions and the VM→SA bitstream reload show up as events on
+//! the elastic track. `--metrics-out metrics.json` writes the elastic
+//! pool's flat metrics snapshot.
 
 use std::sync::Arc;
 
@@ -35,6 +41,7 @@ use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
 use secda::framework::quant::QParams;
 use secda::framework::tensor::Tensor;
+use secda::obs::export::{chrome_trace, metrics_json};
 use secda::sysc::SimTime;
 
 fn xorshift(st: &mut u64) -> u64 {
@@ -112,6 +119,10 @@ struct RunResult {
     throughput: f64,
     swaps: usize,
     final_comp: Composition,
+    /// Chrome trace / metrics JSON, exported when the run's
+    /// coordinator had tracing enabled.
+    trace: Option<String>,
+    metrics: Option<String>,
 }
 
 /// Replay the two-phase stream: day bursts of the conv model, then
@@ -152,6 +163,13 @@ fn serve_stream(label: &str, cfg: CoordinatorConfig, verbose: bool) -> RunResult
         }
         coord.advance(SimTime::ms(50));
     }
+    let (trace, metrics) = if coord.spans().is_enabled() {
+        let trace = chrome_trace(&coord.spans().snapshot());
+        let metrics = metrics_json(&coord.metrics().registry());
+        (Some(trace), Some(metrics))
+    } else {
+        (None, None)
+    };
     let m = coord.metrics();
     RunResult {
         label: label.to_string(),
@@ -160,10 +178,24 @@ fn serve_stream(label: &str, cfg: CoordinatorConfig, verbose: bool) -> RunResult
         throughput: m.throughput_rps(),
         swaps: coord.elastic_history().len(),
         final_comp: coord.composition(),
+        trace,
+        metrics,
     }
 }
 
+/// Strip a `--flag <value>` pair from the arg vector.
+fn take_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    assert!(i + 1 < args.len(), "{flag} needs a path argument");
+    let v = args.remove(i + 1);
+    args.remove(i);
+    Some(v)
+}
+
 fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_out = take_flag(&mut args, "--trace-out");
+    let metrics_out = take_flag(&mut args, "--metrics-out");
     println!("=== elastic serving: diurnal conv->fc shift on one Zynq-7020 ===\n");
 
     let elastic_cfg = ElasticConfig {
@@ -183,17 +215,17 @@ fn main() {
     };
 
     println!("elastic pool (starts mis-provisioned on the VM bitstream):");
-    let elastic = serve_stream(
-        "elastic",
-        CoordinatorConfig {
-            sa_workers: 0,
-            vm_workers: 1,
-            cpu_workers: 0,
-            elastic: Some(elastic_cfg),
-            ..base.clone()
-        },
-        true,
-    );
+    let mut elastic_pool_cfg = CoordinatorConfig {
+        sa_workers: 0,
+        vm_workers: 1,
+        cpu_workers: 0,
+        elastic: Some(elastic_cfg),
+        ..base.clone()
+    };
+    if trace_out.is_some() || metrics_out.is_some() {
+        elastic_pool_cfg = elastic_pool_cfg.with_tracing(1 << 16);
+    }
+    let elastic = serve_stream("elastic", elastic_pool_cfg, true);
     println!();
 
     let static_sa = serve_stream(
@@ -262,4 +294,14 @@ fn main() {
          the bitstream followed the traffic",
         elastic.swaps, elastic.p99, worst.label, worst.p99
     );
+    if let Some(path) = &trace_out {
+        let trace = elastic.trace.as_ref().expect("tracing was enabled");
+        std::fs::write(path, trace).expect("write trace");
+        println!("chrome trace -> {path} (load in https://ui.perfetto.dev)");
+    }
+    if let Some(path) = &metrics_out {
+        let metrics = elastic.metrics.as_ref().expect("tracing was enabled");
+        std::fs::write(path, metrics).expect("write metrics");
+        println!("metrics snapshot -> {path}");
+    }
 }

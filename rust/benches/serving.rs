@@ -24,6 +24,12 @@
 //! Run: `cargo bench --bench serving`
 //! Restrict:  `-- modeled`, `-- threaded` or `-- elastic`
 //! Add a heavier MobileNetV1 sweep with: `cargo bench --bench serving -- full`
+//!
+//! Machine-readable: `cargo bench --bench serving -- json` re-runs the
+//! deterministic modeled sweeps and prints one JSON document (schema
+//! `secda-bench-serving-v1`) on stdout — modeled quantities only, so
+//! the output is bit-stable across machines and diffable against the
+//! committed `BENCH_serving.json` snapshot.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -423,19 +429,9 @@ fn serve_phase_shift(cfg: CoordinatorConfig, slo: SimTime) -> ElasticStats {
     }
 }
 
-/// Static-best vs elastic vs static-worst at the phase-shift workload.
-/// The elastic pool starts on the *wrong* bitstream (VM under deep-K
-/// conv traffic) and must earn its way back via a planner swap; the
-/// static pools show the ceiling and the floor it moves between.
-fn elastic_sweep() {
-    let slo = SimTime::ms(900);
-    println!(
-        "--- elastic reprovisioning (deep-K conv bursts then FC bursts, SLO {slo}) ---"
-    );
-    println!(
-        "{:<22} {:>10} {:>10} {:>7} {:>7} {:>9}",
-        "pool", "req/s", "p99", "SLO%", "swaps", "host ms"
-    );
+/// The three pool configurations of the elastic sweep (shared by the
+/// human table and the `json` mode).
+fn elastic_runs() -> [(&'static str, CoordinatorConfig); 3] {
     let base = CoordinatorConfig {
         queue_depth: 64,
         ..CoordinatorConfig::default()
@@ -449,7 +445,7 @@ fn elastic_sweep() {
         cpu_max: 0,
         ..ElasticConfig::default()
     };
-    let runs: [(&str, CoordinatorConfig); 3] = [
+    [
         (
             "static 1xSA (best)",
             CoordinatorConfig {
@@ -478,8 +474,23 @@ fn elastic_sweep() {
                 ..base
             },
         ),
-    ];
-    for (label, cfg) in runs {
+    ]
+}
+
+/// Static-best vs elastic vs static-worst at the phase-shift workload.
+/// The elastic pool starts on the *wrong* bitstream (VM under deep-K
+/// conv traffic) and must earn its way back via a planner swap; the
+/// static pools show the ceiling and the floor it moves between.
+fn elastic_sweep() {
+    let slo = SimTime::ms(900);
+    println!(
+        "--- elastic reprovisioning (deep-K conv bursts then FC bursts, SLO {slo}) ---"
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>7} {:>7} {:>9}",
+        "pool", "req/s", "p99", "SLO%", "swaps", "host ms"
+    );
+    for (label, cfg) in elastic_runs() {
         let s = serve_phase_shift(cfg, slo);
         println!(
             "{:<22} {:>10.2} {:>10} {:>6.1}% {:>7} {:>9.0}",
@@ -513,9 +524,152 @@ fn mobilenet_sweep() {
     println!();
 }
 
+/// One flat JSON object from pre-rendered `(key, value)` pairs.
+fn jrow(pairs: &[(&str, String)]) -> String {
+    let body: Vec<String> = pairs.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+/// A float value with fixed precision, so the document is diffable.
+fn jf(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+/// A string value (labels here are plain ASCII; no escaping needed).
+fn jstr(s: &str) -> String {
+    format!("\"{s}\"")
+}
+
+/// `-- json`: the deterministic modeled sweeps re-run with exactly the
+/// configurations of the human tables, printed as one JSON document
+/// (schema `secda-bench-serving-v1`). Host wall-clock quantities are
+/// deliberately excluded — everything here is modeled PYNQ-Z1 time, so
+/// the output is bit-stable across machines and diffable against the
+/// committed `BENCH_serving.json`.
+fn json_mode(g: &Arc<Graph>) {
+    let mut sweeps: Vec<(&str, Vec<String>)> = Vec::new();
+
+    // pool scaling (96 requests, 1 ms inter-arrival)
+    let mut rows = Vec::new();
+    for n in [1usize, 2, 4] {
+        let s = serve(g, CoordinatorConfig::sa_pool(n), 96, SimTime::ms(1));
+        rows.push(jrow(&[
+            ("pool", jstr(&format!("{n}x_sa"))),
+            ("req_s", jf(s.throughput)),
+            ("p50_us", jf(s.p50.as_us_f64())),
+            ("p99_us", jf(s.p99.as_us_f64())),
+            ("batches", s.batches.to_string()),
+            ("mean_batch", jf(s.mean_batch)),
+            ("steals", s.steals.to_string()),
+        ]));
+    }
+    let cfg = CoordinatorConfig {
+        queue_depth: 96,
+        ..CoordinatorConfig::default()
+    };
+    let s = serve(g, cfg, 96, SimTime::ms(1));
+    rows.push(jrow(&[
+        ("pool", jstr("2sa_1vm_1cpu")),
+        ("req_s", jf(s.throughput)),
+        ("p50_us", jf(s.p50.as_us_f64())),
+        ("p99_us", jf(s.p99.as_us_f64())),
+        ("batches", s.batches.to_string()),
+        ("mean_batch", jf(s.mean_batch)),
+        ("steals", s.steals.to_string()),
+    ]));
+    sweeps.push(("pool_scaling", rows));
+
+    // batch window (48 requests, 20 ms inter-arrival, 1x SA)
+    let mut rows = Vec::new();
+    for window_ms in [0u64, 2, 10, 50] {
+        let mut cfg = CoordinatorConfig::sa_pool(1);
+        cfg.batch_window = SimTime::ms(window_ms);
+        let s = serve(g, cfg, 48, SimTime::ms(20));
+        rows.push(jrow(&[
+            ("window_ms", window_ms.to_string()),
+            ("batches", s.batches.to_string()),
+            ("mean_batch", jf(s.mean_batch)),
+            ("req_s", jf(s.throughput)),
+            ("p50_us", jf(s.p50.as_us_f64())),
+            ("p99_us", jf(s.p99.as_us_f64())),
+        ]));
+    }
+    sweeps.push(("batch_window", rows));
+
+    // policy sweep (64 requests, SLO 400 ms, 2x SA)
+    let slo = SimTime::ms(400);
+    let mut rows = Vec::new();
+    for (load, gap) in [
+        ("light", SimTime::ms(60)),
+        ("medium", SimTime::ms(25)),
+        ("heavy", SimTime::ms(8)),
+    ] {
+        let policies: [(&str, Arc<dyn SchedulePolicy>); 3] = [
+            ("fifo", Arc::new(FifoPolicy)),
+            ("edf", Arc::new(DeadlinePolicy)),
+            ("admission", Arc::new(AdmissionPolicy)),
+        ];
+        for (name, policy) in policies {
+            let s = serve_slo(g, policy, 64, gap, slo);
+            rows.push(jrow(&[
+                ("load", jstr(load)),
+                ("policy", jstr(name)),
+                ("req_s", jf(s.throughput)),
+                ("p99_us", jf(s.p99.as_us_f64())),
+                ("slo_attainment", jf(s.attainment)),
+                ("completed", s.completed.to_string()),
+                ("shed", s.shed.to_string()),
+            ]));
+        }
+    }
+    sweeps.push(("policy", rows));
+
+    // elastic reprovisioning (phase-shift stream, SLO 900 ms)
+    let slo = SimTime::ms(900);
+    let mut rows = Vec::new();
+    for (label, cfg) in elastic_runs() {
+        let s = serve_phase_shift(cfg, slo);
+        rows.push(jrow(&[
+            ("pool", jstr(label)),
+            ("req_s", jf(s.throughput)),
+            ("p99_us", jf(s.p99.as_us_f64())),
+            ("slo_attainment", jf(s.attainment)),
+            ("swaps", s.swaps.to_string()),
+        ]));
+    }
+    sweeps.push(("elastic", rows));
+
+    println!("{{");
+    println!("  \"schema\": \"secda-bench-serving-v1\",");
+    println!(
+        "  \"note\": \"modeled PYNQ-Z1 quantities only; regenerate with: \
+         cargo bench --bench serving -- json\","
+    );
+    println!("  \"sweeps\": [");
+    for (i, (name, rows)) in sweeps.iter().enumerate() {
+        println!("    {{");
+        println!("      \"name\": \"{name}\",");
+        println!("      \"rows\": [");
+        for (j, r) in rows.iter().enumerate() {
+            let comma = if j + 1 < rows.len() { "," } else { "" };
+            println!("        {r}{comma}");
+        }
+        println!("      ]");
+        let comma = if i + 1 < sweeps.len() { "," } else { "" };
+        println!("    }}{comma}");
+    }
+    println!("  ]");
+    println!("}}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let only = |m: &str| args.iter().any(|a| a == m);
+    if only("json") || only("--json") {
+        // machine-readable mode: JSON only, nothing else on stdout
+        json_mode(&Arc::new(edge_cam()));
+        return;
+    }
     let both = !only("modeled") && !only("threaded") && !only("elastic");
     println!("=== serving benchmarks ===\n");
     let g = Arc::new(edge_cam());

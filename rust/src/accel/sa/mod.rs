@@ -17,7 +17,7 @@ use std::rc::Rc;
 use crate::accel::components::{AxiBus, BramArray, PpuModel, SaArrayModel};
 use crate::accel::types::{AccelReport, ExecMode, GemmAccel, GemmRequest, GemmResult};
 use crate::gemm;
-use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Wake};
+use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Trace, Wake};
 
 /// Configuration of an SA design instance.
 #[derive(Debug, Clone)]
@@ -450,26 +450,11 @@ impl SaDesign {
     pub fn with_dim(dim: usize) -> Self {
         Self::new(SaConfig::with_dim(dim))
     }
-}
 
-impl GemmAccel for SaDesign {
-    fn name(&self) -> &str {
-        "sa"
-    }
-
-    fn clock(&self) -> Clock {
-        Clock::from_mhz(self.cfg.clock_mhz)
-    }
-
-    fn weight_buffer_bytes(&self) -> usize {
-        self.cfg.global_weight_buf.capacity_bytes
-    }
-
-    fn has_ppu(&self) -> bool {
-        self.cfg.ppu.is_some()
-    }
-
-    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult {
+    /// The full simulation, with `trace` attached to the kernel.
+    /// Trace recording only appends to a side buffer, so results and
+    /// timings are identical whether the trace is enabled or not.
+    fn run_inner(&self, req: &GemmRequest, mode: ExecMode, trace: Trace) -> (GemmResult, Trace) {
         let clock = self.clock();
         let dim = self.cfg.array.dim;
         let jobs: Vec<Job> = (0..req.m.div_ceil(dim))
@@ -507,7 +492,7 @@ impl GemmAccel for SaDesign {
         }));
 
         // ids: 0 dma, 1 ppu, 2 array, 3 sched, 4 ih
-        let mut sim: Simulator<Msg> = Simulator::new();
+        let mut sim: Simulator<Msg> = Simulator::new().with_trace(trace);
         let array_fifo = sim.add_fifo(self.cfg.job_fifo_depth, None, None);
         let ppu_fifo = sim.add_fifo(2, None, None);
         let dma = sim.add_module(Box::new(OutputDma {
@@ -574,6 +559,7 @@ impl GemmAccel for SaDesign {
         let end = sim.run();
 
         let modules = sim.report();
+        let trace = std::mem::replace(&mut sim.trace, Trace::disabled());
         drop(sim); // release the modules' Rc clones of the run state
         let mut run = Rc::try_unwrap(run)
             .unwrap_or_else(|_| panic!("run state still shared"))
@@ -584,11 +570,45 @@ impl GemmAccel for SaDesign {
         run.report.total_cycles = clock.cycles_at(run.report.total_time);
         run.report.modules = modules;
         assert_eq!(run.completed, run.jobs.len(), "all jobs must drain");
-        GemmResult {
-            output: run.output,
-            raw_acc: run.raw_acc,
-            report: run.report,
-        }
+        (
+            GemmResult {
+                output: run.output,
+                raw_acc: run.raw_acc,
+                report: run.report,
+            },
+            trace,
+        )
+    }
+}
+
+impl GemmAccel for SaDesign {
+    fn name(&self) -> &str {
+        "sa"
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::from_mhz(self.cfg.clock_mhz)
+    }
+
+    fn weight_buffer_bytes(&self) -> usize {
+        self.cfg.global_weight_buf.capacity_bytes
+    }
+
+    fn has_ppu(&self) -> bool {
+        self.cfg.ppu.is_some()
+    }
+
+    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult {
+        self.run_inner(req, mode, Trace::disabled()).0
+    }
+
+    fn run_traced(
+        &self,
+        req: &GemmRequest,
+        mode: ExecMode,
+        trace_cap: usize,
+    ) -> (GemmResult, Trace) {
+        self.run_inner(req, mode, Trace::enabled(trace_cap))
     }
 }
 

@@ -172,6 +172,21 @@ pub trait GemmAccel {
     fn max_k(&self) -> Option<usize> {
         None
     }
+    /// Simulate one GEMM with an enabled [`crate::sysc::Trace`]
+    /// attached to the simulator, returning up to `trace_cap`
+    /// recorded kernel events alongside the result. Tracing must be
+    /// inert: the result is bit-identical to [`GemmAccel::run`].
+    /// The default runs untraced and returns an empty trace (designs
+    /// without internal simulators, e.g. analytic models, keep it).
+    fn run_traced(
+        &self,
+        req: &GemmRequest,
+        mode: ExecMode,
+        trace_cap: usize,
+    ) -> (GemmResult, crate::sysc::Trace) {
+        let _ = trace_cap;
+        (self.run(req, mode), crate::sysc::Trace::disabled())
+    }
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@ use std::rc::Rc;
 use crate::accel::components::{AxiBus, BramArray, PpuModel, VmUnitModel};
 use crate::accel::types::{AccelReport, ExecMode, GemmAccel, GemmRequest, GemmResult};
 use crate::gemm;
-use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Wake};
+use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Trace, Wake};
 
 /// Configuration of a VM design instance (the §IV-E ablation knobs).
 #[derive(Debug, Clone)]
@@ -660,30 +660,11 @@ impl VmDesign {
         }
         jobs
     }
-}
 
-impl GemmAccel for VmDesign {
-    fn name(&self) -> &str {
-        "vm"
-    }
-
-    fn clock(&self) -> Clock {
-        Clock::from_mhz(self.cfg.clock_mhz)
-    }
-
-    fn weight_buffer_bytes(&self) -> usize {
-        self.cfg.global_weight_buf.capacity_bytes
-    }
-
-    fn has_ppu(&self) -> bool {
-        self.cfg.ppu.is_some()
-    }
-
-    fn max_k(&self) -> Option<usize> {
-        Some(self.cfg.max_k())
-    }
-
-    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult {
+    /// The full simulation, with `trace` attached to the kernel.
+    /// Trace recording only appends to a side buffer, so results and
+    /// timings are identical whether the trace is enabled or not.
+    fn run_inner(&self, req: &GemmRequest, mode: ExecMode, trace: Trace) -> (GemmResult, Trace) {
         assert!(
             req.k <= self.cfg.max_k(),
             "K={} exceeds local buffer capacity (max_k={}); the driver \
@@ -720,7 +701,7 @@ impl GemmAccel for VmDesign {
             report: AccelReport::default(),
         }));
 
-        let mut sim: Simulator<Msg> = Simulator::new();
+        let mut sim: Simulator<Msg> = Simulator::new().with_trace(trace);
         // Module ids are sequential in creation order; precompute the
         // graph so every module can be constructed fully wired:
         //   0: output_dma, 1: crossbar,
@@ -816,6 +797,7 @@ impl GemmAccel for VmDesign {
         let end = sim.run();
 
         let modules = sim.report();
+        let trace = std::mem::replace(&mut sim.trace, Trace::disabled());
         drop(sim); // release the modules' Rc clones of the run state
         let mut run = Rc::try_unwrap(run)
             .unwrap_or_else(|_| panic!("run state still shared"))
@@ -826,11 +808,49 @@ impl GemmAccel for VmDesign {
         run.report.total_cycles = clock.cycles_at(run.report.total_time);
         run.report.modules = modules;
         assert_eq!(run.completed, run.jobs.len(), "all jobs must drain");
-        GemmResult {
-            output: run.output,
-            raw_acc: run.raw_acc,
-            report: run.report,
-        }
+        (
+            GemmResult {
+                output: run.output,
+                raw_acc: run.raw_acc,
+                report: run.report,
+            },
+            trace,
+        )
+    }
+}
+
+impl GemmAccel for VmDesign {
+    fn name(&self) -> &str {
+        "vm"
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::from_mhz(self.cfg.clock_mhz)
+    }
+
+    fn weight_buffer_bytes(&self) -> usize {
+        self.cfg.global_weight_buf.capacity_bytes
+    }
+
+    fn has_ppu(&self) -> bool {
+        self.cfg.ppu.is_some()
+    }
+
+    fn max_k(&self) -> Option<usize> {
+        Some(self.cfg.max_k())
+    }
+
+    fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult {
+        self.run_inner(req, mode, Trace::disabled()).0
+    }
+
+    fn run_traced(
+        &self,
+        req: &GemmRequest,
+        mode: ExecMode,
+        trace_cap: usize,
+    ) -> (GemmResult, Trace) {
+        self.run_inner(req, mode, Trace::enabled(trace_cap))
     }
 }
 

@@ -4,6 +4,8 @@
 use crate::accel::{SaConfig, VmConfig};
 use crate::synth;
 
+/// Render the VM accelerator's block diagram (paper Fig. 3) with the
+/// concrete parameters of `cfg` and its synthesized resource estimate.
 pub fn describe_vm(cfg: &VmConfig) -> String {
     let r = synth::synthesize_vm(cfg);
     let mut s = String::new();
@@ -64,6 +66,8 @@ pub fn describe_vm(cfg: &VmConfig) -> String {
     s
 }
 
+/// Render the SA accelerator's block diagram (paper Fig. 4) with the
+/// concrete parameters of `cfg` and its synthesized resource estimate.
 pub fn describe_sa(cfg: &SaConfig) -> String {
     let r = synth::synthesize_sa(cfg);
     let d = cfg.array.dim;

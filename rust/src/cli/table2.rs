@@ -14,13 +14,19 @@ use crate::vta::VtaDesign;
 /// A hardware setup column of Table II.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Setup {
+    /// CPU-only gemmlowp with the given thread count.
     Cpu(usize),
+    /// CPU threads + the VM accelerator (paper Fig. 3).
     CpuVm(usize),
+    /// CPU threads + the SA accelerator (paper Fig. 4).
     CpuSa(usize),
+    /// CPU (2 threads) + the VTA baseline (§V-C).
     CpuVta,
 }
 
 impl Setup {
+    /// The column header used in the rendered table (and stored in
+    /// [`InferenceReport::setup`]).
     pub fn label(&self) -> String {
         match self {
             Setup::Cpu(t) => format!("CPU ({t} thr)"),
@@ -30,6 +36,7 @@ impl Setup {
         }
     }
 
+    /// CPU threads available to the interpreter under this setup.
     pub fn threads(&self) -> usize {
         match self {
             Setup::Cpu(t) | Setup::CpuVm(t) | Setup::CpuSa(t) => *t,

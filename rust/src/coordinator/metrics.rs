@@ -13,6 +13,7 @@
 
 use std::time::Duration;
 
+use crate::obs::{Histogram, MetricsRegistry};
 use crate::sysc::SimTime;
 
 /// One dispatch round: a group of same-model requests executed back to
@@ -60,10 +61,12 @@ pub struct ServingMetrics {
     /// reconfigurations (swapped-in workers start late by their share
     /// of it).
     pub reconfig_time: SimTime,
-    /// End-to-end modeled latency (finish - arrival) per request.
-    latencies: Vec<SimTime>,
-    /// Queue wait (start - arrival) per request.
-    waits: Vec<SimTime>,
+    /// End-to-end modeled latency (finish - arrival) distribution.
+    /// Streaming log-scale histogram: O(1) record, O(buckets)
+    /// quantile, exact extremes — no samples retained.
+    latencies: Histogram,
+    /// Queue wait (start - arrival) distribution (same structure).
+    waits: Histogram,
     /// Every dispatch round, in recording order.
     pub batches: Vec<BatchRecord>,
     /// Highest queue depth observed on any worker.
@@ -127,8 +130,8 @@ impl ServingMetrics {
         deadline: Option<SimTime>,
     ) {
         self.completed += 1;
-        self.latencies.push(finish.saturating_sub(arrival));
-        self.waits.push(start.saturating_sub(arrival));
+        self.latencies.record_time(finish.saturating_sub(arrival));
+        self.waits.record_time(start.saturating_sub(arrival));
         self.last_finish = self.last_finish.max(finish);
         if let Some(d) = deadline {
             if finish <= d {
@@ -189,31 +192,22 @@ impl ServingMetrics {
         self.wall_completed as f64 / secs
     }
 
-    fn percentile(sorted: &[SimTime], p: f64) -> SimTime {
-        if sorted.is_empty() {
-            return SimTime::ZERO;
-        }
-        let idx = (p * (sorted.len() - 1) as f64).round() as usize;
-        sorted[idx.min(sorted.len() - 1)]
-    }
-
     /// Latency percentile over completed requests (p in [0, 1]).
+    /// Reads the streaming histogram: extremes are exact, interior
+    /// percentiles are within ~1.6%. Nothing is cloned or sorted.
     pub fn latency_pct(&self, p: f64) -> SimTime {
-        let mut v = self.latencies.clone();
-        v.sort();
-        Self::percentile(&v, p)
+        self.latencies.quantile_time(p)
     }
 
-    /// Queue-wait percentile over completed requests.
+    /// Queue-wait percentile over completed requests (same histogram
+    /// read as [`ServingMetrics::latency_pct`]).
     pub fn wait_pct(&self, p: f64) -> SimTime {
-        let mut v = self.waits.clone();
-        v.sort();
-        Self::percentile(&v, p)
+        self.waits.quantile_time(p)
     }
 
-    /// Longest queue wait any completed request saw.
+    /// Longest queue wait any completed request saw (exact).
     pub fn max_wait(&self) -> SimTime {
-        self.waits.iter().copied().max().unwrap_or(SimTime::ZERO)
+        SimTime::ps(self.waits.max())
     }
 
     /// Mean dispatch-round size over all recorded batches.
@@ -230,14 +224,10 @@ impl ServingMetrics {
         self.queue_peak = self.queue_peak.max(depth);
     }
 
-    /// One-paragraph serving summary. Sorts each sample vector once
-    /// (the `*_pct` accessors sort per call; fine for spot reads, not
-    /// for a four-percentile report over a long serving run).
+    /// One-paragraph serving summary. Reads the same streaming
+    /// histograms as the `*_pct` accessors — one code path, no clones,
+    /// however many percentiles the report wants.
     pub fn summary(&self) -> String {
-        let mut lat = self.latencies.clone();
-        lat.sort();
-        let mut waits = self.waits.clone();
-        waits.sort();
         let wall = if self.wall_elapsed > Duration::ZERO {
             format!(
                 "; wall {:.1} ms -> {:.1} req/s real",
@@ -275,10 +265,10 @@ impl ServingMetrics {
             self.rejected,
             self.makespan(),
             self.throughput_rps(),
-            Self::percentile(&lat, 0.5),
-            Self::percentile(&lat, 0.99),
-            Self::percentile(&waits, 0.5),
-            waits.last().copied().unwrap_or(SimTime::ZERO),
+            self.latency_pct(0.5),
+            self.latency_pct(0.99),
+            self.wait_pct(0.5),
+            self.max_wait(),
             self.batches.len(),
             self.mean_batch_size(),
             self.steals,
@@ -287,6 +277,36 @@ impl ServingMetrics {
             reconfig,
             wall,
         )
+    }
+
+    /// A point-in-time [`MetricsRegistry`] snapshot of everything this
+    /// struct tracks, for the flat-JSON exporter
+    /// ([`crate::obs::export::metrics_json`]). Histogram values are in
+    /// picoseconds (the [`SimTime`] base unit); derived rates and
+    /// millisecond conversions are exported as gauges.
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.counter("submitted", self.submitted);
+        r.counter("rejected", self.rejected);
+        r.counter("shed_predicted", self.shed_predicted);
+        r.counter("completed", self.completed);
+        r.counter("slo_attained", self.slo_attained);
+        r.counter("slo_missed", self.slo_missed);
+        r.counter("steals", self.steals);
+        r.counter("reconfigs", self.reconfigs);
+        r.counter("batches", self.batches.len() as u64);
+        r.counter("queue_peak", self.queue_peak as u64);
+        r.counter("wall_completed", self.wall_completed);
+        r.gauge("throughput_rps", self.throughput_rps());
+        r.gauge("wall_throughput_rps", self.wall_throughput_rps());
+        r.gauge("slo_attainment", self.slo_attainment());
+        r.gauge("mean_batch_size", self.mean_batch_size());
+        r.gauge("makespan_ms", self.makespan().as_ms_f64());
+        r.gauge("reconfig_time_ms", self.reconfig_time.as_ms_f64());
+        r.gauge("wall_elapsed_ms", self.wall_elapsed.as_secs_f64() * 1e3);
+        r.histogram("latency_ps", &self.latencies);
+        r.histogram("queue_wait_ps", &self.waits);
+        r
     }
 }
 
@@ -383,5 +403,30 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("SLO 1/2 attained"), "{s}");
         assert!(s.contains("1 shed"), "{s}");
+    }
+
+    #[test]
+    fn registry_snapshot_covers_everything() {
+        let mut m = ServingMetrics::default();
+        m.record_submit(SimTime::ZERO);
+        m.record_request(SimTime::ZERO, SimTime::ms(1), SimTime::ms(12), Some(SimTime::ms(20)));
+        m.record_batch(0, "net", 1, SimTime::ms(1));
+        m.record_reconfig(SimTime::ms(30));
+        let r = m.registry();
+        use crate::obs::MetricValue;
+        assert_eq!(r.get("completed"), Some(&MetricValue::Counter(1)));
+        assert_eq!(r.get("reconfigs"), Some(&MetricValue::Counter(1)));
+        match r.get("latency_ps") {
+            Some(MetricValue::Histogram(h)) => {
+                assert_eq!(h.count, 1);
+                assert_eq!(h.min, SimTime::ms(12).as_ps());
+                assert_eq!(h.max, SimTime::ms(12).as_ps());
+            }
+            other => panic!("latency_ps missing: {other:?}"),
+        }
+        // and the export round-trips through the validator
+        let json = crate::obs::export::metrics_json(&r);
+        let n = crate::obs::export::validate_metrics_json(&json).expect("valid");
+        assert_eq!(n, r.entries().len());
     }
 }

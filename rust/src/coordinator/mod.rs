@@ -83,6 +83,7 @@ use crate::framework::backend::{GemmBackend, GemmTask, GemmTiming};
 use crate::framework::graph::Graph;
 use crate::framework::interpreter::InferenceReport;
 use crate::framework::tensor::Tensor;
+use crate::obs::{Span, SpanRecorder, Stage};
 use crate::runtime::Bucket;
 use crate::sysc::SimTime;
 
@@ -92,7 +93,9 @@ pub use policy::{
     Admission, AdmissionPolicy, CostModel, DeadlinePolicy, FifoPolicy, GemmShape, ModeledCost,
     SchedulePolicy,
 };
-pub use pool::{PartitionedBackend, SharedCrossCheck, Worker, WorkerKind, WorkerPool};
+pub use pool::{
+    GemmLogEntry, PartitionedBackend, SharedCrossCheck, Worker, WorkerKind, WorkerPool,
+};
 pub use scheduler::{OffloadPlanner, Route};
 
 /// How the coordinator executes its worker pool.
@@ -163,6 +166,14 @@ pub struct CoordinatorConfig {
     /// workers ride along) through [`Coordinator::reconfigure`].
     /// `None` (the default) keeps the pool exactly as constructed.
     pub elastic: Option<crate::elastic::ElasticConfig>,
+    /// The span recorder every lifecycle event flows through
+    /// ([`crate::obs`]). Disabled by default — a disabled recorder
+    /// costs one branch per call site and records nothing, and tracing
+    /// is inert: enabling it never changes outputs or modeled timing
+    /// (pinned by the `prop_tracing_is_inert` property test). Shared
+    /// (`Arc`) because under [`ExecMode::Threaded`] every worker
+    /// thread records into the same instance.
+    pub spans: Arc<SpanRecorder>,
 }
 
 impl Default for CoordinatorConfig {
@@ -180,6 +191,7 @@ impl Default for CoordinatorConfig {
             exec_mode: ExecMode::Modeled,
             policy: Arc::new(FifoPolicy),
             elastic: None,
+            spans: Arc::new(SpanRecorder::disabled()),
         }
     }
 }
@@ -212,6 +224,17 @@ impl CoordinatorConfig {
     /// enabled ([`crate::elastic::ElasticConfig`]).
     pub fn with_elastic(mut self, elastic: crate::elastic::ElasticConfig) -> Self {
         self.elastic = Some(elastic);
+        self
+    }
+
+    /// The same configuration with span tracing enabled: an enabled
+    /// recorder keeping up to `cap` spans, plus the driver-level
+    /// simulator-trace bridge so each offloaded GEMM's kernel events
+    /// nest inside its span. Tracing is inert — outputs and modeled
+    /// timing are bit-identical to the untraced configuration.
+    pub fn with_tracing(mut self, cap: usize) -> Self {
+        self.spans = Arc::new(SpanRecorder::enabled(cap));
+        self.driver.sim_trace = 32;
         self
     }
 }
@@ -465,6 +488,15 @@ impl Coordinator {
                 request: Box::new(req),
             });
         }
+        self.cfg.spans.record(|| {
+            let mut s = Span::instant(Stage::Submit, self.now);
+            s.request_id = Some(req.id);
+            s.attrs.push(("model", req.model.name.clone()));
+            if let Some(d) = req.deadline {
+                s.attrs.push(("deadline", d.to_string()));
+            }
+            s
+        });
         // disjoint field borrows: &mut pool next to &cfg.policy
         match self.pool.submit(req, self.cfg.policy.as_ref(), self.now) {
             Ok(widx) => {
@@ -473,10 +505,24 @@ impl Coordinator {
                 self.metrics.record_submit(self.now);
                 let depth = self.pool.workers[widx].queue.len();
                 self.metrics.observe_queue_depth(depth);
+                self.cfg.spans.record(|| {
+                    let mut s = Span::instant(Stage::Admission, self.now);
+                    s.request_id = Some(id);
+                    s.attrs.push(("verdict", "admitted".into()));
+                    s.attrs.push(("placed_on", widx.to_string()));
+                    s.attrs.push(("queue_depth", depth.to_string()));
+                    s
+                });
                 Ok(id)
             }
             Err(pool::SubmitRejection::Full(request)) => {
                 self.metrics.record_reject();
+                self.cfg.spans.record(|| {
+                    let mut s = Span::instant(Stage::Admission, self.now);
+                    s.attrs.push(("verdict", "backpressure".into()));
+                    s.attrs.push(("model", request.model.name.clone()));
+                    s
+                });
                 Err(SubmitError::Backpressure {
                     queued: self.pool.total_queued(),
                     request,
@@ -484,6 +530,13 @@ impl Coordinator {
             }
             Err(pool::SubmitRejection::Shed { request, predicted, deadline }) => {
                 self.metrics.record_shed();
+                self.cfg.spans.record(|| {
+                    let mut s = Span::instant(Stage::Admission, self.now);
+                    s.attrs.push(("verdict", "shed".into()));
+                    s.attrs.push(("predicted", predicted.to_string()));
+                    s.attrs.push(("deadline", deadline.to_string()));
+                    s
+                });
                 Err(SubmitError::ShedPredicted {
                     predicted,
                     deadline,
@@ -522,7 +575,29 @@ impl Coordinator {
             for c in &done {
                 ctrl.observe(c);
             }
-            if let Some(plan) = ctrl.evaluate(self.now, self.composition(), &self.pool) {
+            let plan = ctrl.evaluate(self.now, self.composition(), &self.pool);
+            if let Some(profile) = ctrl.take_last_profile() {
+                self.cfg.spans.record(|| {
+                    let mut s = Span::new(
+                        Stage::EstimatorWindow,
+                        self.now.saturating_sub(profile.span),
+                        self.now,
+                    );
+                    s.attrs.push(("requests", profile.requests.to_string()));
+                    s.attrs
+                        .push(("rate_rps", format!("{:.3}", profile.arrival_rate_rps)));
+                    s.attrs.push(("shapes", profile.demand.len().to_string()));
+                    s
+                });
+            }
+            if let Some(plan) = plan {
+                self.cfg.spans.record(|| {
+                    let mut s = Span::instant(Stage::Plan, self.now);
+                    s.attrs.push(("from", plan.from.to_string()));
+                    s.attrs.push(("to", plan.to.to_string()));
+                    s.attrs.push(("swaps", plan.swaps.to_string()));
+                    s
+                });
                 self.reconfigure(&plan);
                 ctrl.commit(&plan, self.now);
             }
@@ -558,6 +633,14 @@ impl Coordinator {
     /// may apply a hand-built plan (e.g. scheduled maintenance to a
     /// CPU-only pool).
     pub fn reconfigure(&mut self, plan: &crate::elastic::ReconfigPlan) {
+        self.cfg.spans.record(|| {
+            let mut s =
+                Span::new(Stage::Reconfigure, self.now, self.now + plan.reconfig_cost);
+            s.attrs.push(("from", plan.from.to_string()));
+            s.attrs.push(("to", plan.to.to_string()));
+            s.attrs.push(("swaps", plan.swaps.to_string()));
+            s
+        });
         let displaced = self.pool.apply_composition(
             &plan.to,
             &self.cfg,
@@ -583,6 +666,12 @@ impl Coordinator {
     /// Accumulated serving telemetry.
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
+    }
+
+    /// The span recorder this coordinator (and its pool) records into.
+    /// Export a drained run with [`crate::obs::export::chrome_trace`].
+    pub fn spans(&self) -> &SpanRecorder {
+        &self.cfg.spans
     }
 
     /// The shared executable-cache model (compiles / hits / buckets).

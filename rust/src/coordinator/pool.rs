@@ -29,6 +29,7 @@ use std::sync::{Arc, Mutex};
 use crate::driver::DriverHandle;
 use crate::framework::backend::{CpuBackend, GemmBackend, GemmTask, GemmTiming};
 use crate::framework::graph::Graph;
+use crate::obs::SpanRecorder;
 use crate::sysc::SimTime;
 
 use super::batch::BucketBatcher;
@@ -48,6 +49,36 @@ pub type SharedCrossCheck = Arc<Mutex<Option<Box<CrossCheckFn>>>>;
 
 /// The shared executable-cache model, one per pool.
 pub type SharedBatcher = Arc<Mutex<BucketBatcher>>;
+
+/// One GEMM a worker executed while serving its current request —
+/// kept only when tracing is enabled, and drained per request by the
+/// scheduler ([`super::scheduler::execute_batch_on`]) to nest a
+/// [`crate::obs::Stage::Gemm`] span (with its bridged simulator
+/// events) inside the request's span.
+#[derive(Debug, Clone)]
+pub struct GemmLogEntry {
+    /// The layer that issued the GEMM.
+    pub layer: String,
+    /// Where it ran (accelerator offload or CPU).
+    pub route: Route,
+    /// GEMM dimensions.
+    pub m: usize,
+    /// Reduction depth.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Whether weights were resident on the fabric for this run.
+    pub resident: bool,
+    /// The GEMM's contribution to the layer wall time (including any
+    /// AOT compile charge).
+    pub total: SimTime,
+    /// Fabric-active portion (zero on the CPU route).
+    pub accel_active: SimTime,
+    /// Kernel events bridged out of the accelerator simulator
+    /// ([`crate::driver::DriverConfig::sim_trace`]), times relative to
+    /// the simulator run start.
+    pub sim_trace: Vec<crate::sysc::trace::TraceEntry>,
+}
 
 /// What kind of instance a worker wraps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +111,10 @@ pub struct PartitionedBackend {
     /// those have weights resident on the fabric, so only those earn
     /// the warm residency upgrade.
     prev_offloaded: HashSet<String>,
+    /// The pool's shared span recorder (disabled by default).
+    spans: Arc<SpanRecorder>,
+    /// GEMMs executed for the current request (tracing only).
+    gemm_log: Vec<GemmLogEntry>,
 }
 
 impl PartitionedBackend {
@@ -90,6 +125,7 @@ impl PartitionedBackend {
         sync_overhead: SimTime,
         batcher: SharedBatcher,
         check: SharedCrossCheck,
+        spans: Arc<SpanRecorder>,
     ) -> Self {
         PartitionedBackend {
             label: handle.label.clone(),
@@ -101,6 +137,8 @@ impl PartitionedBackend {
             warm: false,
             offloaded: HashSet::new(),
             prev_offloaded: HashSet::new(),
+            spans,
+            gemm_log: Vec::new(),
         }
     }
 
@@ -110,6 +148,7 @@ impl PartitionedBackend {
         threads: usize,
         batcher: SharedBatcher,
         check: SharedCrossCheck,
+        spans: Arc<SpanRecorder>,
     ) -> Self {
         PartitionedBackend {
             label: format!("cpu{id}"),
@@ -123,6 +162,8 @@ impl PartitionedBackend {
             warm: false,
             offloaded: HashSet::new(),
             prev_offloaded: HashSet::new(),
+            spans,
+            gemm_log: Vec::new(),
         }
     }
 
@@ -140,6 +181,17 @@ impl PartitionedBackend {
     /// The accelerator instance, when this worker has one.
     pub fn handle(&self) -> Option<&DriverHandle> {
         self.handle.as_ref()
+    }
+
+    /// The pool's shared span recorder.
+    pub fn spans(&self) -> &Arc<SpanRecorder> {
+        &self.spans
+    }
+
+    /// Drain the GEMMs logged for the current request (tracing only;
+    /// empty when the recorder is disabled).
+    pub fn take_gemm_log(&mut self) -> Vec<GemmLogEntry> {
+        std::mem::take(&mut self.gemm_log)
     }
 }
 
@@ -200,6 +252,28 @@ impl GemmBackend for PartitionedBackend {
             }
             Route::Cpu => self.cpu.run_gemm(task),
         };
+
+        if self.spans.is_enabled() {
+            let sim_trace = match route {
+                Route::Accel => self
+                    .handle
+                    .as_mut()
+                    .map(|h| h.backend_mut().take_sim_trace())
+                    .unwrap_or_default(),
+                Route::Cpu => Vec::new(),
+            };
+            self.gemm_log.push(GemmLogEntry {
+                layer: task.layer.to_string(),
+                route,
+                m: task.m,
+                k: task.k,
+                n: task.n,
+                resident,
+                total: timing.total,
+                accel_active: timing.accel_active,
+                sim_trace,
+            });
+        }
 
         if let Some(cb) = self.check.lock().expect("cross-check lock").as_mut() {
             cb(task, &out);
@@ -292,6 +366,7 @@ impl WorkerPool {
                         sync,
                         batcher.clone(),
                         check.clone(),
+                        cfg.spans.clone(),
                     ),
                     WorkerKind::Vm => PartitionedBackend::with_accel(
                         DriverHandle::vm(id, cfg.driver.clone()),
@@ -299,12 +374,14 @@ impl WorkerPool {
                         sync,
                         batcher.clone(),
                         check.clone(),
+                        cfg.spans.clone(),
                     ),
                     WorkerKind::Cpu => PartitionedBackend::cpu_only(
                         id,
                         threads,
                         batcher.clone(),
                         check.clone(),
+                        cfg.spans.clone(),
                     ),
                 };
                 workers.push(Worker::new(id, kind, backend));
@@ -367,6 +444,7 @@ impl WorkerPool {
                 sync,
                 batcher.clone(),
                 check.clone(),
+                cfg.spans.clone(),
             );
             let mut w = Worker::new(0, WorkerKind::Sa, backend);
             w.free_at = now
@@ -384,6 +462,7 @@ impl WorkerPool {
                 sync,
                 batcher.clone(),
                 check.clone(),
+                cfg.spans.clone(),
             );
             let mut w = Worker::new(0, WorkerKind::Vm, backend);
             w.free_at = now
@@ -395,8 +474,13 @@ impl WorkerPool {
         while cpu.len() < target.cpu {
             let label = self.spawned;
             self.spawned += 1;
-            let backend =
-                PartitionedBackend::cpu_only(label, threads, batcher.clone(), check.clone());
+            let backend = PartitionedBackend::cpu_only(
+                label,
+                threads,
+                batcher.clone(),
+                check.clone(),
+                cfg.spans.clone(),
+            );
             let mut w = Worker::new(0, WorkerKind::Cpu, backend);
             w.free_at = now;
             cpu.push(w);

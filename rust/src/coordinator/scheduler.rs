@@ -30,12 +30,13 @@
 //! OS-thread path in [`super::threaded`], so both modes produce
 //! bit-identical functional outputs per request.
 
-use crate::framework::interpreter::Session;
+use crate::framework::interpreter::{InferenceReport, Session};
+use crate::obs::{Span, SpanRecorder, Stage};
 use crate::sysc::SimTime;
 
 use super::metrics::ServingMetrics;
 use super::policy::{CostModel, GemmShape};
-use super::pool::{Worker, WorkerPool};
+use super::pool::{GemmLogEntry, Worker, WorkerPool};
 use super::{Completion, CoordinatorConfig, InferenceRequest};
 
 /// Where one GEMM layer runs.
@@ -140,6 +141,22 @@ pub fn execute_batch_on(
         let (output, report) =
             Session::new(req.model.as_ref(), &mut w.backend, threads).run(&req.input);
         let finished = started + report.overall();
+        if w.backend.spans().is_enabled() {
+            let spans = w.backend.spans().clone();
+            let gemms = w.backend.take_gemm_log();
+            record_request_spans(
+                &spans,
+                widx,
+                req.id,
+                &req.model.name,
+                size,
+                req.arrival,
+                started,
+                finished,
+                &report,
+                gemms,
+            );
+        }
         done.push(Completion {
             id: req.id,
             model: req.model,
@@ -160,6 +177,90 @@ pub fn execute_batch_on(
     w.backend.set_warm(false);
     w.free_at = t;
     done
+}
+
+/// Emit the per-request spans for one completed request: its queue
+/// wait, its end-to-end execution, and one slice per layer — a
+/// [`Stage::Gemm`] span (with bridged simulator instants) where the
+/// worker logged a GEMM, a [`Stage::Op`] span otherwise. Layer slices
+/// tile the request span: layer i starts where layer i-1 ended. The
+/// GEMM sits at the tail of its layer's window (the CPU-side im2col
+/// prep runs first), clamped inside it.
+///
+/// Only called when the recorder is enabled, from both drain paths.
+#[allow(clippy::too_many_arguments)]
+fn record_request_spans(
+    spans: &SpanRecorder,
+    widx: usize,
+    id: u64,
+    model: &str,
+    batch_size: usize,
+    arrival: SimTime,
+    started: SimTime,
+    finished: SimTime,
+    report: &InferenceReport,
+    gemms: Vec<GemmLogEntry>,
+) {
+    spans.record(|| {
+        let mut s = Span::new(Stage::QueueWait, arrival, started);
+        s.request_id = Some(id);
+        s.worker = Some(widx);
+        s
+    });
+    spans.record(|| {
+        let mut s = Span::new(Stage::Request, started, finished);
+        s.request_id = Some(id);
+        s.worker = Some(widx);
+        s.attrs.push(("model", model.to_string()));
+        s.attrs.push(("batch_size", batch_size.to_string()));
+        s
+    });
+    let mut lt = started;
+    let mut gi = 0;
+    for (lname, _, dt) in &report.layers {
+        let end = lt + *dt;
+        let mut layer_had_gemm = false;
+        while gi < gemms.len() && gemms[gi].layer == *lname {
+            let g = &gemms[gi];
+            gi += 1;
+            layer_had_gemm = true;
+            let g_start = end.saturating_sub(g.total).max(lt);
+            spans.record(|| {
+                let mut s = Span::new(Stage::Gemm, g_start, end);
+                s.request_id = Some(id);
+                s.worker = Some(widx);
+                s.attrs.push(("layer", g.layer.clone()));
+                let route = match g.route {
+                    Route::Accel => "accel",
+                    Route::Cpu => "cpu",
+                };
+                s.attrs.push(("route", route.to_string()));
+                s.attrs.push(("shape", format!("{}x{}x{}", g.m, g.k, g.n)));
+                s.attrs.push(("resident", g.resident.to_string()));
+                s.attrs.push(("accel_active", g.accel_active.to_string()));
+                s
+            });
+            for e in &g.sim_trace {
+                spans.record(|| {
+                    let mut s = Span::instant(Stage::SimEvent, (g_start + e.time).min(end));
+                    s.request_id = Some(id);
+                    s.worker = Some(widx);
+                    s.attrs.push(("label", format!("{}: {}", e.module, e.label)));
+                    s
+                });
+            }
+        }
+        if !layer_had_gemm {
+            spans.record(|| {
+                let mut s = Span::new(Stage::Op, lt, end);
+                s.request_id = Some(id);
+                s.worker = Some(widx);
+                s.attrs.push(("layer", lname.clone()));
+                s
+            });
+        }
+        lt = end;
+    }
 }
 
 /// Run queued requests to completion, in modeled time — the
@@ -211,7 +312,23 @@ pub fn drain(
         let w = &mut pool.workers[widx];
         let round_start = w.free_at.max(batch[0].arrival);
         metrics.record_batch(widx, &batch[0].model.name, batch.len(), round_start);
+        let binfo = cfg
+            .spans
+            .is_enabled()
+            .then(|| (batch[0].model.name.clone(), batch.len()));
         let completions = execute_batch_on(w, widx, batch, cfg.driver.threads);
+        if let Some((model, batch_size)) = binfo {
+            let w = &pool.workers[widx];
+            let (end, label) = (w.free_at, w.label().to_string());
+            cfg.spans.record(|| {
+                let mut s = Span::new(Stage::Batch, round_start, end);
+                s.worker = Some(widx);
+                s.attrs.push(("worker", label));
+                s.attrs.push(("model", model));
+                s.attrs.push(("size", batch_size.to_string()));
+                s
+            });
+        }
         for c in &completions {
             metrics.record_request(c.arrival, c.started, c.finished, c.deadline);
         }

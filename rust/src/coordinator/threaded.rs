@@ -47,6 +47,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::{Span, Stage};
 use crate::sysc::SimTime;
 
 use super::metrics::ServingMetrics;
@@ -187,13 +188,29 @@ pub fn drain(
                     .spawn_scoped(s, move || {
                         let mut done: Vec<Completion> = Vec::new();
                         let mut batches = Vec::new();
+                        let spans = w.backend.spans().clone();
                         while let Some(batch) = next_batch(qs, widx, cfg, w.free_at) {
-                            batches.push((
-                                batch[0].model.name.clone(),
-                                batch.len(),
-                                w.free_at.max(batch[0].arrival),
-                            ));
+                            let round_start = w.free_at.max(batch[0].arrival);
+                            batches.push((batch[0].model.name.clone(), batch.len(), round_start));
+                            // threaded batches get a second, host
+                            // wall-clock timeline alongside modeled time
+                            let wall0 = spans.is_enabled().then(|| spans.wall_now_ns());
                             done.extend(execute_batch_on(w, widx, batch, threads));
+                            if let Some(w0) = wall0 {
+                                let end = w.free_at;
+                                let label = w.label().to_string();
+                                let (model, size, _) =
+                                    batches.last().expect("just pushed").clone();
+                                spans.record(|| {
+                                    let mut s = Span::new(Stage::Batch, round_start, end);
+                                    s.worker = Some(widx);
+                                    s.wall_ns = Some((w0, spans.wall_now_ns()));
+                                    s.attrs.push(("worker", label));
+                                    s.attrs.push(("model", model));
+                                    s.attrs.push(("size", size.to_string()));
+                                    s
+                                });
+                            }
                         }
                         (done, batches)
                     })

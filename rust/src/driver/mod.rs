@@ -83,6 +83,13 @@ pub struct DriverConfig {
     pub tiling: TilingStrategy,
     /// Per-offload synchronization overhead (interrupt + cache mgmt).
     pub sync_overhead: SimTime,
+    /// Simulator-trace bridge: when non-zero, each offloaded GEMM runs
+    /// with a [`crate::sysc::Trace`] of this capacity attached, and the
+    /// recorded kernel events are retrievable per GEMM via
+    /// [`crate::framework::backend::GemmBackend::take_sim_trace`] (the
+    /// observability layer nests them inside the GEMM's span). Zero
+    /// (the default) keeps the untraced hot path.
+    pub sim_trace: usize,
 }
 
 impl Default for DriverConfig {
@@ -93,6 +100,7 @@ impl Default for DriverConfig {
             pipelined: true,
             tiling: TilingStrategy::CoDesigned,
             sync_overhead: SimTime::us(150),
+            sim_trace: 0,
         }
     }
 }
@@ -140,6 +148,9 @@ pub struct AccelBackend<A: GemmAccel> {
     pub cpu: CpuModel,
     /// Accumulated per-instance statistics.
     pub stats: DriverStats,
+    /// Kernel events bridged from the last traced GEMM
+    /// (`cfg.sim_trace > 0`); drained by `take_sim_trace`.
+    sim_trace_log: Vec<crate::sysc::trace::TraceEntry>,
 }
 
 impl<A: GemmAccel> AccelBackend<A> {
@@ -150,6 +161,7 @@ impl<A: GemmAccel> AccelBackend<A> {
             cfg,
             cpu: CpuModel::pynq_a9(),
             stats: DriverStats::default(),
+            sim_trace_log: Vec::new(),
         }
     }
 
@@ -191,7 +203,16 @@ impl<A: GemmAccel> AccelBackend<A> {
             // untiled layers keep weights resident across inferences;
             // tiled layers stream them every time
             req.weights_resident = task.weights_resident && !tiled;
-            let res = self.accel.run(&req, self.cfg.mode);
+            // tracing is inert: run_traced is the same simulation with
+            // a side buffer attached (pinned by prop_tracing_is_inert)
+            let res = if self.cfg.sim_trace > 0 {
+                let budget = self.cfg.sim_trace.saturating_sub(self.sim_trace_log.len());
+                let (res, trace) = self.accel.run_traced(&req, self.cfg.mode, budget);
+                self.sim_trace_log.extend(trace.entries);
+                res
+            } else {
+                self.accel.run(&req, self.cfg.mode)
+            };
 
             let clock = self.accel.clock();
             let t_total = res.report.total_time;
@@ -321,6 +342,7 @@ impl<A: GemmAccel> GemmBackend for AccelBackend<A> {
     }
 
     fn run_gemm(&mut self, task: &GemmTask<'_>) -> (Vec<i8>, GemmTiming) {
+        self.sim_trace_log.clear();
         match self.accel.max_k() {
             Some(max_k) if task.k > max_k => self.run_cpu_fallback(task),
             _ => self.run_offload(task),
@@ -329,6 +351,10 @@ impl<A: GemmAccel> GemmBackend for AccelBackend<A> {
 
     fn driver_stats(&self) -> Option<&DriverStats> {
         Some(&self.stats)
+    }
+
+    fn take_sim_trace(&mut self) -> Vec<crate::sysc::trace::TraceEntry> {
+        std::mem::take(&mut self.sim_trace_log)
     }
 }
 
@@ -568,6 +594,27 @@ mod tests {
             assert_eq!(out, gemm::qgemm(&w, &x, m, k, n, &p, 1));
             assert!(t.total > SimTime::ZERO);
         }
+    }
+
+    #[test]
+    fn sim_trace_bridge_is_inert_and_drains() {
+        let (m, k, n) = (32, 48, 40);
+        let (w, x, p) = task_data(m, k, n, 19);
+        let mut plain = AccelBackend::new(SaDesign::paper(), DriverConfig::default());
+        let traced_cfg = DriverConfig {
+            sim_trace: 64,
+            ..DriverConfig::default()
+        };
+        let mut traced = AccelBackend::new(SaDesign::paper(), traced_cfg);
+        let (o1, t1) = plain.run_gemm(&make_task(m, k, n, &w, &x, &p));
+        let (o2, t2) = traced.run_gemm(&make_task(m, k, n, &w, &x, &p));
+        assert_eq!(o1, o2);
+        assert_eq!(t1.total, t2.total);
+        assert!(plain.take_sim_trace().is_empty());
+        let log = traced.take_sim_trace();
+        assert!(!log.is_empty());
+        assert!(log.len() <= 64);
+        assert!(traced.take_sim_trace().is_empty()); // drained
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::Completion;
 use crate::sysc::SimTime;
 
-use super::estimate::WorkloadEstimator;
+use super::estimate::{TrafficProfile, WorkloadEstimator};
 use super::plan::{Composition, CompositionPlanner, DesignCosts, ReconfigPlan};
 use super::ElasticConfig;
 
@@ -45,6 +45,10 @@ pub struct ElasticController {
     planner: CompositionPlanner,
     costs: DesignCosts,
     last_eval: Option<SimTime>,
+    /// The window summary the most recent full evaluation ran against
+    /// (set once the `min_samples` gate passes, whether or not a plan
+    /// came out) — drained by the coordinator's observability layer.
+    last_profile: Option<TrafficProfile>,
     history: Vec<SwapRecord>,
 }
 
@@ -61,6 +65,7 @@ impl ElasticController {
             planner,
             costs: DesignCosts::new(threads, sync_overhead),
             last_eval: None,
+            last_profile: None,
             history: Vec::new(),
         }
     }
@@ -93,7 +98,16 @@ impl ElasticController {
         if profile.requests < self.cfg.min_samples {
             return None;
         }
-        self.planner.plan(current, &profile, &self.costs, &self.cfg)
+        let plan = self.planner.plan(current, &profile, &self.costs, &self.cfg);
+        self.last_profile = Some(profile);
+        plan
+    }
+
+    /// Take the traffic profile the most recent evaluation ran against
+    /// (if one passed the sample gate since the last take). The
+    /// coordinator turns it into an estimator-window span.
+    pub fn take_last_profile(&mut self) -> Option<TrafficProfile> {
+        self.last_profile.take()
     }
 
     /// Record an applied plan into the composition timeline.

@@ -67,6 +67,14 @@ pub trait GemmBackend {
     fn driver_stats(&self) -> Option<&crate::driver::DriverStats> {
         None
     }
+    /// Drain the simulator-kernel events recorded during the most
+    /// recent [`GemmBackend::run_gemm`], when the backend bridges a
+    /// [`crate::sysc::Trace`] out of its simulated fabric (see
+    /// [`crate::driver::DriverConfig::sim_trace`]). Backends without a
+    /// simulator (CPU baseline) return nothing.
+    fn take_sim_trace(&mut self) -> Vec<crate::sysc::trace::TraceEntry> {
+        Vec::new()
+    }
 }
 
 /// The CPU-only baseline: gemmlowp on 1 or 2 A9 threads.

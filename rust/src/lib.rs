@@ -15,9 +15,11 @@
 //!   PJRT runtime that executes the AOT-compiled artifacts ([`runtime`]),
 //!   the serving coordinator ([`coordinator`]) that schedules
 //!   request streams across a pool of accelerator instances with
-//!   bucket-aware batching and HW/SW partitioning, and the elastic
+//!   bucket-aware batching and HW/SW partitioning, the elastic
 //!   reprovisioning layer ([`elastic`]) that swaps what the fabric
-//!   holds to match the observed traffic.
+//!   holds to match the observed traffic, and the observability
+//!   layer ([`obs`]) — structured spans, streaming histograms, and
+//!   Perfetto-loadable trace export across the whole serving stack.
 //! * **Layer 2 (python/compile/model.py)** — the accelerated subgraph
 //!   (int8 GEMM-convolution) in JAX, AOT-lowered per shape bucket.
 //! * **Layer 1 (python/compile/kernels/qgemm.py)** — the Pallas
@@ -41,7 +43,6 @@
 
 #[allow(missing_docs)]
 pub mod accel;
-#[allow(missing_docs)]
 pub mod cli;
 pub mod coordinator;
 pub mod driver;
@@ -49,6 +50,7 @@ pub mod elastic;
 #[allow(missing_docs)]
 pub mod framework;
 pub mod gemm;
+pub mod obs;
 pub mod perf;
 pub mod runtime;
 pub mod synth;

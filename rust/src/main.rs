@@ -11,6 +11,8 @@
 //! secda sa-sizes                 §IV-E3 systolic-array size sweep
 //! secda devtime                  Eq. 1-3 development-time model
 //! secda runtime-check            PJRT artifact numerics vs CPU gemm
+//! secda trace-validate <trace.json> [metrics.json]
+//!                                check an exported observability file
 //! ```
 
 use std::process::ExitCode;
@@ -33,6 +35,7 @@ fn main() -> ExitCode {
         "sa-sizes" => cmd_sa_sizes(),
         "devtime" => cmd_devtime(),
         "runtime-check" => cmd_runtime_check(),
+        "trace-validate" => cmd_trace_validate(&args[1..]),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             ExitCode::SUCCESS
@@ -57,6 +60,10 @@ COMMANDS:
   sa-sizes                §IV-E3 systolic array size sweep (4/8/16)
   devtime                 Eq. 1-3 development-time comparison
   runtime-check           verify PJRT artifacts against the CPU gemm
+  trace-validate <trace.json> [metrics.json]
+                          validate exported Chrome-trace / metrics JSON
+                          (files written by the examples' --trace-out /
+                          --metrics-out flags)
 ";
 
 fn cmd_table2(args: &[String]) -> ExitCode {
@@ -250,6 +257,48 @@ fn cmd_devtime() -> ExitCode {
             e2.as_secs_f64() / e1.as_secs_f64(),
             e3.as_secs_f64() / 3600.0
         );
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_trace_validate(args: &[String]) -> ExitCode {
+    use secda::obs::export::{validate_chrome_trace, validate_metrics_json};
+    let Some(trace_path) = args.first() else {
+        eprintln!("usage: secda trace-validate <trace.json> [metrics.json]");
+        return ExitCode::FAILURE;
+    };
+    let trace = match std::fs::read_to_string(trace_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {trace_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match validate_chrome_trace(&trace) {
+        Ok(c) => println!(
+            "{trace_path}: OK — {} events ({} slices, {} instants, {} tracks, {} flows)",
+            c.events, c.slices, c.instants, c.tracks, c.flows
+        ),
+        Err(e) => {
+            eprintln!("{trace_path}: INVALID — {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    if let Some(metrics_path) = args.get(1) {
+        let metrics = match std::fs::read_to_string(metrics_path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("cannot read {metrics_path}: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        match validate_metrics_json(&metrics) {
+            Ok(n) => println!("{metrics_path}: OK — {n} metrics"),
+            Err(e) => {
+                eprintln!("{metrics_path}: INVALID — {e}");
+                return ExitCode::FAILURE;
+            }
+        }
     }
     ExitCode::SUCCESS
 }

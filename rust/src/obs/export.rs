@@ -1,0 +1,640 @@
+//! Exporters: Chrome trace-event JSON (Perfetto-loadable) and a flat
+//! metrics snapshot, plus the validators the `secda trace-validate`
+//! subcommand and CI run against them.
+//!
+//! The trace layout: one process (pid 0) with one track per pool
+//! worker, a coordinator track for submit/admission instants, and an
+//! elastic-controller track for estimator windows, plans and
+//! reconfigurations. Queue waits are async spans (they overlap
+//! arbitrarily across requests), and each admitted request gets a
+//! flow arrow from its submit instant to its execution span.
+
+use std::fmt::Write as _;
+
+use crate::sysc::trace::TraceEntry;
+
+use super::metrics::{MetricValue, MetricsRegistry};
+use super::span::{Span, Stage};
+
+/// Track ids within pid 0.
+const TID_COORD: u64 = 0;
+const TID_ELASTIC: u64 = 900;
+
+fn worker_tid(w: usize) -> u64 {
+    1 + w as u64
+}
+
+/// Append `s` to `out` with JSON string escaping.
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// `s` as a JSON string literal body (no quotes).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_into(&mut out, s);
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".into();
+    }
+    let mut s = format!("{v:.6}");
+    while s.ends_with('0') {
+        s.pop();
+    }
+    if s.ends_with('.') {
+        s.pop();
+    }
+    s
+}
+
+/// Assembles Chrome trace-event JSON one event at a time, then sorts
+/// by timestamp (metadata first) and renders the final document.
+/// Timestamps and durations are in microseconds, per the format spec.
+#[derive(Debug, Default)]
+pub struct ChromeTraceBuilder {
+    // (ts_us, rank, rendered event) — rank 0 sorts metadata first
+    events: Vec<(f64, u8, String)>,
+}
+
+impl ChromeTraceBuilder {
+    /// An empty builder.
+    pub fn new() -> Self {
+        ChromeTraceBuilder::default()
+    }
+
+    fn args_into(out: &mut String, args: &[(&str, String)]) {
+        if args.is_empty() {
+            return;
+        }
+        out.push_str(",\"args\":{");
+        for (i, (k, v)) in args.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape_into(out, k);
+            out.push_str("\":\"");
+            escape_into(out, v);
+            out.push('"');
+        }
+        out.push('}');
+    }
+
+    fn head(name: &str, cat: &str, ph: char, ts_us: f64, pid: u64, tid: u64) -> String {
+        let mut e = String::with_capacity(96);
+        e.push_str("{\"name\":\"");
+        escape_into(&mut e, name);
+        e.push_str("\",\"cat\":\"");
+        escape_into(&mut e, cat);
+        let _ = write!(
+            e,
+            "\",\"ph\":\"{ph}\",\"ts\":{},\"pid\":{pid},\"tid\":{tid}",
+            fmt_f64(ts_us)
+        );
+        e
+    }
+
+    /// Name a track (`M`/`thread_name` metadata event).
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        let mut e = String::with_capacity(96);
+        let _ = write!(
+            e,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"ts\":0,\"pid\":{pid},\"tid\":{tid},\"args\":{{\"name\":\""
+        );
+        escape_into(&mut e, name);
+        e.push_str("\"}}");
+        self.events.push((f64::NEG_INFINITY, 0, e));
+    }
+
+    /// A complete (`X`) event: a slice with a duration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn complete(
+        &mut self,
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        dur_us: f64,
+        pid: u64,
+        tid: u64,
+        args: &[(&str, String)],
+    ) {
+        let mut e = Self::head(name, cat, 'X', ts_us, pid, tid);
+        let _ = write!(e, ",\"dur\":{}", fmt_f64(dur_us.max(0.0)));
+        Self::args_into(&mut e, args);
+        e.push('}');
+        self.events.push((ts_us, 1, e));
+    }
+
+    /// An instant (`i`) event, thread-scoped.
+    pub fn instant(
+        &mut self,
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        pid: u64,
+        tid: u64,
+        args: &[(&str, String)],
+    ) {
+        let mut e = Self::head(name, cat, 'i', ts_us, pid, tid);
+        e.push_str(",\"s\":\"t\"");
+        Self::args_into(&mut e, args);
+        e.push('}');
+        self.events.push((ts_us, 1, e));
+    }
+
+    /// A flow-start (`s`) event; the arrow source.
+    pub fn flow_start(&mut self, name: &str, cat: &str, id: u64, ts_us: f64, pid: u64, tid: u64) {
+        let mut e = Self::head(name, cat, 's', ts_us, pid, tid);
+        let _ = write!(e, ",\"id\":{id}}}");
+        self.events.push((ts_us, 1, e));
+    }
+
+    /// A flow-finish (`f`, binding to the enclosing slice) event; the
+    /// arrow target.
+    pub fn flow_finish(&mut self, name: &str, cat: &str, id: u64, ts_us: f64, pid: u64, tid: u64) {
+        let mut e = Self::head(name, cat, 'f', ts_us, pid, tid);
+        let _ = write!(e, ",\"bp\":\"e\",\"id\":{id}}}");
+        self.events.push((ts_us, 2, e));
+    }
+
+    /// An async-begin (`b`) event. Async spans may overlap freely.
+    pub fn async_begin(&mut self, name: &str, cat: &str, id: u64, ts_us: f64, pid: u64, tid: u64) {
+        let mut e = Self::head(name, cat, 'b', ts_us, pid, tid);
+        let _ = write!(e, ",\"id\":{id}}}");
+        self.events.push((ts_us, 1, e));
+    }
+
+    /// The matching async-end (`e`) event.
+    pub fn async_end(&mut self, name: &str, cat: &str, id: u64, ts_us: f64, pid: u64, tid: u64) {
+        let mut e = Self::head(name, cat, 'e', ts_us, pid, tid);
+        let _ = write!(e, ",\"id\":{id}}}");
+        self.events.push((ts_us, 1, e));
+    }
+
+    /// Sort events by timestamp (metadata first) and render the
+    /// document.
+    pub fn finish(mut self) -> String {
+        self.events
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut out = String::with_capacity(64 + self.events.iter().map(|e| e.2.len() + 2).sum::<usize>());
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+        for (i, (_, _, e)) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(e);
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+/// Export serving spans as Chrome trace-event JSON.
+///
+/// Load the result in [Perfetto](https://ui.perfetto.dev) or
+/// `chrome://tracing`: one track per worker (batches nesting requests
+/// nesting per-GEMM/per-op slices), async queue-wait spans, flow
+/// arrows from each submit to its execution, and the elastic
+/// controller's windows/plans/reconfigurations on their own track.
+pub fn chrome_trace(spans: &[Span]) -> String {
+    const PID: u64 = 0;
+    let mut b = ChromeTraceBuilder::new();
+
+    // name the tracks: coordinator, each worker seen, elastic
+    b.thread_name(PID, TID_COORD, "coordinator");
+    let mut workers: Vec<(usize, Option<String>)> = Vec::new();
+    let mut saw_elastic = false;
+    for s in spans {
+        if let Some(w) = s.worker {
+            let label = s
+                .attrs
+                .iter()
+                .find(|(k, _)| *k == "worker")
+                .map(|(_, v)| v.clone());
+            match workers.iter_mut().find(|(idx, _)| *idx == w) {
+                Some((_, slot)) => {
+                    if slot.is_none() {
+                        *slot = label;
+                    }
+                }
+                None => workers.push((w, label)),
+            }
+        }
+        if matches!(
+            s.stage,
+            Stage::EstimatorWindow | Stage::Plan | Stage::Reconfigure
+        ) {
+            saw_elastic = true;
+        }
+    }
+    workers.sort_by_key(|(idx, _)| *idx);
+    for (idx, label) in &workers {
+        let name = match label {
+            Some(l) => format!("worker{idx} ({l})"),
+            None => format!("worker{idx}"),
+        };
+        b.thread_name(PID, worker_tid(*idx), &name);
+    }
+    if saw_elastic {
+        b.thread_name(PID, TID_ELASTIC, "elastic controller");
+    }
+
+    for s in spans {
+        let ts = s.t_start.as_us_f64();
+        let dur = s.duration().as_us_f64();
+        let tid = s.worker.map(worker_tid).unwrap_or(TID_COORD);
+        let args: Vec<(&str, String)> = s.attrs.clone();
+        match s.stage {
+            Stage::Submit => {
+                b.instant("submit", "serving", ts, PID, TID_COORD, &args);
+                if let Some(id) = s.request_id {
+                    b.flow_start("req", "serving", id, ts, PID, TID_COORD);
+                }
+            }
+            Stage::Admission => b.instant("admission", "serving", ts, PID, TID_COORD, &args),
+            Stage::QueueWait => {
+                if let Some(id) = s.request_id {
+                    let name = format!("queue r{id}");
+                    b.async_begin(&name, "queue", id, ts, PID, tid);
+                    b.async_end(&name, "queue", id, s.t_end.as_us_f64(), PID, tid);
+                }
+            }
+            Stage::Batch => b.complete("batch", "serving", ts, dur, PID, tid, &args),
+            Stage::Request => {
+                let name = match s.request_id {
+                    Some(id) => format!("request r{id}"),
+                    None => "request".to_string(),
+                };
+                b.complete(&name, "serving", ts, dur, PID, tid, &args);
+                if let Some(id) = s.request_id {
+                    b.flow_finish("req", "serving", id, ts, PID, tid);
+                }
+            }
+            Stage::Gemm => b.complete("gemm", "compute", ts, dur, PID, tid, &args),
+            Stage::Op => b.complete("op", "compute", ts, dur, PID, tid, &args),
+            Stage::SimEvent => {
+                let name = s
+                    .attrs
+                    .iter()
+                    .find(|(k, _)| *k == "label")
+                    .map(|(_, v)| v.as_str())
+                    .unwrap_or("sim");
+                b.instant(name, "sim", ts, PID, tid, &args);
+            }
+            Stage::EstimatorWindow => {
+                b.complete("estimator window", "elastic", ts, dur, PID, TID_ELASTIC, &args)
+            }
+            Stage::Plan => b.instant("plan", "elastic", ts, PID, TID_ELASTIC, &args),
+            Stage::Reconfigure => {
+                // the instant marker the issue asks for, plus the
+                // bitstream-load interval itself
+                b.instant("reconfigure!", "elastic", ts, PID, TID_ELASTIC, &args);
+                b.complete("reconfigure", "elastic", ts, dur, PID, TID_ELASTIC, &args);
+            }
+        }
+    }
+    b.finish()
+}
+
+/// Export a simulator [`crate::sysc::Trace`]'s entries as Chrome
+/// trace-event JSON: one track per module, one instant per entry.
+/// (Backs [`crate::sysc::Trace::to_chrome_json`].)
+pub fn sim_trace_chrome_json(entries: &[TraceEntry]) -> String {
+    const PID: u64 = 0;
+    let mut b = ChromeTraceBuilder::new();
+    let mut modules: Vec<&str> = Vec::new();
+    for e in entries {
+        if !modules.iter().any(|m| *m == e.module) {
+            modules.push(&e.module);
+        }
+    }
+    for (i, m) in modules.iter().enumerate() {
+        b.thread_name(PID, i as u64, m);
+    }
+    for e in entries {
+        let tid = modules.iter().position(|m| *m == e.module).unwrap() as u64;
+        b.instant(
+            &e.label,
+            "sim",
+            e.time.as_us_f64(),
+            PID,
+            tid,
+            &[("module", e.module.clone())],
+        );
+    }
+    b.finish()
+}
+
+/// Schema tag for metrics snapshots, checked by the validator.
+pub const METRICS_SCHEMA: &str = "secda-metrics-v1";
+
+/// Export a [`MetricsRegistry`] snapshot as flat JSON, grouped by
+/// metric kind under a stable `"schema"` tag.
+pub fn metrics_json(reg: &MetricsRegistry) -> String {
+    let mut counters = String::new();
+    let mut gauges = String::new();
+    let mut hists = String::new();
+    for (name, v) in reg.entries() {
+        match v {
+            MetricValue::Counter(c) => {
+                if !counters.is_empty() {
+                    counters.push(',');
+                }
+                let _ = write!(counters, "\n    \"{}\": {c}", json_escape(name));
+            }
+            MetricValue::Gauge(g) => {
+                if !gauges.is_empty() {
+                    gauges.push(',');
+                }
+                let _ = write!(gauges, "\n    \"{}\": {}", json_escape(name), fmt_f64(*g));
+            }
+            MetricValue::Histogram(h) => {
+                if !hists.is_empty() {
+                    hists.push(',');
+                }
+                let _ = write!(
+                    hists,
+                    "\n    \"{}\": {{\"count\": {}, \"min\": {}, \"max\": {}, \"mean\": {}, \"p50\": {}, \"p90\": {}, \"p99\": {}, \"p999\": {}}}",
+                    json_escape(name),
+                    h.count,
+                    h.min,
+                    h.max,
+                    fmt_f64(h.mean),
+                    h.p50,
+                    h.p90,
+                    h.p99,
+                    h.p999
+                );
+            }
+        }
+    }
+    format!(
+        "{{\n  \"schema\": \"{METRICS_SCHEMA}\",\n  \"counters\": {{{counters}\n  }},\n  \"gauges\": {{{gauges}\n  }},\n  \"histograms\": {{{hists}\n  }}\n}}\n"
+    )
+}
+
+/// What [`validate_chrome_trace`] found in a well-formed trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Total events (including metadata).
+    pub events: usize,
+    /// Complete (`X`) slices.
+    pub slices: usize,
+    /// Instant (`i`) events.
+    pub instants: usize,
+    /// Named tracks (`thread_name` metadata events).
+    pub tracks: usize,
+    /// Matched submit→execution flow arrows.
+    pub flows: usize,
+}
+
+/// Validate Chrome trace-event JSON produced by [`chrome_trace`] (or
+/// anything claiming the same shape): parses, every event carries the
+/// mandatory fields for its phase, non-metadata events are sorted by
+/// timestamp, async begin/end and flow start/finish pair up.
+pub fn validate_chrome_trace(json: &str) -> Result<TraceCheck, String> {
+    use super::json::Json;
+    let doc = Json::parse(json)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    let mut check = TraceCheck {
+        events: events.len(),
+        slices: 0,
+        instants: 0,
+        tracks: 0,
+        flows: 0,
+    };
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut flow_starts: Vec<u64> = Vec::new();
+    let mut flow_finishes: Vec<u64> = Vec::new();
+    let mut async_open: Vec<(String, u64)> = Vec::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing name"))?;
+        for field in ["ts", "pid", "tid"] {
+            e.get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("event {i} ({name}): missing numeric {field}"))?;
+        }
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        match ph {
+            "M" => {
+                if name == "thread_name" {
+                    e.get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("event {i}: thread_name without args.name"))?;
+                    check.tracks += 1;
+                }
+                continue; // metadata is exempt from ts ordering
+            }
+            "X" => {
+                let dur = e
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i} ({name}): X without dur"))?;
+                if dur < 0.0 {
+                    return Err(format!("event {i} ({name}): negative dur"));
+                }
+                check.slices += 1;
+            }
+            "i" => check.instants += 1,
+            "s" => flow_starts.push(
+                e.get("id")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i}: flow start without id"))?
+                    as u64,
+            ),
+            "f" => flow_finishes.push(
+                e.get("id")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i}: flow finish without id"))?
+                    as u64,
+            ),
+            "b" | "e" => {
+                let id = e
+                    .get("id")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i}: async event without id"))?
+                    as u64;
+                let key = (name.to_string(), id);
+                if ph == "b" {
+                    async_open.push(key);
+                } else {
+                    let pos = async_open
+                        .iter()
+                        .position(|k| *k == key)
+                        .ok_or_else(|| format!("event {i}: async end without begin ({name})"))?;
+                    async_open.remove(pos);
+                }
+            }
+            other => return Err(format!("event {i} ({name}): unknown phase {other:?}")),
+        }
+        if ts < last_ts {
+            return Err(format!(
+                "event {i} ({name}): timestamps not sorted ({ts} after {last_ts})"
+            ));
+        }
+        last_ts = ts;
+    }
+    if !async_open.is_empty() {
+        return Err(format!("{} async spans never ended", async_open.len()));
+    }
+    for id in &flow_finishes {
+        if !flow_starts.contains(id) {
+            return Err(format!("flow finish id {id} has no start"));
+        }
+        check.flows += 1;
+    }
+    Ok(check)
+}
+
+/// Validate a metrics snapshot produced by [`metrics_json`]: schema
+/// tag, the three kind groups, and complete histogram summaries.
+/// Returns the total number of metrics found.
+pub fn validate_metrics_json(json: &str) -> Result<usize, String> {
+    use super::json::Json;
+    let doc = Json::parse(json)?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == METRICS_SCHEMA => {}
+        other => return Err(format!("bad schema tag {other:?} (want {METRICS_SCHEMA})")),
+    }
+    let mut total = 0;
+    for group in ["counters", "gauges", "histograms"] {
+        let members = doc
+            .get(group)
+            .and_then(Json::as_obj)
+            .ok_or_else(|| format!("missing {group} object"))?;
+        for (name, v) in members {
+            match group {
+                "histograms" => {
+                    for field in ["count", "min", "max", "mean", "p50", "p90", "p99", "p999"] {
+                        v.get(field)
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| format!("histogram {name}: missing {field}"))?;
+                    }
+                }
+                _ => {
+                    v.as_f64()
+                        .ok_or_else(|| format!("{group} entry {name} is not a number"))?;
+                }
+            }
+            total += 1;
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::{Histogram, MetricsRegistry};
+    use crate::obs::span::{Span, SpanRecorder, Stage};
+    use crate::sysc::SimTime;
+
+    #[test]
+    fn escaping_round_trips_through_parser() {
+        let nasty = "a\"b\\c\nd\te\u{1}f";
+        let doc = format!("{{\"k\": \"{}\"}}", json_escape(nasty));
+        let parsed = crate::obs::json::Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("k").and_then(|v| v.as_str()), Some(nasty));
+    }
+
+    #[test]
+    fn exported_trace_validates() {
+        let r = SpanRecorder::enabled(100);
+        r.record(|| {
+            let mut s = Span::instant(Stage::Submit, SimTime::us(1));
+            s.request_id = Some(0);
+            s.attrs.push(("model", "net".into()));
+            s
+        });
+        r.record(|| {
+            let mut s = Span::new(Stage::QueueWait, SimTime::us(1), SimTime::us(3));
+            s.request_id = Some(0);
+            s.worker = Some(0);
+            s
+        });
+        r.record(|| {
+            let mut s = Span::new(Stage::Batch, SimTime::us(3), SimTime::us(9));
+            s.worker = Some(0);
+            s.attrs.push(("worker", "sa0:SA".into()));
+            s
+        });
+        r.record(|| {
+            let mut s = Span::new(Stage::Request, SimTime::us(3), SimTime::us(9));
+            s.request_id = Some(0);
+            s.worker = Some(0);
+            s
+        });
+        r.record(|| {
+            let mut s = Span::new(Stage::Reconfigure, SimTime::us(9), SimTime::us(12));
+            s.attrs.push(("from", "2SA+1VM".into()));
+            s
+        });
+        let json = chrome_trace(&r.snapshot());
+        let check = validate_chrome_trace(&json).expect("trace validates");
+        assert!(check.slices >= 3, "{check:?}");
+        assert_eq!(check.flows, 1, "{check:?}");
+        // coordinator + worker0 + elastic
+        assert_eq!(check.tracks, 3, "{check:?}");
+    }
+
+    #[test]
+    fn metrics_snapshot_validates() {
+        let mut h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record(i * 1000);
+        }
+        let mut reg = MetricsRegistry::new();
+        reg.counter("completed", 100);
+        reg.gauge("throughput_rps", 42.5);
+        reg.histogram("latency_ps", &h);
+        let json = metrics_json(&reg);
+        assert_eq!(validate_metrics_json(&json), Ok(3));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace("{}").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\": [{\"ph\": \"X\"}]}").is_err());
+        // unsorted timestamps
+        let bad = r#"{"traceEvents": [
+            {"name":"a","ph":"i","ts":5,"pid":0,"tid":0,"s":"t"},
+            {"name":"b","ph":"i","ts":1,"pid":0,"tid":0,"s":"t"}
+        ]}"#;
+        assert!(validate_chrome_trace(bad).unwrap_err().contains("sorted"));
+        assert!(validate_metrics_json("{\"schema\": \"nope\"}").is_err());
+    }
+
+    #[test]
+    fn fmt_f64_is_json_safe() {
+        assert_eq!(fmt_f64(1.5), "1.5");
+        assert_eq!(fmt_f64(2.0), "2");
+        assert_eq!(fmt_f64(f64::NAN), "0");
+        assert_eq!(fmt_f64(0.000001), "0.000001");
+    }
+}

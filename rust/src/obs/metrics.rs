@@ -1,0 +1,351 @@
+//! Streaming metrics: fixed-bucket log-scale histograms and a typed
+//! registry for flat JSON export.
+//!
+//! The histogram replaces the clone-and-sort `Vec<SimTime>` percentile
+//! reads [`crate::coordinator::ServingMetrics`] used to do: recording
+//! is O(1), a quantile query walks at most [`Histogram::BUCKETS`]
+//! buckets, and nothing is ever cloned or sorted. Buckets are
+//! HDR-style log-linear — each octave above 2^6 is split into 64
+//! sub-buckets, so any reported quantile is within ~1.6% of the true
+//! sample. Exact `min`/`max` are tracked on the side so the 0th and
+//! 100th percentiles are exact, which keeps the pre-existing
+//! `ServingMetrics` accessor contracts intact.
+
+use crate::sysc::SimTime;
+
+/// Sub-bucket resolution: each octave splits into `2^SUB_BITS` buckets.
+const SUB_BITS: u32 = 6;
+const SUB: usize = 1 << SUB_BITS;
+
+/// A streaming log-linear histogram over `u64` values (picoseconds,
+/// when used for [`SimTime`] samples).
+#[derive(Clone)]
+pub struct Histogram {
+    /// Lazily allocated on first record so an empty histogram is free.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .field("mean", &self.mean())
+            .finish()
+    }
+}
+
+impl Histogram {
+    /// Total number of buckets (fixed; covers the whole `u64` range).
+    pub const BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+
+    /// An empty histogram. Allocates nothing until the first record.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: Vec::new(),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let octave = (msb - SUB_BITS + 1) as usize;
+        let mantissa = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        octave * SUB + mantissa
+    }
+
+    /// The largest value that lands in bucket `i` (the reported
+    /// representative, so quantiles never under-estimate).
+    fn bucket_upper(i: usize) -> u64 {
+        if i < SUB {
+            return i as u64;
+        }
+        let octave = i / SUB;
+        let mantissa = (i % SUB) as u64;
+        let shift = (octave - 1) as u32;
+        let lower = (SUB as u64 + mantissa) << shift;
+        lower.saturating_add((1u64 << shift) - 1)
+    }
+
+    /// Record one sample. O(1).
+    pub fn record(&mut self, v: u64) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; Self::BUCKETS];
+        }
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record one [`SimTime`] sample (its picosecond count).
+    pub fn record_time(&mut self, t: SimTime) {
+        self.record(t.as_ps());
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    /// Exact largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of all recorded values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `p`-quantile (`p` in `[0, 1]`), using the same
+    /// nearest-rank convention the old sorted-vector accessor used:
+    /// rank `round(p * (count - 1))`. O(buckets). The extremes are
+    /// exact; interior quantiles are bucket upper bounds, within
+    /// ~1.6% of the true sample. Returns 0 when empty.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if self.min == self.max {
+            return self.min;
+        }
+        let rank = (p.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        if rank == 0 {
+            return self.min;
+        }
+        if rank >= self.count - 1 {
+            return self.max;
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Self::bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// [`Histogram::quantile`] as a [`SimTime`].
+    pub fn quantile_time(&self, p: f64) -> SimTime {
+        SimTime::ps(self.quantile(p))
+    }
+
+    /// A fixed summary (count/min/max/mean and standard quantiles)
+    /// for the registry and the JSON exporter.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            min: self.min(),
+            max: self.max(),
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+        }
+    }
+}
+
+/// A point-in-time summary of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Number of samples.
+    pub count: u64,
+    /// Exact minimum.
+    pub min: u64,
+    /// Exact maximum.
+    pub max: u64,
+    /// Mean.
+    pub mean: f64,
+    /// Median (50th percentile).
+    pub p50: u64,
+    /// 90th percentile.
+    pub p90: u64,
+    /// 99th percentile.
+    pub p99: u64,
+    /// 99.9th percentile.
+    pub p999: u64,
+}
+
+/// One exported metric value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    /// A monotonic integer count.
+    Counter(u64),
+    /// A point-in-time float reading.
+    Gauge(f64),
+    /// A distribution summary.
+    Histogram(HistogramSnapshot),
+}
+
+/// A named, ordered collection of metric readings — the unit the
+/// flat-JSON exporter consumes. Built fresh per snapshot (e.g. by
+/// [`crate::coordinator::ServingMetrics::registry`]), so it carries
+/// values, not live instruments.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    /// Add a counter reading.
+    pub fn counter(&mut self, name: &str, v: u64) {
+        self.entries.push((name.to_string(), MetricValue::Counter(v)));
+    }
+
+    /// Add a gauge reading.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.entries.push((name.to_string(), MetricValue::Gauge(v)));
+    }
+
+    /// Add a histogram summary.
+    pub fn histogram(&mut self, name: &str, h: &Histogram) {
+        self.entries
+            .push((name.to_string(), MetricValue::Histogram(h.snapshot())));
+    }
+
+    /// All readings, in insertion order.
+    pub fn entries(&self) -> &[(String, MetricValue)] {
+        &self.entries
+    }
+
+    /// Look up a reading by name.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 63);
+        // every value below 2^6 has its own bucket
+        assert_eq!(h.quantile(0.5), 32);
+    }
+
+    #[test]
+    fn extremes_are_exact_and_interior_is_close() {
+        let mut h = Histogram::new();
+        let samples: Vec<u64> = (1..=1000u64).map(|i| i * 7_919).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        assert_eq!(h.quantile(0.0), samples[0]);
+        assert_eq!(h.quantile(1.0), *samples.last().unwrap());
+        for p in [0.1, 0.5, 0.9, 0.99] {
+            let rank = (p * (samples.len() - 1) as f64).round() as usize;
+            let exact = samples[rank] as f64;
+            let got = h.quantile(p) as f64;
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= 0.016, "p{p}: got {got}, exact {exact}, rel {rel}");
+            assert!(got >= exact, "bucket upper bound must not under-estimate");
+        }
+    }
+
+    #[test]
+    fn matches_old_sorted_percentile_on_distinct_ms_values() {
+        // The exact scenario the pre-existing ServingMetrics tests pin.
+        let mut h = Histogram::new();
+        for ms in 11..=20u64 {
+            h.record_time(SimTime::ms(ms));
+        }
+        assert_eq!(h.quantile_time(0.0), SimTime::ms(11));
+        assert_eq!(h.quantile_time(1.0), SimTime::ms(20));
+        let mut w = Histogram::new();
+        w.record_time(SimTime::ms(1));
+        w.record_time(SimTime::ms(1));
+        assert_eq!(w.quantile_time(0.5), SimTime::ms(1));
+    }
+
+    #[test]
+    fn huge_values_do_not_overflow() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        h.record(1);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        assert_eq!(h.quantile(0.0), 1);
+        assert!(h.quantile(0.5) >= u64::MAX - 1);
+    }
+
+    #[test]
+    fn bucket_roundtrip_bounds() {
+        for v in [0, 1, 63, 64, 65, 127, 128, 1 << 20, u64::MAX / 2, u64::MAX] {
+            let i = Histogram::bucket_index(v);
+            assert!(i < Histogram::BUCKETS, "index {i} out of range for {v}");
+            let upper = Histogram::bucket_upper(i);
+            assert!(upper >= v, "upper {upper} < value {v}");
+            // representative error bounded by the sub-bucket width
+            assert!(upper - v <= (v >> SUB_BITS), "loose bucket for {v}");
+        }
+    }
+
+    #[test]
+    fn registry_round_trip() {
+        let mut h = Histogram::new();
+        h.record(10);
+        let mut r = MetricsRegistry::new();
+        r.counter("completed", 7);
+        r.gauge("throughput_rps", 1.5);
+        r.histogram("latency", &h);
+        assert_eq!(r.entries().len(), 3);
+        assert_eq!(r.get("completed"), Some(&MetricValue::Counter(7)));
+        match r.get("latency") {
+            Some(MetricValue::Histogram(s)) => assert_eq!(s.count, 1),
+            other => panic!("wrong entry: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! `obs` — the observability layer: structured spans, streaming
+//! metrics, and trace exporters for the serving stack.
+//!
+//! SECDA's methodology is to "quickly and iteratively explore the
+//! hardware/software stack while identifying and mitigating
+//! performance bottlenecks" (§III). Aggregate tail numbers cannot
+//! answer *where* a p99 request spent its time; this module can. It
+//! provides three pieces:
+//!
+//! * [`span::SpanRecorder`] — a one-branch-when-disabled recorder of
+//!   [`span::Span`]s covering the full request lifecycle (submit,
+//!   admission verdict, queue wait, batch, per-request execution,
+//!   per-GEMM accelerator/CPU work, simulator events) plus the
+//!   elastic layer (estimator window, plan, reconfiguration). Spans
+//!   are stamped in modeled [`crate::sysc::SimTime`] in both exec
+//!   modes, and additionally in host wall-clock under
+//!   [`crate::coordinator::ExecMode::Threaded`].
+//! * [`metrics::Histogram`] / [`metrics::MetricsRegistry`] — streaming
+//!   counters and fixed-bucket log-scale histograms: O(1) recording,
+//!   O(buckets) quantile queries, no clone-and-sort.
+//! * [`export`] — Chrome trace-event JSON (loadable in Perfetto or
+//!   `chrome://tracing`: one track per worker, async arrows from
+//!   submit to completion, reconfigurations as instant events) and a
+//!   flat metrics JSON snapshot, plus schema validators used by the
+//!   `secda trace-validate` subcommand and CI.
+//!
+//! Tracing is *provably inert*: span recording only reads values the
+//! coordinator already computed, so outputs are bit-identical with
+//! tracing on or off (pinned by `prop_tracing_is_inert`).
+
+pub mod export;
+pub mod json;
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{Histogram, MetricValue, MetricsRegistry};
+pub use span::{Span, SpanRecorder, Stage};

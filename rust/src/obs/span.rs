@@ -1,0 +1,267 @@
+//! Structured spans and the shared, thread-safe span recorder.
+//!
+//! The recorder follows the [`crate::sysc::Trace`] discipline: a
+//! disabled recorder costs exactly one branch per call site, and all
+//! span construction (allocation, formatting, attribute assembly)
+//! happens inside a closure that a disabled recorder never invokes.
+//! Unlike `sysc::Trace` it is `Sync` — under
+//! [`crate::coordinator::ExecMode::Threaded`] every pool worker
+//! records into the same instance.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::sysc::SimTime;
+
+/// Which lifecycle stage a [`Span`] covers.
+///
+/// The serving stages mirror a request's path through the
+/// coordinator; the elastic stages cover the reconfiguration loop.
+/// See ARCHITECTURE.md ("Observability layer") for the full taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// A request entered `submit_*` (instant; carries the model name).
+    Submit,
+    /// The admission verdict: `admitted`, `backpressure` or `shed`.
+    Admission,
+    /// From arrival to the start of execution on the chosen worker.
+    QueueWait,
+    /// One batch round on one worker (window + execution).
+    Batch,
+    /// One request's end-to-end execution (all layers).
+    Request,
+    /// One GEMM inside a request: accelerator offload or CPU fallback.
+    Gemm,
+    /// One non-GEMM operator inside a request (pool, softmax, ...).
+    Op,
+    /// One bridged simulator [`crate::sysc::Trace`] entry (instant).
+    SimEvent,
+    /// The traffic window the elastic estimator summarized.
+    EstimatorWindow,
+    /// The elastic planner emitted a reconfiguration plan (instant).
+    Plan,
+    /// A fabric reconfiguration (bitstream load) in progress.
+    Reconfigure,
+}
+
+impl Stage {
+    /// The stable exported name of this stage.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::Batch => "batch",
+            Stage::Request => "request",
+            Stage::Gemm => "gemm",
+            Stage::Op => "op",
+            Stage::SimEvent => "sim_event",
+            Stage::EstimatorWindow => "estimator_window",
+            Stage::Plan => "plan",
+            Stage::Reconfigure => "reconfigure",
+        }
+    }
+}
+
+/// One recorded interval (or instant, when `t_start == t_end`) of
+/// modeled time, optionally doubled with host wall-clock timestamps.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// The request this span belongs to, if any (elastic-layer spans
+    /// and rejected submissions have none).
+    pub request_id: Option<u64>,
+    /// Lifecycle stage.
+    pub stage: Stage,
+    /// The pool worker involved, if any.
+    pub worker: Option<usize>,
+    /// Start, in modeled time.
+    pub t_start: SimTime,
+    /// End, in modeled time (equal to `t_start` for instants).
+    pub t_end: SimTime,
+    /// Free-form key/value attributes (model, route, shape, verdict...).
+    pub attrs: Vec<(&'static str, String)>,
+    /// Host wall-clock `(start_ns, end_ns)` relative to the recorder
+    /// epoch — only set for batch spans under threaded execution.
+    pub wall_ns: Option<(u64, u64)>,
+}
+
+impl Span {
+    /// A span with no request, worker, attributes or wall clock —
+    /// a convenient base to build from inside `record` closures.
+    pub fn new(stage: Stage, t_start: SimTime, t_end: SimTime) -> Self {
+        Span {
+            request_id: None,
+            stage,
+            worker: None,
+            t_start,
+            t_end,
+            attrs: Vec::new(),
+            wall_ns: None,
+        }
+    }
+
+    /// An instant span (zero duration) at `t`.
+    pub fn instant(stage: Stage, t: SimTime) -> Self {
+        Span::new(stage, t, t)
+    }
+
+    /// The modeled duration.
+    pub fn duration(&self) -> SimTime {
+        self.t_end.saturating_sub(self.t_start)
+    }
+}
+
+/// A bounded, thread-safe recorder of [`Span`]s.
+///
+/// Disabled (the default) it records nothing and costs one branch.
+/// Enabled it keeps up to `cap` spans and counts the rest as dropped,
+/// so tracing can never grow without bound on a long serving run.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    enabled: bool,
+    cap: usize,
+    epoch: Instant,
+    spans: Mutex<Vec<Span>>,
+    dropped: AtomicU64,
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        SpanRecorder::disabled()
+    }
+}
+
+impl SpanRecorder {
+    /// A disabled recorder: records nothing, costs one branch per call.
+    pub fn disabled() -> Self {
+        SpanRecorder {
+            enabled: false,
+            cap: 0,
+            epoch: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// An enabled recorder keeping at most `cap` spans.
+    pub fn enabled(cap: usize) -> Self {
+        SpanRecorder {
+            enabled: true,
+            cap,
+            epoch: Instant::now(),
+            spans: Mutex::new(Vec::with_capacity(cap.min(4096))),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether this recorder stores anything. Call sites gate all
+    /// span assembly behind this so a disabled recorder stays free.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one span. `build` is a closure so a disabled recorder
+    /// never pays for span construction.
+    #[inline]
+    pub fn record(&self, build: impl FnOnce() -> Span) {
+        if !self.enabled {
+            return;
+        }
+        let span = build();
+        let mut spans = self.spans.lock().expect("span recorder poisoned");
+        if spans.len() >= self.cap {
+            drop(spans);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        spans.push(span);
+    }
+
+    /// Nanoseconds of host wall clock since this recorder was created.
+    /// Used to double-stamp batch spans under threaded execution.
+    pub fn wall_now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Number of spans recorded so far.
+    pub fn len(&self) -> usize {
+        self.spans.lock().expect("span recorder poisoned").len()
+    }
+
+    /// Whether no spans have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped after the cap filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// A copy of every recorded span, in record order.
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.spans.lock().expect("span recorder poisoned").clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = SpanRecorder::disabled();
+        r.record(|| panic!("disabled recorder must never build a span"));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn enabled_recorder_caps_and_counts_drops() {
+        let r = SpanRecorder::enabled(2);
+        for i in 0..5u64 {
+            r.record(|| {
+                let mut s = Span::instant(Stage::Submit, SimTime::ns(i));
+                s.request_id = Some(i);
+                s
+            });
+        }
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 3);
+        let spans = r.snapshot();
+        assert_eq!(spans[0].request_id, Some(0));
+        assert_eq!(spans[1].request_id, Some(1));
+    }
+
+    #[test]
+    fn recorder_is_shareable_across_threads() {
+        let r = std::sync::Arc::new(SpanRecorder::enabled(100));
+        std::thread::scope(|scope| {
+            for w in 0..4usize {
+                let r = r.clone();
+                scope.spawn(move || {
+                    for i in 0..10u64 {
+                        r.record(|| {
+                            let mut s =
+                                Span::new(Stage::Batch, SimTime::ns(i), SimTime::ns(i + 1));
+                            s.worker = Some(w);
+                            s.wall_ns = Some((r.wall_now_ns(), r.wall_now_ns()));
+                            s
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(r.len(), 40);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn span_duration_saturates() {
+        let s = Span::new(Stage::Request, SimTime::ns(10), SimTime::ns(4));
+        assert_eq!(s.duration(), SimTime::ZERO);
+        assert_eq!(Span::instant(Stage::Plan, SimTime::ns(9)).duration(), SimTime::ZERO);
+    }
+}

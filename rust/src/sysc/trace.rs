@@ -78,15 +78,38 @@ impl Trace {
     }
 
     /// Render as a text "waveform" listing, one event per line.
+    ///
+    /// The module column is sized to the longest module name (long
+    /// names used to break alignment), and formatting goes through a
+    /// single reused buffer instead of allocating per line.
     pub fn render(&self) -> String {
+        use std::fmt::Write;
+
+        let width = self
+            .entries
+            .iter()
+            .map(|e| e.module.len())
+            .max()
+            .unwrap_or(0)
+            .max(20);
         let mut out = String::new();
+        let mut tbuf = String::new();
         for e in &self.entries {
-            out.push_str(&format!("{:>14}  {:<20} {}\n", format!("{}", e.time), e.module, e.label));
+            tbuf.clear();
+            let _ = write!(tbuf, "{}", e.time);
+            let _ = writeln!(out, "{tbuf:>14}  {:<width$} {}", e.module, e.label);
         }
         if self.dropped > 0 {
-            out.push_str(&format!("... {} entries dropped (cap {})\n", self.dropped, self.cap));
+            let _ = writeln!(out, "... {} entries dropped (cap {})", self.dropped, self.cap);
         }
         out
+    }
+
+    /// Export as Chrome trace-event JSON (one track per module, one
+    /// instant per entry), reusing the serving exporter in
+    /// [`crate::obs::export`]. Load in Perfetto or `chrome://tracing`.
+    pub fn to_chrome_json(&self) -> String {
+        crate::obs::export::sim_trace_chrome_json(&self.entries)
     }
 }
 
@@ -111,5 +134,27 @@ mod tests {
         assert_eq!(t.dropped(), 3);
         let s = t.render();
         assert!(s.contains("e0") && s.contains("dropped"));
+    }
+
+    #[test]
+    fn render_aligns_long_module_names() {
+        let mut t = Trace::enabled(4);
+        t.record(SimTime::ns(1), "m", || "short".into());
+        t.record(SimTime::ns(2), "a_very_long_module_name.sub", || "long".into());
+        let lines: Vec<&str> = t.render().lines().collect();
+        // the label column starts at the same offset on every line
+        let col = |l: &str| l.rfind(' ').unwrap();
+        assert_eq!(col(lines[0]), col(lines[1]), "misaligned:\n{:?}", lines);
+    }
+
+    #[test]
+    fn chrome_json_export_validates() {
+        let mut t = Trace::enabled(8);
+        t.record(SimTime::ns(10), "dma", || "load tile".into());
+        t.record(SimTime::ns(20), "pe_grid", || "mac burst".into());
+        let json = t.to_chrome_json();
+        let check = crate::obs::export::validate_chrome_trace(&json).expect("valid");
+        assert_eq!(check.instants, 2);
+        assert_eq!(check.tracks, 2);
     }
 }

@@ -1,0 +1,242 @@
+//! Golden tests for the observability layer: serve a small stream
+//! with tracing on, export the Chrome trace and the metrics snapshot,
+//! and validate both with the same checkers `secda trace-validate`
+//! uses — events must parse, carry their mandatory fields, sort by
+//! timestamp, and nest correctly (GEMMs inside requests inside
+//! batches).
+
+use std::sync::Arc;
+
+use secda::coordinator::{Completion, Coordinator, CoordinatorConfig, ExecMode};
+use secda::elastic::ElasticConfig;
+use secda::framework::graph::{Graph, GraphBuilder};
+use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+use secda::framework::quant::QParams;
+use secda::framework::tensor::Tensor;
+use secda::obs::export::{
+    chrome_trace, metrics_json, validate_chrome_trace, validate_metrics_json,
+};
+use secda::obs::{Span, Stage};
+use secda::sysc::trace::TraceEntry;
+use secda::sysc::{SimTime, Trace};
+
+fn convnet(name: &str) -> Graph {
+    let mut st = 0xab5u64;
+    let mut rnd = move || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let (cin, cout) = (3usize, 16usize);
+    let mut b = GraphBuilder::new(name, vec![1, 10, 10, cin], QParams::new(0.05, 0));
+    let conv = Conv2d {
+        name: format!("{name}.c1"),
+        cout,
+        kh: 3,
+        kw: 3,
+        cin,
+        stride: 1,
+        pad: 1,
+        weights: (0..cout * 9 * cin).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+        bias: vec![7; cout],
+        w_scales: vec![0.02; cout],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c = b.push(Op::Conv(conv), vec![b.input()]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+/// Serve a deterministic little stream with tracing on and return the
+/// coordinator (for its spans and metrics) plus the completions.
+fn traced_serve(mut cfg: CoordinatorConfig) -> (Coordinator, Vec<Completion>) {
+    cfg.queue_depth = 64;
+    cfg = cfg.with_tracing(1 << 14);
+    let g = Arc::new(convnet("golden_net"));
+    let mut coord = Coordinator::new(cfg);
+    let mut seed = 0x901du64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed
+    };
+    for _ in 0..6 {
+        let n: usize = g.input_shape.iter().product();
+        let data: Vec<i8> = (0..n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let input = Tensor::new(g.input_shape.clone(), data, g.input_qp);
+        coord
+            .submit_with_slo(g.clone(), input, SimTime::ms(5_000))
+            .expect("queue sized");
+        coord.advance(SimTime::us(300 + rnd() % 2000));
+    }
+    let done = coord.run_until_idle();
+    (coord, done)
+}
+
+/// The full lifecycle is present and the exported trace survives the
+/// validator: parseable, mandatory fields, sorted timestamps, paired
+/// async arrows and flows.
+#[test]
+fn golden_chrome_trace_validates() {
+    let (coord, done) = traced_serve(CoordinatorConfig::default());
+    assert_eq!(done.len(), 6);
+    let spans = coord.spans().snapshot();
+    assert!(!spans.is_empty());
+    let json = chrome_trace(&spans);
+    let check = validate_chrome_trace(&json).expect("exported trace must validate");
+    assert!(check.slices > 0, "no complete slices exported");
+    assert!(check.instants > 0, "no instant events exported");
+    assert!(check.tracks >= 2, "expected coordinator + worker tracks");
+    assert_eq!(check.flows, 6, "one submit->execution arrow per request");
+}
+
+/// Spans nest: every GEMM span sits inside its request's span, every
+/// request span inside some batch span on the same worker, and every
+/// bridged simulator instant inside its GEMM.
+#[test]
+fn golden_spans_nest() {
+    let (coord, _) = traced_serve(CoordinatorConfig::default());
+    let spans = coord.spans().snapshot();
+    let by_stage = |stage: Stage| -> Vec<&Span> {
+        spans.iter().filter(|s| s.stage == stage).collect()
+    };
+    let requests = by_stage(Stage::Request);
+    let batches = by_stage(Stage::Batch);
+    let gemms = by_stage(Stage::Gemm);
+    let sim_events = by_stage(Stage::SimEvent);
+    assert_eq!(requests.len(), 6);
+    assert!(!batches.is_empty());
+    assert!(!gemms.is_empty(), "the conv layer must produce a GEMM span");
+    assert!(
+        !sim_events.is_empty(),
+        "accelerator runs must bridge simulator trace entries"
+    );
+    for g in &gemms {
+        let id = g.request_id.expect("gemm spans carry their request");
+        let r = requests
+            .iter()
+            .find(|r| r.request_id == Some(id))
+            .expect("request span exists");
+        assert!(
+            g.t_start >= r.t_start && g.t_end <= r.t_end,
+            "gemm [{}, {}] outside request [{}, {}]",
+            g.t_start,
+            g.t_end,
+            r.t_start,
+            r.t_end
+        );
+    }
+    for r in &requests {
+        let w = r.worker.expect("request spans carry their worker");
+        assert!(
+            batches.iter().any(|b| b.worker == Some(w)
+                && b.t_start <= r.t_start
+                && r.t_end <= b.t_end),
+            "request {:?} not inside any batch on worker {w}",
+            r.request_id
+        );
+    }
+    for e in &sim_events {
+        let id = e.request_id.expect("sim events carry their request");
+        assert!(
+            gemms.iter().any(|g| g.request_id == Some(id)
+                && g.t_start <= e.t_start
+                && e.t_start <= g.t_end),
+            "sim event at {} outside every gemm of request {id}",
+            e.t_start
+        );
+    }
+    // queue-wait ends where execution starts
+    for q in by_stage(Stage::QueueWait) {
+        let id = q.request_id.expect("queue-wait spans carry their request");
+        let r = requests.iter().find(|r| r.request_id == Some(id)).unwrap();
+        assert_eq!(q.t_end, r.t_start, "queue wait must end at execution start");
+    }
+}
+
+/// An elastic coordinator records estimator-window spans at drain
+/// boundaries even when the planner holds position.
+#[test]
+fn golden_elastic_estimator_spans() {
+    let cfg = CoordinatorConfig {
+        elastic: Some(ElasticConfig {
+            eval_interval: SimTime::ZERO,
+            min_samples: 1,
+            max_swaps: 0, // observe, never swap
+            cpu_max: 0,
+            ..ElasticConfig::default()
+        }),
+        ..CoordinatorConfig::default()
+    };
+    let (coord, _) = traced_serve(cfg);
+    let spans = coord.spans().snapshot();
+    let windows: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.stage == Stage::EstimatorWindow)
+        .collect();
+    assert!(
+        !windows.is_empty(),
+        "elastic evaluation must record an estimator-window span"
+    );
+    for w in windows {
+        assert!(w.attrs.iter().any(|(k, _)| *k == "requests"));
+        assert!(w.attrs.iter().any(|(k, _)| *k == "rate_rps"));
+    }
+    // and the whole trace still validates
+    validate_chrome_trace(&chrome_trace(&spans)).expect("elastic trace must validate");
+}
+
+/// Threaded mode records the same modeled spans, doubled with host
+/// wall-clock stamps on batch spans, and the export still validates.
+#[test]
+fn golden_threaded_trace_validates() {
+    let cfg = CoordinatorConfig {
+        exec_mode: ExecMode::Threaded,
+        ..CoordinatorConfig::default()
+    };
+    let (coord, done) = traced_serve(cfg);
+    assert_eq!(done.len(), 6);
+    let spans = coord.spans().snapshot();
+    let batches: Vec<&Span> = spans.iter().filter(|s| s.stage == Stage::Batch).collect();
+    assert!(!batches.is_empty());
+    for b in &batches {
+        let (w0, w1) = b.wall_ns.expect("threaded batches carry wall-clock stamps");
+        assert!(w1 >= w0, "wall clock must not run backwards");
+    }
+    validate_chrome_trace(&chrome_trace(&spans)).expect("threaded trace must validate");
+}
+
+/// The metrics snapshot round-trips through its validator and carries
+/// the serving histograms.
+#[test]
+fn golden_metrics_snapshot_validates() {
+    let (coord, _) = traced_serve(CoordinatorConfig::default());
+    let json = metrics_json(&coord.metrics().registry());
+    let n = validate_metrics_json(&json).expect("metrics snapshot must validate");
+    assert!(n > 0, "snapshot exported no metrics");
+    assert!(json.contains("latency_ps"), "latency histogram missing");
+}
+
+/// The simulator-level `Trace::to_chrome_json` reuses the same
+/// exporter shape and passes the same validator.
+#[test]
+fn golden_sim_trace_chrome_json_validates() {
+    let mut t = Trace::enabled(16);
+    t.entries.push(TraceEntry {
+        time: SimTime::ns(10),
+        module: "dma".into(),
+        label: "burst start".into(),
+    });
+    t.entries.push(TraceEntry {
+        time: SimTime::ns(25),
+        module: "sa16".into(),
+        label: "tile 0".into(),
+    });
+    let check = validate_chrome_trace(&t.to_chrome_json()).expect("sim trace must validate");
+    assert_eq!(check.instants, 2);
+}

@@ -708,6 +708,132 @@ fn prop_elastic_max_swaps_zero_is_static() {
     }
 }
 
+/// Property: observability is inert — serving ANY stream with span
+/// tracing enabled produces bit-identical outputs to the untraced run,
+/// and in the deterministic modeled mode the exact same timeline
+/// (worker placement, start, finish per request), across both exec
+/// modes and multiple scheduling policies. The traced run must also
+/// actually record spans (the property is not vacuous).
+#[test]
+fn prop_tracing_is_inert() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{
+        Completion, Coordinator, CoordinatorConfig, DeadlinePolicy, ExecMode, FifoPolicy,
+        SchedulePolicy,
+    };
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    fn serve(
+        nets: &[Arc<Graph>; 2],
+        inputs: &[(usize, Tensor, u64)],
+        mode: ExecMode,
+        policy: Arc<dyn SchedulePolicy>,
+        traced: bool,
+    ) -> (Vec<Completion>, usize) {
+        let mut cfg = CoordinatorConfig {
+            queue_depth: 64,
+            exec_mode: mode,
+            policy,
+            ..CoordinatorConfig::default()
+        };
+        if traced {
+            cfg = cfg.with_tracing(1 << 14);
+        }
+        let mut coord = Coordinator::new(cfg);
+        for (which, input, gap) in inputs {
+            coord
+                .submit_with_slo(nets[*which].clone(), input.clone(), SimTime::ms(5_000))
+                .expect("queue sized, SLO generous");
+            coord.advance(SimTime::us(*gap));
+        }
+        let mut done = coord.run_until_idle();
+        done.sort_by_key(|c| c.id);
+        let spans = coord.spans().len();
+        (done, spans)
+    }
+
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed * 0x0b5);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let inputs: Vec<(usize, Tensor, u64)> = (0..6)
+            .map(|_| {
+                let which = (rng.next() % 2) as usize;
+                let g = &nets[which];
+                let n: usize = g.input_shape.iter().product();
+                let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+                (which, input, 50 + rng.next() % 3000)
+            })
+            .collect();
+        let policies: [Arc<dyn SchedulePolicy>; 2] =
+            [Arc::new(FifoPolicy), Arc::new(DeadlinePolicy)];
+        for policy in &policies {
+            for mode in [ExecMode::Modeled, ExecMode::Threaded] {
+                let (plain, plain_spans) =
+                    serve(&nets, &inputs, mode, policy.clone(), false);
+                let (traced, traced_spans) =
+                    serve(&nets, &inputs, mode, policy.clone(), true);
+                assert_eq!(plain_spans, 0, "seed {seed}: untraced run recorded spans");
+                assert!(
+                    traced_spans > 0,
+                    "seed {seed}: traced run recorded nothing under {mode}"
+                );
+                assert_eq!(plain.len(), traced.len(), "seed {seed}");
+                for (p, t) in plain.iter().zip(&traced) {
+                    assert_eq!(p.id, t.id, "seed {seed}");
+                    assert_eq!(
+                        p.output.data, t.output.data,
+                        "seed {seed}: request {} bits diverged with tracing on ({mode})",
+                        p.id
+                    );
+                    if mode == ExecMode::Modeled {
+                        assert_eq!(
+                            (p.worker, p.started, p.finished),
+                            (t.worker, t.started, t.finished),
+                            "seed {seed}: request {} modeled timeline diverged \
+                             with tracing on ({policy:?})",
+                            p.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Failure injection: a livelocked module graph (self-rescheduling
 /// forever) must be contained by the kernel's event budget instead of
 /// hanging the design loop.
