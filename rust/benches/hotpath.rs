@@ -6,8 +6,11 @@
 //! optimizes:
 //!
 //! * sysc event kernel        (events/s)
-//! * CPU int8 GEMM core       (MAC/s)
-//! * requantization pipeline  (outputs/s)
+//! * CPU int8 GEMM core       (MAC/s), SIMD dispatch vs the scalar
+//!   reference across the serving shape buckets — the 256^3 row is the
+//!   SIMD PR's acceptance criterion (>= 4x under AVX2)
+//! * requantization pipeline  (outputs/s), scalar vs dispatched row kernel
+//! * fixed-point softmax      (heads/s) vs the f32 reference
 //! * im2col reshape           (bytes/s)
 //! * SA/VM TLM simulation     (GEMM sims/s + simulated-vs-host ratio)
 //! * PJRT artifact execution  (GEMM execs/s), when artifacts exist
@@ -17,8 +20,10 @@
 use std::time::Instant;
 
 use secda::accel::{ExecMode, GemmAccel, GemmRequest, SaDesign, VmDesign};
-use secda::framework::quant::{self, quantize_multiplier};
-use secda::gemm::{self, QGemmParams};
+use secda::framework::ops::SoftmaxOp;
+use secda::framework::quant::{self, quantize_multiplier, QParams};
+use secda::framework::tensor::Tensor;
+use secda::gemm::{self, simd, QGemmParams};
 use secda::sysc::{Ctx, Module, SimTime, Simulator};
 
 fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
@@ -73,8 +78,8 @@ fn main() {
     });
     println!("{:>44.1} M events/s\n", EVENTS as f64 / t / 1e6);
 
-    // --- CPU int8 GEMM core ------------------------------------------
-    let (m, k, n) = (256, 256, 256);
+    // --- CPU int8 GEMM core: SIMD dispatch vs scalar -----------------
+    println!("gemm kernel tier: {:?}\n", simd::tier());
     let mut st = 1u64;
     let mut rnd = || {
         st ^= st << 13;
@@ -82,17 +87,35 @@ fn main() {
         st ^= st << 17;
         st
     };
-    let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
-    let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
     let (mult, shift) = quantize_multiplier(0.02);
-    let p = QGemmParams::uniform(m, 0, mult, shift);
-    let t = bench("gemm: 256^3 int8 qgemm", 4, || {
-        std::hint::black_box(gemm::qgemm(&w, &x, m, k, n, &p, 1));
-    });
-    println!(
-        "{:>44.2} GMAC/s\n",
-        (m * k * n) as f64 / t / 1e9
-    );
+    // the 256^3 row is the acceptance criterion; the rest are the
+    // serving shape buckets (conv head, mid conv, deep-K convs, FC)
+    let shapes: [(&str, usize, usize, usize, u32); 6] = [
+        ("gemm 256^3 int8", 256, 256, 256, 4),
+        ("gemm 32x27x256", 32, 27, 256, 50),
+        ("gemm 32x288x64", 32, 288, 64, 50),
+        ("gemm 96x4608x49", 96, 4608, 49, 4),
+        ("gemm 64x4608x196", 64, 4608, 196, 2),
+        ("gemm 1001x1024x1", 1001, 1024, 1, 10),
+    ];
+    for (name, m, k, n, iters) in shapes {
+        let w: Vec<i8> = (0..m * k).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let x: Vec<i8> = (0..k * n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let p = QGemmParams::uniform(m, 0, mult, shift);
+        simd::set_force_scalar(true);
+        let ts = bench(&format!("{name} scalar"), iters, || {
+            std::hint::black_box(gemm::qgemm(&w, &x, m, k, n, &p, 1));
+        });
+        simd::set_force_scalar(false);
+        let tv = bench(&format!("{name} simd"), iters, || {
+            std::hint::black_box(gemm::qgemm(&w, &x, m, k, n, &p, 1));
+        });
+        println!(
+            "{:>44.2} GMAC/s, {:.2}x vs scalar\n",
+            (m * k * n) as f64 / tv / 1e9,
+            ts / tv
+        );
+    }
 
     // --- requantization pipeline -------------------------------------
     let accs: Vec<i32> = (0..65536).map(|_| (rnd() & 0xffffff) as i32 - (1 << 23)).collect();
@@ -105,10 +128,36 @@ fn main() {
     });
     println!("{:>44.1} M outputs/s\n", accs.len() as f64 / t / 1e6);
 
+    // --- PPU row kernel: scalar vs dispatched ------------------------
+    let mut out8 = vec![0i8; accs.len()];
+    let ts = bench("ppu row: 64k outputs scalar", 50, || {
+        simd::requant_row_scalar(&accs, 7, mult, shift, -1, -128, 127, &mut out8);
+        std::hint::black_box(&out8);
+    });
+    let tier = simd::tier();
+    let tv = bench("ppu row: 64k outputs simd", 50, || {
+        simd::requant_row(tier, &accs, 7, mult, shift, -1, -128, 127, &mut out8);
+        std::hint::black_box(&out8);
+    });
+    println!(
+        "{:>44.1} M outputs/s, {:.2}x vs scalar\n",
+        accs.len() as f64 / tv / 1e6,
+        ts / tv
+    );
+
+    // --- softmax head: fixed-point vs f32 reference ------------------
+    let head: Vec<i8> = (0..1001).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+    let head_t = Tensor::new(vec![1, 1001], head.clone(), QParams::new(0.1, 0));
+    let tf = bench("softmax 1001: fixed-point", 200, || {
+        std::hint::black_box(SoftmaxOp::eval_fixed(&head, 0.1));
+    });
+    let tr = bench("softmax 1001: f32 reference", 200, || {
+        std::hint::black_box(SoftmaxOp::eval_f32_reference(&head_t));
+    });
+    println!("{:>44.2}x vs f32 reference\n", tr / tf);
+
     // --- im2col ------------------------------------------------------
     use secda::framework::ops::{Activation, Conv2d};
-    use secda::framework::quant::QParams;
-    use secda::framework::tensor::Tensor;
     let conv = Conv2d {
         name: "bench".into(),
         cout: 64,

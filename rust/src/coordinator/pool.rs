@@ -30,6 +30,7 @@ use crate::driver::DriverHandle;
 use crate::framework::backend::{CpuBackend, GemmBackend, GemmTask, GemmTiming};
 use crate::framework::graph::Graph;
 use crate::obs::SpanRecorder;
+use crate::perf::CpuModel;
 use crate::sysc::SimTime;
 
 use super::batch::BucketBatcher;
@@ -130,7 +131,10 @@ impl PartitionedBackend {
         PartitionedBackend {
             label: handle.label.clone(),
             handle: Some(handle),
-            cpu: CpuBackend::new(threads),
+            // serving tier: pool CPU paths run the SIMD-dispatched
+            // kernels, and are timed accordingly (the cost model
+            // prices them with the same model)
+            cpu: CpuBackend::with_model(CpuModel::serving(), threads),
             planner: OffloadPlanner::new(threads, sync_overhead),
             batcher,
             check,
@@ -153,7 +157,7 @@ impl PartitionedBackend {
         PartitionedBackend {
             label: format!("cpu{id}"),
             handle: None,
-            cpu: CpuBackend::new(threads),
+            cpu: CpuBackend::with_model(CpuModel::serving(), threads),
             // sync_overhead ZERO: there is nothing to offload to, the
             // planner only keeps its routing counters consistent
             planner: OffloadPlanner::new(threads, SimTime::ZERO),

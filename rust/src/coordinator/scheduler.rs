@@ -398,7 +398,8 @@ mod tests {
         // on every shape, at both thread counts.
         for threads in [1usize, 2] {
             let p = OffloadPlanner::new(threads, SimTime::us(150));
-            let reference = CpuModel::pynq_a9();
+            // CPU workers run the SIMD kernels: the serving-tier model
+            let reference = CpuModel::serving();
             for (m, k, n) in [
                 (1, 1, 1),
                 (8, 8, 8),

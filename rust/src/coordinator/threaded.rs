@@ -426,10 +426,13 @@ mod tests {
             };
             let mut coord = Coordinator::new(cfg);
             let mut done = Vec::new();
-            for wave in 0..2u64 {
-                for i in 0..4u64 {
+            // 12-request first wave: enough observed win to clear the
+            // reconfiguration cost now that the serving-tier CPU keeps
+            // the VM pool's deep-K pain at a few ms per request
+            for (wave, count) in [(0u64, 12u64), (1, 4)] {
+                for i in 0..count {
                     coord
-                        .submit(g.clone(), image(&g, 700 + wave * 10 + i))
+                        .submit(g.clone(), image(&g, 700 + wave * 20 + i))
                         .unwrap();
                 }
                 done.extend(coord.run_until_idle());

@@ -16,14 +16,19 @@ use crate::sysc::SimTime;
 
 /// One GEMM offload request from a conv/FC layer.
 pub struct GemmTask<'a> {
+    /// Output rows (the layer's output channels).
     pub m: usize,
+    /// Reduction depth (kh*kw*cin for a conv).
     pub k: usize,
+    /// Output columns (spatial positions after im2col).
     pub n: usize,
     /// Row-major `m x k` weight matrix.
     pub weights: &'a [i8],
     /// Row-major `k x n` im2col activation matrix.
     pub inputs: &'a [i8],
+    /// Requantization parameters (bias already zero-point-folded).
     pub params: &'a QGemmParams,
+    /// Layer name (bucket charging and cross-check reporting).
     pub layer: &'a str,
     /// True when the layer's weights are already resident on the
     /// accelerator (preloaded once per session).
@@ -31,6 +36,7 @@ pub struct GemmTask<'a> {
 }
 
 impl GemmTask<'_> {
+    /// Multiply-accumulate count of this GEMM (`m * k * n`).
     pub fn macs(&self) -> u64 {
         gemm::mac_count(self.m, self.k, self.n)
     }
@@ -79,16 +85,28 @@ pub trait GemmBackend {
 
 /// The CPU-only baseline: gemmlowp on 1 or 2 A9 threads.
 pub struct CpuBackend {
+    /// The timing model charged for each GEMM.
     pub model: CpuModel,
+    /// CPU threads the kernels (and the timing model) use.
     pub threads: usize,
 }
 
 impl CpuBackend {
+    /// The paper-fidelity baseline, timed as the PYNQ-Z1 Cortex-A9
+    /// ([`CpuModel::pynq_a9`]).
     pub fn new(threads: usize) -> Self {
         CpuBackend {
             model: CpuModel::pynq_a9(),
             threads,
         }
+    }
+
+    /// A CPU backend timed by an explicit model — the serving pool
+    /// prices its workers with [`CpuModel::serving`], matching the
+    /// arch-dispatched SIMD kernels they actually run
+    /// ([`crate::gemm::simd`]).
+    pub fn with_model(model: CpuModel, threads: usize) -> Self {
+        CpuBackend { model, threads }
     }
 }
 

@@ -3,25 +3,36 @@
 use super::ops::Op;
 use super::quant::QParams;
 
+/// Index of a tensor slot inside one graph.
 pub type SlotId = usize;
 
 /// One graph node: an op reading `inputs` slots and writing `output`.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// The operator this node runs.
     pub op: Op,
+    /// Slots the op reads, in the op's argument order.
     pub inputs: Vec<SlotId>,
+    /// The slot the op writes (single writer per slot).
     pub output: SlotId,
 }
 
 /// A quantized inference graph (batch-1, NHWC).
 #[derive(Debug, Clone)]
 pub struct Graph {
+    /// Model name (batching groups requests by it).
     pub name: String,
+    /// Nodes in execution (topological) order.
     pub nodes: Vec<Node>,
+    /// The slot the request input lands in (always 0).
     pub input_slot: SlotId,
+    /// The slot holding the final output.
     pub output_slot: SlotId,
+    /// Required shape of the input tensor.
     pub input_shape: Vec<usize>,
+    /// Required quantization of the input tensor.
     pub input_qp: QParams,
+    /// Total slot count (for interpreter slot allocation).
     pub n_slots: usize,
 }
 
@@ -100,6 +111,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Start a graph with the given input shape and quantization.
     pub fn new(name: &str, input_shape: Vec<usize>, input_qp: QParams) -> Self {
         GraphBuilder {
             name: name.to_string(),
@@ -110,6 +122,7 @@ impl GraphBuilder {
         }
     }
 
+    /// The graph-input slot.
     pub fn input(&self) -> SlotId {
         0
     }
@@ -126,6 +139,8 @@ impl GraphBuilder {
         out
     }
 
+    /// Seal the graph with `output` as its output slot; panics if the
+    /// built graph fails [`Graph::validate`].
     pub fn finish(self, output: SlotId) -> Graph {
         let g = Graph {
             name: self.name,

@@ -15,18 +15,26 @@ use crate::sysc::SimTime;
 /// Table II row, plus breakdowns.
 #[derive(Debug, Clone)]
 pub struct InferenceReport {
+    /// Model (graph) name.
     pub model: String,
+    /// Setup label, e.g. `CPU(2thr)+SA`.
     pub setup: String,
+    /// Modeled time in CONV-bucket layers.
     pub conv_time: SimTime,
+    /// Modeled time in Non-CONV layers (+ framework overhead).
     pub nonconv_time: SimTime,
+    /// Time the accelerator fabric was active (energy accounting).
     pub accel_active: SimTime,
+    /// Modeled energy for the inference, in joules.
     pub energy_j: f64,
+    /// CPU threads the session modeled.
     pub threads: usize,
     /// (layer name, bucket, time) per node.
     pub layers: Vec<(String, TimeBucket, SimTime)>,
 }
 
 impl InferenceReport {
+    /// Overall modeled latency (CONV + Non-CONV).
     pub fn overall(&self) -> SimTime {
         self.conv_time + self.nonconv_time
     }
@@ -36,6 +44,7 @@ impl InferenceReport {
         self.nonconv_time.as_secs_f64() / self.overall().as_secs_f64()
     }
 
+    /// One formatted Table II row.
     pub fn row(&self) -> String {
         format!(
             "{:<14} {:<16} {:>8.0} ms {:>8.0} ms {:>8.0} ms {:>7.2} J",
@@ -51,15 +60,24 @@ impl InferenceReport {
 
 /// An inference session: a graph bound to a GEMM backend.
 pub struct Session<'a> {
+    /// The graph to run.
     pub graph: &'a Graph,
+    /// Where conv/FC GEMMs go (the Fig. 2 delegate seam).
     pub backend: &'a mut dyn GemmBackend,
+    /// CPU threads to model for CPU-side work.
     pub threads: usize,
+    /// CPU timing model pricing the non-offloaded work.
     pub cpu: CpuModel,
+    /// Energy model folding active/idle power over the run.
     pub energy: EnergyModel,
+    /// Label stamped into reports, e.g. `CPU(2thr)+SA`.
     pub setup_label: String,
 }
 
 impl<'a> Session<'a> {
+    /// A session on the PYNQ-A9 CPU model (the single-inference
+    /// baseline the paper tables use; the serving pool swaps in
+    /// [`CpuModel::serving`] via its own backends).
     pub fn new(graph: &'a Graph, backend: &'a mut dyn GemmBackend, threads: usize) -> Self {
         let label = format!("CPU({}thr)+{}", threads, backend.name());
         Session {

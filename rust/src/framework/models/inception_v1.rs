@@ -101,6 +101,7 @@ fn maxpool(b: &mut GraphBuilder, x: SlotId, name: &str) -> SlotId {
     )
 }
 
+/// Build the InceptionV1 (GoogLeNet) graph (9 inception blocks).
 pub fn build() -> Graph {
     let qp = act_qp();
     let r = Activation::Relu;

@@ -27,6 +27,7 @@ pub const BLOCKS: [(usize, usize, usize); 13] = [
     (1024, 1024, 1),
 ];
 
+/// Build the MobileNetV1 graph (14 conv GEMMs).
 pub fn build() -> Graph {
     let qp = act_qp();
     let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());

@@ -21,6 +21,7 @@ pub const CFG: [(usize, usize, usize, usize); 7] = [
     (6, 320, 1, 1),
 ];
 
+/// Build the MobileNetV2 graph (inverted residual blocks).
 pub fn build() -> Graph {
     let qp = act_qp();
     let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());

@@ -23,6 +23,7 @@ use crate::framework::graph::Graph;
 use crate::framework::ops::{Activation, Conv2d, DepthwiseConv2d, FullyConnected, Op};
 use crate::framework::quant::QParams;
 
+/// The four benchmark model names (paper §V-A).
 pub const ALL: [&str; 4] = ["mobilenet_v1", "mobilenet_v2", "inception_v1", "resnet18"];
 
 /// Build a benchmark model by name.
@@ -94,6 +95,7 @@ pub struct WeightGen {
 }
 
 impl WeightGen {
+    /// A generator seeded from the model and layer names.
     pub fn for_layer(model: &str, layer: &str) -> Self {
         // FNV-1a over the model/layer names
         let mut h: u64 = 0xcbf29ce484222325;
@@ -113,10 +115,12 @@ impl WeightGen {
         x
     }
 
+    /// `n` uniform int8 weights.
     pub fn i8s(&mut self, n: usize) -> Vec<i8> {
         (0..n).map(|_| (self.next() & 0xff) as u8 as i8).collect()
     }
 
+    /// `n` int32 biases in [-200, 200].
     pub fn biases(&mut self, n: usize) -> Vec<i32> {
         (0..n).map(|_| (self.next() % 401) as i32 - 200).collect()
     }

@@ -59,6 +59,7 @@ fn basic_block(
     )
 }
 
+/// Build the ResNet18 graph (4 residual stages).
 pub fn build() -> Graph {
     let qp = act_qp();
     let mut b = GraphBuilder::new(M, vec![1, 224, 224, 3], input_qp());

@@ -18,15 +18,23 @@ use crate::gemm::{self, QGemmParams};
 /// Single-head quantized self-attention block.
 #[derive(Debug, Clone)]
 pub struct SelfAttention {
+    /// Layer name.
     pub name: String,
+    /// Sequence length (token count).
     pub seq: usize,
+    /// Embedding width.
     pub d: usize,
-    /// Q, K, V, O projection weights, each `[d, d]` row-major.
+    /// Q projection weights, `[d, d]` row-major (as are K/V/O).
     pub wq: Vec<i8>,
+    /// K projection weights.
     pub wk: Vec<i8>,
+    /// V projection weights.
     pub wv: Vec<i8>,
+    /// Output projection weights.
     pub wo: Vec<i8>,
+    /// Shared per-tensor projection weight scale.
     pub w_scale: f32,
+    /// Output quantization.
     pub out_qp: QParams,
 }
 

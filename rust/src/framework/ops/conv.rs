@@ -16,8 +16,11 @@ use crate::gemm::{self, QGemmParams};
 /// Fused activation of a conv/FC layer (TFLite style).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Activation {
+    /// No activation (full int8 range).
     None,
+    /// Clamp below at real 0.0.
     Relu,
+    /// Clamp to real [0.0, 6.0].
     Relu6,
 }
 
@@ -39,23 +42,36 @@ impl Activation {
 /// per-output-channel scales (TFLite int8 spec: symmetric weights).
 #[derive(Debug, Clone)]
 pub struct Conv2d {
+    /// Layer name.
     pub name: String,
+    /// Output channels.
     pub cout: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Input channels.
     pub cin: usize,
+    /// Spatial stride (both axes).
     pub stride: usize,
+    /// Zero padding (both axes).
     pub pad: usize,
+    /// `[cout, kh, kw, cin]` int8 weights.
     pub weights: Vec<i8>,
+    /// Per-output-channel int32 bias.
     pub bias: Vec<i32>,
+    /// Per-output-channel weight scales.
     pub w_scales: Vec<f32>,
+    /// Output quantization.
     pub out_qp: QParams,
+    /// Fused activation.
     pub act: Activation,
     /// Weights preloaded on the accelerator across inferences.
     pub weights_resident: bool,
 }
 
 impl Conv2d {
+    /// Output spatial dims for an `h`×`w` input.
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
         (
             (h + 2 * self.pad - self.kh) / self.stride + 1,
@@ -124,6 +140,7 @@ impl Conv2d {
         }
     }
 
+    /// Run the convolution through the GEMM seam.
     pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
         let (_, h, w, _) = x.nhwc();
         let (oh, ow) = self.out_hw(h, w);

@@ -12,21 +12,32 @@ use crate::framework::tensor::Tensor;
 /// Depthwise conv: one `kh x kw` filter per channel (multiplier 1).
 #[derive(Debug, Clone)]
 pub struct DepthwiseConv2d {
+    /// Layer name.
     pub name: String,
+    /// Channel count (input == output).
     pub channels: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Spatial stride (both axes).
     pub stride: usize,
+    /// Zero padding (both axes).
     pub pad: usize,
     /// `[kh, kw, channels]` int8 filters.
     pub weights: Vec<i8>,
+    /// Per-channel int32 bias.
     pub bias: Vec<i32>,
+    /// Per-channel weight scales.
     pub w_scales: Vec<f32>,
+    /// Output quantization.
     pub out_qp: QParams,
+    /// Fused activation.
     pub act: Activation,
 }
 
 impl DepthwiseConv2d {
+    /// Output spatial dims for an `h`×`w` input.
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
         (
             (h + 2 * self.pad - self.kh) / self.stride + 1,
@@ -34,11 +45,13 @@ impl DepthwiseConv2d {
         )
     }
 
+    /// Multiply-accumulate count for an `h`×`w` input.
     pub fn macs(&self, h: usize, w: usize) -> u64 {
         let (oh, ow) = self.out_hw(h, w);
         (oh * ow * self.channels * self.kh * self.kw) as u64
     }
 
+    /// Run the depthwise convolution on the CPU.
     pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
         let (_, h, w, c) = x.nhwc();
         assert_eq!(c, self.channels, "{}: channel mismatch", self.name);

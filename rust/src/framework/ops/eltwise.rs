@@ -9,14 +9,18 @@ use crate::framework::tensor::Tensor;
 /// to the output scale.
 #[derive(Debug, Clone)]
 pub struct AddOp {
+    /// Layer name.
     pub name: String,
+    /// Output quantization.
     pub out_qp: QParams,
+    /// Fused activation.
     pub act: Activation,
 }
 
 const ADD_LEFT_SHIFT: i32 = 20;
 
 impl AddOp {
+    /// Element-wise quantized add of two same-shape tensors.
     pub fn eval(&self, a: &Tensor, b: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
         assert_eq!(a.shape, b.shape, "{}: shape mismatch", self.name);
         let twice_max = 2.0 * a.qp.scale.max(b.qp.scale) as f64;
@@ -48,11 +52,14 @@ impl AddOp {
 /// scale when their params differ (TFLite semantics).
 #[derive(Debug, Clone)]
 pub struct ConcatOp {
+    /// Layer name.
     pub name: String,
+    /// Output quantization.
     pub out_qp: QParams,
 }
 
 impl ConcatOp {
+    /// Concatenate along the channel dimension.
     pub fn eval(&self, inputs: &[&Tensor], ctx: &mut OpCtx<'_>) -> Tensor {
         assert!(!inputs.is_empty());
         let (_, h, w, _) = inputs[0].nhwc();

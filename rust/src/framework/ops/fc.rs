@@ -9,20 +9,29 @@ use crate::framework::quant::{quantize_multiplier, QParams};
 use crate::framework::tensor::Tensor;
 use crate::gemm::{self, QGemmParams};
 
+/// Quantized fully-connected layer over a flattened input.
 #[derive(Debug, Clone)]
 pub struct FullyConnected {
+    /// Layer name.
     pub name: String,
+    /// Flattened input size.
     pub in_features: usize,
+    /// Output size.
     pub out_features: usize,
     /// `[out_features, in_features]` int8 weights (per-tensor scale).
     pub weights: Vec<i8>,
+    /// Per-output int32 bias.
     pub bias: Vec<i32>,
+    /// The per-tensor weight scale.
     pub w_scale: f32,
+    /// Output quantization.
     pub out_qp: QParams,
+    /// Fused activation.
     pub act: Activation,
 }
 
 impl FullyConnected {
+    /// Run the layer (a GEMM with N = 1) on the CPU.
     pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
         assert_eq!(
             x.numel(),

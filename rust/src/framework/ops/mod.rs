@@ -32,24 +32,33 @@ pub use softmax::SoftmaxOp;
 /// Time bucket an op's cost lands in (Table II columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TimeBucket {
+    /// Convolution layers (standard and depthwise).
     Conv,
+    /// Everything else, incl. framework overhead.
     NonConv,
 }
 
 /// Execution context handed to op kernels: the GEMM backend, the CPU
 /// timing model, and the time accounting sinks.
 pub struct OpCtx<'a> {
+    /// GEMM seam convolutions and FCs execute through.
     pub backend: &'a mut dyn GemmBackend,
+    /// CPU timing model pricing non-offloaded work.
     pub cpu: &'a CpuModel,
+    /// CPU threads modeled for CPU-side work.
     pub threads: usize,
+    /// Accumulated CONV-bucket time.
     pub conv_time: SimTime,
+    /// Accumulated Non-CONV time.
     pub nonconv_time: SimTime,
+    /// Accumulated accelerator-active time (energy accounting).
     pub accel_active: SimTime,
     /// Per-layer records: (name, bucket, time).
     pub layers: Vec<(String, TimeBucket, SimTime)>,
 }
 
 impl<'a> OpCtx<'a> {
+    /// A fresh context with zeroed accounting.
     pub fn new(backend: &'a mut dyn GemmBackend, cpu: &'a CpuModel, threads: usize) -> Self {
         OpCtx {
             backend,
@@ -62,6 +71,7 @@ impl<'a> OpCtx<'a> {
         }
     }
 
+    /// Record `t` for layer `name` in `bucket`.
     pub fn charge(&mut self, name: &str, bucket: TimeBucket, t: SimTime) {
         match bucket {
             TimeBucket::Conv => self.conv_time += t,
@@ -74,17 +84,26 @@ impl<'a> OpCtx<'a> {
 /// One graph operator.
 #[derive(Debug, Clone)]
 pub enum Op {
+    /// Standard convolution (GEMM seam).
     Conv(Conv2d),
+    /// Depthwise convolution (CPU, CONV bucket).
     DwConv(DepthwiseConv2d),
+    /// Fully-connected layer (GEMM seam).
     Fc(FullyConnected),
+    /// Windowed max/average pooling.
     Pool(Pool2d),
+    /// Global average pooling.
     GlobalAvgPool(GlobalAvgPool),
+    /// Element-wise add (residual connections).
     Add(AddOp),
+    /// Channel concatenation (inception branches).
     Concat(ConcatOp),
+    /// Softmax classifier head.
     Softmax(SoftmaxOp),
 }
 
 impl Op {
+    /// The layer name.
     pub fn name(&self) -> &str {
         match self {
             Op::Conv(o) => &o.name,

@@ -3,23 +3,32 @@
 use crate::framework::ops::{OpCtx, TimeBucket};
 use crate::framework::tensor::Tensor;
 
+/// Pooling reduction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolKind {
+    /// Window maximum.
     Max,
+    /// Rounded window average.
     Avg,
 }
 
 /// Windowed max/avg pooling.
 #[derive(Debug, Clone)]
 pub struct Pool2d {
+    /// Layer name.
     pub name: String,
+    /// Max or average.
     pub kind: PoolKind,
+    /// Square window size.
     pub k: usize,
+    /// Spatial stride (both axes).
     pub stride: usize,
+    /// Zero padding (both axes).
     pub pad: usize,
 }
 
 impl Pool2d {
+    /// Output spatial dims for an `h`×`w` input.
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
         (
             (h + 2 * self.pad - self.k) / self.stride + 1,
@@ -27,6 +36,7 @@ impl Pool2d {
         )
     }
 
+    /// Run the pooling on the CPU (qparams pass through).
     pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
         let (_, h, w, c) = x.nhwc();
         let (oh, ow) = self.out_hw(h, w);
@@ -77,10 +87,12 @@ impl Pool2d {
 /// Global average pooling: NHWC -> [1, C].
 #[derive(Debug, Clone)]
 pub struct GlobalAvgPool {
+    /// Layer name.
     pub name: String,
 }
 
 impl GlobalAvgPool {
+    /// Average every channel over all spatial positions.
     pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
         let (_, h, w, c) = x.nhwc();
         let count = (h * w) as i32;

@@ -1,32 +1,74 @@
 //! Softmax head. TFLite fixes the output quantization to
-//! (scale 1/256, zero-point -128). The inner computation here uses
-//! f32 (the reference TFLite kernel uses a fixed-point exp table; the
-//! f32 shortcut changes results by < 1 ulp of the 1/256 output grid
-//! and is documented as a substitution in DESIGN.md).
+//! (scale 1/256, zero-point -128). The inner computation is
+//! fixed-point, like the reference TFLite kernel: a per-call Q26 exp
+//! table over the 256 possible `max - v` deltas, an i64 sum, and the
+//! shared PPU requant step (which arch-dispatches with the GEMM
+//! kernels) to land on the 1/256 output grid. The retired f32 shortcut
+//! is kept as [`SoftmaxOp::eval_f32_reference`]; a unit test bounds
+//! the fixed-point path within one output quantum of it.
 
 use crate::framework::ops::{OpCtx, TimeBucket};
-use crate::framework::quant::QParams;
+use crate::framework::quant::{quantize_multiplier, QParams};
 use crate::framework::tensor::Tensor;
+use crate::gemm::simd;
 
+/// Fixed-point one: the Q26 representation of 1.0 in the exp table.
+const ONE_Q26: f64 = (1i64 << 26) as f64;
+
+/// The softmax head op (always last in the benchmark graphs).
 #[derive(Debug, Clone)]
 pub struct SoftmaxOp {
+    /// Layer name used for per-op cost accounting.
     pub name: String,
 }
 
 impl SoftmaxOp {
+    /// The TFLite-fixed output quantization (scale 1/256, zp -128).
     pub fn out_qp() -> QParams {
         QParams::new(1.0 / 256.0, -128)
     }
 
+    /// Evaluate the head in fixed point and charge its modeled cost.
     pub fn eval(&self, x: &Tensor, ctx: &mut OpCtx<'_>) -> Tensor {
+        let out = Self::eval_fixed(&x.data, x.qp.scale);
+        let t = ctx.cpu.elementwise_time(x.numel() as u64 * 4, ctx.threads);
+        ctx.charge(&self.name, TimeBucket::NonConv, t);
+        Tensor::new(x.shape.clone(), out, Self::out_qp())
+    }
+
+    /// The fixed-point kernel: `exp((v - max) * scale)` via a 256-entry
+    /// Q26 table indexed by `max - v` (an i8 delta, so always in
+    /// `[0, 255]`), normalized by the shared requant step with real
+    /// multiplier `256 / sum`. Deterministic for a given input within
+    /// a process, and bit-identical across kernel tiers. The Q31
+    /// multiplier stays in requant range for heads up to 16384
+    /// classes — far above the benchmark models' 10..=1001.
+    pub fn eval_fixed(data: &[i8], in_scale: f32) -> Vec<i8> {
+        let max_q = i32::from(data.iter().copied().max().unwrap_or(0));
+        let table: Vec<i32> = (0..256)
+            .map(|d| ((-(d as f64) * in_scale as f64).exp() * ONE_Q26).round() as i32)
+            .collect();
+        let accs: Vec<i32> = data
+            .iter()
+            .map(|&v| table[(max_q - i32::from(v)) as usize])
+            .collect();
+        let sum: i64 = accs.iter().map(|&a| i64::from(a)).sum();
+        let (mult, shift) = quantize_multiplier(256.0 / sum as f64);
+        let mut out = vec![0i8; data.len()];
+        let t = simd::tier();
+        simd::requant_row(t, &accs, 0, mult, shift, -128, -128, 127, &mut out);
+        out
+    }
+
+    /// The retired f32 evaluation, kept as the accuracy reference the
+    /// fixed-point path is ULP-bounded against (no cost accounting).
+    pub fn eval_f32_reference(x: &Tensor) -> Tensor {
         let vals = x.dequantize();
         let max = vals.iter().cloned().fold(f32::MIN, f32::max);
         let exps: Vec<f32> = vals.iter().map(|v| (v - max).exp()).collect();
         let sum: f32 = exps.iter().sum();
         let qp = Self::out_qp();
         let out: Vec<i8> = exps.iter().map(|e| qp.quantize(e / sum)).collect();
-        let t = ctx.cpu.elementwise_time(x.numel() as u64 * 4, ctx.threads);
-        ctx.charge(&self.name, TimeBucket::NonConv, t);
         Tensor::new(x.shape.clone(), out, qp)
     }
 }
@@ -60,5 +102,29 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(argmax, 2);
+    }
+
+    #[test]
+    fn fixed_point_softmax_within_one_ulp_of_f32() {
+        // deterministic pseudo-random sweep over scales and shapes
+        let mut st = 0xdecafu64;
+        let mut xorshift = move || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            st
+        };
+        for &scale in &[1.0f32 / 256.0, 0.05, 0.1, 0.33] {
+            for &len in &[1usize, 2, 10, 100, 1001] {
+                let data: Vec<i8> = (0..len).map(|_| (xorshift() & 0xff) as u8 as i8).collect();
+                let x = Tensor::new(vec![1, len], data.clone(), QParams::new(scale, 0));
+                let fixed = SoftmaxOp::eval_fixed(&data, scale);
+                let reference = SoftmaxOp::eval_f32_reference(&x);
+                for (i, (&a, &b)) in fixed.iter().zip(&reference.data).enumerate() {
+                    let d = (i32::from(a) - i32::from(b)).abs();
+                    assert!(d <= 1, "idx {i}: fixed {a} vs f32 {b} (scale {scale})");
+                }
+            }
+        }
     }
 }

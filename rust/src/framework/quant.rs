@@ -11,11 +11,14 @@
 /// Quantization parameters of an int8 tensor.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QParams {
+    /// Real value per quantization step (> 0).
     pub scale: f32,
+    /// The int8 value representing real 0.0.
     pub zero_point: i32,
 }
 
 impl QParams {
+    /// Parameters from parts; `scale` must be positive.
     pub fn new(scale: f32, zero_point: i32) -> Self {
         debug_assert!(scale > 0.0);
         QParams { scale, zero_point }
@@ -30,10 +33,12 @@ impl QParams {
         QParams::new(scale, zp)
     }
 
+    /// Nearest int8 value for real `v` (saturating).
     pub fn quantize(&self, v: f32) -> i8 {
         ((v / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
     }
 
+    /// The real value `scale * (q - zero_point)`.
     pub fn dequantize(&self, q: i8) -> f32 {
         (q as i32 - self.zero_point) as f32 * self.scale
     }

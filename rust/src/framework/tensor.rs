@@ -6,17 +6,23 @@ use super::quant::QParams;
 /// activations, `[Cout, kh, kw, Cin]` for convolution weights.
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Dimensions, outermost first (NHWC for activations).
     pub shape: Vec<usize>,
+    /// Quantized values, row-major in `shape` order.
     pub data: Vec<i8>,
+    /// Asymmetric quantization parameters of `data`.
     pub qp: QParams,
 }
 
 impl Tensor {
+    /// A tensor from parts; panics unless `data` fills `shape` exactly.
     pub fn new(shape: Vec<usize>, data: Vec<i8>, qp: QParams) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape, data, qp }
     }
 
+    /// A tensor holding real value 0.0 everywhere (i.e. filled with
+    /// the zero point).
     pub fn zeros(shape: Vec<usize>, qp: QParams) -> Self {
         let n = shape.iter().product();
         Tensor {
@@ -26,10 +32,12 @@ impl Tensor {
         }
     }
 
+    /// Number of elements.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Storage size in bytes (one byte per int8 element).
     pub fn bytes(&self) -> usize {
         self.data.len()
     }
@@ -40,6 +48,7 @@ impl Tensor {
         (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
     }
 
+    /// The real values `scale * (q - zero_point)`, element-wise.
     pub fn dequantize(&self) -> Vec<f32> {
         self.data.iter().map(|&v| self.qp.dequantize(v)).collect()
     }

@@ -8,12 +8,24 @@
 //! * the functional int8 GEMM + PPU used by the CPU execution path and
 //!   by the accelerator simulators' functional tile computation (so
 //!   simulation stays bit-exact, as TLM promises), and
-//! * a cache-blocked, optionally multi-threaded implementation whose
-//!   structure mirrors gemmlowp (pack → kernel → unpack/PPU).
+//! * a cache-blocked, multi-threaded implementation whose structure
+//!   mirrors gemmlowp (pack → kernel → unpack/PPU), with the hot loop
+//!   arch-dispatched through [`simd`] (AVX2/SSE2/NEON) and the scalar
+//!   code kept as the pinned reference every tier is bit-equal to.
+//!
+//! The public entry points ([`accumulate_rows`], [`accumulate_block`],
+//! [`ppu_rows`], [`qgemm`]) keep their scalar-era signatures and
+//! semantics exactly; which kernel tier executes underneath is a pure
+//! wall-clock concern (see the [`simd`] module doc for why the bits
+//! cannot differ). The `*_scalar` variants are the frozen reference
+//! implementations — property tests pin the dispatched paths against
+//! them.
 //!
 //! Wall-clock on this x86 host is *not* the Table II number — the
 //! Cortex-A9 timing model lives in [`crate::perf`]; this code is the
 //! functional substrate (and its MAC counts feed the timing model).
+
+pub mod simd;
 
 use crate::framework::quant::ppu_requant;
 
@@ -64,12 +76,72 @@ pub fn fold_bias(bias: &[i32], w: &[i8], m: usize, k: usize, x_zp: i32) -> Vec<i
         .collect()
 }
 
+/// Below this MAC count packing overhead dominates the kernel win, so
+/// dispatch stays on the scalar path. Any threshold is bit-safe (the
+/// tiers agree bitwise); this only tunes where the crossover sits.
+const SIMD_MIN_MACS: u64 = 2048;
+
+/// True when a GEMM is degenerate or too small to be worth packing.
+fn simd_too_small(rows: usize, k: usize, n: usize) -> bool {
+    rows == 0 || k == 0 || n == 0 || mac_count(rows, k, n) < SIMD_MIN_MACS
+}
+
+/// Run the packed kernel and land logical columns `[0, n)` in `acc`
+/// (the kernels write NR-padded rows; ragged N goes via a scratch).
+fn accumulate_packed(
+    t: simd::KernelTier,
+    pa: &[i32],
+    pb: &simd::PackedB,
+    rows: usize,
+    acc: &mut [i32],
+) {
+    let n = pb.n;
+    let padded = pb.padded_n();
+    if padded == n {
+        acc.fill(0);
+        simd::gemm_rows(t, pa, pb, rows, acc);
+        return;
+    }
+    let mut tmp = vec![0i32; rows * padded];
+    simd::gemm_rows(t, pa, pb, rows, &mut tmp);
+    for r in 0..rows {
+        acc[r * n..(r + 1) * n].copy_from_slice(&tmp[r * padded..r * padded + n]);
+    }
+}
+
 /// Raw int32 accumulation for a row range `[m0, m1)`:
 /// `acc[(i-m0)*n + j] = sum_k w[i*k + kk] * x[kk*n + j]`.
 ///
 /// This is the shared functional core: CPU baseline, VM/SA simulators
 /// and the VTA model all call it so every path produces identical bits.
+/// Dispatches to the arch kernel tier when profitable; bit-equal to
+/// [`accumulate_rows_scalar`] always.
 pub fn accumulate_rows(
+    w: &[i8],
+    x: &[i8],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+    acc: &mut [i32],
+) {
+    assert!(m1 >= m0);
+    assert_eq!(acc.len(), (m1 - m0) * n);
+    assert!(w.len() >= m1 * k);
+    assert_eq!(x.len(), k * n);
+    let rows = m1 - m0;
+    let t = simd::tier();
+    if t == simd::KernelTier::Scalar || simd_too_small(rows, k, n) {
+        return accumulate_rows_scalar(w, x, m0, m1, k, n, acc);
+    }
+    let pb = simd::pack_b(x, k, n, 0, n);
+    let pa = simd::pack_a(w, m0, m1, k);
+    accumulate_packed(t, &pa, &pb, rows, acc);
+}
+
+/// The scalar reference for [`accumulate_rows`] — frozen; the SIMD
+/// tiers are property-tested bit-equal to this.
+pub fn accumulate_rows_scalar(
     w: &[i8],
     x: &[i8],
     m0: usize,
@@ -88,7 +160,7 @@ pub fn accumulate_rows(
     // §Perf note: 4-wide k-unrolling (two variants) was tried and
     // measured <5% (slightly negative) vs this form, which LLVM
     // already vectorizes — this is the practical roofline on one core
-    // (see EXPERIMENTS.md §Perf).
+    // without explicit intrinsics (see EXPERIMENTS.md §Perf).
     for i in m0..m1 {
         let wrow = &w[i * k..(i + 1) * k];
         let arow = &mut acc[(i - m0) * n..(i - m0 + 1) * n];
@@ -108,10 +180,38 @@ pub fn accumulate_rows(
 /// Like [`accumulate_rows`] but over a column block `[n0, n1)` too:
 /// `acc[(i-m0)*(n1-n0) + (j-n0)]`. Used by the VM simulator, whose
 /// scheduler splits the N dimension across the four GEMM units.
+/// Dispatches like [`accumulate_rows`]; bit-equal to
+/// [`accumulate_block_scalar`] always.
 // the argument list IS the tile coordinate system; a params struct
 // would just rename the same nine values
 #[allow(clippy::too_many_arguments)]
 pub fn accumulate_block(
+    w: &[i8],
+    x: &[i8],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+    n0: usize,
+    n1: usize,
+    acc: &mut [i32],
+) {
+    assert!(m1 >= m0 && n1 >= n0 && n1 <= n);
+    let bn = n1 - n0;
+    assert_eq!(acc.len(), (m1 - m0) * bn);
+    let rows = m1 - m0;
+    let t = simd::tier();
+    if t == simd::KernelTier::Scalar || simd_too_small(rows, k, bn) {
+        return accumulate_block_scalar(w, x, m0, m1, k, n, n0, n1, acc);
+    }
+    let pb = simd::pack_b(x, k, n, n0, n1);
+    let pa = simd::pack_a(w, m0, m1, k);
+    accumulate_packed(t, &pa, &pb, rows, acc);
+}
+
+/// The scalar reference for [`accumulate_block`] — frozen.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_block_scalar(
     w: &[i8],
     x: &[i8],
     m0: usize,
@@ -142,8 +242,39 @@ pub fn accumulate_block(
     }
 }
 
-/// PPU over a row range of accumulators -> int8 outputs.
+/// PPU over a row range of accumulators -> int8 outputs. Vectorized
+/// per row when the tier supports it; bit-equal to [`ppu_rows_scalar`]
+/// always.
 pub fn ppu_rows(acc: &[i32], params: &QGemmParams, m0: usize, m1: usize, n: usize, out: &mut [i8]) {
+    assert_eq!(acc.len(), (m1 - m0) * n);
+    assert_eq!(out.len(), (m1 - m0) * n);
+    let t = simd::tier();
+    for i in m0..m1 {
+        let arow = &acc[(i - m0) * n..(i - m0 + 1) * n];
+        let orow = &mut out[(i - m0) * n..(i - m0 + 1) * n];
+        simd::requant_row(
+            t,
+            arow,
+            params.bias[i],
+            params.mult[i],
+            params.shift[i],
+            params.out_zp,
+            params.act_min,
+            params.act_max,
+            orow,
+        );
+    }
+}
+
+/// The scalar reference for [`ppu_rows`] — frozen.
+pub fn ppu_rows_scalar(
+    acc: &[i32],
+    params: &QGemmParams,
+    m0: usize,
+    m1: usize,
+    n: usize,
+    out: &mut [i8],
+) {
     assert_eq!(acc.len(), (m1 - m0) * n);
     assert_eq!(out.len(), (m1 - m0) * n);
     for i in m0..m1 {
@@ -163,11 +294,50 @@ pub fn ppu_rows(acc: &[i32], params: &QGemmParams, m0: usize, m1: usize, n: usiz
     }
 }
 
+/// One M-chunk of the SIMD qgemm path: pack the chunk's A rows, run
+/// the kernel into an NR-padded scratch accumulator, requantize the
+/// logical columns straight into the output slice.
+#[allow(clippy::too_many_arguments)]
+fn qgemm_simd_rows(
+    t: simd::KernelTier,
+    w: &[i8],
+    pb: &simd::PackedB,
+    m0: usize,
+    m1: usize,
+    k: usize,
+    params: &QGemmParams,
+    out: &mut [i8],
+) {
+    let rows = m1 - m0;
+    let n = pb.n;
+    let padded = pb.padded_n();
+    let pa = simd::pack_a(w, m0, m1, k);
+    let mut acc = vec![0i32; rows * padded];
+    simd::gemm_rows(t, &pa, pb, rows, &mut acc);
+    for r in 0..rows {
+        let i = m0 + r;
+        simd::requant_row(
+            t,
+            &acc[r * padded..r * padded + n],
+            params.bias[i],
+            params.mult[i],
+            params.shift[i],
+            params.out_zp,
+            params.act_min,
+            params.act_max,
+            &mut out[r * n..(r + 1) * n],
+        );
+    }
+}
+
 /// Full quantized GEMM + PPU: `out[i8; m*n] = PPU(W[m,k] @ X[k,n])`.
 ///
 /// `threads` models the paper's 1- or 2-thread CPU configurations; the
 /// M dimension is split across threads exactly like gemmlowp's
-/// workers-pool partitioning.
+/// workers-pool partitioning. On the SIMD path B is packed *once* and
+/// shared read-only across the worker threads (the gemmlowp pack-once
+/// structure); each chunk packs its own A rows. Results are bit-equal
+/// to the scalar path for every tier and thread count.
 pub fn qgemm(
     w: &[i8],
     x: &[i8],
@@ -183,11 +353,56 @@ pub fn qgemm(
     assert_eq!(params.mult.len(), m);
     assert_eq!(params.shift.len(), m);
     let threads = threads.clamp(1, m.max(1));
+    let t = simd::tier();
+    if t == simd::KernelTier::Scalar || simd_too_small(m, k, n) {
+        return qgemm_scalar(w, x, m, k, n, params, threads);
+    }
+    let pb = simd::pack_b(x, k, n, 0, n);
+    let mut out = vec![0i8; m * n];
+    if threads <= 1 || m < 2 {
+        qgemm_simd_rows(t, w, &pb, 0, m, k, params, &mut out);
+        return out;
+    }
+    let chunk = m.div_ceil(threads);
+    let mut slices: Vec<&mut [i8]> = Vec::new();
+    let mut rest = out.as_mut_slice();
+    let mut starts = Vec::new();
+    let mut i = 0;
+    while i < m {
+        let rows = chunk.min(m - i);
+        let (head, tail) = rest.split_at_mut(rows * n);
+        slices.push(head);
+        starts.push((i, i + rows));
+        rest = tail;
+        i += rows;
+    }
+    let pbr = &pb;
+    std::thread::scope(|s| {
+        for (slice, &(m0, m1)) in slices.into_iter().zip(&starts) {
+            s.spawn(move || {
+                qgemm_simd_rows(t, w, pbr, m0, m1, k, params, slice);
+            });
+        }
+    });
+    out
+}
+
+/// The scalar qgemm path — frozen reference, also the execution path
+/// whenever the scalar tier is forced (`SECDA_FORCE_SCALAR`).
+fn qgemm_scalar(
+    w: &[i8],
+    x: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    params: &QGemmParams,
+    threads: usize,
+) -> Vec<i8> {
     let mut out = vec![0i8; m * n];
     if threads <= 1 || m < 2 {
         let mut acc = vec![0i32; m * n];
-        accumulate_rows(w, x, 0, m, k, n, &mut acc);
-        ppu_rows(&acc, params, 0, m, n, &mut out);
+        accumulate_rows_scalar(w, x, 0, m, k, n, &mut acc);
+        ppu_rows_scalar(&acc, params, 0, m, n, &mut out);
         return out;
     }
     // split M into `threads` contiguous chunks
@@ -208,8 +423,8 @@ pub fn qgemm(
         for (slice, &(m0, m1)) in slices.into_iter().zip(&starts) {
             s.spawn(move || {
                 let mut acc = vec![0i32; (m1 - m0) * n];
-                accumulate_rows(w, x, m0, m1, k, n, &mut acc);
-                ppu_rows(&acc, params, m0, m1, n, slice);
+                accumulate_rows_scalar(w, x, m0, m1, k, n, &mut acc);
+                ppu_rows_scalar(&acc, params, m0, m1, n, slice);
             });
         }
     });
@@ -295,6 +510,33 @@ mod tests {
         let mut part = vec![0i32; 2 * n];
         accumulate_rows(&w, &x, 3, 5, k, n, &mut part);
         assert_eq!(&full[3 * n..5 * n], &part[..]);
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_reference() {
+        // 15750 macs: above the SIMD gate, odd dims: all tail paths
+        let (m, k, n) = (9, 35, 50);
+        let mut st = 0xabcdu64;
+        let w = rand_i8(&mut st, m * k);
+        let x = rand_i8(&mut st, k * n);
+        let mut a = vec![0i32; m * n];
+        let mut b = vec![0i32; m * n];
+        accumulate_rows(&w, &x, 0, m, k, n, &mut a);
+        accumulate_rows_scalar(&w, &x, 0, m, k, n, &mut b);
+        assert_eq!(a, b);
+        let (n0, n1) = (3, 41);
+        let mut ba = vec![0i32; m * (n1 - n0)];
+        let mut bb = vec![0i32; m * (n1 - n0)];
+        accumulate_block(&w, &x, 0, m, k, n, n0, n1, &mut ba);
+        accumulate_block_scalar(&w, &x, 0, m, k, n, n0, n1, &mut bb);
+        assert_eq!(ba, bb);
+        let (mult, shift) = quantize_multiplier(0.37);
+        let p = QGemmParams::uniform(m, 5, mult, shift);
+        let mut oa = vec![0i8; m * n];
+        let mut ob = vec![0i8; m * n];
+        ppu_rows(&a, &p, 0, m, n, &mut oa);
+        ppu_rows_scalar(&b, &p, 0, m, n, &mut ob);
+        assert_eq!(oa, ob);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Arch-dispatched int8 GEMM microkernels (pack → register-blocked
+//! kernel → unpack), bit-exact to the scalar reference.
+//!
+//! Dispatch is a runtime decision, not a compile-time one: on x86_64
+//! the [`tier`] probe uses `is_x86_feature_detected!` to pick AVX2
+//! over the ABI-baseline SSE2, aarch64 always has NEON, and every
+//! other target (or a forced override, see [`set_force_scalar`]) runs
+//! the portable kernel. All tiers produce identical bits — the
+//! kernels only re-block and re-order *wrapping* i32 accumulation,
+//! which is associative and commutative — so which tier executed is
+//! unobservable in outputs; only wall-clock changes. That invariant
+//! is pinned by `prop_simd_matches_scalar` and the scalar-forced
+//! exec-mode test, and is what lets the serving pool, the simulators'
+//! functional tiles and the per-GEMM cross-check all share one
+//! functional substrate regardless of host.
+//!
+//! `SECDA_FORCE_SCALAR=1` in the environment (read once, first use)
+//! forces the scalar tier process-wide — CI runs the whole test suite
+//! once under it so both dispatch arms stay green.
+
+mod pack;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use pack::{kernel_rows_portable, pack_a, pack_b, PackedB, NR};
+
+use crate::framework::quant::ppu_requant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+/// Which kernel family executes on this host. Every tier is bit-exact
+/// to [`KernelTier::Scalar`]; the tier only changes wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable scalar/auto-vectorized reference path.
+    Scalar,
+    /// x86_64 baseline 128-bit `pmaddwd` kernel (ABI-guaranteed).
+    Sse2,
+    /// x86_64 256-bit kernel + vectorized requant (runtime-detected).
+    Avx2,
+    /// aarch64 kernel (NEON is mandatory on aarch64).
+    Neon,
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static ENV_READ: Once = Once::new();
+
+fn env_init() {
+    ENV_READ.call_once(|| {
+        let v = std::env::var_os("SECDA_FORCE_SCALAR");
+        if v.is_some_and(|v| !v.is_empty() && v != "0") {
+            FORCE_SCALAR.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Force (or un-force) the scalar tier process-wide. Overrides the
+/// `SECDA_FORCE_SCALAR` environment variable; used by benches to
+/// measure scalar-vs-SIMD and by tests to pin dispatch-independence.
+pub fn set_force_scalar(v: bool) {
+    env_init();
+    FORCE_SCALAR.store(v, Ordering::Relaxed);
+}
+
+/// Whether the scalar tier is currently forced (environment variable
+/// or [`set_force_scalar`]).
+pub fn force_scalar() -> bool {
+    env_init();
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// The kernel tier dispatch resolves to on this host, right now.
+pub fn tier() -> KernelTier {
+    if force_scalar() {
+        return KernelTier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelTier::Avx2;
+        }
+        return KernelTier::Sse2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return KernelTier::Neon;
+    }
+    #[allow(unreachable_code)]
+    KernelTier::Scalar
+}
+
+/// Run the packed GEMM kernel for `tier` over rows `[0, rows)`.
+///
+/// `acc` must be zero-initialized and exactly `rows * pb.padded_n()`
+/// long; logical column `j` of row `r` lands at `r * padded_n() + j`
+/// (padded columns hold zero). All tiers produce identical bits.
+pub fn gemm_rows(t: KernelTier, pa: &[i32], pb: &PackedB, rows: usize, acc: &mut [i32]) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tier() only returns Avx2 after runtime detection;
+        // SSE2 is part of the x86_64 ABI.
+        KernelTier::Avx2 => unsafe { x86::gemm_rows_avx2(pa, pb, rows, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is ABI-guaranteed on x86_64.
+        KernelTier::Sse2 => unsafe { x86::gemm_rows_sse2(pa, pb, rows, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is ABI-guaranteed on aarch64.
+        KernelTier::Neon => unsafe { neon::gemm_rows_neon(pa, pb, rows, acc) },
+        _ => kernel_rows_portable(pa, pb, rows, acc),
+    }
+}
+
+/// Requantize one accumulator row: for each `j`,
+/// `out[j] = ppu_requant(acc[j].wrapping_add(bias), mult, shift,
+/// out_zp, act_min, act_max)` — vectorized when the tier supports it
+/// and the parameters avoid the scalar definition's corner cases
+/// (`mult == i32::MIN`, `|shift| > 31`), scalar otherwise. Bit-exact
+/// either way.
+// the argument list IS the PPU parameter set, same shape as
+// ppu_requant itself
+#[allow(clippy::too_many_arguments)]
+pub fn requant_row(
+    t: KernelTier,
+    acc: &[i32],
+    bias: i32,
+    mult: i32,
+    shift: i32,
+    out_zp: i32,
+    act_min: i32,
+    act_max: i32,
+    out: &mut [i8],
+) {
+    match t {
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 if mult != i32::MIN && (-31..=31).contains(&shift) => unsafe {
+            // SAFETY: tier() only returns Avx2 after runtime
+            // detection; the guard upholds the kernel's parameter
+            // contract and slice lengths are asserted inside.
+            x86::requant_row_avx2(acc, bias, mult, shift, out_zp, act_min, act_max, out)
+        },
+        _ => requant_row_scalar(acc, bias, mult, shift, out_zp, act_min, act_max, out),
+    }
+}
+
+/// The scalar requant row — the pinned definition [`requant_row`]
+/// must match bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn requant_row_scalar(
+    acc: &[i32],
+    bias: i32,
+    mult: i32,
+    shift: i32,
+    out_zp: i32,
+    act_min: i32,
+    act_max: i32,
+    out: &mut [i8],
+) {
+    assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = ppu_requant(a.wrapping_add(bias), mult, shift, out_zp, act_min, act_max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::quant::quantize_multiplier;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    #[test]
+    fn every_available_tier_matches_portable() {
+        let (m, k, n) = (13, 31, 27); // odd everything: all tail paths
+        let mut st = 0xc0ffeeu64;
+        let w: Vec<i8> = (0..m * k).map(|_| (xorshift(&mut st) & 0xff) as u8 as i8).collect();
+        let x: Vec<i8> = (0..k * n).map(|_| (xorshift(&mut st) & 0xff) as u8 as i8).collect();
+        let pb = pack_b(&x, k, n, 0, n);
+        let pa = pack_a(&w, 0, m, k);
+        let mut reference = vec![0i32; m * pb.padded_n()];
+        kernel_rows_portable(&pa, &pb, m, &mut reference);
+        let mut tiers = vec![KernelTier::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            tiers.push(KernelTier::Sse2);
+            if std::arch::is_x86_feature_detected!("avx2") {
+                tiers.push(KernelTier::Avx2);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        tiers.push(KernelTier::Neon);
+        for t in tiers {
+            let mut acc = vec![0i32; m * pb.padded_n()];
+            gemm_rows(t, &pa, &pb, m, &mut acc);
+            assert_eq!(acc, reference, "tier {t:?}");
+        }
+    }
+
+    #[test]
+    fn requant_dispatch_matches_scalar_including_corners() {
+        let mut st = 0x5eedu64;
+        let acc: Vec<i32> = (0..261)
+            .map(|_| (xorshift(&mut st) & 0xffffff) as i32 - (1 << 23))
+            .collect();
+        let t = tier();
+        // realistic multipliers plus the guarded corner cases
+        let mut cases: Vec<(i32, i32)> = [0.75, 0.02, 1.9, 1e-4]
+            .iter()
+            .map(|&r| quantize_multiplier(r))
+            .collect();
+        cases.push((i32::MIN, 0)); // must fall back to scalar
+        cases.push((1 << 30, 0));
+        for (mult, shift) in cases {
+            for (zp, lo, hi) in [(0, -128, 127), (3, 0, 6), (-128, -128, 127)] {
+                let mut a = vec![0i8; acc.len()];
+                let mut b = vec![0i8; acc.len()];
+                requant_row(t, &acc, 17, mult, shift, zp, lo, hi, &mut a);
+                requant_row_scalar(&acc, 17, mult, shift, zp, lo, hi, &mut b);
+                assert_eq!(a, b, "mult={mult} shift={shift} zp={zp}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_wins_over_detection() {
+        set_force_scalar(true);
+        assert_eq!(tier(), KernelTier::Scalar);
+        set_force_scalar(false);
+    }
+}

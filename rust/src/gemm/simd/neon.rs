@@ -1,0 +1,52 @@
+//! aarch64 NEON microkernel consuming the same pair-interleaved
+//! packed layout as the x86 tiers.
+//!
+//! NEON has no direct `pmaddwd` analogue, so the pair-madd is built
+//! from a widening 16-bit multiply (`vmull_s16`) against the
+//! broadcast `[w0, w1, w0, w1]` pair followed by a pairwise i32 add
+//! (`vpaddq_s32`), which sums each column's two products — the same
+//! i32 products and wrapping accumulation as the portable kernel, so
+//! bits are identical. NEON is a mandatory aarch64 target feature;
+//! this file is kept honest by the `cargo check
+//! --target aarch64-unknown-linux-gnu` CI job.
+
+use super::pack::{PackedB, NR};
+use std::arch::aarch64::*;
+
+/// NEON GEMM over packed operands: writes the full padded accumulator
+/// rows `[0, rows)`, bit-equal to [`super::pack::kernel_rows_portable`].
+///
+/// # Safety
+/// Slice shapes as in the portable kernel (`pa` at least
+/// `rows * k_pairs` pairs, `acc` exactly `rows * padded_n()` long).
+/// NEON itself is ABI-mandatory on aarch64.
+pub unsafe fn gemm_rows_neon(pa: &[i32], pb: &PackedB, rows: usize, acc: &mut [i32]) {
+    assert!(pa.len() >= rows * pb.k_pairs);
+    assert_eq!(acc.len(), rows * pb.padded_n());
+    let kp = pb.k_pairs;
+    let padded = pb.padded_n();
+    for r in 0..rows {
+        for q in 0..pb.n_panels {
+            let panel = pb.data.as_ptr().add(q * kp * 2 * NR);
+            let mut acc_lo = vdupq_n_s32(0); // panel columns 0..4
+            let mut acc_hi = vdupq_n_s32(0); // panel columns 4..8
+            for p in 0..kp {
+                // [w0, w1, w0, w1] — low/high i16 halves of the fused pair
+                let a = vreinterpret_s16_s32(vdup_n_s32(*pa.get_unchecked(r * kp + p)));
+                let b_lo = vld1q_s16(panel.add(p * 2 * NR));
+                let b_hi = vld1q_s16(panel.add(p * 2 * NR + NR));
+                // products per column pair, then pairwise-summed into
+                // one i32 per column
+                let p0 = vmull_s16(vget_low_s16(b_lo), a);
+                let p1 = vmull_s16(vget_high_s16(b_lo), a);
+                acc_lo = vaddq_s32(acc_lo, vpaddq_s32(p0, p1));
+                let p2 = vmull_s16(vget_low_s16(b_hi), a);
+                let p3 = vmull_s16(vget_high_s16(b_hi), a);
+                acc_hi = vaddq_s32(acc_hi, vpaddq_s32(p2, p3));
+            }
+            let dst = acc.as_mut_ptr().add(r * padded + q * NR);
+            vst1q_s32(dst, acc_lo);
+            vst1q_s32(dst.add(NR / 2), acc_hi);
+        }
+    }
+}

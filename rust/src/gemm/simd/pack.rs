@@ -1,0 +1,206 @@
+//! Portable packing for the SIMD microkernels.
+//!
+//! Every vector tier consumes the same layout, chosen for the one
+//! instruction shape they all share: a widening 16-bit pair
+//! multiply-accumulate (`pmaddwd` on x86, widening multiply plus
+//! pairwise add on NEON). The K dimension is walked two rows at a
+//! time, so B is packed as NR-column panels whose entries interleave
+//! each column's K-pair `[b[2p][j], b[2p+1][j]]` as adjacent i16
+//! lanes, and A rows fuse each weight K-pair into one i32 that the
+//! kernels broadcast across lanes.
+//!
+//! Padding is exact by construction: a missing odd-K row is stored as
+//! a zero *input* lane (its product contributes exactly 0 to the
+//! wrapping i32 accumulator), and panel columns beyond `n` are zero
+//! columns whose results land in padded accumulator space the unpack
+//! step never reads.
+
+/// Columns per packed B panel — fixed across tiers so one packed
+/// buffer feeds every kernel (AVX2 consumes one panel per 256-bit
+/// `pmaddwd`, SSE2 and NEON half a panel per vector op).
+pub const NR: usize = 8;
+
+/// The `k x n` im2col matrix packed into K-pair-interleaved column
+/// panels (see the module doc for the layout rationale).
+pub struct PackedB {
+    /// Logical (unpadded) column count of the packed window.
+    pub n: usize,
+    /// Number of NR-wide column panels (`ceil(n / NR)`).
+    pub n_panels: usize,
+    /// Number of K pairs (`ceil(k / 2)`); odd K is padded with a zero
+    /// row.
+    pub k_pairs: usize,
+    /// Panel-major data: panel `q`, pair `p` starts at
+    /// `(q * k_pairs + p) * 2 * NR` and holds, for each panel column
+    /// `c`, the adjacent lanes `[b[2p][c], b[2p+1][c]]` widened to
+    /// i16.
+    pub data: Vec<i16>,
+}
+
+impl PackedB {
+    /// Accumulator row length the kernels write: every panel stores
+    /// its full NR columns, so rows are padded to `n_panels * NR`.
+    pub fn padded_n(&self) -> usize {
+        self.n_panels * NR
+    }
+}
+
+/// Pack the column window `[n0, n1)` of the row-major `k x n_stride`
+/// matrix `x` (the im2col activations) for the pair-madd kernels.
+pub fn pack_b(x: &[i8], k: usize, n_stride: usize, n0: usize, n1: usize) -> PackedB {
+    assert!(n1 >= n0 && n1 <= n_stride);
+    assert!(x.len() >= k * n_stride);
+    let cols = n1 - n0;
+    let n_panels = cols.div_ceil(NR);
+    let k_pairs = k.div_ceil(2);
+    let mut data = vec![0i16; n_panels * k_pairs * 2 * NR];
+    for q in 0..n_panels {
+        let c0 = q * NR;
+        let width = NR.min(cols - c0);
+        for p in 0..k_pairs {
+            let base = (q * k_pairs + p) * 2 * NR;
+            let r0 = 2 * p;
+            let r1 = 2 * p + 1;
+            for c in 0..width {
+                let j = n0 + c0 + c;
+                data[base + 2 * c] = x[r0 * n_stride + j] as i16;
+                if r1 < k {
+                    data[base + 2 * c + 1] = x[r1 * n_stride + j] as i16;
+                }
+            }
+        }
+    }
+    PackedB {
+        n: cols,
+        n_panels,
+        k_pairs,
+        data,
+    }
+}
+
+/// Pack W rows `[m0, m1)`: each K-pair of a row is widened to i16 and
+/// fused into one i32 (low half = even-K element, matching the lane
+/// order [`pack_b`] stores), ready for broadcast. Row `i`'s pairs
+/// start at `(i - m0) * ceil(k / 2)`.
+pub fn pack_a(w: &[i8], m0: usize, m1: usize, k: usize) -> Vec<i32> {
+    assert!(m1 >= m0);
+    assert!(w.len() >= m1 * k);
+    let k_pairs = k.div_ceil(2);
+    let mut out = vec![0i32; (m1 - m0) * k_pairs];
+    for i in m0..m1 {
+        let row = &w[i * k..(i + 1) * k];
+        let dst = &mut out[(i - m0) * k_pairs..(i - m0 + 1) * k_pairs];
+        for (p, d) in dst.iter_mut().enumerate() {
+            let w0 = row[2 * p] as i16 as u16 as u32;
+            let w1 = if 2 * p + 1 < k {
+                row[2 * p + 1] as i16 as u16 as u32
+            } else {
+                0
+            };
+            *d = (w0 | (w1 << 16)) as i32;
+        }
+    }
+    out
+}
+
+/// Portable consumer of the packed layout — the fallback when no
+/// vector tier applies, and the executable specification the vector
+/// kernels are bit-equal to (wrapping i32 accumulation is associative
+/// and commutative, so any walk order over the same products yields
+/// identical bits).
+///
+/// `acc` must be zero-initialized, `rows * padded_n()` long; results
+/// for logical column `j` of row `r` land at `r * padded_n() + j`.
+pub fn kernel_rows_portable(pa: &[i32], pb: &PackedB, rows: usize, acc: &mut [i32]) {
+    let kp = pb.k_pairs;
+    let padded = pb.padded_n();
+    assert!(pa.len() >= rows * kp);
+    assert_eq!(acc.len(), rows * padded);
+    for r in 0..rows {
+        let arow = &mut acc[r * padded..(r + 1) * padded];
+        for q in 0..pb.n_panels {
+            let out = &mut arow[q * NR..(q + 1) * NR];
+            for p in 0..kp {
+                let pair = pa[r * kp + p];
+                let w0 = pair as i16 as i32;
+                let w1 = (pair >> 16) as i16 as i32;
+                if w0 == 0 && w1 == 0 {
+                    continue;
+                }
+                let base = (q * kp + p) * 2 * NR;
+                for (c, o) in out.iter_mut().enumerate() {
+                    let x0 = pb.data[base + 2 * c] as i32;
+                    let x1 = pb.data[base + 2 * c + 1] as i32;
+                    *o = o.wrapping_add(w0 * x0).wrapping_add(w1 * x1);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    fn rand_i8(state: &mut u64, len: usize) -> Vec<i8> {
+        (0..len).map(|_| (xorshift(state) & 0xff) as u8 as i8).collect()
+    }
+
+    #[test]
+    fn portable_kernel_matches_direct_accumulation() {
+        // odd k (zero-row pad) and ragged n (zero-column pad) at once
+        let (m, k, n) = (5, 7, 11);
+        let mut st = 0xfeedu64;
+        let w = rand_i8(&mut st, m * k);
+        let x = rand_i8(&mut st, k * n);
+        let pb = pack_b(&x, k, n, 0, n);
+        let pa = pack_a(&w, 0, m, k);
+        let mut acc = vec![0i32; m * pb.padded_n()];
+        kernel_rows_portable(&pa, &pb, m, &mut acc);
+        for i in 0..m {
+            for j in 0..n {
+                let direct: i32 = (0..k)
+                    .map(|kk| w[i * k + kk] as i32 * x[kk * n + j] as i32)
+                    .sum();
+                assert_eq!(acc[i * pb.padded_n() + j], direct, "({i},{j})");
+            }
+        }
+        // padded columns hold exactly zero
+        for i in 0..m {
+            for j in n..pb.padded_n() {
+                assert_eq!(acc[i * pb.padded_n() + j], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn column_window_packs_the_block() {
+        let (k, n) = (4, 20);
+        let mut st = 3u64;
+        let x = rand_i8(&mut st, k * n);
+        let w = rand_i8(&mut st, 2 * k);
+        let (n0, n1) = (5, 17);
+        let pb = pack_b(&x, k, n, n0, n1);
+        assert_eq!(pb.n, n1 - n0);
+        let pa = pack_a(&w, 0, 2, k);
+        let mut acc = vec![0i32; 2 * pb.padded_n()];
+        kernel_rows_portable(&pa, &pb, 2, &mut acc);
+        for i in 0..2 {
+            for j in n0..n1 {
+                let direct: i32 = (0..k)
+                    .map(|kk| w[i * k + kk] as i32 * x[kk * n + j] as i32)
+                    .sum();
+                assert_eq!(acc[i * pb.padded_n() + (j - n0)], direct);
+            }
+        }
+    }
+}

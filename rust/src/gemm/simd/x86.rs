@@ -1,0 +1,282 @@
+//! x86_64 microkernels: the AVX2 register-blocked pair-madd GEMM and
+//! the exact vectorized requantization, plus the SSE2 baseline GEMM
+//! (SSE2 is part of the x86_64 ABI, so that tier needs no runtime
+//! detection).
+//!
+//! Bit-exactness: `pmaddwd` computes `a[2c]*b[2c] + a[2c+1]*b[2c+1]`
+//! in i32 lanes — for i8-ranged inputs each product is at most
+//! 127*127, so the pair sum can never hit the instruction's lone
+//! saturation case (both products 0x4000_0000), and the surrounding
+//! `paddd` accumulation wraps exactly like the scalar reference's
+//! wrapping i32 adds. The requant kernel reproduces gemmlowp's
+//! `SaturatingRoundingDoublingHighMul` + `RoundingDivideByPOT`
+//! including the truncating-division and ties-away rounding corners;
+//! the dispatcher routes the rare parameter corners the vector form
+//! does not model (`mult == i32::MIN`, `|shift| > 31`) to the scalar
+//! path.
+
+use super::pack::{PackedB, NR};
+use std::arch::x86_64::*;
+
+/// Rows per AVX2 register block: 6 rows x 2 panels of accumulators
+/// (12 ymm) + 2 B panels + 1 broadcast leaves the 16-register file
+/// full but not spilling.
+const MR_AVX2: usize = 6;
+
+/// One AVX2 row-block over all panels.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available, `pa` holds at least
+/// `(r0 + MR) * k_pairs` pairs, and `acc` is `rows * padded_n` long.
+#[target_feature(enable = "avx2")]
+unsafe fn block_avx2<const MR: usize>(pa: &[i32], pb: &PackedB, r0: usize, acc: &mut [i32]) {
+    let kp = pb.k_pairs;
+    let padded = pb.padded_n();
+    let mut q = 0;
+    while q < pb.n_panels {
+        let two = q + 1 < pb.n_panels;
+        let mut acc0 = [_mm256_setzero_si256(); MR];
+        let mut acc1 = [_mm256_setzero_si256(); MR];
+        let p0 = pb.data.as_ptr().add(q * kp * 2 * NR);
+        let p1 = if two {
+            pb.data.as_ptr().add((q + 1) * kp * 2 * NR)
+        } else {
+            p0
+        };
+        for p in 0..kp {
+            let b0 = _mm256_loadu_si256(p0.add(p * 2 * NR) as *const __m256i);
+            let b1 = _mm256_loadu_si256(p1.add(p * 2 * NR) as *const __m256i);
+            for rr in 0..MR {
+                let a = _mm256_set1_epi32(*pa.get_unchecked((r0 + rr) * kp + p));
+                acc0[rr] = _mm256_add_epi32(acc0[rr], _mm256_madd_epi16(a, b0));
+                if two {
+                    acc1[rr] = _mm256_add_epi32(acc1[rr], _mm256_madd_epi16(a, b1));
+                }
+            }
+        }
+        for rr in 0..MR {
+            let dst = acc.as_mut_ptr().add((r0 + rr) * padded + q * NR);
+            _mm256_storeu_si256(dst as *mut __m256i, acc0[rr]);
+            if two {
+                _mm256_storeu_si256(dst.add(NR) as *mut __m256i, acc1[rr]);
+            }
+        }
+        q += if two { 2 } else { 1 };
+    }
+}
+
+/// AVX2 GEMM over packed operands: writes the full padded accumulator
+/// rows `[0, rows)`, bit-equal to [`super::pack::kernel_rows_portable`].
+///
+/// # Safety
+/// Caller must ensure AVX2 is available; slice shapes as in the
+/// portable kernel.
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemm_rows_avx2(pa: &[i32], pb: &PackedB, rows: usize, acc: &mut [i32]) {
+    assert!(pa.len() >= rows * pb.k_pairs);
+    assert_eq!(acc.len(), rows * pb.padded_n());
+    let mut r = 0;
+    while r + MR_AVX2 <= rows {
+        block_avx2::<MR_AVX2>(pa, pb, r, acc);
+        r += MR_AVX2;
+    }
+    while r < rows {
+        block_avx2::<1>(pa, pb, r, acc);
+        r += 1;
+    }
+}
+
+/// Rows per SSE2 register block: 4 rows x 2 half-panels (8 xmm) + 2 B
+/// halves + 1 broadcast.
+const MR_SSE2: usize = 4;
+
+/// One SSE2 row-block over all panels (each panel is two xmm of 4
+/// columns).
+///
+/// # Safety
+/// Slice shapes as in [`block_avx2`]; SSE2 is ABI-guaranteed on
+/// x86_64.
+#[target_feature(enable = "sse2")]
+unsafe fn block_sse2<const MR: usize>(pa: &[i32], pb: &PackedB, r0: usize, acc: &mut [i32]) {
+    let kp = pb.k_pairs;
+    let padded = pb.padded_n();
+    for q in 0..pb.n_panels {
+        let mut acc_lo = [_mm_setzero_si128(); MR];
+        let mut acc_hi = [_mm_setzero_si128(); MR];
+        let panel = pb.data.as_ptr().add(q * kp * 2 * NR);
+        for p in 0..kp {
+            let b_lo = _mm_loadu_si128(panel.add(p * 2 * NR) as *const __m128i);
+            let b_hi = _mm_loadu_si128(panel.add(p * 2 * NR + NR) as *const __m128i);
+            for rr in 0..MR {
+                let a = _mm_set1_epi32(*pa.get_unchecked((r0 + rr) * kp + p));
+                acc_lo[rr] = _mm_add_epi32(acc_lo[rr], _mm_madd_epi16(a, b_lo));
+                acc_hi[rr] = _mm_add_epi32(acc_hi[rr], _mm_madd_epi16(a, b_hi));
+            }
+        }
+        for rr in 0..MR {
+            let dst = acc.as_mut_ptr().add((r0 + rr) * padded + q * NR);
+            _mm_storeu_si128(dst as *mut __m128i, acc_lo[rr]);
+            _mm_storeu_si128(dst.add(NR / 2) as *mut __m128i, acc_hi[rr]);
+        }
+    }
+}
+
+/// SSE2 GEMM over packed operands, bit-equal to the portable kernel.
+///
+/// # Safety
+/// Slice shapes as in the portable kernel; SSE2 is ABI-guaranteed on
+/// x86_64.
+#[target_feature(enable = "sse2")]
+pub unsafe fn gemm_rows_sse2(pa: &[i32], pb: &PackedB, rows: usize, acc: &mut [i32]) {
+    assert!(pa.len() >= rows * pb.k_pairs);
+    assert_eq!(acc.len(), rows * pb.padded_n());
+    let mut r = 0;
+    while r + MR_SSE2 <= rows {
+        block_sse2::<MR_SSE2>(pa, pb, r, acc);
+        r += MR_SSE2;
+    }
+    while r < rows {
+        block_sse2::<1>(pa, pb, r, acc);
+        r += 1;
+    }
+}
+
+/// Broadcast constants of one requant pipeline invocation (per-row
+/// parameters splatted once, reused across vector steps).
+struct RequantConsts {
+    left: __m128i,
+    right: __m128i,
+    biasv: __m256i,
+    multv: __m256i,
+    mult_odd: __m256i,
+    rmask: __m256i,
+    rthr: __m256i,
+    zpv: __m256i,
+    minv: __m256i,
+    maxv: __m256i,
+}
+
+/// One 8-lane step of the whole PPU pipeline (bias add, shift, SRDHM,
+/// rounding divide, zero-point, clamp). Kept a standalone
+/// `#[target_feature]` fn (not a closure) so the AVX2 codegen feature
+/// provably applies on every supported toolchain.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available.
+#[target_feature(enable = "avx2")]
+unsafe fn requant8_avx2(v: __m256i, c: &RequantConsts) -> __m256i {
+    let zero = _mm256_setzero_si256();
+    let nudge = _mm256_set1_epi64x(1 << 30);
+    let nudge_neg = _mm256_set1_epi64x(1 - (1i64 << 31));
+    let trunc_fix = _mm256_set1_epi64x((1i64 << 31) - 1);
+    let low32 = _mm256_set1_epi64x(0xFFFF_FFFF);
+    let v = _mm256_add_epi32(v, c.biasv);
+    let s = _mm256_sll_epi32(v, c.left);
+    // SRDHM in 64-bit lanes: even i32 lanes sit in the low halves
+    // already; odd lanes are shifted down (pmuldq reads only the low
+    // 32 bits of each 64-bit lane, sign-extending).
+    let s_odd = _mm256_srli_epi64::<32>(s);
+    let pe = _mm256_mul_epi32(s, c.multv);
+    let po = _mm256_mul_epi32(s_odd, c.mult_odd);
+    let ne = _mm256_add_epi64(
+        nudge,
+        _mm256_and_si256(_mm256_cmpgt_epi64(zero, pe), nudge_neg),
+    );
+    let no = _mm256_add_epi64(
+        nudge,
+        _mm256_and_si256(_mm256_cmpgt_epi64(zero, po), nudge_neg),
+    );
+    let te = _mm256_add_epi64(pe, ne);
+    let to = _mm256_add_epi64(po, no);
+    let fe = _mm256_add_epi64(
+        te,
+        _mm256_and_si256(_mm256_cmpgt_epi64(zero, te), trunc_fix),
+    );
+    let fo = _mm256_add_epi64(
+        to,
+        _mm256_and_si256(_mm256_cmpgt_epi64(zero, to), trunc_fix),
+    );
+    let qe = _mm256_srli_epi64::<31>(fe);
+    let qo = _mm256_srli_epi64::<31>(fo);
+    let q = _mm256_or_si256(_mm256_and_si256(qe, low32), _mm256_slli_epi64::<32>(qo));
+    // RoundingDivideByPOT in 32-bit lanes.
+    let rem = _mm256_and_si256(q, c.rmask);
+    let thr = _mm256_sub_epi32(c.rthr, _mm256_cmpgt_epi32(zero, q));
+    let sh = _mm256_sra_epi32(q, c.right);
+    let rd = _mm256_sub_epi32(sh, _mm256_cmpgt_epi32(rem, thr));
+    let o = _mm256_add_epi32(rd, c.zpv);
+    _mm256_min_epi32(_mm256_max_epi32(o, c.minv), c.maxv)
+}
+
+/// Vectorized gemmlowp requant of one accumulator row — bit-exact to
+/// `ppu_requant(acc[j].wrapping_add(bias), mult, shift, ...)` per
+/// element.
+///
+/// The Q31 `SaturatingRoundingDoublingHighMul` runs in 64-bit lanes
+/// (even/odd split via `pmuldq`), with the two rounding corners the
+/// scalar code hides in plain arithmetic made explicit:
+/// * the nudge is `2^30` for non-negative products and `1 - 2^30` for
+///   negative ones (ties away from zero), selected by a 64-bit mask;
+/// * the divide by `2^31` is *truncating* (toward zero), recovered
+///   from a logical shift by pre-adding `2^31 - 1` to negative values
+///   — only the low 32 bits of each 64-bit quotient are kept, which
+///   is exactly the scalar `as i32` narrowing.
+///
+/// `RoundingDivideByPOT` then runs in 32-bit lanes: remainder mask,
+/// threshold bump for negative inputs, arithmetic shift, and a +1
+/// where the remainder exceeds the threshold.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available, `out.len() == acc.len()`,
+/// `mult != i32::MIN` and `-31 <= shift <= 31` (the dispatcher guards
+/// all three; outside them the scalar path is the definition).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub unsafe fn requant_row_avx2(
+    acc: &[i32],
+    bias: i32,
+    mult: i32,
+    shift: i32,
+    out_zp: i32,
+    act_min: i32,
+    act_max: i32,
+    out: &mut [i8],
+) {
+    assert_eq!(acc.len(), out.len());
+    let right = (-shift).max(0);
+    let multv = _mm256_set1_epi32(mult);
+    let consts = RequantConsts {
+        left: _mm_cvtsi32_si128(shift.max(0)),
+        right: _mm_cvtsi32_si128(right),
+        biasv: _mm256_set1_epi32(bias),
+        multv,
+        mult_odd: _mm256_srli_epi64::<32>(multv),
+        rmask: _mm256_set1_epi32(((1i64 << right) - 1) as i32),
+        rthr: _mm256_set1_epi32((((1i64 << right) - 1) >> 1) as i32),
+        zpv: _mm256_set1_epi32(out_zp),
+        minv: _mm256_set1_epi32(act_min),
+        maxv: _mm256_set1_epi32(act_max),
+    };
+
+    let n = acc.len();
+    let mut buf = [0i32; 8];
+    let mut j = 0;
+    while j + 8 <= n {
+        let v = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+        let r = requant8_avx2(v, &consts);
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, r);
+        for (c, &b) in buf.iter().enumerate() {
+            *out.get_unchecked_mut(j + c) = b as i8;
+        }
+        j += 8;
+    }
+    if j < n {
+        let mut tin = [0i32; 8];
+        tin[..n - j].copy_from_slice(&acc[j..]);
+        let r = requant8_avx2(_mm256_loadu_si256(tin.as_ptr() as *const __m256i), &consts);
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, r);
+        for c in 0..(n - j) {
+            out[j + c] = buf[c] as i8;
+        }
+    }
+}

@@ -34,11 +34,11 @@
 //! (build/test/bench commands and feature flags).
 
 // The serving surface (coordinator, elastic, driver, runtime), the
-// modules its cost model unifies (gemm, perf) and the layers the
-// elastic planner leans on (synth, sysc) are held to full rustdoc
-// coverage; `cargo doc` runs with `-D warnings` in CI. The remaining
-// layers below carry module-level docs but are exempted item-by-item
-// until their own doc pass (ROADMAP).
+// framework it serves, the modules its cost model unifies (gemm, perf)
+// and the layers the elastic planner leans on (synth, sysc) are held
+// to full rustdoc coverage; `cargo doc` runs with `-D warnings` in CI.
+// The remaining layers below carry module-level docs but are exempted
+// item-by-item until their own doc pass (ROADMAP).
 #![warn(missing_docs)]
 
 #[allow(missing_docs)]
@@ -47,7 +47,6 @@ pub mod cli;
 pub mod coordinator;
 pub mod driver;
 pub mod elastic;
-#[allow(missing_docs)]
 pub mod framework;
 pub mod gemm;
 pub mod obs;

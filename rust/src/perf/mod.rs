@@ -49,6 +49,15 @@ impl CpuModel {
         calib::cpu_model()
     }
 
+    /// The serving-tier CPU model: [`Self::pynq_a9`] with GEMM and
+    /// unpack rates scaled by the SIMD kernel uplift (see
+    /// [`calib::SIMD_GEMM_UPLIFT`]). Used by the coordinator's CPU
+    /// workers and cost model; the pynq model stays the Table II
+    /// reproduction baseline.
+    pub fn serving() -> Self {
+        calib::cpu_model_serving()
+    }
+
     /// Effective parallelism for `threads` CPU threads.
     pub fn eff_threads(&self, threads: usize) -> f64 {
         1.0 + self.second_thread_scaling * (threads.max(1) - 1) as f64
@@ -123,6 +132,23 @@ mod tests {
         let two = m.gemm_time(1_000_000_000, 2);
         let ratio = one.as_secs_f64() / two.as_secs_f64();
         assert!((1.8..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn serving_tier_is_the_pynq_model_scaled_by_the_simd_uplift() {
+        let pynq = CpuModel::pynq_a9();
+        let serving = CpuModel::serving();
+        let macs = 256u64 * 256 * 256;
+        // op overhead is additive, so compare the rate-driven part
+        let p = (pynq.gemm_time(macs, 1) - pynq.op_overhead).as_secs_f64();
+        let s = (serving.gemm_time(macs, 1) - serving.op_overhead).as_secs_f64();
+        let ratio = p / s;
+        assert!((ratio - calib::SIMD_GEMM_UPLIFT).abs() < 1e-6, "ratio {ratio}");
+        // non-GEMM rates are untouched
+        assert_eq!(
+            pynq.elementwise_time(1 << 20, 1),
+            serving.elementwise_time(1 << 20, 1)
+        );
     }
 
     #[test]

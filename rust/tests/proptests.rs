@@ -69,6 +69,68 @@ fn prop_simulators_match_cpu_gemm() {
     }
 }
 
+/// Property: the arch-dispatched SIMD GEMM and PPU kernels are
+/// bit-identical to the scalar reference for ANY shape, per-channel
+/// requant parameters, zero points and clamps, and both packed
+/// layouts (full rows and column-window blocks) — the core contract
+/// of [`secda::gemm::simd`].
+#[test]
+fn prop_simd_matches_scalar() {
+    for seed in 1..=50u64 {
+        let mut rng = Rng::new(seed * 0x51d7);
+        let m = rng.range(1, 40);
+        let k = rng.range(1, 80);
+        let n = rng.range(1, 64);
+        let w = rng.i8s(m * k);
+        let x = rng.i8s(k * n);
+        let mut p = QGemmParams::uniform(m, 0, 0, 0);
+        p.out_zp = (rng.next() % 21) as i32 - 10;
+        p.act_min = -128 + (rng.next() % 8) as i32;
+        p.act_max = 127 - (rng.next() % 8) as i32;
+        for i in 0..m {
+            let real = 0.0005 + (rng.next() % 2000) as f64 / 1200.0;
+            let (mult, shift) = quantize_multiplier(real);
+            p.mult[i] = mult;
+            p.shift[i] = shift;
+            p.bias[i] = (rng.next() % 65536) as i32 - 32768;
+        }
+
+        // accumulate + PPU through the dispatched wrappers...
+        let mut acc = vec![0i32; m * n];
+        gemm::accumulate_rows(&w, &x, 0, m, k, n, &mut acc);
+        let mut out = vec![0i8; m * n];
+        gemm::ppu_rows(&acc, &p, 0, m, n, &mut out);
+        // ...pinned to the scalar reference
+        let mut acc_s = vec![0i32; m * n];
+        gemm::accumulate_rows_scalar(&w, &x, 0, m, k, n, &mut acc_s);
+        assert_eq!(acc, acc_s, "seed {seed}: accumulators diverged ({m},{k},{n})");
+        let mut out_s = vec![0i8; m * n];
+        gemm::ppu_rows_scalar(&acc_s, &p, 0, m, n, &mut out_s);
+        assert_eq!(out, out_s, "seed {seed}: outputs diverged ({m},{k},{n})");
+
+        // the threaded qgemm entry point agrees as well
+        let threads = 1 + (rng.next() % 2) as usize;
+        assert_eq!(
+            gemm::qgemm(&w, &x, m, k, n, &p, threads),
+            out_s,
+            "seed {seed}: qgemm diverged ({m},{k},{n}) x{threads}"
+        );
+
+        // column-window (block-packed) layout
+        let n0 = rng.range(0, n - 1);
+        let n1 = rng.range(n0 + 1, n);
+        let bn = n1 - n0;
+        let mut bacc = vec![0i32; m * bn];
+        gemm::accumulate_block(&w, &x, 0, m, k, n, n0, n1, &mut bacc);
+        let mut bacc_s = vec![0i32; m * bn];
+        gemm::accumulate_block_scalar(&w, &x, 0, m, k, n, n0, n1, &mut bacc_s);
+        assert_eq!(
+            bacc, bacc_s,
+            "seed {seed}: block diverged ({m},{k},{n}) cols [{n0},{n1})"
+        );
+    }
+}
+
 /// Property: simulated time and cycle reports are deterministic —
 /// running the same request twice gives identical reports.
 #[test]
@@ -453,6 +515,19 @@ fn prop_policies_agree_across_exec_modes() {
         };
         assert_eq!(order(), order(), "seed {seed}: modeled EDF order not deterministic");
     }
+
+    // one more pass with the kernels forced to the scalar tier:
+    // dispatch must be functionally invisible to policy agreement.
+    // (CI additionally runs the whole suite under SECDA_FORCE_SCALAR=1,
+    // which exercises the env-var path in a fresh process.)
+    secda::gemm::simd::set_force_scalar(true);
+    let stream = build_stream(1);
+    let reference = serve(&stream, Arc::new(FifoPolicy), ExecMode::Modeled);
+    for mode in [ExecMode::Modeled, ExecMode::Threaded] {
+        let got = serve(&stream, Arc::new(AdmissionPolicy), mode);
+        assert_eq!(got, reference, "forced-scalar outputs diverged under {mode}");
+    }
+    secda::gemm::simd::set_force_scalar(false);
 }
 
 /// Property: the coordinator-as-GemmBackend seam ([`Coordinator::backend`])

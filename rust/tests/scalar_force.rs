@@ -1,0 +1,91 @@
+//! End-to-end forced-scalar run, in its own test binary so the
+//! `SECDA_FORCE_SCALAR` environment variable is set before this
+//! process first dispatches a kernel (the variable is sampled once, at
+//! first use). CI additionally exports the variable around the whole
+//! test suite; this binary makes the env-var path self-contained so a
+//! plain `cargo test` covers it too.
+
+use std::sync::Arc;
+
+use secda::coordinator::{Coordinator, CoordinatorConfig};
+use secda::framework::backend::CpuBackend;
+use secda::framework::graph::{Graph, GraphBuilder};
+use secda::framework::interpreter::Session;
+use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+use secda::framework::quant::QParams;
+use secda::framework::tensor::Tensor;
+use secda::gemm::simd::{self, KernelTier};
+
+fn rnd(st: &mut u64) -> u64 {
+    *st ^= *st << 13;
+    *st ^= *st >> 7;
+    *st ^= *st << 17;
+    *st
+}
+
+fn convnet(name: &str, cout: usize, seed: u64) -> Graph {
+    let mut st = seed.max(1);
+    let cin = 3;
+    let mut b = GraphBuilder::new(name, vec![1, 16, 16, cin], QParams::new(0.05, 0));
+    let conv = Conv2d {
+        name: format!("{name}.c1"),
+        cout,
+        kh: 3,
+        kw: 3,
+        cin,
+        stride: 1,
+        pad: 1,
+        weights: (0..cout * 9 * cin)
+            .map(|_| (rnd(&mut st) & 0xff) as u8 as i8)
+            .collect(),
+        bias: vec![7; cout],
+        w_scales: vec![0.02; cout],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c = b.push(Op::Conv(conv), vec![b.input()]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+fn image(g: &Graph, seed: u64) -> Tensor {
+    let mut st = seed.max(1);
+    let n: usize = g.input_shape.iter().product();
+    let data = (0..n).map(|_| (rnd(&mut st) & 0xff) as u8 as i8).collect();
+    Tensor::new(g.input_shape.clone(), data, g.input_qp)
+}
+
+#[test]
+fn env_var_forces_the_scalar_tier_end_to_end() {
+    // set before any kernel dispatch happens in this process
+    std::env::set_var("SECDA_FORCE_SCALAR", "1");
+    assert_eq!(simd::tier(), KernelTier::Scalar);
+
+    // a small serving round under the forced tier stays bit-exact to
+    // the independent single-threaded CPU reference
+    let g = Arc::new(convnet("net", 16, 3));
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let mut inputs = Vec::new();
+    for i in 0..3u64 {
+        let input = image(&g, 100 + i);
+        let id = coord.submit(g.clone(), input.clone()).unwrap();
+        inputs.push((id, input));
+    }
+    let done = coord.run_until_idle();
+    assert_eq!(done.len(), 3);
+    for (id, input) in inputs {
+        let c = done.iter().find(|c| c.id == id).expect("completed");
+        let mut cb = CpuBackend::new(1);
+        let reference = Session::new(&g, &mut cb, 1).run(&input).0;
+        assert_eq!(c.output.data, reference.data, "request {id} diverged");
+    }
+
+    // the runtime toggle overrides the environment in both directions
+    simd::set_force_scalar(false);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    assert_ne!(simd::tier(), KernelTier::Scalar);
+    simd::set_force_scalar(true);
+    assert_eq!(simd::tier(), KernelTier::Scalar);
+}
