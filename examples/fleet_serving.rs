@@ -1,0 +1,287 @@
+//! Fleet serving demo: the L4 tier scales one PYNQ-Z1 serving stack
+//! to N modeled boards behind a gossip-fed, cost-model router.
+//!
+//! Two demonstrations:
+//!
+//! * **Scaling** — a mixed burst (small conv net + FC head, offered
+//!   far beyond one board's capacity) served by 1/2/4-board fleets.
+//!   The router spreads the burst by gossiped backlog, so aggregate
+//!   modeled req/s scales near-linearly with the board count.
+//! * **Portfolio** — two boards start mis-provisioned on the VM
+//!   bitstream while the traffic is deep-K convolution, the one shape
+//!   the VM cannot hold on fabric (K exceeds its local buffers). The
+//!   fleet-wide planner sees the aggregate profile, splits it per
+//!   board, and pays one modeled bitstream reload per board to move
+//!   the portfolio onto the SA design — the SECDA co-design loop run
+//!   at serving time, across a fleet.
+//!
+//! Run: `cargo run --release --example fleet_serving`
+//!
+//! Observability: `--trace-out trace.json` writes the portfolio run's
+//! fleet Chrome trace — one process per board, Perfetto-loadable, with
+//! the per-board request/batch/GEMM tracks side by side.
+//! `--metrics-out metrics.json` writes the fleet metrics snapshot
+//! (`fleet.*` aggregates plus `board{N}.*` breakdowns).
+
+use std::sync::Arc;
+
+use secda::coordinator::CoordinatorConfig;
+use secda::elastic::ElasticConfig;
+use secda::fleet::{Fleet, FleetConfig, GossipConfig, IngressModel};
+use secda::framework::graph::{Graph, GraphBuilder};
+use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
+use secda::framework::quant::QParams;
+use secda::framework::tensor::Tensor;
+use secda::obs::export::metrics_json;
+use secda::sysc::SimTime;
+
+fn xorshift(st: &mut u64) -> u64 {
+    *st ^= *st << 13;
+    *st ^= *st >> 7;
+    *st ^= *st << 17;
+    *st
+}
+
+/// Small conv net for the scaling burst (both convs offload).
+fn cam() -> Graph {
+    let mut st = 0xf1u64;
+    let (cin, cout) = (3usize, 24usize);
+    let mut b = GraphBuilder::new("fleet_cam", vec![1, 12, 12, cin], QParams::new(0.05, 0));
+    let conv = Conv2d {
+        name: "c1".into(),
+        cout,
+        kh: 3,
+        kw: 3,
+        cin,
+        stride: 1,
+        pad: 1,
+        weights: (0..cout * 9 * cin)
+            .map(|_| (xorshift(&mut st) & 0xff) as u8 as i8)
+            .collect(),
+        bias: vec![5; cout],
+        w_scales: vec![0.02; cout],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c = b.push(Op::Conv(conv), vec![b.input()]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+/// FC head for the mixed half of the burst.
+fn head() -> Graph {
+    let mut st = 0x4eadu64;
+    let feat = 512;
+    let mut b = GraphBuilder::new("fleet_head", vec![1, feat], QParams::new(0.05, 0));
+    let fc = FullyConnected {
+        name: "fc0".into(),
+        in_features: feat,
+        out_features: feat,
+        weights: (0..feat * feat)
+            .map(|_| (xorshift(&mut st) & 0xff) as u8 as i8)
+            .collect(),
+        bias: vec![3; feat],
+        w_scale: 0.02,
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+    };
+    let f = b.push(Op::Fc(fc), vec![b.input()]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![f]);
+    b.finish(s)
+}
+
+/// Deep-K conv model for the portfolio demo: the conv GEMM K (4608)
+/// exceeds the paper VM's local buffers, so a VM board serves it at
+/// CPU-fallback speed while an SA board runs it on fabric.
+fn deep_cam() -> Graph {
+    let mut st = 0xdeu64;
+    let cin = 512;
+    let cout = 48;
+    let mut b = GraphBuilder::new("deep_cam", vec![1, 14, 14, cin], QParams::new(0.05, 0));
+    let conv = Conv2d {
+        name: "c1".into(),
+        cout,
+        kh: 3,
+        kw: 3,
+        cin,
+        stride: 1,
+        pad: 1,
+        weights: (0..cout * 9 * cin)
+            .map(|_| (xorshift(&mut st) & 0xff) as u8 as i8)
+            .collect(),
+        bias: vec![5; cout],
+        w_scales: vec![0.02; cout],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c = b.push(Op::Conv(conv), vec![b.input()]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+fn image(g: &Graph, st: &mut u64) -> Tensor {
+    let n: usize = g.input_shape.iter().product();
+    let data = (0..n).map(|_| (xorshift(st) & 0xff) as u8 as i8).collect();
+    Tensor::new(g.input_shape.clone(), data, g.input_qp)
+}
+
+/// Serve one mixed burst through an N-board fleet and report the
+/// aggregate view.
+fn serve_burst(gs: &[Arc<Graph>; 2], boards: usize, n_requests: usize) -> (f64, f64) {
+    let fcfg = FleetConfig::default()
+        .with_boards(boards)
+        .with_board(CoordinatorConfig {
+            queue_depth: n_requests,
+            ..CoordinatorConfig::default()
+        })
+        .with_gossip(GossipConfig {
+            staleness: SimTime::ZERO,
+        });
+    let mut fleet = Fleet::new(fcfg);
+    let mut st = 0x5eedu64;
+    for i in 0..n_requests {
+        let g = &gs[i % 2];
+        let input = image(g, &mut st);
+        fleet.submit(g.clone(), input).expect("queue sized for the burst");
+    }
+    let done = fleet.run_until_idle();
+    assert_eq!(done.len(), n_requests, "the fleet must serve the whole burst");
+    let m = fleet.metrics();
+    let util =
+        m.boards.iter().map(|b| b.utilization).sum::<f64>() / m.boards.len() as f64;
+    (m.throughput_rps(), util)
+}
+
+/// Strip a `--flag <value>` pair from the arg vector.
+fn take_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    assert!(i + 1 < args.len(), "{flag} needs a path argument");
+    let v = args.remove(i + 1);
+    args.remove(i);
+    Some(v)
+}
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_out = take_flag(&mut args, "--trace-out");
+    let metrics_out = take_flag(&mut args, "--metrics-out");
+    println!("=== fleet serving: one serving stack, N modeled boards ===\n");
+
+    // --- scaling: mixed burst across 1/2/4 boards -------------------
+    let gs = [Arc::new(cam()), Arc::new(head())];
+    let n_requests = 96;
+    println!("mixed burst ({n_requests} requests, 2SA+1VM+1CPU per board):");
+    println!("{:<8} {:>12} {:>9} {:>9}", "boards", "req/s", "speedup", "util");
+    let mut base = None;
+    let mut ratio_at_4 = 0.0;
+    for boards in [1usize, 2, 4] {
+        let (tp, util) = serve_burst(&gs, boards, n_requests);
+        let base_tp = *base.get_or_insert(tp);
+        let speedup = tp / base_tp;
+        if boards == 4 {
+            ratio_at_4 = speedup;
+        }
+        println!(
+            "{:<8} {:>12.2} {:>8.2}x {:>8.1}%",
+            boards,
+            tp,
+            speedup,
+            100.0 * util
+        );
+    }
+    assert!(
+        ratio_at_4 >= 3.0,
+        "4-board fleet must scale near-linearly, got {ratio_at_4:.2}x"
+    );
+    println!();
+
+    // --- portfolio: fleet-wide bitstream re-planning ----------------
+    println!("portfolio (2 boards start on the VM bitstream, deep-K conv traffic):");
+    let mut fcfg = FleetConfig::default()
+        .with_boards(2)
+        .with_board(CoordinatorConfig {
+            sa_workers: 0,
+            vm_workers: 1,
+            cpu_workers: 0,
+            queue_depth: 64,
+            ..CoordinatorConfig::default()
+        })
+        .with_ingress(IngressModel::default())
+        .with_portfolio(ElasticConfig {
+            eval_interval: SimTime::ms(100),
+            window: SimTime::ms(2_500),
+            min_samples: 4,
+            hysteresis: SimTime::ms(10),
+            max_swaps: 1,
+            cpu_max: 0,
+            ..ElasticConfig::default()
+        });
+    if trace_out.is_some() || metrics_out.is_some() {
+        fcfg = fcfg.with_tracing(1 << 16);
+    }
+    let deep = Arc::new(deep_cam());
+    let mut fleet = Fleet::new(fcfg);
+    let mut st = 0x90ddu64;
+    let mut served = 0usize;
+    for (bi, burst) in [4usize, 8, 8].into_iter().enumerate() {
+        for _ in 0..burst {
+            let input = image(&deep, &mut st);
+            fleet
+                .submit(deep.clone(), input)
+                .expect("queue sized for the stream");
+            fleet.advance(SimTime::ms(25));
+        }
+        let before = fleet.compositions();
+        served += fleet.run_until_idle().len();
+        let after = fleet.compositions();
+        for b in 0..2 {
+            if before[b] != after[b] {
+                println!(
+                    "  burst {bi}: board{b} reconfigured {} -> {}",
+                    before[b], after[b]
+                );
+            }
+        }
+    }
+    let m = fleet.metrics();
+    println!(
+        "  served {served} requests; {} portfolio swap(s), {} bitstream time",
+        m.reconfigs, m.reconfig_time
+    );
+    println!("  {}", m.summary());
+
+    // the demonstration this example exists for: the fleet planner
+    // moved every board off the mis-provisioned VM bitstream onto the
+    // SA design, paying the modeled reconfiguration cost per board
+    assert!(
+        !fleet.portfolio_history().is_empty(),
+        "the portfolio planner never reconfigured any board"
+    );
+    for rec in fleet.portfolio_history() {
+        assert!(
+            rec.record.to.sa >= 1,
+            "board {} swapped to {} instead of the SA design",
+            rec.board,
+            rec.record.to
+        );
+    }
+    assert!(
+        fleet.compositions().iter().any(|c| c.sa >= 1),
+        "no board ended on the SA bitstream"
+    );
+
+    if let Some(path) = &trace_out {
+        let trace = fleet.chrome_trace();
+        std::fs::write(path, &trace).expect("write trace");
+        println!("\nfleet chrome trace -> {path} (load in https://ui.perfetto.dev)");
+    }
+    if let Some(path) = &metrics_out {
+        let json = metrics_json(&m.registry());
+        std::fs::write(path, &json).expect("write metrics");
+        println!("fleet metrics snapshot -> {path}");
+    }
+}

@@ -21,8 +21,14 @@
 //! starts on the wrong bitstream and must reprovision itself
 //! ([`secda::elastic`]): req/s, p99, SLO attainment and swaps taken.
 //!
+//! A **fleet** sweep scales the whole L3 stack across 1/2/4/8 modeled
+//! boards behind the L4 router ([`secda::fleet`]) on a mixed serving
+//! load offered as one burst (far beyond a single board's capacity),
+//! so aggregate req/s is service-limited at every fleet size and
+//! should scale near-linearly with the board count.
+//!
 //! Run: `cargo bench --bench serving`
-//! Restrict:  `-- modeled`, `-- threaded` or `-- elastic`
+//! Restrict:  `-- modeled`, `-- threaded`, `-- elastic` or `-- fleet`
 //! Add a heavier MobileNetV1 sweep with: `cargo bench --bench serving -- full`
 //!
 //! Machine-readable: `cargo bench --bench serving -- json` re-runs the
@@ -39,6 +45,7 @@ use secda::coordinator::{
     SchedulePolicy, SubmitError,
 };
 use secda::elastic::ElasticConfig;
+use secda::fleet::{Fleet, FleetConfig, GossipConfig};
 use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::models;
 use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
@@ -505,6 +512,80 @@ fn elastic_sweep() {
     println!();
 }
 
+struct FleetStats {
+    throughput: f64,
+    p50: SimTime,
+    p99: SimTime,
+    util_mean: f64,
+    host_ms: f64,
+}
+
+/// Serve a mixed burst (alternating edge_cam and head_mlp requests,
+/// all submitted at one modeled instant) through an N-board fleet.
+/// Always-fresh gossip lets backlog steering spread the burst evenly;
+/// with the offered load far beyond one board, throughput is
+/// service-limited at every fleet size.
+fn serve_fleet(gs: &[Arc<Graph>; 2], boards: usize, n_requests: usize) -> FleetStats {
+    let fcfg = FleetConfig::default()
+        .with_boards(boards)
+        .with_board(CoordinatorConfig {
+            queue_depth: n_requests,
+            ..CoordinatorConfig::default()
+        })
+        .with_gossip(GossipConfig {
+            staleness: SimTime::ZERO,
+        });
+    let mut fleet = Fleet::new(fcfg);
+    let mut st = 0x5eedu64;
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let g = &gs[i % 2];
+        let input = image(g, &mut st);
+        fleet.submit(g.clone(), input).expect("queue sized for the burst");
+    }
+    let done = fleet.run_until_idle();
+    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(done.len(), n_requests);
+    let m = fleet.metrics();
+    let util_mean =
+        m.boards.iter().map(|b| b.utilization).sum::<f64>() / m.boards.len() as f64;
+    FleetStats {
+        throughput: m.throughput_rps(),
+        p50: m.latency_pct(0.5),
+        p99: m.latency_pct(0.99),
+        util_mean,
+        host_ms,
+    }
+}
+
+/// Aggregate modeled throughput vs board count on the mixed burst.
+fn fleet_scaling(gs: &[Arc<Graph>; 2], n_requests: usize) {
+    println!(
+        "--- fleet scaling ({n_requests} mixed requests in one burst, \
+         2SA+1VM+1CPU per board) ---"
+    );
+    println!(
+        "{:<10} {:>10} {:>9} {:>10} {:>10} {:>9} {:>9}",
+        "boards", "req/s", "speedup", "p50", "p99", "util", "host ms"
+    );
+    let mut base = None;
+    for boards in [1usize, 2, 4, 8] {
+        let s = serve_fleet(gs, boards, n_requests);
+        let base_tp = *base.get_or_insert(s.throughput);
+        println!(
+            "{:<10} {:>10.2} {:>8.2}x {:>10} {:>10} {:>8.1}% {:>9.0}",
+            boards,
+            s.throughput,
+            s.throughput / base_tp,
+            format!("{}", s.p50),
+            format!("{}", s.p99),
+            100.0 * s.util_mean,
+            s.host_ms
+        );
+    }
+    println!();
+}
+
 fn mobilenet_sweep() {
     println!("--- MobileNetV1 pool scaling (8 requests, 30 ms inter-arrival) ---");
     let g = Arc::new(models::by_name("mobilenet_v1").expect("model"));
@@ -639,6 +720,24 @@ fn json_mode(g: &Arc<Graph>) {
     }
     sweeps.push(("elastic", rows));
 
+    // fleet scaling (96 mixed requests in one burst, 1/2/4/8 boards)
+    let gs = [g.clone(), Arc::new(head_mlp())];
+    let mut rows = Vec::new();
+    let mut base = None;
+    for boards in [1usize, 2, 4, 8] {
+        let s = serve_fleet(&gs, boards, 96);
+        let base_tp = *base.get_or_insert(s.throughput);
+        rows.push(jrow(&[
+            ("boards", boards.to_string()),
+            ("req_s", jf(s.throughput)),
+            ("speedup", jf(s.throughput / base_tp)),
+            ("p50_us", jf(s.p50.as_us_f64())),
+            ("p99_us", jf(s.p99.as_us_f64())),
+            ("util_mean", jf(s.util_mean)),
+        ]));
+    }
+    sweeps.push(("fleet_scaling", rows));
+
     println!("{{");
     println!("  \"schema\": \"secda-bench-serving-v1\",");
     println!(
@@ -670,7 +769,8 @@ fn main() {
         json_mode(&Arc::new(edge_cam()));
         return;
     }
-    let both = !only("modeled") && !only("threaded") && !only("elastic");
+    let both =
+        !only("modeled") && !only("threaded") && !only("elastic") && !only("fleet");
     println!("=== serving benchmarks ===\n");
     let g = Arc::new(edge_cam());
     if both || only("modeled") || only("elastic") {
@@ -681,6 +781,9 @@ fn main() {
             policy_sweep(&g, 64);
         }
         elastic_sweep();
+    }
+    if both || only("modeled") || only("fleet") {
+        fleet_scaling(&[g.clone(), Arc::new(head_mlp())], 96);
     }
     if both || only("threaded") {
         println!("== ExecMode::Threaded (OS threads, host wall-clock) ==\n");

@@ -19,6 +19,7 @@ pub struct BramArray {
 }
 
 impl BramArray {
+    /// Build a banked array (`banks` must be non-zero).
     pub fn new(banks: usize, bytes_per_bank_cycle: usize, capacity_bytes: usize) -> Self {
         assert!(banks > 0);
         BramArray {
@@ -56,6 +57,7 @@ impl BramArray {
         (self.capacity_bytes as u32).div_ceil(per_block as u32).max(self.banks as u32)
     }
 
+    /// Whether a buffer of `bytes` fits in the array's capacity.
     pub fn fits(&self, bytes: usize) -> bool {
         bytes <= self.capacity_bytes
     }

@@ -12,8 +12,9 @@
 /// tree; weights broadcast from a local tile buffer.
 #[derive(Debug, Clone, Copy)]
 pub struct VmUnitModel {
-    /// Output tile height/width (4 in the paper).
+    /// Output tile height (4 in the paper).
     pub tile_m: usize,
+    /// Output tile width (4 in the paper).
     pub tile_n: usize,
     /// Parallel MACs per output value (4 in the paper).
     pub macs_per_output: usize,
@@ -29,6 +30,7 @@ pub struct VmUnitModel {
 }
 
 impl VmUnitModel {
+    /// The paper's VM GEMM-unit parameters (Fig. 3).
     pub fn paper() -> Self {
         VmUnitModel {
             tile_m: 4,
@@ -88,6 +90,7 @@ pub struct SaArrayModel {
 }
 
 impl SaArrayModel {
+    /// The paper's SA array at a given dimension (Fig. 4, §IV-E3).
     pub fn paper(dim: usize) -> Self {
         SaArrayModel {
             dim,
@@ -95,6 +98,7 @@ impl SaArrayModel {
         }
     }
 
+    /// MACs retired per cycle when fully fed (`dim^2`).
     pub fn macs_per_cycle(&self) -> u64 {
         (self.dim * self.dim) as u64
     }

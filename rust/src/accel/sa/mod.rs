@@ -22,11 +22,16 @@ use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Trace, Wa
 /// Configuration of an SA design instance.
 #[derive(Debug, Clone)]
 pub struct SaConfig {
+    /// Systolic-array cycle model (dimension, fill overlap).
     pub array: SaArrayModel,
+    /// Fabric clock in MHz.
     pub clock_mhz: f64,
-    /// Global buffers (SA keeps both weights and inputs global, §IV-D1).
+    /// Global weight buffer (SA keeps both weights and inputs global,
+    /// §IV-D1).
     pub global_weight_buf: BramArray,
+    /// Global input buffer.
     pub global_input_buf: BramArray,
+    /// Off-chip AXI DMA path.
     pub axi: AxiBus,
     /// None = CPU-side post-processing (int32 outputs).
     pub ppu: Option<PpuModel>,
@@ -435,18 +440,22 @@ impl Module<Msg> for OutputDma {
 /// The SA accelerator design (implements [`GemmAccel`]).
 #[derive(Debug, Clone)]
 pub struct SaDesign {
+    /// Design parameters of this instance.
     pub cfg: SaConfig,
 }
 
 impl SaDesign {
+    /// Build a design from an explicit configuration.
     pub fn new(cfg: SaConfig) -> Self {
         SaDesign { cfg }
     }
 
+    /// The paper's final 16x16 design.
     pub fn paper() -> Self {
         Self::new(SaConfig::paper())
     }
 
+    /// A design at one of the §IV-E3 sweep dimensions.
     pub fn with_dim(dim: usize) -> Self {
         Self::new(SaConfig::with_dim(dim))
     }

@@ -22,13 +22,17 @@ pub enum ExecMode {
 /// `out[i8; m*n] = PPU(W[m,k] @ X[k,n])`.
 #[derive(Debug, Clone)]
 pub struct GemmRequest {
+    /// Output rows (weight rows / conv output channels).
     pub m: usize,
+    /// Reduction depth (weight columns = activation rows).
     pub k: usize,
+    /// Output columns (im2col patches).
     pub n: usize,
     /// Row-major `m x k` weights (driver-reshaped accelerator layout).
     pub weights: Arc<Vec<i8>>,
     /// Row-major `k x n` im2col activations.
     pub inputs: Arc<Vec<i8>>,
+    /// Requantization parameters the PPU applies to the accumulators.
     pub params: Arc<QGemmParams>,
     /// Weights already resident in accelerator global buffers (layer
     /// weights are reused across an inference; the driver preloads
@@ -37,6 +41,7 @@ pub struct GemmRequest {
 }
 
 impl GemmRequest {
+    /// Build a request from owned buffers (validates shapes).
     pub fn new(
         m: usize,
         k: usize,
@@ -71,9 +76,11 @@ impl GemmRequest {
         }
     }
 
+    /// Weight bytes a non-resident run must move on-chip.
     pub fn weight_bytes(&self) -> u64 {
         (self.m * self.k) as u64
     }
+    /// Activation bytes the input DMA moves per run.
     pub fn input_bytes(&self) -> u64 {
         (self.k * self.n) as u64
     }
@@ -87,6 +94,7 @@ impl GemmRequest {
             base * 4
         }
     }
+    /// Multiply-accumulates this GEMM performs (`m * k * n`).
     pub fn macs(&self) -> u64 {
         crate::gemm::mac_count(self.m, self.k, self.n)
     }
@@ -101,6 +109,7 @@ pub struct GemmResult {
     /// Raw int32 accumulators (only when the PPU is disabled and
     /// unpacking falls back to the CPU, §IV-E2 ablation).
     pub raw_acc: Option<Vec<i32>>,
+    /// Cycle/byte/utilization accounting for the run.
     pub report: AccelReport,
 }
 
@@ -117,11 +126,13 @@ pub struct AccelReport {
     pub weight_load_cycles: u64,
     /// Compute-unit cycles lost to starvation/backpressure.
     pub stall_cycles: u64,
-    /// DMA cycles (0 in Simulation mode).
+    /// Input-DMA cycles (0 in Simulation mode).
     pub dma_in_cycles: u64,
+    /// Output-DMA cycles (0 in Simulation mode).
     pub dma_out_cycles: u64,
-    /// Bytes over the AXI links.
+    /// Bytes moved on-chip over the AXI links.
     pub bytes_in: u64,
+    /// Bytes moved off-chip over the AXI links.
     pub bytes_out: u64,
     /// Reads issued against the global weight buffer (the §IV-E2
     /// scheduler ablation observable: 4x fewer with the Scheduler).
@@ -157,6 +168,7 @@ impl AccelReport {
 /// A GEMM accelerator design that the driver can target. Both case
 /// study designs (VM, SA) and the VTA comparison model implement this.
 pub trait GemmAccel {
+    /// Short design name (used in reports and traces).
     fn name(&self) -> &str;
     /// Simulate one GEMM request end to end.
     fn run(&self, req: &GemmRequest, mode: ExecMode) -> GemmResult;

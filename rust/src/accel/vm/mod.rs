@@ -27,7 +27,9 @@ use crate::sysc::{Clock, Ctx, Module, ModuleStats, SimTime, Simulator, Trace, Wa
 pub struct VmConfig {
     /// Number of GEMM units (4 — the Zynq-7020 resource limit, §IV-C1).
     pub units: usize,
+    /// Cycle model of one GEMM unit.
     pub unit: VmUnitModel,
+    /// Fabric clock in MHz.
     pub clock_mhz: f64,
     /// Global weight buffer (capacity drives §IV-E4 weight tiling).
     pub global_weight_buf: BramArray,
@@ -36,6 +38,7 @@ pub struct VmConfig {
     /// Per-unit local weight tile buffer, bytes. Bounds the K a job
     /// can hold natively: `max_k = local_buf_bytes / tile_m`.
     pub local_buf_bytes: usize,
+    /// Off-chip AXI DMA path.
     pub axi: AxiBus,
     /// None = post-processing stays on the CPU (§IV-E2 ablation).
     pub ppu: Option<PpuModel>,
@@ -612,14 +615,17 @@ impl Module<Msg> for OutputDma {
 /// The VM accelerator design (implements [`GemmAccel`]).
 #[derive(Debug, Clone)]
 pub struct VmDesign {
+    /// Design parameters of this instance.
     pub cfg: VmConfig,
 }
 
 impl VmDesign {
+    /// Build a design from an explicit configuration.
     pub fn new(cfg: VmConfig) -> Self {
         VmDesign { cfg }
     }
 
+    /// The final paper design ([`VmConfig::paper`]).
     pub fn paper() -> Self {
         Self::new(VmConfig::paper())
     }

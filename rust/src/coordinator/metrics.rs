@@ -210,6 +210,19 @@ impl ServingMetrics {
         SimTime::ps(self.waits.max())
     }
 
+    /// The end-to-end latency histogram itself, for aggregation
+    /// (the fleet tier merges per-board histograms via
+    /// [`Histogram::merge`] to report fleet tail latency).
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latencies
+    }
+
+    /// The queue-wait histogram itself (same aggregation seam as
+    /// [`ServingMetrics::latency_histogram`]).
+    pub fn wait_histogram(&self) -> &Histogram {
+        &self.waits
+    }
+
     /// Mean dispatch-round size over all recorded batches.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches.is_empty() {

@@ -551,6 +551,51 @@ impl Coordinator {
         self.pool.total_queued()
     }
 
+    /// Read-only admission probe: would this coordinator's policy shed
+    /// a request for `model` submitted at modeled time `at` (clamped
+    /// to no earlier than the board's own clock)?
+    ///
+    /// Runs the exact admission pipeline a real submit would —
+    /// placement through [`SchedulePolicy::place`], predicted
+    /// completion from the target worker's [`CostModel`], then the
+    /// policy's [`SchedulePolicy::admit`] verdict — without mutating
+    /// anything. Returns `Some((predicted, deadline))` when admission
+    /// control would shed, `None` when the request would be admitted
+    /// (including: the policy runs no admission control, or every
+    /// queue is full — backpressure is a capacity verdict, not a
+    /// shed). The fleet router uses this to keep the placement
+    /// invariant "never place onto a board whose admission control
+    /// would shed" exact rather than estimated.
+    pub fn would_shed(
+        &self,
+        model: &Arc<Graph>,
+        input: &Tensor,
+        deadline: Option<SimTime>,
+        at: SimTime,
+    ) -> Option<(SimTime, SimTime)> {
+        let policy = self.cfg.policy.as_ref();
+        if !policy.admission_control() {
+            return None;
+        }
+        let now = at.max(self.now);
+        // probe id u64::MAX: every queued request's id is smaller than
+        // the next real id, so the backlog counted ahead of the probe
+        // is exactly the backlog counted ahead of the real submit
+        let req = InferenceRequest {
+            id: u64::MAX,
+            model: model.clone(),
+            input: input.clone(),
+            arrival: now,
+            deadline,
+        };
+        let target = policy.place(&self.pool.workers, self.cfg.queue_depth, &req)?;
+        let predicted = self.pool.predicted_completion(target, &req, policy, now);
+        match policy.admit(&req, predicted) {
+            Admission::Shed { predicted, deadline } => Some((predicted, deadline)),
+            Admission::Accept => None,
+        }
+    }
+
     /// Drain every queued request, returning the completions of this
     /// drain — in execution order under [`ExecMode::Modeled`], sorted
     /// by request id under [`ExecMode::Threaded`] (worker threads

@@ -1,0 +1,181 @@
+//! Queue-depth gossip: the staleness-bounded board state the router
+//! places against.
+//!
+//! A real fleet front-end never sees live board state — it sees
+//! periodic load reports. This module models that: the router reads
+//! [`BoardSnapshot`]s out of a [`GossipTable`], and each snapshot may
+//! lag the board it describes by up to the configured staleness bound.
+//! Two refresh edges exist, both driven **only by modeled time**:
+//!
+//! * the *tick* — at every submit the table refreshes any snapshot
+//!   whose age (fleet modeled now minus `taken_at`) has reached the
+//!   staleness bound;
+//! * the *drain boundary* — [`crate::fleet::Fleet::run_until_idle`]
+//!   refreshes every snapshot once the pool is idle, when board state
+//!   is cheap and exact in both exec modes.
+//!
+//! Because neither edge consults host time, the gossip a submit sees
+//! is a pure function of the modeled history — which is what makes
+//! the router's placement sequence bit-identical between
+//! [`crate::coordinator::ExecMode::Modeled`] and
+//! [`crate::coordinator::ExecMode::Threaded`], and across reruns
+//! (pinned by `prop_router_is_deterministic_under_stale_gossip`).
+
+use crate::coordinator::Coordinator;
+use crate::elastic::Composition;
+use crate::sysc::SimTime;
+
+/// Gossip refresh policy.
+#[derive(Debug, Clone, Copy)]
+pub struct GossipConfig {
+    /// Maximum snapshot age before the tick refreshes it. `ZERO`
+    /// means every submit sees perfectly fresh board state (the
+    /// degenerate "router has an oracle" configuration the
+    /// single-board equivalence tests use).
+    pub staleness: SimTime,
+}
+
+impl Default for GossipConfig {
+    fn default() -> Self {
+        GossipConfig {
+            // a couple of batch windows: stale enough to matter, fresh
+            // enough that the router tracks phase shifts
+            staleness: SimTime::ms(5),
+        }
+    }
+}
+
+/// What one board last reported about itself.
+#[derive(Debug, Clone)]
+pub struct BoardSnapshot {
+    /// Board index within the fleet.
+    pub board: usize,
+    /// Requests queued across the board's pool at `taken_at`.
+    pub queued: usize,
+    /// The board's pool composition at `taken_at` (the elastic layer
+    /// may have swapped it since).
+    pub composition: Composition,
+    /// Modeled time the snapshot was taken.
+    pub taken_at: SimTime,
+}
+
+/// The per-board snapshot table the router reads.
+#[derive(Debug)]
+pub struct GossipTable {
+    cfg: GossipConfig,
+    snaps: Vec<BoardSnapshot>,
+    refreshes: u64,
+}
+
+impl GossipTable {
+    /// A table seeded with fresh snapshots of every board at time
+    /// `now`.
+    pub fn new(cfg: GossipConfig, boards: &[Coordinator], now: SimTime) -> Self {
+        let mut t = GossipTable {
+            cfg,
+            snaps: Vec::with_capacity(boards.len()),
+            refreshes: 0,
+        };
+        for (i, b) in boards.iter().enumerate() {
+            t.snaps.push(Self::take(i, b, now));
+        }
+        t
+    }
+
+    fn take(board: usize, b: &Coordinator, now: SimTime) -> BoardSnapshot {
+        BoardSnapshot {
+            board,
+            queued: b.queued(),
+            composition: b.composition(),
+            taken_at: now,
+        }
+    }
+
+    /// The tick: refresh every snapshot whose age has reached the
+    /// staleness bound. Called on the submit path; a snapshot younger
+    /// than the bound is left as-is, so the router deliberately places
+    /// against (boundedly) stale state.
+    pub fn tick(&mut self, now: SimTime, boards: &[Coordinator]) {
+        for snap in &mut self.snaps {
+            if now.saturating_sub(snap.taken_at) >= self.cfg.staleness {
+                *snap = Self::take(snap.board, &boards[snap.board], now);
+                self.refreshes += 1;
+            }
+        }
+    }
+
+    /// Drain-boundary refresh: retake every snapshot unconditionally.
+    pub fn refresh_all(&mut self, now: SimTime, boards: &[Coordinator]) {
+        for snap in &mut self.snaps {
+            *snap = Self::take(snap.board, &boards[snap.board], now);
+            self.refreshes += 1;
+        }
+    }
+
+    /// The current snapshots, indexed by board.
+    pub fn snapshots(&self) -> &[BoardSnapshot] {
+        &self.snaps
+    }
+
+    /// Total snapshot refreshes performed (tick + drain-boundary).
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
+    }
+
+    /// The configured staleness bound.
+    pub fn staleness(&self) -> SimTime {
+        self.cfg.staleness
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+
+    fn boards(n: usize) -> Vec<Coordinator> {
+        (0..n)
+            .map(|_| Coordinator::new(CoordinatorConfig::default()))
+            .collect()
+    }
+
+    #[test]
+    fn tick_respects_staleness_bound() {
+        let b = boards(2);
+        let cfg = GossipConfig {
+            staleness: SimTime::ms(10),
+        };
+        let mut t = GossipTable::new(cfg, &b, SimTime::ZERO);
+        let seeded = t.refreshes(); // seeding does not count
+        assert_eq!(seeded, 0);
+        t.tick(SimTime::ms(9), &b);
+        assert_eq!(t.refreshes(), 0, "younger than the bound: untouched");
+        assert_eq!(t.snapshots()[0].taken_at, SimTime::ZERO);
+        t.tick(SimTime::ms(10), &b);
+        assert_eq!(t.refreshes(), 2, "age == bound refreshes");
+        assert_eq!(t.snapshots()[1].taken_at, SimTime::ms(10));
+    }
+
+    #[test]
+    fn zero_staleness_is_always_fresh() {
+        let b = boards(1);
+        let mut t = GossipTable::new(
+            GossipConfig {
+                staleness: SimTime::ZERO,
+            },
+            &b,
+            SimTime::ZERO,
+        );
+        t.tick(SimTime::ZERO, &b);
+        assert_eq!(t.refreshes(), 1, "zero bound refreshes on every tick");
+    }
+
+    #[test]
+    fn refresh_all_is_unconditional() {
+        let b = boards(3);
+        let mut t = GossipTable::new(GossipConfig::default(), &b, SimTime::ZERO);
+        t.refresh_all(SimTime::us(1), &b);
+        assert_eq!(t.refreshes(), 3);
+        assert!(t.snapshots().iter().all(|s| s.taken_at == SimTime::us(1)));
+    }
+}

@@ -1,0 +1,242 @@
+//! Fleet-level telemetry: per-board [`ServingMetrics`] aggregated into
+//! one view.
+//!
+//! Counters add, latency/wait distributions merge bucket-wise through
+//! [`Histogram::merge`] (so fleet tail latency is exactly what one
+//! histogram fed every board's samples would report — no samples are
+//! retained anywhere), and throughput is completions over the *fleet*
+//! makespan, not the sum of per-board rates (boards overlap in modeled
+//! time; summing rates would double-count the overlap).
+
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, ServingMetrics};
+use crate::elastic::Composition;
+use crate::obs::{Histogram, MetricsRegistry};
+use crate::sysc::SimTime;
+
+/// One board's contribution to the fleet view.
+#[derive(Debug, Clone)]
+pub struct BoardStats {
+    /// Board index within the fleet.
+    pub board: usize,
+    /// Requests this board accepted.
+    pub submitted: u64,
+    /// Backpressure rejections on this board.
+    pub rejected: u64,
+    /// Admission-control sheds on this board.
+    pub shed_predicted: u64,
+    /// Requests this board completed.
+    pub completed: u64,
+    /// Pool reconfigurations applied on this board (portfolio swaps
+    /// plus any board-local elastic swaps).
+    pub reconfigs: u64,
+    /// Modeled bitstream-load time charged on this board.
+    pub reconfig_time: SimTime,
+    /// The board's live pool composition.
+    pub composition: Composition,
+    /// Mean worker utilization over the fleet makespan: total worker
+    /// busy time divided by (workers x makespan), in `[0, 1]`.
+    pub utilization: f64,
+    /// Total modeled busy time across the board's workers (the
+    /// numerator of `utilization`, exposed so aggregation is
+    /// checkable).
+    pub busy: SimTime,
+    /// Workers on the board (the other utilization denominator term).
+    pub workers: usize,
+}
+
+/// The aggregated fleet view ([`crate::fleet::Fleet::metrics`]).
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// Per-board breakdown, indexed by board.
+    pub boards: Vec<BoardStats>,
+    /// Fleet-total accepted submissions.
+    pub submitted: u64,
+    /// Fleet-total backpressure rejections.
+    pub rejected: u64,
+    /// Fleet-total admission-control sheds.
+    pub shed_predicted: u64,
+    /// Fleet-total completions.
+    pub completed: u64,
+    /// Fleet-total reconfigurations.
+    pub reconfigs: u64,
+    /// Fleet-total modeled bitstream-load time.
+    pub reconfig_time: SimTime,
+    /// First arrival to last completion across the whole fleet.
+    pub makespan: SimTime,
+    /// Host wall-clock accumulated inside threaded drains, all boards.
+    pub wall_elapsed: Duration,
+    /// Requests completed inside threaded drains, all boards.
+    pub wall_completed: u64,
+    latencies: Histogram,
+    waits: Histogram,
+}
+
+impl FleetMetrics {
+    /// Aggregate the boards' [`ServingMetrics`] under the given fleet
+    /// makespan (the fleet tracks its own first-arrival/last-finish
+    /// envelope; per-board makespans would under-count idle boards).
+    pub fn aggregate(boards: &[Coordinator], makespan: SimTime) -> Self {
+        let mut m = FleetMetrics {
+            boards: Vec::with_capacity(boards.len()),
+            submitted: 0,
+            rejected: 0,
+            shed_predicted: 0,
+            completed: 0,
+            reconfigs: 0,
+            reconfig_time: SimTime::ZERO,
+            makespan,
+            wall_elapsed: Duration::ZERO,
+            wall_completed: 0,
+            latencies: Histogram::new(),
+            waits: Histogram::new(),
+        };
+        for (i, b) in boards.iter().enumerate() {
+            let sm: &ServingMetrics = b.metrics();
+            let busy = b
+                .pool()
+                .workers
+                .iter()
+                .fold(SimTime::ZERO, |acc, w| acc + w.busy);
+            let workers = b.pool().workers.len();
+            let utilization = if makespan == SimTime::ZERO || workers == 0 {
+                0.0
+            } else {
+                busy.as_secs_f64() / (workers as f64 * makespan.as_secs_f64())
+            };
+            m.boards.push(BoardStats {
+                board: i,
+                submitted: sm.submitted,
+                rejected: sm.rejected,
+                shed_predicted: sm.shed_predicted,
+                completed: sm.completed,
+                reconfigs: sm.reconfigs,
+                reconfig_time: sm.reconfig_time,
+                composition: b.composition(),
+                utilization,
+                busy,
+                workers,
+            });
+            m.submitted += sm.submitted;
+            m.rejected += sm.rejected;
+            m.shed_predicted += sm.shed_predicted;
+            m.completed += sm.completed;
+            m.reconfigs += sm.reconfigs;
+            m.reconfig_time += sm.reconfig_time;
+            m.wall_elapsed += sm.wall_elapsed;
+            m.wall_completed += sm.wall_completed;
+            m.latencies.merge(sm.latency_histogram());
+            m.waits.merge(sm.wait_histogram());
+        }
+        m
+    }
+
+    /// Fleet completions per modeled second (aggregate req/s).
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.makespan.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / secs
+    }
+
+    /// Fleet completions per host wall-clock second spent in threaded
+    /// drains (zero when no board ran threaded).
+    pub fn wall_throughput_rps(&self) -> f64 {
+        let secs = self.wall_elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.wall_completed as f64 / secs
+    }
+
+    /// Fleet-wide latency percentile (merged across boards; extremes
+    /// exact, interior within the histogram's ~1.6% bucket width).
+    pub fn latency_pct(&self, p: f64) -> SimTime {
+        self.latencies.quantile_time(p)
+    }
+
+    /// Fleet-wide queue-wait percentile (same merge).
+    pub fn wait_pct(&self, p: f64) -> SimTime {
+        self.waits.quantile_time(p)
+    }
+
+    /// The merged latency histogram itself.
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latencies
+    }
+
+    /// The merged queue-wait histogram itself.
+    pub fn wait_histogram(&self) -> &Histogram {
+        &self.waits
+    }
+
+    /// One-paragraph fleet summary plus a per-board line each.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "fleet[{} boards] served {}/{} requests ({} rejected, {} shed) \
+             in {} makespan -> {:.2} req/s; latency p50 {} p99 {}",
+            self.boards.len(),
+            self.completed,
+            self.submitted,
+            self.rejected,
+            self.shed_predicted,
+            self.makespan,
+            self.throughput_rps(),
+            self.latency_pct(0.5),
+            self.latency_pct(0.99),
+        );
+        if self.reconfigs > 0 {
+            out.push_str(&format!(
+                "; {} reconfigs ({} bitstream time)",
+                self.reconfigs, self.reconfig_time
+            ));
+        }
+        if self.wall_elapsed > Duration::ZERO {
+            out.push_str(&format!(
+                "; wall {:.1} ms -> {:.1} req/s real",
+                self.wall_elapsed.as_secs_f64() * 1e3,
+                self.wall_throughput_rps()
+            ));
+        }
+        for b in &self.boards {
+            out.push_str(&format!(
+                "\n  board{}: {} {} done, util {:.1}%, {} shed, {} reconfigs",
+                b.board,
+                b.composition,
+                b.completed,
+                100.0 * b.utilization,
+                b.shed_predicted,
+                b.reconfigs,
+            ));
+        }
+        out
+    }
+
+    /// A flat [`MetricsRegistry`] snapshot — `fleet.*` aggregates plus
+    /// `board{N}.*` breakdowns — exportable through
+    /// [`crate::obs::export::metrics_json`].
+    pub fn registry(&self) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.counter("fleet.boards", self.boards.len() as u64);
+        r.counter("fleet.submitted", self.submitted);
+        r.counter("fleet.rejected", self.rejected);
+        r.counter("fleet.shed_predicted", self.shed_predicted);
+        r.counter("fleet.completed", self.completed);
+        r.counter("fleet.reconfigs", self.reconfigs);
+        r.gauge("fleet.throughput_rps", self.throughput_rps());
+        r.gauge("fleet.wall_throughput_rps", self.wall_throughput_rps());
+        r.gauge("fleet.makespan_ms", self.makespan.as_ms_f64());
+        r.gauge("fleet.reconfig_time_ms", self.reconfig_time.as_ms_f64());
+        r.histogram("fleet.latency_ps", &self.latencies);
+        r.histogram("fleet.queue_wait_ps", &self.waits);
+        for b in &self.boards {
+            r.counter(&format!("board{}.completed", b.board), b.completed);
+            r.counter(&format!("board{}.shed_predicted", b.board), b.shed_predicted);
+            r.counter(&format!("board{}.reconfigs", b.board), b.reconfigs);
+            r.gauge(&format!("board{}.utilization", b.board), b.utilization);
+        }
+        r
+    }
+}

@@ -1,0 +1,514 @@
+//! The L4 fleet tier: many modeled boards behind one front-end.
+//!
+//! One PYNQ-Z1 cannot serve millions of users; a fleet of them can —
+//! and SECDA-style reconfigurability becomes a *fleet-wide* advantage
+//! once each board can carry a different bitstream (Hao et al.,
+//! FPGA/DNN Co-Design; the per-board design space surveyed by Guo et
+//! al.). This module shards the L3 [`Coordinator`] across N board
+//! replicas, each a full serving stack with its own pool, batcher and
+//! (optionally) elastic controller:
+//!
+//! * [`router`] — the front-end placement engine: scores every board
+//!   with the unified [`CostModel`](crate::coordinator::CostModel)
+//!   plus a modeled network/DMA ingress cost
+//!   ([`router::IngressModel`]), reading board state through gossip
+//!   rather than omnisciently;
+//! * [`gossip`] — staleness-bounded per-board queue-depth snapshots,
+//!   refreshed at drain boundaries and on a modeled-time tick (never
+//!   host time, so both exec modes see identical gossip);
+//! * [`metrics`] — [`FleetMetrics`]: per-board
+//!   [`ServingMetrics`](crate::coordinator::ServingMetrics) aggregated
+//!   into fleet req/s, per-board utilization and merged tail-latency
+//!   histograms ([`crate::obs::Histogram::merge`]);
+//! * the *bitstream portfolio* — the PR-5 elastic planner
+//!   ([`CompositionPlanner`]) run one level up: against the aggregate
+//!   traffic profile it proposes per-board compositions (e.g. three
+//!   boards SA-heavy, one VM), paying the modeled
+//!   [`crate::synth::reconfig_time`] per swapped board through the
+//!   public [`Coordinator::reconfigure`].
+//!
+//! The [`ExecMode`](crate::coordinator::ExecMode) split carries
+//! through end-to-end: a modeled fleet is deterministic and
+//! bit-identical to the threaded fleet (same functional outputs, same
+//! modeled timeline, same placement sequence), which the fleet
+//! proptests pin. A 1-board fleet with [`router::IngressModel::none`]
+//! degenerates bit-for-bit to a bare [`Coordinator`].
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use secda::fleet::{Fleet, FleetConfig};
+//! use secda::framework::{models, tensor::Tensor};
+//!
+//! let g = Arc::new(models::by_name("mobilenet_v1").unwrap());
+//! let mut fleet = Fleet::new(FleetConfig::default().with_boards(4));
+//! for _ in 0..32 {
+//!     let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+//!     fleet.submit(g.clone(), input).unwrap();
+//!     fleet.advance(secda::sysc::SimTime::us(500));
+//! }
+//! let done = fleet.run_until_idle();
+//! assert_eq!(done.len(), 32);
+//! println!("{}", fleet.metrics().summary());
+//! ```
+
+pub mod gossip;
+pub mod metrics;
+pub mod router;
+
+use std::sync::Arc;
+
+use crate::coordinator::{Completion, Coordinator, CoordinatorConfig, SubmitError};
+use crate::elastic::{
+    Composition, CompositionPlanner, DesignCosts, ElasticConfig, SwapRecord, TrafficProfile,
+    WorkloadEstimator,
+};
+use crate::framework::graph::Graph;
+use crate::framework::tensor::Tensor;
+use crate::sysc::SimTime;
+
+pub use gossip::{BoardSnapshot, GossipConfig, GossipTable};
+pub use metrics::{BoardStats, FleetMetrics};
+pub use router::{Candidate, IngressModel, Router};
+
+/// Fleet-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of board replicas.
+    pub boards: usize,
+    /// Per-board configuration template. Cloned per board; when
+    /// tracing is enabled ([`FleetConfig::with_tracing`]) each board
+    /// gets its *own* span recorder so traces stay per-board.
+    pub board: CoordinatorConfig,
+    /// Modeled network/DMA ingress cost the router charges per
+    /// request.
+    pub ingress: IngressModel,
+    /// Gossip refresh policy.
+    pub gossip: GossipConfig,
+    /// Fleet-wide bitstream-portfolio planning: when set, the elastic
+    /// planner runs at the fleet level against aggregate traffic,
+    /// proposing per-board compositions at drain boundaries. Distinct
+    /// from `board.elastic`, which re-plans each board against only
+    /// its own traffic; enable one or the other, not both.
+    pub portfolio: Option<ElasticConfig>,
+    /// Per-board span-recorder capacity, when tracing.
+    trace_cap: Option<usize>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            boards: 2,
+            board: CoordinatorConfig::default(),
+            ingress: IngressModel::default(),
+            gossip: GossipConfig::default(),
+            portfolio: None,
+            trace_cap: None,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Set the number of board replicas.
+    pub fn with_boards(mut self, n: usize) -> Self {
+        self.boards = n;
+        self
+    }
+
+    /// Replace the per-board configuration template.
+    pub fn with_board(mut self, board: CoordinatorConfig) -> Self {
+        self.board = board;
+        self
+    }
+
+    /// Set the ingress cost model.
+    pub fn with_ingress(mut self, ingress: IngressModel) -> Self {
+        self.ingress = ingress;
+        self
+    }
+
+    /// Set the gossip refresh policy.
+    pub fn with_gossip(mut self, gossip: GossipConfig) -> Self {
+        self.gossip = gossip;
+        self
+    }
+
+    /// Enable fleet-wide portfolio planning.
+    pub fn with_portfolio(mut self, cfg: ElasticConfig) -> Self {
+        self.portfolio = Some(cfg);
+        self
+    }
+
+    /// Set every board's exec mode (the fleet mirrors the
+    /// [`Coordinator`] split: modeled fleets are deterministic,
+    /// threaded fleets report wall-clock throughput too).
+    pub fn with_exec_mode(mut self, mode: crate::coordinator::ExecMode) -> Self {
+        self.board.exec_mode = mode;
+        self
+    }
+
+    /// Enable span recording on every board (capacity per board).
+    /// Export the run with [`Fleet::chrome_trace`].
+    pub fn with_tracing(mut self, cap: usize) -> Self {
+        self.trace_cap = Some(cap);
+        self
+    }
+}
+
+/// Where a fleet submit landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Board the request was placed on.
+    pub board: usize,
+    /// The board-local request id (boards number independently).
+    pub id: u64,
+}
+
+/// One completion, tagged with the board that served it.
+#[derive(Debug, Clone)]
+pub struct BoardCompletion {
+    /// Board index.
+    pub board: usize,
+    /// The board's completion record.
+    pub completion: Completion,
+}
+
+/// One committed portfolio swap.
+#[derive(Debug, Clone)]
+pub struct FleetSwapRecord {
+    /// Board the swap was applied to.
+    pub board: usize,
+    /// The swap itself (same record shape as board-local elastic
+    /// history).
+    pub record: SwapRecord,
+}
+
+/// Fleet-level portfolio planning state: the PR-5 planner, one level
+/// up. One estimator aggregates every board's completions; at each
+/// (rate-limited) drain-boundary evaluation the planner scores each
+/// board's composition against its per-board share of the aggregate
+/// profile and reconfigures the boards whose projected win amortizes
+/// the modeled bitstream-load cost.
+struct Portfolio {
+    cfg: ElasticConfig,
+    estimator: WorkloadEstimator,
+    planner: CompositionPlanner,
+    costs: DesignCosts,
+    last_eval: Option<SimTime>,
+    history: Vec<FleetSwapRecord>,
+}
+
+impl Portfolio {
+    fn new(cfg: ElasticConfig, threads: usize, sync_overhead: SimTime) -> Self {
+        Portfolio {
+            planner: CompositionPlanner::new(cfg.budget),
+            estimator: WorkloadEstimator::new(cfg.window),
+            costs: DesignCosts::new(threads, sync_overhead),
+            last_eval: None,
+            history: Vec::new(),
+            cfg,
+        }
+    }
+
+    fn observe(&mut self, c: &Completion) {
+        self.estimator.observe(c);
+    }
+
+    /// Each board plans against its share of the aggregate profile:
+    /// counts divide (rounding demand up so a minority shape is never
+    /// planned away to zero), rates divide exactly.
+    fn per_board_share(profile: &TrafficProfile, n: usize) -> TrafficProfile {
+        let n = n.max(1);
+        TrafficProfile {
+            requests: profile.requests.div_ceil(n),
+            span: profile.span,
+            arrival_rate_rps: profile.arrival_rate_rps / n as f64,
+            demand: profile
+                .demand
+                .iter()
+                .map(|(s, c)| (*s, c.div_ceil(n as u64)))
+                .collect(),
+            slo_carrying: profile.slo_carrying.div_ceil(n),
+            // misses round *down*: phantom misses would overstate SLO
+            // pressure on every board
+            slo_missed: profile.slo_missed / n,
+        }
+    }
+
+    fn evaluate(&mut self, now: SimTime, boards: &mut [Coordinator]) {
+        if let Some(last) = self.last_eval {
+            if now.saturating_sub(last) < self.cfg.eval_interval {
+                return;
+            }
+        }
+        self.last_eval = Some(now);
+        // pool every board's observed simulator timings into the
+        // per-design cost models, exactly as the board-local
+        // controller does
+        for board in boards.iter() {
+            for w in &board.pool().workers {
+                self.costs.absorb(w.kind, &w.backend.planner.cost);
+            }
+        }
+        let Some(profile) = self.estimator.profile(now) else {
+            return;
+        };
+        if profile.requests < self.cfg.min_samples {
+            return;
+        }
+        let share = Self::per_board_share(&profile, boards.len());
+        for (b, board) in boards.iter_mut().enumerate() {
+            let current = board.composition();
+            if let Some(plan) = self.planner.plan(current, &share, &self.costs, &self.cfg) {
+                board.reconfigure(&plan);
+                self.history.push(FleetSwapRecord {
+                    board: b,
+                    record: SwapRecord {
+                        at: now,
+                        from: plan.from,
+                        to: plan.to,
+                        reconfig_cost: plan.reconfig_cost,
+                        projected_win: plan.projected_win(),
+                    },
+                });
+            }
+        }
+    }
+}
+
+/// N board replicas behind a gossip-fed, cost-model router.
+///
+/// The API mirrors [`Coordinator`]: submit, advance the modeled
+/// clock, drain with [`Fleet::run_until_idle`], then read
+/// [`Fleet::metrics`]. All boards share the fleet's modeled timeline —
+/// [`Fleet::advance`] moves every board's clock, and a drain boundary
+/// re-synchronizes them to the fleet-wide frontier.
+pub struct Fleet {
+    boards: Vec<Coordinator>,
+    router: Router,
+    gossip: GossipTable,
+    portfolio: Option<Portfolio>,
+    ingress: IngressModel,
+    placements: Vec<Placement>,
+    now: SimTime,
+    first_arrival: Option<SimTime>,
+    last_finish: SimTime,
+}
+
+impl Fleet {
+    /// Build the fleet a [`FleetConfig`] describes. Panics when
+    /// `boards` is zero.
+    pub fn new(cfg: FleetConfig) -> Self {
+        assert!(cfg.boards > 0, "a fleet needs at least one board");
+        let boards: Vec<Coordinator> = (0..cfg.boards)
+            .map(|_| {
+                let mut bc = cfg.board.clone();
+                if let Some(cap) = cfg.trace_cap {
+                    bc = bc.with_tracing(cap);
+                }
+                Coordinator::new(bc)
+            })
+            .collect();
+        let threads = cfg.board.driver.threads;
+        let sync = cfg.board.driver.sync_overhead;
+        let router = Router::new(cfg.ingress, threads, sync);
+        let gossip = GossipTable::new(cfg.gossip, &boards, SimTime::ZERO);
+        let portfolio = cfg.portfolio.map(|p| Portfolio::new(p, threads, sync));
+        Fleet {
+            boards,
+            router,
+            gossip,
+            portfolio,
+            ingress: cfg.ingress,
+            placements: Vec::new(),
+            now: SimTime::ZERO,
+            first_arrival: None,
+            last_finish: SimTime::ZERO,
+        }
+    }
+
+    /// The fleet's modeled clock.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Advance the modeled clock fleet-wide (inter-arrival time of a
+    /// load generator). Every board's clock moves in lockstep.
+    pub fn advance(&mut self, dt: SimTime) {
+        self.now += dt;
+        for b in &mut self.boards {
+            let behind = self.now.saturating_sub(b.now());
+            if behind > SimTime::ZERO {
+                b.advance(behind);
+            }
+        }
+    }
+
+    /// Submit a best-effort request through the router.
+    pub fn submit(&mut self, model: Arc<Graph>, input: Tensor) -> Result<Placement, SubmitError> {
+        self.submit_with_deadline(model, input, None)
+    }
+
+    /// Submit with an SLO budget relative to the fleet clock. Network
+    /// ingress time eats into the budget: the deadline is fixed at
+    /// submit, before the modeled transfer to the board.
+    pub fn submit_with_slo(
+        &mut self,
+        model: Arc<Graph>,
+        input: Tensor,
+        slo: SimTime,
+    ) -> Result<Placement, SubmitError> {
+        let deadline = self.now + slo;
+        self.submit_with_deadline(model, input, Some(deadline))
+    }
+
+    /// Submit with an explicit absolute deadline (or none). The router
+    /// ranks boards on gossiped state (ingress + backlog + execution,
+    /// see [`Router::rank`]), then places on the best-ranked board
+    /// whose admission control would *not* shed the request
+    /// ([`Coordinator::would_shed`] — exact, not estimated). When
+    /// every board would shed, the request goes to the best-ranked
+    /// board anyway so exactly one board records the shed verdict.
+    pub fn submit_with_deadline(
+        &mut self,
+        model: Arc<Graph>,
+        input: Tensor,
+        deadline: Option<SimTime>,
+    ) -> Result<Placement, SubmitError> {
+        self.gossip.tick(self.now, &self.boards);
+        let ranked = self.router.rank(self.gossip.snapshots(), &model, &input);
+        let ingress = self.ingress.cost(input.bytes() as u64);
+        for c in &ranked {
+            let board = &self.boards[c.board];
+            let arrive = (self.now + ingress).max(board.now());
+            if board.would_shed(&model, &input, deadline, arrive).is_none() {
+                return self.place_on(c.board, model, input, deadline);
+            }
+        }
+        self.place_on(ranked[0].board, model, input, deadline)
+    }
+
+    /// Deliver the request to board `b`: charge the modeled ingress
+    /// time (the board's clock moves to the delivery instant, so the
+    /// arrival stamp includes the transfer), then submit.
+    fn place_on(
+        &mut self,
+        b: usize,
+        model: Arc<Graph>,
+        input: Tensor,
+        deadline: Option<SimTime>,
+    ) -> Result<Placement, SubmitError> {
+        let ingress = self.ingress.cost(input.bytes() as u64);
+        let arrive = self.now + ingress;
+        let board = &mut self.boards[b];
+        let behind = arrive.saturating_sub(board.now());
+        if behind > SimTime::ZERO {
+            board.advance(behind);
+        }
+        let id = board.submit_with_deadline(model, input, deadline)?;
+        if self.first_arrival.is_none() {
+            self.first_arrival = Some(board.now());
+        }
+        let p = Placement { board: b, id };
+        self.placements.push(p);
+        Ok(p)
+    }
+
+    /// Drain every board, then run the fleet drain boundary:
+    /// re-synchronize board clocks to the fleet-wide frontier, let the
+    /// portfolio planner observe the completed traffic (and possibly
+    /// reconfigure boards), and refresh every gossip snapshot.
+    /// Completions come back board-tagged, boards in index order, each
+    /// board's completions in its [`Coordinator::run_until_idle`]
+    /// order.
+    pub fn run_until_idle(&mut self) -> Vec<BoardCompletion> {
+        let mut out = Vec::new();
+        for (b, board) in self.boards.iter_mut().enumerate() {
+            for completion in board.run_until_idle() {
+                self.last_finish = self.last_finish.max(completion.finished);
+                out.push(BoardCompletion {
+                    board: b,
+                    completion,
+                });
+            }
+        }
+        // clock re-sync: the fleet timeline is the slowest board's
+        let frontier = self
+            .boards
+            .iter()
+            .map(|b| b.now())
+            .max()
+            .unwrap_or(self.now)
+            .max(self.now);
+        self.now = frontier;
+        for b in &mut self.boards {
+            let behind = frontier.saturating_sub(b.now());
+            if behind > SimTime::ZERO {
+                b.advance(behind);
+            }
+        }
+        // portfolio planning at the drain boundary (pools are idle in
+        // both exec modes, same as the board-local elastic contract)
+        if let Some(mut p) = self.portfolio.take() {
+            for bc in &out {
+                p.observe(&bc.completion);
+            }
+            p.evaluate(self.now, &mut self.boards);
+            self.portfolio = Some(p);
+        }
+        self.gossip.refresh_all(self.now, &self.boards);
+        out
+    }
+
+    /// The board replicas (read-only: per-board metrics, spans,
+    /// compositions).
+    pub fn boards(&self) -> &[Coordinator] {
+        &self.boards
+    }
+
+    /// The gossip table the router places against.
+    pub fn gossip(&self) -> &GossipTable {
+        &self.gossip
+    }
+
+    /// Every placement the router made, in submit order (the
+    /// determinism proptests compare these sequences).
+    pub fn placements(&self) -> &[Placement] {
+        &self.placements
+    }
+
+    /// Every portfolio swap committed, in commit order (empty without
+    /// a portfolio config; board-local elastic swaps live in each
+    /// board's [`Coordinator::elastic_history`]).
+    pub fn portfolio_history(&self) -> &[FleetSwapRecord] {
+        self.portfolio.as_ref().map(|p| p.history.as_slice()).unwrap_or(&[])
+    }
+
+    /// The current composition of every board (the portfolio, as
+    /// deployed).
+    pub fn compositions(&self) -> Vec<Composition> {
+        self.boards.iter().map(|b| b.composition()).collect()
+    }
+
+    /// First arrival to last completion across the whole fleet.
+    pub fn makespan(&self) -> SimTime {
+        match self.first_arrival {
+            Some(t0) => self.last_finish.saturating_sub(t0),
+            None => SimTime::ZERO,
+        }
+    }
+
+    /// Aggregate the boards' serving metrics into a [`FleetMetrics`]
+    /// snapshot.
+    pub fn metrics(&self) -> FleetMetrics {
+        FleetMetrics::aggregate(&self.boards, self.makespan())
+    }
+
+    /// Export the whole fleet run as one Chrome trace: one process per
+    /// board, each with the full per-board track layout (requires
+    /// [`FleetConfig::with_tracing`]). Validates under
+    /// [`crate::obs::export::validate_chrome_trace`].
+    pub fn chrome_trace(&self) -> String {
+        let per_board: Vec<_> = self.boards.iter().map(|b| b.spans().snapshot()).collect();
+        crate::obs::export::fleet_chrome_trace(&per_board)
+    }
+}

@@ -1,0 +1,261 @@
+//! The fleet front-end router: cost-model placement over gossip.
+//!
+//! Placement is a pure function of three inputs — the request (model +
+//! input tensor), the current [`GossipTable`](super::GossipTable)
+//! snapshots, and the
+//! router's own [`CostModel`] priors — so the placement sequence for a
+//! given submit stream is identical across exec modes and reruns. The
+//! score of a board is the modeled time for the request to *ingress*
+//! (move its input over the fleet network, [`IngressModel`]), wait out
+//! the board's gossiped backlog, and execute on the best design the
+//! board carries:
+//!
+//! ```text
+//! score(board) = ingress(input bytes)
+//!              + backlog(gossiped queue depth x exec / workers)
+//!              + exec(min over the board's designs of request_cost)
+//! ```
+//!
+//! Lowest score wins; ties break to the lowest board index. The
+//! admission pre-check (never place onto a board whose admission
+//! control would shed — [`crate::coordinator::Coordinator::would_shed`])
+//! lives in [`crate::fleet::Fleet::submit_with_deadline`], because it
+//! consults the board itself rather than gossip.
+
+use std::sync::Arc;
+
+use crate::coordinator::{CostModel, WorkerKind};
+use crate::framework::graph::Graph;
+use crate::framework::tensor::Tensor;
+use crate::sysc::SimTime;
+
+use super::gossip::BoardSnapshot;
+
+/// Modeled network/DMA ingress cost: what it takes to move a request's
+/// input tensor from the front-end to a board.
+#[derive(Debug, Clone, Copy)]
+pub struct IngressModel {
+    /// Fixed per-request overhead (connection + DMA descriptor setup).
+    pub base: SimTime,
+    /// Link bandwidth in bytes per second; `0.0` disables the
+    /// per-byte term entirely.
+    pub bytes_per_sec: f64,
+}
+
+impl Default for IngressModel {
+    fn default() -> Self {
+        // gigabit Ethernet to the board, plus a fixed hop overhead —
+        // deliberately slower than the on-board AXI DMA the driver
+        // models, so fleet ingress is a real cost the router weighs
+        IngressModel {
+            base: SimTime::us(50),
+            bytes_per_sec: 125.0e6,
+        }
+    }
+}
+
+impl IngressModel {
+    /// A free ingress (zero base, zero per-byte): a 1-board fleet with
+    /// this model degenerates bit-for-bit to a bare coordinator, which
+    /// the `prop_fleet_matches_single_board` property pins.
+    pub fn none() -> Self {
+        IngressModel {
+            base: SimTime::ZERO,
+            bytes_per_sec: 0.0,
+        }
+    }
+
+    /// Modeled time to move `bytes` to a board.
+    pub fn cost(&self, bytes: u64) -> SimTime {
+        let per_byte = if self.bytes_per_sec > 0.0 {
+            SimTime::ps((bytes as f64 / self.bytes_per_sec * 1e12) as u64)
+        } else {
+            SimTime::ZERO
+        };
+        self.base + per_byte
+    }
+}
+
+/// One scored placement candidate (returned by [`Router::rank`] for
+/// telemetry and tests; the fleet places on the first entry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// Board index.
+    pub board: usize,
+    /// Total modeled score (ingress + backlog + exec), in picoseconds.
+    pub score_ps: u64,
+}
+
+/// The front-end placement engine.
+#[derive(Debug)]
+pub struct Router {
+    ingress: IngressModel,
+    cost: CostModel,
+    // request_cost walks the whole graph; memoize per (model, kind).
+    // The Arc is held so a memoized pointer can never be recycled by a
+    // dropped-and-reallocated graph.
+    memo: Vec<(Arc<Graph>, [Option<SimTime>; 3])>,
+}
+
+const KINDS: [WorkerKind; 3] = [WorkerKind::Sa, WorkerKind::Vm, WorkerKind::Cpu];
+
+impl Router {
+    /// A router with the given ingress model and cost-model
+    /// calibration (`threads`/`sync_overhead` as in
+    /// [`CostModel::new`] — pass the boards' driver settings so the
+    /// router prices work the way the boards do).
+    pub fn new(ingress: IngressModel, threads: usize, sync_overhead: SimTime) -> Self {
+        Router {
+            ingress,
+            cost: CostModel::new(threads, sync_overhead),
+            memo: Vec::new(),
+        }
+    }
+
+    /// The ingress model in force.
+    pub fn ingress(&self) -> &IngressModel {
+        &self.ingress
+    }
+
+    fn request_cost(&mut self, model: &Arc<Graph>, kind: WorkerKind) -> SimTime {
+        let slot = KINDS.iter().position(|k| *k == kind).expect("known kind");
+        let entry = match self.memo.iter().position(|(g, _)| Arc::ptr_eq(g, model)) {
+            Some(i) => i,
+            None => {
+                self.memo.push((model.clone(), [None; 3]));
+                self.memo.len() - 1
+            }
+        };
+        if let Some(c) = self.memo[entry].1[slot] {
+            return c;
+        }
+        let c = self.cost.request_cost(model, kind);
+        self.memo[entry].1[slot] = Some(c);
+        c
+    }
+
+    /// Modeled execution cost of `model` on the cheapest design in
+    /// `comp` (CPU-priced when the composition is empty — it cannot
+    /// be, but the router must stay total).
+    fn exec_cost(&mut self, model: &Arc<Graph>, comp: &crate::elastic::Composition) -> SimTime {
+        let mut best: Option<SimTime> = None;
+        for (kind, n) in [
+            (WorkerKind::Sa, comp.sa),
+            (WorkerKind::Vm, comp.vm),
+            (WorkerKind::Cpu, comp.cpu),
+        ] {
+            if n == 0 {
+                continue;
+            }
+            let c = self.request_cost(model, kind);
+            best = Some(match best {
+                Some(b) => b.min(c),
+                None => c,
+            });
+        }
+        best.unwrap_or_else(|| self.request_cost(model, WorkerKind::Cpu))
+    }
+
+    /// Score every board against the gossiped snapshots and return the
+    /// candidates sorted best-first (score, then board index). The
+    /// fleet submits to the first candidate that passes the admission
+    /// pre-check.
+    pub fn rank(
+        &mut self,
+        snaps: &[BoardSnapshot],
+        model: &Arc<Graph>,
+        input: &Tensor,
+    ) -> Vec<Candidate> {
+        let ingress = self.ingress.cost(input.bytes() as u64).as_ps();
+        let mut out: Vec<Candidate> = snaps
+            .iter()
+            .map(|s| {
+                let exec = self.exec_cost(model, &s.composition).as_ps();
+                let workers = s.composition.total().max(1) as u64;
+                // gossiped queue depth spread across the board's
+                // workers: how long the request waits behind work the
+                // snapshot already saw
+                let backlog = exec
+                    .saturating_mul(s.queued as u64)
+                    .checked_div(workers)
+                    .unwrap_or(u64::MAX);
+                Candidate {
+                    board: s.board,
+                    score_ps: ingress.saturating_add(exec).saturating_add(backlog),
+                }
+            })
+            .collect();
+        out.sort_by_key(|c| (c.score_ps, c.board));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::DriverConfig;
+    use crate::elastic::Composition;
+    use crate::framework::models;
+
+    fn router(ingress: IngressModel) -> Router {
+        let d = DriverConfig::default();
+        Router::new(ingress, d.threads, d.sync_overhead)
+    }
+
+    fn snap(board: usize, queued: usize, comp: Composition) -> BoardSnapshot {
+        BoardSnapshot {
+            board,
+            queued,
+            composition: comp,
+            taken_at: SimTime::ZERO,
+        }
+    }
+
+    #[test]
+    fn ingress_none_is_free_and_default_is_not() {
+        assert_eq!(IngressModel::none().cost(1 << 20), SimTime::ZERO);
+        let lan = IngressModel::default();
+        assert!(lan.cost(0) >= SimTime::us(50));
+        assert!(lan.cost(1 << 20) > lan.cost(0), "per-byte term exists");
+    }
+
+    #[test]
+    fn idle_identical_boards_tie_break_to_lowest_index() {
+        let g = Arc::new(models::by_name("mobilenet_v1").unwrap());
+        let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+        let mut r = router(IngressModel::none());
+        let comp = Composition::new(2, 1, 1);
+        let ranked = r.rank(
+            &[snap(0, 0, comp), snap(1, 0, comp), snap(2, 0, comp)],
+            &g,
+            &input,
+        );
+        assert_eq!(ranked[0].board, 0);
+        assert!(ranked.iter().all(|c| c.score_ps == ranked[0].score_ps));
+    }
+
+    #[test]
+    fn gossiped_backlog_steers_away() {
+        let g = Arc::new(models::by_name("mobilenet_v1").unwrap());
+        let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+        let mut r = router(IngressModel::none());
+        let comp = Composition::new(2, 1, 1);
+        let ranked = r.rank(&[snap(0, 8, comp), snap(1, 0, comp)], &g, &input);
+        assert_eq!(ranked[0].board, 1, "idle board beats a backlogged one");
+        assert!(ranked[0].score_ps < ranked[1].score_ps);
+    }
+
+    #[test]
+    fn rank_is_deterministic() {
+        let g = Arc::new(models::by_name("mobilenet_v1").unwrap());
+        let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+        let snaps = [
+            snap(0, 3, Composition::new(2, 0, 1)),
+            snap(1, 1, Composition::new(0, 2, 1)),
+            snap(2, 0, Composition::new(1, 1, 1)),
+        ];
+        let a = router(IngressModel::default()).rank(&snaps, &g, &input);
+        let b = router(IngressModel::default()).rank(&snaps, &g, &input);
+        assert_eq!(a, b);
+    }
+}

@@ -17,7 +17,10 @@
 //!   request streams across a pool of accelerator instances with
 //!   bucket-aware batching and HW/SW partitioning, the elastic
 //!   reprovisioning layer ([`elastic`]) that swaps what the fabric
-//!   holds to match the observed traffic, and the observability
+//!   holds to match the observed traffic, the fleet tier ([`fleet`])
+//!   that shards the coordinator across N modeled boards behind a
+//!   gossip-fed cost-model router with fleet-wide bitstream-portfolio
+//!   planning, and the observability
 //!   layer ([`obs`]) — structured spans, streaming histograms, and
 //!   Perfetto-loadable trace export across the whole serving stack.
 //! * **Layer 2 (python/compile/model.py)** — the accelerated subgraph
@@ -33,20 +36,16 @@
 //! through the serving stack, and `README.md` for the quickstart
 //! (build/test/bench commands and feature flags).
 
-// The serving surface (coordinator, elastic, driver, runtime), the
-// framework it serves, the modules its cost model unifies (gemm, perf)
-// and the layers the elastic planner leans on (synth, sysc) are held
-// to full rustdoc coverage; `cargo doc` runs with `-D warnings` in CI.
-// The remaining layers below carry module-level docs but are exempted
-// item-by-item until their own doc pass (ROADMAP).
+// Every layer is held to full rustdoc coverage; `cargo doc` runs with
+// `-D warnings` in CI.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod accel;
 pub mod cli;
 pub mod coordinator;
 pub mod driver;
 pub mod elastic;
+pub mod fleet;
 pub mod framework;
 pub mod gemm;
 pub mod obs;
@@ -54,5 +53,4 @@ pub mod perf;
 pub mod runtime;
 pub mod synth;
 pub mod sysc;
-#[allow(missing_docs)]
 pub mod vta;

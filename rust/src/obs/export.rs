@@ -8,6 +8,10 @@
 //! reconfigurations. Queue waits are async spans (they overlap
 //! arbitrarily across requests), and each admitted request gets a
 //! flow arrow from its submit instant to its execution span.
+//! [`fleet_chrome_trace`] replicates that whole layout once per board
+//! (pid = board index), so a fleet run loads as one process group per
+//! board with the boards' timelines aligned on the shared modeled
+//! clock.
 
 use std::fmt::Write as _;
 
@@ -107,6 +111,19 @@ impl ChromeTraceBuilder {
             fmt_f64(ts_us)
         );
         e
+    }
+
+    /// Name a process (`M`/`process_name` metadata event) — the fleet
+    /// exporter uses one process per board.
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        let mut e = String::with_capacity(96);
+        let _ = write!(
+            e,
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"ts\":0,\"pid\":{pid},\"tid\":0,\"args\":{{\"name\":\""
+        );
+        escape_into(&mut e, name);
+        e.push_str("\"}}");
+        self.events.push((f64::NEG_INFINITY, 0, e));
     }
 
     /// Name a track (`M`/`thread_name` metadata event).
@@ -212,11 +229,36 @@ impl ChromeTraceBuilder {
 /// arrows from each submit to its execution, and the elastic
 /// controller's windows/plans/reconfigurations on their own track.
 pub fn chrome_trace(spans: &[Span]) -> String {
-    const PID: u64 = 0;
     let mut b = ChromeTraceBuilder::new();
+    emit_serving_spans(&mut b, 0, 0, spans);
+    b.finish()
+}
 
+/// Export a fleet run as one Chrome trace: each board's serving spans
+/// on its own process (pid = board index, named `boardN`), with the
+/// full per-board track layout of [`chrome_trace`] replicated under
+/// each pid. Flow and async ids are namespaced per board (request ids
+/// restart at 0 on every board), so arrows and queue spans never pair
+/// across boards. All boards share the fleet's modeled clock, so the
+/// merged document stays globally timestamp-sorted and passes
+/// [`validate_chrome_trace`].
+pub fn fleet_chrome_trace(boards: &[Vec<Span>]) -> String {
+    let mut b = ChromeTraceBuilder::new();
+    for (i, spans) in boards.iter().enumerate() {
+        let pid = i as u64;
+        b.process_name(pid, &format!("board{i}"));
+        emit_serving_spans(&mut b, pid, (pid + 1) << 32, spans);
+    }
+    b.finish()
+}
+
+/// The shared span→event mapping behind [`chrome_trace`] and
+/// [`fleet_chrome_trace`]: emit one board's serving spans under `pid`,
+/// offsetting every flow/async id by `id_base` so per-board request
+/// ids stay distinct in a merged fleet document.
+fn emit_serving_spans(b: &mut ChromeTraceBuilder, pid: u64, id_base: u64, spans: &[Span]) {
     // name the tracks: coordinator, each worker seen, elastic
-    b.thread_name(PID, TID_COORD, "coordinator");
+    b.thread_name(pid, TID_COORD, "coordinator");
     let mut workers: Vec<(usize, Option<String>)> = Vec::new();
     let mut saw_elastic = false;
     for s in spans {
@@ -248,10 +290,10 @@ pub fn chrome_trace(spans: &[Span]) -> String {
             Some(l) => format!("worker{idx} ({l})"),
             None => format!("worker{idx}"),
         };
-        b.thread_name(PID, worker_tid(*idx), &name);
+        b.thread_name(pid, worker_tid(*idx), &name);
     }
     if saw_elastic {
-        b.thread_name(PID, TID_ELASTIC, "elastic controller");
+        b.thread_name(pid, TID_ELASTIC, "elastic controller");
     }
 
     for s in spans {
@@ -261,32 +303,32 @@ pub fn chrome_trace(spans: &[Span]) -> String {
         let args: Vec<(&str, String)> = s.attrs.clone();
         match s.stage {
             Stage::Submit => {
-                b.instant("submit", "serving", ts, PID, TID_COORD, &args);
+                b.instant("submit", "serving", ts, pid, TID_COORD, &args);
                 if let Some(id) = s.request_id {
-                    b.flow_start("req", "serving", id, ts, PID, TID_COORD);
+                    b.flow_start("req", "serving", id_base + id, ts, pid, TID_COORD);
                 }
             }
-            Stage::Admission => b.instant("admission", "serving", ts, PID, TID_COORD, &args),
+            Stage::Admission => b.instant("admission", "serving", ts, pid, TID_COORD, &args),
             Stage::QueueWait => {
                 if let Some(id) = s.request_id {
                     let name = format!("queue r{id}");
-                    b.async_begin(&name, "queue", id, ts, PID, tid);
-                    b.async_end(&name, "queue", id, s.t_end.as_us_f64(), PID, tid);
+                    b.async_begin(&name, "queue", id_base + id, ts, pid, tid);
+                    b.async_end(&name, "queue", id_base + id, s.t_end.as_us_f64(), pid, tid);
                 }
             }
-            Stage::Batch => b.complete("batch", "serving", ts, dur, PID, tid, &args),
+            Stage::Batch => b.complete("batch", "serving", ts, dur, pid, tid, &args),
             Stage::Request => {
                 let name = match s.request_id {
                     Some(id) => format!("request r{id}"),
                     None => "request".to_string(),
                 };
-                b.complete(&name, "serving", ts, dur, PID, tid, &args);
+                b.complete(&name, "serving", ts, dur, pid, tid, &args);
                 if let Some(id) = s.request_id {
-                    b.flow_finish("req", "serving", id, ts, PID, tid);
+                    b.flow_finish("req", "serving", id_base + id, ts, pid, tid);
                 }
             }
-            Stage::Gemm => b.complete("gemm", "compute", ts, dur, PID, tid, &args),
-            Stage::Op => b.complete("op", "compute", ts, dur, PID, tid, &args),
+            Stage::Gemm => b.complete("gemm", "compute", ts, dur, pid, tid, &args),
+            Stage::Op => b.complete("op", "compute", ts, dur, pid, tid, &args),
             Stage::SimEvent => {
                 let name = s
                     .attrs
@@ -294,21 +336,20 @@ pub fn chrome_trace(spans: &[Span]) -> String {
                     .find(|(k, _)| *k == "label")
                     .map(|(_, v)| v.as_str())
                     .unwrap_or("sim");
-                b.instant(name, "sim", ts, PID, tid, &args);
+                b.instant(name, "sim", ts, pid, tid, &args);
             }
             Stage::EstimatorWindow => {
-                b.complete("estimator window", "elastic", ts, dur, PID, TID_ELASTIC, &args)
+                b.complete("estimator window", "elastic", ts, dur, pid, TID_ELASTIC, &args)
             }
-            Stage::Plan => b.instant("plan", "elastic", ts, PID, TID_ELASTIC, &args),
+            Stage::Plan => b.instant("plan", "elastic", ts, pid, TID_ELASTIC, &args),
             Stage::Reconfigure => {
                 // the instant marker the issue asks for, plus the
                 // bitstream-load interval itself
-                b.instant("reconfigure!", "elastic", ts, PID, TID_ELASTIC, &args);
-                b.complete("reconfigure", "elastic", ts, dur, PID, TID_ELASTIC, &args);
+                b.instant("reconfigure!", "elastic", ts, pid, TID_ELASTIC, &args);
+                b.complete("reconfigure", "elastic", ts, dur, pid, TID_ELASTIC, &args);
             }
         }
     }
-    b.finish()
 }
 
 /// Export a simulator [`crate::sysc::Trace`]'s entries as Chrome
@@ -601,6 +642,40 @@ mod tests {
         assert_eq!(check.flows, 1, "{check:?}");
         // coordinator + worker0 + elastic
         assert_eq!(check.tracks, 3, "{check:?}");
+    }
+
+    #[test]
+    fn fleet_trace_namespaces_boards_and_validates() {
+        // two boards, both serving a request id 0: flows and async
+        // queue spans must pair within a board, never across
+        let board = |t0: u64| {
+            let r = SpanRecorder::enabled(100);
+            r.record(|| {
+                let mut s = Span::instant(Stage::Submit, SimTime::us(t0));
+                s.request_id = Some(0);
+                s
+            });
+            r.record(|| {
+                let mut s =
+                    Span::new(Stage::QueueWait, SimTime::us(t0), SimTime::us(t0 + 2));
+                s.request_id = Some(0);
+                s.worker = Some(0);
+                s
+            });
+            r.record(|| {
+                let mut s = Span::new(Stage::Request, SimTime::us(t0 + 2), SimTime::us(t0 + 8));
+                s.request_id = Some(0);
+                s.worker = Some(0);
+                s
+            });
+            r.snapshot()
+        };
+        let json = fleet_chrome_trace(&[board(1), board(2)]);
+        let check = validate_chrome_trace(&json).expect("fleet trace validates");
+        assert_eq!(check.flows, 2, "{check:?}");
+        // (coordinator + worker0) per board
+        assert_eq!(check.tracks, 4, "{check:?}");
+        assert!(json.contains("board0") && json.contains("board1"), "{json}");
     }
 
     #[test]

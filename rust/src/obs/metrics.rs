@@ -101,6 +101,29 @@ impl Histogram {
         self.record(t.as_ps());
     }
 
+    /// Fold another histogram into this one. Bucket-wise addition:
+    /// the merged histogram reports exactly what one histogram fed
+    /// every sample from both sides would report (both use the same
+    /// fixed bucket layout). This is how fleet-level tail latency is
+    /// built from per-board [`crate::coordinator::ServingMetrics`]
+    /// without retaining any samples. O(buckets); merging an empty
+    /// histogram is free and allocates nothing.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; Self::BUCKETS];
+        }
+        for (dst, src) in self.buckets.iter_mut().zip(&other.buckets) {
+            *dst += src;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
@@ -331,6 +354,44 @@ mod tests {
             // representative error bounded by the sub-bucket width
             assert!(upper - v <= (v >> SUB_BITS), "loose bucket for {v}");
         }
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 0..500u64 {
+            let v = i * 104_729 + 13;
+            if i % 3 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.snapshot(), all.snapshot());
+    }
+
+    #[test]
+    fn merge_with_empty_sides() {
+        let mut h = Histogram::new();
+        h.record(42);
+        let before = h.snapshot();
+        // empty rhs: no-op
+        h.merge(&Histogram::new());
+        assert_eq!(h.snapshot(), before);
+        // empty lhs: becomes a copy of rhs
+        let mut empty = Histogram::new();
+        empty.merge(&h);
+        assert_eq!(empty.snapshot(), h.snapshot());
+        // two empties stay empty (and allocation-free)
+        let mut e = Histogram::new();
+        e.merge(&Histogram::new());
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.quantile(0.5), 0);
     }
 
     #[test]

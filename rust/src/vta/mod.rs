@@ -26,6 +26,7 @@ use crate::sysc::Clock;
 pub struct VtaConfig {
     /// GEMM core shape: batch x block_in x block_out per cycle.
     pub block: usize,
+    /// Fabric clock in MHz.
     pub clock_mhz: f64,
     /// Per-tile micro-op issue overhead, cycles.
     pub uop_overhead: u64,
@@ -37,6 +38,7 @@ pub struct VtaConfig {
     /// Fraction of off-chip traffic avoided by keeping intermediates
     /// resident (TVM graph-level planning).
     pub residency_factor: f64,
+    /// Off-chip AXI DMA path.
     pub axi: AxiBus,
 }
 
@@ -58,10 +60,12 @@ impl VtaConfig {
 /// the comparison row doesn't need component-level TLM).
 #[derive(Debug, Clone)]
 pub struct VtaDesign {
+    /// Configuration of this instance.
     pub cfg: VtaConfig,
 }
 
 impl VtaDesign {
+    /// The published PYNQ-Z1 VTA ([`VtaConfig::pynq`]).
     pub fn pynq() -> Self {
         VtaDesign {
             cfg: VtaConfig::pynq(),

@@ -1,0 +1,248 @@
+//! Golden tests for the L4 fleet tier: metrics aggregation must be
+//! exactly the sum/merge of the per-board parts (utilization numerators
+//! recomputed from worker busy time, merged latency quantiles checked
+//! against a brute-force sort of every completion), and the fleet
+//! Chrome trace must pass the same validator `secda trace-validate`
+//! uses, with one process of tracks per board.
+
+use std::sync::Arc;
+
+use secda::elastic::ElasticConfig;
+use secda::fleet::{Fleet, FleetConfig, GossipConfig, IngressModel};
+use secda::framework::graph::{Graph, GraphBuilder};
+use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+use secda::framework::quant::QParams;
+use secda::framework::tensor::Tensor;
+use secda::obs::export::{metrics_json, validate_chrome_trace, validate_metrics_json};
+use secda::sysc::SimTime;
+
+fn convnet(name: &str) -> Graph {
+    let mut st = 0xf1ee7u64;
+    let mut rnd = move || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let (cin, cout) = (3usize, 16usize);
+    let mut b = GraphBuilder::new(name, vec![1, 10, 10, cin], QParams::new(0.05, 0));
+    let conv = Conv2d {
+        name: format!("{name}.c1"),
+        cout,
+        kh: 3,
+        kw: 3,
+        cin,
+        stride: 1,
+        pad: 1,
+        weights: (0..cout * 9 * cin).map(|_| (rnd() & 0xff) as u8 as i8).collect(),
+        bias: vec![7; cout],
+        w_scales: vec![0.02; cout],
+        out_qp: QParams::new(0.05, 0),
+        act: Activation::Relu,
+        weights_resident: false,
+    };
+    let c = b.push(Op::Conv(conv), vec![b.input()]);
+    let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+    let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+    b.finish(s)
+}
+
+/// Serve a deterministic stream through a fleet and return it drained,
+/// with the completions.
+fn served_fleet(
+    mut cfg: FleetConfig,
+    requests: usize,
+) -> (Fleet, Vec<secda::fleet::BoardCompletion>) {
+    cfg = cfg.with_gossip(GossipConfig {
+        // always-fresh gossip: backlog steering spreads the stream
+        // across boards instead of piling onto board 0
+        staleness: SimTime::ZERO,
+    });
+    let g = Arc::new(convnet("fleet_net"));
+    let mut fleet = Fleet::new(cfg);
+    let mut seed = 0x5eedu64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed
+    };
+    for _ in 0..requests {
+        let n: usize = g.input_shape.iter().product();
+        let data: Vec<i8> = (0..n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+        let input = Tensor::new(g.input_shape.clone(), data, g.input_qp);
+        fleet
+            .submit_with_slo(g.clone(), input, SimTime::ms(5_000))
+            .expect("queue sized, SLO generous");
+        fleet.advance(SimTime::us(300 + rnd() % 2000));
+    }
+    let done = fleet.run_until_idle();
+    (fleet, done)
+}
+
+/// Fleet counters are exactly the per-board sums, per-board
+/// utilization is exactly worker busy time over workers x makespan,
+/// and every board served part of the stream.
+#[test]
+fn golden_fleet_metrics_aggregate_per_board() {
+    let (fleet, done) = served_fleet(FleetConfig::default().with_boards(3), 9);
+    assert_eq!(done.len(), 9);
+    let m = fleet.metrics();
+    assert_eq!(m.boards.len(), 3);
+    assert_eq!(m.completed, 9);
+    assert_eq!(m.submitted, 9);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.shed_predicted, 0);
+
+    let mut sum_submitted = 0u64;
+    let mut sum_completed = 0u64;
+    for (i, bs) in m.boards.iter().enumerate() {
+        let board = &fleet.boards()[i];
+        assert_eq!(bs.board, i);
+        assert_eq!(bs.submitted, board.metrics().submitted);
+        assert_eq!(bs.completed, board.metrics().completed);
+        assert!(bs.completed >= 1, "board {i} served nothing");
+        sum_submitted += bs.submitted;
+        sum_completed += bs.completed;
+        // utilization numerator: recomputed straight from the pool
+        let busy = board
+            .pool()
+            .workers
+            .iter()
+            .fold(SimTime::ZERO, |acc, w| acc + w.busy);
+        assert_eq!(bs.busy, busy, "board {i} busy time");
+        assert_eq!(bs.workers, board.pool().workers.len());
+        let want = busy.as_secs_f64() / (bs.workers as f64 * m.makespan.as_secs_f64());
+        assert!(
+            (bs.utilization - want).abs() < 1e-12,
+            "board {i} utilization {} != {want}",
+            bs.utilization
+        );
+        assert!(bs.utilization > 0.0 && bs.utilization <= 1.0);
+    }
+    assert_eq!(m.submitted, sum_submitted);
+    assert_eq!(m.completed, sum_completed);
+    assert!(m.throughput_rps() > 0.0);
+    assert!(m.makespan > SimTime::ZERO);
+    assert_eq!(m.makespan, fleet.makespan());
+
+    // the summary and registry exports carry the per-board breakdown
+    let s = m.summary();
+    assert!(s.contains("board0:") && s.contains("board2:"), "{s}");
+    let json = metrics_json(&m.registry());
+    let n = validate_metrics_json(&json).expect("fleet metrics snapshot must validate");
+    assert!(n > 0);
+    assert!(json.contains("fleet.latency_ps"), "{json}");
+    assert!(json.contains("board1.utilization"), "{json}");
+}
+
+/// The merged fleet latency histogram agrees with a brute-force sort
+/// of every completion's latency: extremes exact, interior quantiles
+/// within the histogram's ~1.6% bucket width.
+#[test]
+fn golden_fleet_latency_quantiles_match_brute_force() {
+    let (fleet, done) = served_fleet(FleetConfig::default().with_boards(2), 10);
+    let m = fleet.metrics();
+    let mut lat: Vec<u64> = done
+        .iter()
+        .map(|bc| bc.completion.finished.saturating_sub(bc.completion.arrival).as_ps())
+        .collect();
+    lat.sort_unstable();
+    assert_eq!(lat.len(), 10);
+
+    // extremes are tracked exactly
+    assert_eq!(m.latency_pct(0.0).as_ps(), lat[0], "min must be exact");
+    assert_eq!(
+        m.latency_pct(1.0).as_ps(),
+        lat[lat.len() - 1],
+        "max must be exact"
+    );
+    // interior: nearest-rank brute force vs log-bucket resolution
+    for p in [0.25, 0.5, 0.9] {
+        let rank = (p * (lat.len() - 1) as f64).round() as usize;
+        let want = lat[rank] as f64;
+        let got = m.latency_pct(p).as_ps() as f64;
+        assert!(
+            (got - want).abs() <= want * 0.02,
+            "p{p}: merged histogram {got} vs brute force {want}"
+        );
+    }
+    // waits obey the same merge (started >= arrival on every board)
+    assert!(m.wait_pct(1.0) >= m.wait_pct(0.0));
+}
+
+/// The fleet Chrome trace validates and carries one process of tracks
+/// per board, with per-request flows intact across the merge.
+#[test]
+fn golden_fleet_chrome_trace_one_process_per_board() {
+    let (fleet, done) = served_fleet(
+        FleetConfig::default().with_boards(2).with_tracing(1 << 14),
+        6,
+    );
+    assert_eq!(done.len(), 6);
+    let json = fleet.chrome_trace();
+    let check = validate_chrome_trace(&json).expect("fleet trace must validate");
+    assert!(check.slices > 0, "no complete slices exported");
+    assert_eq!(check.flows, 6, "one submit->execution arrow per request");
+    assert!(
+        check.tracks >= 4,
+        "expected coordinator + worker tracks on both boards, got {}",
+        check.tracks
+    );
+    assert!(json.contains("board0"), "board 0 process label missing");
+    assert!(json.contains("board1"), "board 1 process label missing");
+}
+
+/// A fleet with portfolio planning enabled stays consistent: every
+/// committed swap shows up in exactly one board's reconfig counters,
+/// and the deployed compositions match what the boards report.
+#[test]
+fn golden_fleet_portfolio_accounting() {
+    let cfg = FleetConfig::default()
+        .with_boards(2)
+        .with_ingress(IngressModel::none())
+        .with_portfolio(ElasticConfig {
+            eval_interval: SimTime::ZERO,
+            min_samples: 1,
+            hysteresis: SimTime::ZERO,
+            ..ElasticConfig::default()
+        });
+    let g = Arc::new(convnet("portfolio_net"));
+    let mut fleet = Fleet::new(cfg);
+    let mut seed = 0xab1eu64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        seed
+    };
+    let mut served = 0usize;
+    for round in 0..3 {
+        for _ in 0..4 {
+            let n: usize = g.input_shape.iter().product();
+            let data: Vec<i8> = (0..n).map(|_| (rnd() & 0xff) as u8 as i8).collect();
+            let input = Tensor::new(g.input_shape.clone(), data, g.input_qp);
+            fleet.submit(g.clone(), input).expect("queue sized");
+            fleet.advance(SimTime::us(500 + rnd() % 1500));
+        }
+        served += fleet.run_until_idle().len();
+        assert_eq!(served, (round + 1) * 4, "round {round} lost completions");
+    }
+    let m = fleet.metrics();
+    assert_eq!(m.completed, 12);
+    // without board-local elastic, every reconfig is a portfolio swap
+    assert_eq!(
+        m.reconfigs,
+        fleet.portfolio_history().len() as u64,
+        "portfolio history and board reconfig counters disagree"
+    );
+    for rec in fleet.portfolio_history() {
+        assert!(rec.board < 2);
+        assert!(rec.record.projected_win > rec.record.reconfig_cost);
+    }
+    // deployed portfolio == what each board reports
+    let comps = fleet.compositions();
+    for (i, b) in fleet.boards().iter().enumerate() {
+        assert_eq!(comps[i], b.composition());
+    }
+}

@@ -909,6 +909,400 @@ fn prop_tracing_is_inert() {
     }
 }
 
+/// Property: a 1-board fleet with free ingress is bit-identical to a
+/// bare coordinator — same outputs for every request, and in the
+/// deterministic modeled mode the same (worker, started, finished)
+/// timeline — across two scheduling policies and both exec modes. The
+/// fleet front-end (gossip tick, router ranking, admission probe,
+/// board clock management) must be functionally invisible.
+#[test]
+fn prop_fleet_matches_single_board() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{
+        AdmissionPolicy, Coordinator, CoordinatorConfig, ExecMode, FifoPolicy, SchedulePolicy,
+    };
+    use secda::fleet::{Fleet, FleetConfig, IngressModel};
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    fn board_cfg(policy: Arc<dyn SchedulePolicy>, mode: ExecMode) -> CoordinatorConfig {
+        CoordinatorConfig {
+            queue_depth: 64,
+            exec_mode: mode,
+            policy,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    type Timeline = Vec<(u64, Vec<i8>, usize, SimTime, SimTime)>;
+
+    fn key(c: &secda::coordinator::Completion) -> (u64, Vec<i8>, usize, SimTime, SimTime) {
+        (c.id, c.output.data.clone(), c.worker, c.started, c.finished)
+    }
+
+    for seed in 1..=3u64 {
+        let mut rng = Rng::new(seed * 0xf1ee);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let inputs: Vec<(usize, Tensor, u64)> = (0..6)
+            .map(|_| {
+                let which = (rng.next() % 2) as usize;
+                let g = &nets[which];
+                let n: usize = g.input_shape.iter().product();
+                let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+                (which, input, 50 + rng.next() % 3000)
+            })
+            .collect();
+        let policies: [Arc<dyn SchedulePolicy>; 2] =
+            [Arc::new(FifoPolicy), Arc::new(AdmissionPolicy)];
+        for policy in &policies {
+            for mode in [ExecMode::Modeled, ExecMode::Threaded] {
+                // bare coordinator
+                let mut coord = Coordinator::new(board_cfg(policy.clone(), mode));
+                for (which, input, gap) in &inputs {
+                    coord
+                        .submit_with_slo(
+                            nets[*which].clone(),
+                            input.clone(),
+                            SimTime::ms(5_000),
+                        )
+                        .expect("generous SLO admits");
+                    coord.advance(SimTime::us(*gap));
+                }
+                let mut bare = coord.run_until_idle();
+                bare.sort_by_key(|c| c.id);
+                let bare: Timeline = bare.iter().map(key).collect();
+
+                // 1-board fleet, free ingress
+                let fcfg = FleetConfig::default()
+                    .with_boards(1)
+                    .with_board(board_cfg(policy.clone(), mode))
+                    .with_ingress(IngressModel::none());
+                let mut fleet = Fleet::new(fcfg);
+                for (which, input, gap) in &inputs {
+                    let p = fleet
+                        .submit_with_slo(
+                            nets[*which].clone(),
+                            input.clone(),
+                            SimTime::ms(5_000),
+                        )
+                        .expect("generous SLO admits");
+                    assert_eq!(p.board, 0, "seed {seed}: only one board exists");
+                    fleet.advance(SimTime::us(*gap));
+                }
+                let mut fled = fleet.run_until_idle();
+                fled.sort_by_key(|bc| bc.completion.id);
+                let fled: Timeline = fled.iter().map(|bc| key(&bc.completion)).collect();
+
+                assert_eq!(bare.len(), fled.len(), "seed {seed} ({mode})");
+                for (b, f) in bare.iter().zip(&fled) {
+                    assert_eq!(b.0, f.0, "seed {seed}: ids diverged ({mode})");
+                    assert_eq!(
+                        b.1, f.1,
+                        "seed {seed}: request {} bits diverged ({mode})",
+                        b.0
+                    );
+                    if mode == ExecMode::Modeled {
+                        assert_eq!(
+                            (b.2, b.3, b.4),
+                            (f.2, f.3, f.4),
+                            "seed {seed}: request {} modeled timeline diverged \
+                             behind the fleet front-end",
+                            b.0
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: an N-board modeled fleet is bit-identical to the threaded
+/// fleet — same placement sequence, same per-board request ids, same
+/// output bits — for ANY request stream. The exec-mode split carries
+/// through the whole fleet tier.
+#[test]
+fn prop_fleet_modeled_threaded_agree() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{CoordinatorConfig, ExecMode};
+    use secda::fleet::{Fleet, FleetConfig, Placement};
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    fn serve(
+        nets: &[Arc<Graph>; 2],
+        inputs: &[(usize, Tensor, u64)],
+        boards: usize,
+        mode: ExecMode,
+    ) -> (Vec<Placement>, Vec<(usize, u64, Vec<i8>)>) {
+        let fcfg = FleetConfig::default()
+            .with_boards(boards)
+            .with_board(CoordinatorConfig {
+                queue_depth: 64,
+                ..CoordinatorConfig::default()
+            })
+            .with_exec_mode(mode);
+        let mut fleet = Fleet::new(fcfg);
+        for (which, input, gap) in inputs {
+            fleet
+                .submit(nets[*which].clone(), input.clone())
+                .expect("queue sized");
+            fleet.advance(SimTime::us(*gap));
+        }
+        let mut done: Vec<(usize, u64, Vec<i8>)> = fleet
+            .run_until_idle()
+            .into_iter()
+            .map(|bc| (bc.board, bc.completion.id, bc.completion.output.data))
+            .collect();
+        done.sort();
+        (fleet.placements().to_vec(), done)
+    }
+
+    for seed in 1..=3u64 {
+        let mut rng = Rng::new(seed * 0xf2ee);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let inputs: Vec<(usize, Tensor, u64)> = (0..7)
+            .map(|_| {
+                let which = (rng.next() % 2) as usize;
+                let g = &nets[which];
+                let n: usize = g.input_shape.iter().product();
+                let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+                (which, input, 50 + rng.next() % 2000)
+            })
+            .collect();
+        let boards = 2 + (seed as usize % 2);
+        let (mp, md) = serve(&nets, &inputs, boards, ExecMode::Modeled);
+        let (tp, td) = serve(&nets, &inputs, boards, ExecMode::Threaded);
+        assert_eq!(
+            mp, tp,
+            "seed {seed}: placement sequence diverged across exec modes"
+        );
+        assert_eq!(md, td, "seed {seed}: outputs diverged across exec modes");
+        assert_eq!(md.len(), inputs.len(), "seed {seed}: lost completions");
+        // and modeled reruns are self-identical (fleet determinism)
+        let (mp2, md2) = serve(&nets, &inputs, boards, ExecMode::Modeled);
+        assert_eq!((mp, md), (mp2, md2), "seed {seed}: modeled rerun diverged");
+    }
+}
+
+/// Property: the fleet router is deterministic under stale gossip —
+/// the same stream against the same staleness bound produces the same
+/// placement sequence, accept/shed pattern and outputs on a rerun —
+/// and it never places a request onto a board whose admission control
+/// would shed it while another board would accept it.
+#[test]
+fn prop_router_is_deterministic_under_stale_gossip() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{AdmissionPolicy, CoordinatorConfig, SubmitError};
+    use secda::fleet::{Fleet, FleetConfig, GossipConfig, IngressModel, Placement};
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    // Outcome of one submit: where it landed, or that it was shed.
+    #[derive(Debug, PartialEq, Eq)]
+    enum Outcome {
+        Placed(Placement),
+        Shed,
+    }
+
+    fn serve(
+        nets: &[Arc<Graph>; 2],
+        inputs: &[(usize, Tensor, u64, u64)],
+        boards: usize,
+        staleness: SimTime,
+        check_invariant: bool,
+    ) -> (Vec<Outcome>, Vec<(usize, u64, Vec<i8>)>, u64) {
+        let ingress = IngressModel::default();
+        let fcfg = FleetConfig::default()
+            .with_boards(boards)
+            .with_board(CoordinatorConfig {
+                queue_depth: 64,
+                policy: Arc::new(AdmissionPolicy),
+                ..CoordinatorConfig::default()
+            })
+            .with_ingress(ingress)
+            .with_gossip(GossipConfig { staleness });
+        let mut fleet = Fleet::new(fcfg);
+        let mut outcomes = Vec::new();
+        for (which, input, gap, slo) in inputs {
+            let g = nets[*which].clone();
+            let slo = SimTime::us(*slo);
+            // the accept set, probed exactly the way the fleet will
+            let deadline = fleet.now() + slo;
+            let cost = ingress.cost(input.bytes() as u64);
+            let acceptors: Vec<usize> = (0..boards)
+                .filter(|b| {
+                    let board = &fleet.boards()[*b];
+                    let arrive = (fleet.now() + cost).max(board.now());
+                    board
+                        .would_shed(&g, input, Some(deadline), arrive)
+                        .is_none()
+                })
+                .collect();
+            match fleet.submit_with_slo(g, input.clone(), slo) {
+                Ok(p) => {
+                    if check_invariant {
+                        assert!(
+                            acceptors.contains(&p.board),
+                            "placed on board {} but the accept set was {acceptors:?}",
+                            p.board
+                        );
+                    }
+                    outcomes.push(Outcome::Placed(p));
+                }
+                Err(SubmitError::ShedPredicted { .. }) => {
+                    if check_invariant {
+                        assert!(
+                            acceptors.is_empty(),
+                            "shed although boards {acceptors:?} would accept"
+                        );
+                    }
+                    outcomes.push(Outcome::Shed);
+                }
+                Err(e) => panic!("unexpected submit error: {e:?}"),
+            }
+            fleet.advance(SimTime::us(*gap));
+        }
+        let mut done: Vec<(usize, u64, Vec<i8>)> = fleet
+            .run_until_idle()
+            .into_iter()
+            .map(|bc| (bc.board, bc.completion.id, bc.completion.output.data))
+            .collect();
+        done.sort();
+        let refreshes = fleet.gossip().refreshes();
+        (outcomes, done, refreshes)
+    }
+
+    for seed in 1..=3u64 {
+        let mut rng = Rng::new(seed * 0xf3ee);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        // tight-ish SLOs (hundreds of us to a few ms) against bursty
+        // gaps: some requests genuinely shed, most are served
+        let inputs: Vec<(usize, Tensor, u64, u64)> = (0..8)
+            .map(|_| {
+                let which = (rng.next() % 2) as usize;
+                let g = &nets[which];
+                let n: usize = g.input_shape.iter().product();
+                let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+                let gap = 20 + rng.next() % 800;
+                let slo = 300 + rng.next() % 20_000;
+                (which, input, gap, slo)
+            })
+            .collect();
+        let boards = 2 + (seed as usize % 3);
+        let staleness = SimTime::us([0u64, 200, 5_000][seed as usize % 3]);
+        let a = serve(&nets, &inputs, boards, staleness, true);
+        let b = serve(&nets, &inputs, boards, staleness, false);
+        assert_eq!(
+            a.0, b.0,
+            "seed {seed}: outcome sequence diverged on rerun \
+             ({boards} boards, staleness {staleness})"
+        );
+        assert_eq!(a.1, b.1, "seed {seed}: outputs diverged on rerun");
+        assert_eq!(a.2, b.2, "seed {seed}: gossip refresh count diverged");
+        let placed = a.0.iter().filter(|o| matches!(o, Outcome::Placed(_))).count();
+        assert_eq!(a.1.len(), placed, "seed {seed}: completions != placements");
+    }
+}
+
 /// Failure injection: a livelocked module graph (self-rescheduling
 /// forever) must be contained by the kernel's event budget instead of
 /// hanging the design loop.
