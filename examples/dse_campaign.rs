@@ -1,0 +1,111 @@
+//! Design-space exploration, end to end: sweep every feasible SA/VM
+//! candidate against real model workloads on the cycle-modeled
+//! simulators, memoize each `(design, GEMM shape)` result, print the
+//! per-workload Pareto frontiers, then serve requests with the design
+//! the campaign picked.
+//!
+//! This is the paper's §IV design loop run as a batch job instead of
+//! by hand: the simulate-evaluate-compare iterations that SECDA makes
+//! cheap are exactly what the campaign parallelizes across a
+//! work-stealing thread pool, and the memo cache makes reruns free.
+//!
+//! Run: `cargo run --release --example dse_campaign [model] [budget]`
+//! (defaults: mobilenet_v1, 6 distinct GEMM shapes per profile).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use secda::coordinator::{Coordinator, CoordinatorConfig};
+use secda::dse::{design_space, run_campaign, CampaignConfig, MemoCache, WorkloadProfile};
+use secda::framework::models;
+use secda::framework::tensor::Tensor;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("mobilenet_v1");
+    let budget: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let profile = WorkloadProfile::from_model(model).expect("bundled model");
+    let space = design_space();
+    println!(
+        "campaign: {} candidate designs x {} ({} GEMM shapes, budget {budget}), {threads} threads\n",
+        space.len(),
+        profile.name,
+        profile.demand.len(),
+    );
+
+    // --- cold campaign -------------------------------------------------
+    let cache = MemoCache::new();
+    let cfg = CampaignConfig {
+        threads,
+        budget: Some(budget),
+        ..CampaignConfig::default()
+    };
+    let profiles = [profile];
+    let t0 = Instant::now();
+    let report = run_campaign(&cfg, &profiles, &space, &cache);
+    let cold = t0.elapsed();
+    println!(
+        "cold: {} (design, shape) pairs, {} fresh sims in {:.2}s",
+        report.pairs,
+        report.fresh_sims,
+        cold.as_secs_f64()
+    );
+
+    // --- warm rerun: the memo cache answers everything ------------------
+    let t0 = Instant::now();
+    let warm_report = run_campaign(&cfg, &profiles, &space, &cache);
+    assert_eq!(warm_report.fresh_sims, 0, "warm rerun must be sim-free");
+    assert_eq!(warm_report.pareto_json(), report.pareto_json());
+    println!(
+        "warm: 0 fresh sims, {} cache hits in {:.3}s\n",
+        warm_report.cache_hits,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- the frontier ----------------------------------------------------
+    let p = &report.profiles[0];
+    println!(
+        "{:<8} {:>14} {:>12} {:>6} {:>6} {:>5} {:>7}",
+        "design", "latency", "energy (J)", "util", "LUTs", "DSPs", "BRAM36"
+    );
+    for e in &p.frontier {
+        println!(
+            "{:<8} {:>14} {:>12.4} {:>6.2} {:>6} {:>5} {:>7}",
+            e.design.key(),
+            e.latency.to_string(),
+            e.energy_j,
+            e.utilization,
+            e.resources.luts,
+            e.resources.dsps,
+            e.resources.bram36,
+        );
+    }
+
+    // --- serve with the winner -------------------------------------------
+    let sa = p.best_sa().expect("an SA design on the frontier");
+    println!(
+        "\nserving {model} with the campaign's SA pick ({0}x{0} array):",
+        sa.array.dim
+    );
+    let coord_cfg = CoordinatorConfig {
+        sa_design: sa,
+        ..CoordinatorConfig::sa_pool(2)
+    };
+    let mut coord = Coordinator::new(coord_cfg);
+    let g = Arc::new(models::by_name(model).expect("model"));
+    let input = Tensor::zeros(g.input_shape.clone(), g.input_qp);
+    for _ in 0..4 {
+        coord.submit(Arc::clone(&g), input.clone()).expect("submit");
+    }
+    let done = coord.run_until_idle();
+    let makespan = done.iter().map(|c| c.finished).max().unwrap();
+    println!(
+        "  {} requests served, modeled makespan {}",
+        done.len(),
+        makespan
+    );
+}

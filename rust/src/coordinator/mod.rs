@@ -139,6 +139,16 @@ pub struct CoordinatorConfig {
     /// Per-instance driver configuration (threads, tiling, pipelining,
     /// sync overhead).
     pub driver: DriverConfig,
+    /// The accelerator design SA workers instantiate (default: the
+    /// paper's 16x16 array). DSE campaigns hand discovered frontier
+    /// designs in here ([`crate::dse::ProfileReport::best_sa`]); the
+    /// pool's driver handles, cost models and modeled reconfiguration
+    /// times all follow it.
+    pub sa_design: crate::accel::SaConfig,
+    /// The accelerator design VM workers instantiate (default: the
+    /// paper's 4-unit engine); see
+    /// [`crate::dse::ProfileReport::best_vm`].
+    pub vm_design: crate::accel::VmConfig,
     /// How long a dispatch round extends to group same-model requests
     /// into one batch.
     pub batch_window: SimTime,
@@ -183,6 +193,8 @@ impl Default for CoordinatorConfig {
             vm_workers: 1,
             cpu_workers: 1,
             driver: DriverConfig::default(),
+            sa_design: crate::accel::SaConfig::paper(),
+            vm_design: crate::accel::VmConfig::paper(),
             batch_window: SimTime::ms(2),
             max_batch: 8,
             queue_depth: 16,
@@ -386,7 +398,13 @@ impl Coordinator {
         let check: SharedCrossCheck = Arc::new(Mutex::new(None));
         let pool = WorkerPool::build(&cfg, batcher.clone(), check.clone());
         let elastic = cfg.elastic.clone().map(|e| {
-            crate::elastic::ElasticController::new(e, cfg.driver.threads, cfg.driver.sync_overhead)
+            crate::elastic::ElasticController::with_designs(
+                e,
+                cfg.driver.threads,
+                cfg.driver.sync_overhead,
+                &cfg.sa_design,
+                &cfg.vm_design,
+            )
         });
         Coordinator {
             cfg,

@@ -163,6 +163,34 @@ impl CostModel {
         }
     }
 
+    /// A cost model whose SA prior runs an explicit (e.g. DSE-
+    /// discovered) array design instead of the paper's 16x16.
+    ///
+    /// On [`SaConfig::paper`] this is identical to [`CostModel::new`],
+    /// so paper-design pools price work bit-identically either way.
+    pub fn for_sa_design(design: &SaConfig, threads: usize, sync_overhead: SimTime) -> Self {
+        CostModel {
+            sa_array: design.array,
+            accel_clock: Clock::from_mhz(design.clock_mhz),
+            ..Self::new(threads, sync_overhead)
+        }
+    }
+
+    /// A cost model whose VM prior runs an explicit (e.g. DSE-
+    /// discovered) vector-MAC design — unit count, unit cycle model
+    /// and the `max_k` fallback cliff all follow the design.
+    ///
+    /// On [`VmConfig::paper`] this is identical to [`CostModel::new`].
+    pub fn for_vm_design(design: &VmConfig, threads: usize, sync_overhead: SimTime) -> Self {
+        CostModel {
+            vm_unit: design.unit,
+            vm_units: design.units,
+            vm_max_k: design.max_k(),
+            accel_clock: Clock::from_mhz(design.clock_mhz),
+            ..Self::new(threads, sync_overhead)
+        }
+    }
+
     /// The per-offload synchronization overhead this model charges.
     pub fn sync_overhead(&self) -> SimTime {
         self.sync_overhead

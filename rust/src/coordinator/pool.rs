@@ -34,7 +34,7 @@ use crate::perf::CpuModel;
 use crate::sysc::SimTime;
 
 use super::batch::BucketBatcher;
-use super::policy::{Admission, SchedulePolicy};
+use super::policy::{Admission, CostModel, SchedulePolicy};
 use super::scheduler::{OffloadPlanner, Route};
 use super::{CoordinatorConfig, InferenceRequest};
 
@@ -128,6 +128,22 @@ impl PartitionedBackend {
         check: SharedCrossCheck,
         spans: Arc<SpanRecorder>,
     ) -> Self {
+        let cost = CostModel::new(threads, sync_overhead);
+        Self::with_accel_cost(handle, cost, threads, batcher, check, spans)
+    }
+
+    /// A worker backend wrapping an accelerator instance, priced by an
+    /// explicit cost model — the entry point for design-aware models
+    /// when the pool runs a DSE-discovered configuration instead of
+    /// the paper design.
+    pub fn with_accel_cost(
+        handle: DriverHandle,
+        cost: CostModel,
+        threads: usize,
+        batcher: SharedBatcher,
+        check: SharedCrossCheck,
+        spans: Arc<SpanRecorder>,
+    ) -> Self {
         PartitionedBackend {
             label: handle.label.clone(),
             handle: Some(handle),
@@ -135,7 +151,7 @@ impl PartitionedBackend {
             // kernels, and are timed accordingly (the cost model
             // prices them with the same model)
             cpu: CpuBackend::with_model(CpuModel::serving(), threads),
-            planner: OffloadPlanner::new(threads, sync_overhead),
+            planner: OffloadPlanner::with_cost(cost),
             batcher,
             check,
             warm: false,
@@ -364,18 +380,18 @@ impl WorkerPool {
             for _ in 0..count {
                 let id = workers.len();
                 let backend = match kind {
-                    WorkerKind::Sa => PartitionedBackend::with_accel(
-                        DriverHandle::sa(id, cfg.driver.clone()),
+                    WorkerKind::Sa => PartitionedBackend::with_accel_cost(
+                        DriverHandle::sa_with(id, cfg.driver.clone(), cfg.sa_design.clone()),
+                        CostModel::for_sa_design(&cfg.sa_design, threads, sync),
                         threads,
-                        sync,
                         batcher.clone(),
                         check.clone(),
                         cfg.spans.clone(),
                     ),
-                    WorkerKind::Vm => PartitionedBackend::with_accel(
-                        DriverHandle::vm(id, cfg.driver.clone()),
+                    WorkerKind::Vm => PartitionedBackend::with_accel_cost(
+                        DriverHandle::vm_with(id, cfg.driver.clone(), cfg.vm_design.clone()),
+                        CostModel::for_vm_design(&cfg.vm_design, threads, sync),
                         threads,
-                        sync,
                         batcher.clone(),
                         check.clone(),
                         cfg.spans.clone(),
@@ -442,37 +458,33 @@ impl WorkerPool {
         while sa.len() < target.sa {
             let label = self.spawned;
             self.spawned += 1;
-            let backend = PartitionedBackend::with_accel(
-                DriverHandle::sa(label, cfg.driver.clone()),
+            let backend = PartitionedBackend::with_accel_cost(
+                DriverHandle::sa_with(label, cfg.driver.clone(), cfg.sa_design.clone()),
+                CostModel::for_sa_design(&cfg.sa_design, threads, sync),
                 threads,
-                sync,
                 batcher.clone(),
                 check.clone(),
                 cfg.spans.clone(),
             );
             let mut w = Worker::new(0, WorkerKind::Sa, backend);
             w.free_at = now
-                + crate::synth::reconfig_time(&crate::synth::sa_resources(
-                    &crate::accel::SaConfig::paper(),
-                ));
+                + crate::synth::reconfig_time(&crate::synth::sa_resources(&cfg.sa_design));
             sa.push(w);
         }
         while vm.len() < target.vm {
             let label = self.spawned;
             self.spawned += 1;
-            let backend = PartitionedBackend::with_accel(
-                DriverHandle::vm(label, cfg.driver.clone()),
+            let backend = PartitionedBackend::with_accel_cost(
+                DriverHandle::vm_with(label, cfg.driver.clone(), cfg.vm_design.clone()),
+                CostModel::for_vm_design(&cfg.vm_design, threads, sync),
                 threads,
-                sync,
                 batcher.clone(),
                 check.clone(),
                 cfg.spans.clone(),
             );
             let mut w = Worker::new(0, WorkerKind::Vm, backend);
             w.free_at = now
-                + crate::synth::reconfig_time(&crate::synth::vm_resources(
-                    &crate::accel::VmConfig::paper(),
-                ));
+                + crate::synth::reconfig_time(&crate::synth::vm_resources(&cfg.vm_design));
             vm.push(w);
         }
         while cpu.len() < target.cpu {

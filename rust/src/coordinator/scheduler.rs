@@ -71,8 +71,16 @@ impl OffloadPlanner {
     /// A planner for a worker with `threads` CPU threads and the given
     /// per-offload synchronization overhead floor.
     pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
+        Self::with_cost(CostModel::new(threads, sync_overhead))
+    }
+
+    /// A planner over an explicit cost model — how design-aware models
+    /// ([`CostModel::for_sa_design`]/[`CostModel::for_vm_design`]),
+    /// optionally pre-seeded from a DSE memo cache
+    /// ([`crate::dse::MemoCache::seed_cost_model`]), reach a worker.
+    pub fn with_cost(cost: CostModel) -> Self {
         OffloadPlanner {
-            cost: CostModel::new(threads, sync_overhead),
+            cost,
             offloads: 0,
             cpu_routed: 0,
         }

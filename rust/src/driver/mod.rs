@@ -394,21 +394,33 @@ impl DriverHandle {
 
     /// A paper-configuration systolic-array instance.
     pub fn sa(id: usize, cfg: DriverConfig) -> Self {
+        DriverHandle::sa_with(id, cfg, crate::accel::SaConfig::paper())
+    }
+
+    /// A systolic-array instance of an explicit design (DSE-discovered
+    /// array dimensions flow in through here).
+    pub fn sa_with(id: usize, cfg: DriverConfig, design: crate::accel::SaConfig) -> Self {
         use crate::accel::SaDesign;
         DriverHandle::new(
             id,
             format!("sa{id}"),
-            Box::new(AccelBackend::new(SaDesign::paper(), cfg)),
+            Box::new(AccelBackend::new(SaDesign::new(design), cfg)),
         )
     }
 
     /// A paper-configuration vector-MAC instance.
     pub fn vm(id: usize, cfg: DriverConfig) -> Self {
+        DriverHandle::vm_with(id, cfg, crate::accel::VmConfig::paper())
+    }
+
+    /// A vector-MAC instance of an explicit design (DSE-discovered
+    /// unit counts and buffer depths flow in through here).
+    pub fn vm_with(id: usize, cfg: DriverConfig, design: crate::accel::VmConfig) -> Self {
         use crate::accel::VmDesign;
         DriverHandle::new(
             id,
             format!("vm{id}"),
-            Box::new(AccelBackend::new(VmDesign::paper(), cfg)),
+            Box::new(AccelBackend::new(VmDesign::new(design), cfg)),
         )
     }
 

@@ -1,0 +1,309 @@
+//! The sharded memo cache: each `(design, shape)` pair is simulated at
+//! most once — within a campaign, across campaigns in one process, and
+//! across processes via the on-disk JSON snapshot.
+//!
+//! The cache is also the bridge back into serving:
+//! [`MemoCache::seed_cost_model`] replays cached simulator totals into
+//! a policy [`CostModel`]'s observed-measurements path, so coordinator
+//! placement prices a discovered design from campaign results instead
+//! of priors.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::{CostModel, GemmShape};
+use crate::obs::json::Json;
+use crate::sysc::SimTime;
+
+use super::space::DesignPoint;
+
+/// Modeled outcome of one `(design, shape)` simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CachedSim {
+    /// End-to-end modeled GEMM latency (driver + accelerator).
+    pub total: SimTime,
+    /// Fabric-active portion (drives the energy model).
+    pub accel_active: SimTime,
+    /// CPU-busy portion (prep + unpack + any CPU fallback compute).
+    pub cpu_side: SimTime,
+}
+
+/// One memo shard: a plain map behind its own lock.
+type Shard = Mutex<HashMap<(DesignPoint, GemmShape), CachedSim>>;
+
+/// Shard count; a small power of two keeps lock contention negligible
+/// at campaign thread counts (≤ 16 workers) without bloating the map.
+const SHARDS: usize = 16;
+
+/// Sharded, counter-instrumented memoization of simulator results,
+/// keyed by `(design, shape)`.
+///
+/// All methods take `&self`; the cache is shared across campaign
+/// worker threads by reference (it is `Sync`). Counters are campaign
+/// bookkeeping, not cached state: they are *not* serialized.
+pub struct MemoCache {
+    shards: Vec<Shard>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    fresh: AtomicU64,
+}
+
+impl Default for MemoCache {
+    fn default() -> Self {
+        MemoCache::new()
+    }
+}
+
+impl MemoCache {
+    /// An empty cache with zeroed counters.
+    pub fn new() -> Self {
+        MemoCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            fresh: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &(DesignPoint, GemmShape)) -> &Shard {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Look up a pair, counting a hit or a miss.
+    pub fn get(&self, design: DesignPoint, shape: GemmShape) -> Option<CachedSim> {
+        let found = self.peek(design, shape);
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Look up a pair without touching the counters (aggregation path).
+    pub fn peek(&self, design: DesignPoint, shape: GemmShape) -> Option<CachedSim> {
+        let key = (design, shape);
+        self.shard(&key).lock().unwrap().get(&key).copied()
+    }
+
+    /// Record a freshly simulated pair (bumps the fresh-sim counter).
+    pub fn record(&self, design: DesignPoint, shape: GemmShape, sim: CachedSim) {
+        self.fresh.fetch_add(1, Ordering::Relaxed);
+        self.preload(design, shape, sim);
+    }
+
+    /// Insert a pair without counting it as fresh (snapshot loading).
+    pub fn preload(&self, design: DesignPoint, shape: GemmShape, sim: CachedSim) {
+        let key = (design, shape);
+        self.shard(&key).lock().unwrap().insert(key, sim);
+    }
+
+    /// Cached pair count across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when no pair is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found nothing since construction.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Simulator invocations recorded since construction — the warm-
+    /// rerun acceptance counter: a rerun over a populated cache must
+    /// leave this unchanged.
+    pub fn fresh_sims(&self) -> u64 {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Every cached entry in canonical order (design key, then shape),
+    /// independent of shard layout and insertion order.
+    pub fn snapshot(&self) -> Vec<(DesignPoint, GemmShape, CachedSim)> {
+        let mut entries: Vec<(DesignPoint, GemmShape, CachedSim)> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(&(d, sh), &sim)| (d, sh, sim))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        entries.sort_by_key(|&(d, s, _)| (d, s.m, s.k, s.n));
+        entries
+    }
+
+    /// Serialize the cache as a deterministic JSON document
+    /// (schema `secda-dse-cache-v1`), entries in canonical order so
+    /// equal caches produce byte-identical files.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\"schema\":\"secda-dse-cache-v1\",\"entries\":[");
+        for (i, (design, shape, sim)) in self.snapshot().iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"design\":\"{}\",\"m\":{},\"k\":{},\"n\":{},\
+                 \"total_ps\":{},\"accel_active_ps\":{},\"cpu_side_ps\":{}}}",
+                design.key(),
+                shape.m,
+                shape.k,
+                shape.n,
+                sim.total.as_ps(),
+                sim.accel_active.as_ps(),
+                sim.cpu_side.as_ps()
+            ));
+        }
+        s.push_str("]}\n");
+        s
+    }
+
+    /// Deserialize a cache snapshot produced by [`MemoCache::to_json`].
+    ///
+    /// Entries whose design key no longer parses (a removed candidate
+    /// axis) are rejected as corrupt rather than silently dropped.
+    pub fn from_json(doc: &str) -> Result<MemoCache, String> {
+        let json = Json::parse(doc)?;
+        let schema = json
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("cache document has no schema")?;
+        if schema != "secda-dse-cache-v1" {
+            return Err(format!("unexpected cache schema {schema}"));
+        }
+        let entries = json
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("cache document has no entries array")?;
+        let cache = MemoCache::new();
+        for e in entries {
+            let design_key = e
+                .get("design")
+                .and_then(Json::as_str)
+                .ok_or("entry missing design")?;
+            let design = DesignPoint::parse(design_key)
+                .ok_or_else(|| format!("unparseable design key {design_key}"))?;
+            let field = |name: &str| -> Result<u64, String> {
+                e.get(name)
+                    .and_then(Json::as_f64)
+                    .map(|v| v as u64)
+                    .ok_or_else(|| format!("entry missing {name}"))
+            };
+            let shape = GemmShape {
+                m: field("m")? as usize,
+                k: field("k")? as usize,
+                n: field("n")? as usize,
+            };
+            let sim = CachedSim {
+                total: SimTime::ps(field("total_ps")?),
+                accel_active: SimTime::ps(field("accel_active_ps")?),
+                cpu_side: SimTime::ps(field("cpu_side_ps")?),
+            };
+            cache.preload(design, shape, sim);
+        }
+        Ok(cache)
+    }
+
+    /// Replay this design's cached totals into a policy [`CostModel`]
+    /// as observed measurements, so the coordinator's placement math
+    /// prices the design from campaign simulations instead of priors.
+    pub fn seed_cost_model(&self, design: DesignPoint, model: &mut CostModel) {
+        for (d, shape, sim) in self.snapshot() {
+            if d == design {
+                model.observe(shape, false, sim.total);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(ps: u64) -> CachedSim {
+        CachedSim {
+            total: SimTime::ps(ps),
+            accel_active: SimTime::ps(ps / 2),
+            cpu_side: SimTime::ps(ps / 4),
+        }
+    }
+
+    #[test]
+    fn counters_track_hits_misses_and_fresh_sims() {
+        let cache = MemoCache::new();
+        let d = DesignPoint::Sa { dim: 8 };
+        let s = GemmShape { m: 4, k: 8, n: 4 };
+        assert!(cache.get(d, s).is_none());
+        assert_eq!((cache.hits(), cache.misses(), cache.fresh_sims()), (0, 1, 0));
+        cache.record(d, s, sim(1000));
+        assert_eq!(cache.get(d, s), Some(sim(1000)));
+        assert_eq!((cache.hits(), cache.misses(), cache.fresh_sims()), (1, 1, 1));
+        // peek and preload leave the counters alone
+        assert!(cache.peek(d, s).is_some());
+        cache.preload(d, s, sim(1000));
+        assert_eq!((cache.hits(), cache.misses(), cache.fresh_sims()), (1, 1, 1));
+    }
+
+    #[test]
+    fn json_round_trips_byte_identically() {
+        let cache = MemoCache::new();
+        let shapes = [
+            GemmShape { m: 16, k: 32, n: 8 },
+            GemmShape { m: 8, k: 256, n: 49 },
+        ];
+        for (i, &s) in shapes.iter().enumerate() {
+            cache.record(DesignPoint::Sa { dim: 16 }, s, sim(1_000 * (i as u64 + 1)));
+            cache.record(
+                DesignPoint::Vm {
+                    units: 4,
+                    local_buf_kib: 16,
+                },
+                s,
+                sim(2_000 * (i as u64 + 1)),
+            );
+        }
+        let doc = cache.to_json();
+        let reloaded = MemoCache::from_json(&doc).unwrap();
+        assert_eq!(reloaded.snapshot(), cache.snapshot());
+        assert_eq!(reloaded.to_json(), doc);
+        assert_eq!(reloaded.fresh_sims(), 0, "loading is not simulating");
+    }
+
+    #[test]
+    fn corrupt_documents_are_rejected() {
+        assert!(MemoCache::from_json("{}").is_err());
+        assert!(MemoCache::from_json("{\"schema\":\"other\",\"entries\":[]}").is_err());
+        let bad_key = "{\"schema\":\"secda-dse-cache-v1\",\"entries\":[{\"design\":\"zz9\",\
+                       \"m\":1,\"k\":1,\"n\":1,\"total_ps\":1,\"accel_active_ps\":0,\
+                       \"cpu_side_ps\":0}]}";
+        assert!(MemoCache::from_json(bad_key).is_err());
+    }
+
+    #[test]
+    fn seeding_routes_cached_totals_into_the_cost_model() {
+        let cache = MemoCache::new();
+        let d = DesignPoint::Sa { dim: 16 };
+        let s = GemmShape {
+            m: 64,
+            k: 256,
+            n: 196,
+        };
+        cache.record(d, s, sim(123_456_789));
+        let mut model = CostModel::for_sa_design(&d.sa_config().unwrap(), 1, SimTime::ZERO);
+        cache.seed_cost_model(d, &mut model);
+        assert_eq!(model.observed(s, false), Some(SimTime::ps(123_456_789)));
+    }
+}

@@ -1,0 +1,391 @@
+//! The campaign runner: fan `(design, shape)` simulations out across a
+//! work-stealing pool of OS threads, memoize every result, and reduce
+//! to one deterministic Pareto frontier per workload profile.
+//!
+//! Determinism across thread counts comes from three properties: the
+//! task list (budget truncation included) is fixed *before* any thread
+//! starts; each `(design, shape)` simulation is itself deterministic
+//! and lands in the memo cache regardless of which worker ran it; and
+//! aggregation is a single-threaded reduction over the cache in
+//! canonical order. Threads only change *who* computes a cache entry,
+//! never its value or the reduction that consumes it.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::Mutex;
+
+use crate::accel::{SaConfig, VmConfig};
+use crate::coordinator::GemmShape;
+use crate::driver::DriverConfig;
+use crate::framework::backend::GemmTask;
+use crate::framework::quant::quantize_multiplier;
+use crate::gemm::QGemmParams;
+use crate::perf::EnergyModel;
+use crate::synth::Resources;
+use crate::sysc::SimTime;
+
+use super::cache::{CachedSim, MemoCache};
+use super::pareto::{pareto_frontier, DesignEval};
+use super::space::DesignPoint;
+use super::workload::WorkloadProfile;
+
+/// Campaign knobs.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Worker threads simulating candidates (clamped to ≥ 1).
+    pub threads: usize,
+    /// Optional bound on distinct shapes taken per profile (prefix of
+    /// the demand histogram). Applied before any thread spawns, so the
+    /// truncation — like everything downstream — is thread-invariant.
+    pub budget: Option<usize>,
+    /// Driver configuration every simulated instance runs under.
+    pub driver: DriverConfig,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            threads: 1,
+            budget: None,
+            driver: DriverConfig::default(),
+        }
+    }
+}
+
+/// Per-profile campaign output.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Workload profile name.
+    pub workload: String,
+    /// Every candidate's objectives against this profile, in space
+    /// order.
+    pub evals: Vec<DesignEval>,
+    /// The non-dominated subset, sorted by design identity.
+    pub frontier: Vec<DesignEval>,
+}
+
+impl ProfileReport {
+    /// The lowest-latency SA design on this profile's frontier — the
+    /// configuration the elastic planner should provision SA slots
+    /// with. `None` when no SA design made the frontier.
+    pub fn best_sa(&self) -> Option<SaConfig> {
+        self.frontier
+            .iter()
+            .filter(|e| matches!(e.design, DesignPoint::Sa { .. }))
+            .min_by_key(|e| e.latency)
+            .and_then(|e| e.design.sa_config())
+    }
+
+    /// The lowest-latency VM design on this profile's frontier.
+    pub fn best_vm(&self) -> Option<VmConfig> {
+        self.frontier
+            .iter()
+            .filter(|e| matches!(e.design, DesignPoint::Vm { .. }))
+            .min_by_key(|e| e.latency)
+            .and_then(|e| e.design.vm_config())
+    }
+}
+
+/// Whole-campaign output: per-profile reports plus the cache-counter
+/// deltas this run produced.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// One report per input profile, in input order.
+    pub profiles: Vec<ProfileReport>,
+    /// Distinct `(design, shape)` pairs the campaign needed.
+    pub pairs: usize,
+    /// Simulator invocations this run performed (0 on a warm rerun).
+    pub fresh_sims: u64,
+    /// Pairs answered from the memo cache this run.
+    pub cache_hits: u64,
+}
+
+impl CampaignReport {
+    /// The per-profile frontiers as a deterministic JSON document
+    /// (schema `secda-dse-pareto-v1`): identical campaigns — cold or
+    /// warm, any thread count — produce byte-identical files.
+    pub fn pareto_json(&self) -> String {
+        let mut s = String::from("{\"schema\":\"secda-dse-pareto-v1\",\"profiles\":[");
+        for (i, p) in self.profiles.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{{\"workload\":\"{}\",\"frontier\":[", p.workload));
+            for (j, e) in p.frontier.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&format!(
+                    "{{\"design\":\"{}\",\"latency_ps\":{},\"energy_j\":{},\
+                     \"utilization\":{},\"luts\":{},\"ffs\":{},\"dsps\":{},\"bram36\":{}}}",
+                    e.design.key(),
+                    e.latency.as_ps(),
+                    e.energy_j,
+                    e.utilization,
+                    e.resources.luts,
+                    e.resources.ffs,
+                    e.resources.dsps,
+                    e.resources.bram36
+                ));
+            }
+            s.push_str("]}");
+        }
+        s.push_str("]}\n");
+        s
+    }
+}
+
+/// Deterministic per-shape input data: the simulated GEMM's operands
+/// are a pure function of the shape, so a `(design, shape)` result is
+/// reproducible across runs, machines, and cache generations.
+fn shape_task_data(shape: GemmShape) -> (Vec<i8>, Vec<i8>, QGemmParams) {
+    let mut st = (((shape.m as u64) << 42) ^ ((shape.k as u64) << 21) ^ (shape.n as u64)) | 1;
+    let mut rnd = || {
+        st ^= st << 13;
+        st ^= st >> 7;
+        st ^= st << 17;
+        st
+    };
+    let weights: Vec<i8> = (0..shape.m * shape.k)
+        .map(|_| (rnd() & 0xff) as u8 as i8)
+        .collect();
+    let inputs: Vec<i8> = (0..shape.k * shape.n)
+        .map(|_| (rnd() & 0xff) as u8 as i8)
+        .collect();
+    let (mult, shift) = quantize_multiplier(0.042);
+    (weights, inputs, QGemmParams::uniform(shape.m, 9, mult, shift))
+}
+
+/// Run one `(design, shape)` pair through the design's cycle-modeled
+/// simulator under the co-designed driver.
+fn simulate(design: DesignPoint, shape: GemmShape, cfg: DriverConfig) -> CachedSim {
+    let mut handle = design.handle(0, cfg);
+    let (weights, inputs, params) = shape_task_data(shape);
+    let task = GemmTask {
+        m: shape.m,
+        k: shape.k,
+        n: shape.n,
+        weights: &weights,
+        inputs: &inputs,
+        params: &params,
+        layer: "dse",
+        weights_resident: false,
+    };
+    let (_, timing) = handle.backend_mut().run_gemm(&task);
+    CachedSim {
+        total: timing.total,
+        accel_active: timing.accel_active,
+        cpu_side: timing.cpu_time,
+    }
+}
+
+/// Pop the next task index: own queue front first, else steal from the
+/// back of the longest sibling backlog. Returns `None` only once every
+/// queue is drained (no tasks are ever added after start).
+fn next_task(queues: &[Mutex<VecDeque<usize>>], own: usize) -> Option<usize> {
+    loop {
+        if let Some(i) = queues[own].lock().unwrap().pop_front() {
+            return Some(i);
+        }
+        let victim = (0..queues.len())
+            .filter(|&i| i != own)
+            .map(|i| (queues[i].lock().unwrap().len(), i))
+            .max()?;
+        if victim.0 == 0 {
+            return None;
+        }
+        // The victim may have been drained since we measured it; loop
+        // and re-scan rather than give up while work remains.
+        if let Some(i) = queues[victim.1].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+}
+
+/// Run a campaign: simulate every uncached `(design, shape)` pair the
+/// profiles demand across `cfg.threads` work-stealing workers, then
+/// reduce the memo cache to per-profile evals and Pareto frontiers.
+///
+/// The returned report is bit-identical for any thread count; the
+/// cache carries all memoized results forward to later campaigns.
+pub fn run_campaign(
+    cfg: &CampaignConfig,
+    profiles: &[WorkloadProfile],
+    space: &[DesignPoint],
+    cache: &MemoCache,
+) -> CampaignReport {
+    let fresh_before = cache.fresh_sims();
+    let hits_before = cache.hits();
+
+    // Budget truncation happens here, once, before any thread exists.
+    let truncated: Vec<Vec<(GemmShape, u64)>> = profiles
+        .iter()
+        .map(|p| {
+            let mut d = p.demand.clone();
+            if let Some(b) = cfg.budget {
+                d.truncate(b);
+            }
+            d
+        })
+        .collect();
+
+    // Distinct (design, shape) pairs in deterministic order — each is
+    // simulated at most once per campaign by construction.
+    let mut pairs: Vec<(DesignPoint, GemmShape)> = Vec::new();
+    let mut seen: HashSet<(DesignPoint, GemmShape)> = HashSet::new();
+    for &design in space {
+        for demand in &truncated {
+            for &(shape, _) in demand {
+                if seen.insert((design, shape)) {
+                    pairs.push((design, shape));
+                }
+            }
+        }
+    }
+
+    let threads = cfg.threads.max(1);
+    let queues: Vec<Mutex<VecDeque<usize>>> =
+        (0..threads).map(|_| Mutex::new(VecDeque::new())).collect();
+    for i in 0..pairs.len() {
+        queues[i % threads].lock().unwrap().push_back(i);
+    }
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let queues = &queues;
+            let pairs = &pairs;
+            let driver = &cfg.driver;
+            s.spawn(move || {
+                while let Some(i) = next_task(queues, w) {
+                    let (design, shape) = pairs[i];
+                    if cache.get(design, shape).is_none() {
+                        cache.record(design, shape, simulate(design, shape, driver.clone()));
+                    }
+                }
+            });
+        }
+    });
+
+    // Single-threaded reduction in canonical order.
+    let budget = Resources::zynq7020();
+    let energy_model = EnergyModel::pynq();
+    let reports = profiles
+        .iter()
+        .zip(&truncated)
+        .map(|(profile, demand)| {
+            let evals: Vec<DesignEval> = space
+                .iter()
+                .map(|&design| {
+                    let mut latency = SimTime::ZERO;
+                    let mut active = SimTime::ZERO;
+                    for &(shape, count) in demand {
+                        let sim = cache
+                            .peek(design, shape)
+                            .expect("campaign simulated every demanded pair");
+                        latency += SimTime::ps(sim.total.as_ps() * count);
+                        active += SimTime::ps(sim.accel_active.as_ps() * count);
+                    }
+                    let resources = design.resources();
+                    DesignEval {
+                        design,
+                        latency,
+                        energy_j: energy_model.energy_j(latency, active, cfg.driver.threads),
+                        utilization: resources.max_utilization(&budget),
+                        resources,
+                    }
+                })
+                .collect();
+            let frontier = pareto_frontier(&evals);
+            ProfileReport {
+                workload: profile.name.clone(),
+                evals,
+                frontier,
+            }
+        })
+        .collect();
+
+    CampaignReport {
+        profiles: reports,
+        pairs: pairs.len(),
+        fresh_sims: cache.fresh_sims() - fresh_before,
+        cache_hits: cache.hits() - hits_before,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::design_space;
+    use crate::dse::pareto::validate_pareto_json;
+
+    fn tiny_profiles() -> Vec<WorkloadProfile> {
+        vec![
+            WorkloadProfile::new(
+                "convish",
+                vec![
+                    (GemmShape { m: 8, k: 27, n: 16 }, 3),
+                    (GemmShape { m: 16, k: 64, n: 8 }, 1),
+                ],
+            ),
+            WorkloadProfile::new("deepish", vec![(GemmShape { m: 4, k: 96, n: 8 }, 2)]),
+        ]
+    }
+
+    #[test]
+    fn warm_rerun_performs_zero_fresh_simulations() {
+        let cfg = CampaignConfig::default();
+        let profiles = tiny_profiles();
+        let space = design_space();
+        let cache = MemoCache::new();
+        let cold = run_campaign(&cfg, &profiles, &space, &cache);
+        assert!(cold.fresh_sims > 0);
+        assert_eq!(cold.fresh_sims as usize, cold.pairs);
+        let warm = run_campaign(&cfg, &profiles, &space, &cache);
+        assert_eq!(warm.fresh_sims, 0, "warm rerun must not simulate");
+        assert_eq!(warm.cache_hits as usize, warm.pairs);
+        assert_eq!(warm.pareto_json(), cold.pareto_json());
+    }
+
+    #[test]
+    fn warm_rerun_from_a_reloaded_snapshot_is_also_free() {
+        let cfg = CampaignConfig::default();
+        let profiles = tiny_profiles();
+        let space = design_space();
+        let cache = MemoCache::new();
+        let cold = run_campaign(&cfg, &profiles, &space, &cache);
+        let reloaded = MemoCache::from_json(&cache.to_json()).unwrap();
+        let warm = run_campaign(&cfg, &profiles, &space, &reloaded);
+        assert_eq!(warm.fresh_sims, 0);
+        assert_eq!(warm.pareto_json(), cold.pareto_json());
+    }
+
+    #[test]
+    fn budget_bounds_distinct_shapes_per_profile() {
+        let cfg = CampaignConfig {
+            budget: Some(1),
+            ..Default::default()
+        };
+        let profiles = tiny_profiles();
+        let space = design_space();
+        let cache = MemoCache::new();
+        let report = run_campaign(&cfg, &profiles, &space, &cache);
+        // 2 distinct shapes survive truncation (one per profile).
+        assert_eq!(report.pairs, 2 * space.len());
+    }
+
+    #[test]
+    fn pareto_json_validates_and_frontier_designs_fit() {
+        let cfg = CampaignConfig::default();
+        let profiles = tiny_profiles();
+        let space = design_space();
+        let cache = MemoCache::new();
+        let report = run_campaign(&cfg, &profiles, &space, &cache);
+        validate_pareto_json(&report.pareto_json()).unwrap();
+        let budget = Resources::zynq7020();
+        for p in &report.profiles {
+            assert!(!p.frontier.is_empty());
+            for e in &p.frontier {
+                assert!(e.design.fits(&budget));
+            }
+            assert!(p.best_sa().is_some() || p.best_vm().is_some());
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Design-space exploration: parallel simulation campaigns over the
+//! SA/VM candidate space with a memoized cycle-model cache.
+//!
+//! SECDA's core claim is that cost-effective simulation makes design
+//! iteration cheap; this layer exploits it at scale. Life of a
+//! campaign:
+//!
+//! 1. **Space** ([`space`]) — enumerate candidate [`DesignPoint`]s
+//!    (SA array dimensions, VM unit counts and buffer depths), gated
+//!    by [`crate::synth::Resources::fits_in`] against the Zynq-7020
+//!    budget so only synthesizable designs are ever evaluated.
+//! 2. **Evaluate** ([`campaign`]) — simulate each `(design, shape)`
+//!    pair a [`WorkloadProfile`] demands on the cycle-modeled
+//!    simulators, across a work-stealing pool of OS threads.
+//! 3. **Memoize** ([`cache`]) — every result lands in a sharded
+//!    [`MemoCache`]; no pair is simulated twice, within a campaign or
+//!    across campaigns via the on-disk JSON snapshot. Cached totals
+//!    also seed the policy [`crate::coordinator::CostModel`] so
+//!    serving-time placement prices discovered designs from campaign
+//!    data.
+//! 4. **Pareto** ([`pareto`]) — reduce to the non-dominated set over
+//!    modeled latency, energy, and fabric utilization. The frontier is
+//!    bit-identical for any campaign thread count.
+//! 5. **Planner hand-off** — [`ProfileReport::best_sa`]/[`best_vm`]
+//!    pick frontier designs that flow into
+//!    [`crate::coordinator::CoordinatorConfig::sa_design`]/`vm_design`
+//!    and the elastic [`crate::elastic::CompositionPlanner`], so
+//!    reprovisioning composes discovered designs, not just the paper's.
+//!
+//! [`best_vm`]: ProfileReport::best_vm
+//!
+//! The `secda dse` CLI subcommand runs a campaign end to end; see the
+//! README quickstart and ARCHITECTURE.md's "DSE layer" section.
+
+pub mod cache;
+pub mod campaign;
+pub mod pareto;
+pub mod space;
+pub mod workload;
+
+pub use cache::{CachedSim, MemoCache};
+pub use campaign::{run_campaign, CampaignConfig, CampaignReport, ProfileReport};
+pub use pareto::{pareto_frontier, validate_pareto_json, DesignEval};
+pub use space::{design_space, DesignPoint};
+pub use workload::WorkloadProfile;

@@ -1,0 +1,176 @@
+//! Multi-objective dominance and the deterministic Pareto frontier.
+//!
+//! Objectives are minimized jointly: modeled latency over the
+//! profile's demand, modeled energy, and fabric utilization (the
+//! resource footprint collapsed to its binding-constraint share, so a
+//! cheaper design leaves more fabric for co-resident logic).
+
+use crate::synth::Resources;
+use crate::sysc::SimTime;
+
+use super::space::DesignPoint;
+
+/// One design's modeled objectives against one workload profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DesignEval {
+    /// The evaluated design.
+    pub design: DesignPoint,
+    /// Modeled latency of one workload pass (demand-weighted sum of
+    /// per-shape simulated totals).
+    pub latency: SimTime,
+    /// Modeled PYNQ energy of one workload pass, joules.
+    pub energy_j: f64,
+    /// Zynq-7020 utilization of one instance, in [0, 1].
+    pub utilization: f64,
+    /// Full modeled resource footprint behind `utilization`.
+    pub resources: Resources,
+}
+
+impl DesignEval {
+    /// Strict Pareto dominance: no objective worse, at least one
+    /// strictly better.
+    pub fn dominates(&self, other: &DesignEval) -> bool {
+        let no_worse = self.latency <= other.latency
+            && self.energy_j <= other.energy_j
+            && self.utilization <= other.utilization;
+        let strictly_better = self.latency < other.latency
+            || self.energy_j < other.energy_j
+            || self.utilization < other.utilization;
+        no_worse && strictly_better
+    }
+}
+
+/// The non-dominated subset of `evals`, sorted by design identity.
+///
+/// The result depends only on the eval values — never on input order
+/// or on how many threads produced them — which is what makes campaign
+/// frontiers bit-comparable across thread counts.
+pub fn pareto_frontier(evals: &[DesignEval]) -> Vec<DesignEval> {
+    let mut frontier: Vec<DesignEval> = evals
+        .iter()
+        .filter(|e| !evals.iter().any(|o| o.dominates(e)))
+        .copied()
+        .collect();
+    frontier.sort_by_key(|e| e.design);
+    frontier.dedup_by(|a, b| a.design == b.design);
+    frontier
+}
+
+/// Validate a Pareto JSON document (schema `secda-dse-pareto-v1`)
+/// emitted by [`crate::dse::CampaignReport::pareto_json`], using the
+/// crate's own [`crate::obs::json`] reader.
+///
+/// Checks structure, design-key parseability, and that every frontier
+/// entry's footprint fits the Zynq-7020 budget — the invariant the
+/// feasibility gate is supposed to guarantee end to end.
+pub fn validate_pareto_json(doc: &str) -> Result<(), String> {
+    use crate::obs::json::Json;
+    let json = Json::parse(doc)?;
+    let schema = json
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("pareto document has no schema")?;
+    if schema != "secda-dse-pareto-v1" {
+        return Err(format!("unexpected pareto schema {schema}"));
+    }
+    let profiles = json
+        .get("profiles")
+        .and_then(Json::as_arr)
+        .ok_or("pareto document has no profiles array")?;
+    if profiles.is_empty() {
+        return Err("pareto document has zero profiles".to_string());
+    }
+    let budget = Resources::zynq7020();
+    for p in profiles {
+        let workload = p
+            .get("workload")
+            .and_then(Json::as_str)
+            .ok_or("profile missing workload name")?;
+        let frontier = p
+            .get("frontier")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("profile {workload} missing frontier"))?;
+        if frontier.is_empty() {
+            return Err(format!("profile {workload} has an empty frontier"));
+        }
+        for e in frontier {
+            let key = e
+                .get("design")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("profile {workload}: frontier entry missing design"))?;
+            let design = DesignPoint::parse(key)
+                .ok_or_else(|| format!("profile {workload}: unparseable design key {key}"))?;
+            let num = |name: &str| -> Result<f64, String> {
+                e.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                    format!("profile {workload}, design {key}: missing field {name}")
+                })
+            };
+            if num("latency_ps")? < 0.0 {
+                return Err(format!("design {key}: negative latency"));
+            }
+            if num("energy_j")? < 0.0 {
+                return Err(format!("design {key}: negative energy"));
+            }
+            let util = num("utilization")?;
+            if !(0.0..=1.0).contains(&util) {
+                return Err(format!("design {key}: utilization {util} outside [0, 1]"));
+            }
+            for field in ["luts", "ffs", "dsps", "bram36"] {
+                num(field)?;
+            }
+            if !design.resources().fits_in(&budget) {
+                return Err(format!("design {key} does not fit the zynq7020 budget"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(design: DesignPoint, lat_ps: u64, energy_j: f64, util: f64) -> DesignEval {
+        DesignEval {
+            design,
+            latency: SimTime::ps(lat_ps),
+            energy_j,
+            utilization: util,
+            resources: design.resources(),
+        }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement_somewhere() {
+        let a = eval(DesignPoint::Sa { dim: 16 }, 100, 1.0, 0.5);
+        let b = eval(DesignPoint::Sa { dim: 8 }, 100, 1.0, 0.5);
+        assert!(!a.dominates(&b), "equal objectives do not dominate");
+        let c = eval(DesignPoint::Sa { dim: 4 }, 90, 1.0, 0.5);
+        assert!(c.dominates(&a));
+        assert!(!a.dominates(&c));
+    }
+
+    #[test]
+    fn frontier_is_order_independent_and_nondominated() {
+        let sa16 = eval(DesignPoint::Sa { dim: 16 }, 100, 2.0, 0.8);
+        let sa8 = eval(DesignPoint::Sa { dim: 8 }, 200, 1.0, 0.4);
+        let worse = eval(DesignPoint::Sa { dim: 4 }, 300, 3.0, 0.9);
+        let forward = pareto_frontier(&[sa16, sa8, worse]);
+        let reversed = pareto_frontier(&[worse, sa8, sa16]);
+        assert_eq!(forward, reversed);
+        assert_eq!(forward.len(), 2);
+        for e in &forward {
+            assert!(!forward.iter().any(|o| o.dominates(e)));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate_pareto_json("{}").is_err());
+        assert!(validate_pareto_json("{\"schema\":\"secda-dse-pareto-v1\",\"profiles\":[]}")
+            .is_err());
+        let empty_frontier = "{\"schema\":\"secda-dse-pareto-v1\",\"profiles\":\
+                              [{\"workload\":\"w\",\"frontier\":[]}]}";
+        assert!(validate_pareto_json(empty_frontier).is_err());
+    }
+}

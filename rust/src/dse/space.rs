@@ -1,0 +1,210 @@
+//! The candidate design space: every SA/VM configuration a campaign
+//! may evaluate, gated by Zynq-7020 feasibility.
+//!
+//! A [`DesignPoint`] is a *compact, hashable* identity for one
+//! accelerator configuration — the memo-cache key half (the other half
+//! is the GEMM shape). It expands on demand into the full
+//! [`SaConfig`]/[`VmConfig`] the simulators consume, into its modeled
+//! [`Resources`] footprint, or into a ready [`DriverHandle`] instance.
+
+use crate::accel::components::BramArray;
+use crate::accel::{SaConfig, VmConfig};
+use crate::driver::{DriverConfig, DriverHandle};
+use crate::synth::{sa_resources, vm_resources, Resources};
+
+/// One candidate accelerator design in the exploration space.
+///
+/// The enum is deliberately small and `Copy`/`Hash`/`Ord`: campaigns
+/// key their memo cache on `(DesignPoint, GemmShape)` and sort
+/// frontiers by it, so identity must be cheap and total-ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DesignPoint {
+    /// A systolic array sized `dim x dim` (§IV-E3 sweep axis).
+    Sa {
+        /// Array dimension; the paper sweeps {4, 8, 16}.
+        dim: usize,
+    },
+    /// A vector-MAC engine with `units` GEMM units over
+    /// `local_buf_kib` KiB per-unit local weight buffers.
+    Vm {
+        /// GEMM unit count; the paper design uses 4.
+        units: usize,
+        /// Per-unit local buffer capacity in KiB; sets the `max_k`
+        /// reduction-depth cliff (`local_buf_kib * 1024 / tile_m`).
+        local_buf_kib: usize,
+    },
+}
+
+impl DesignPoint {
+    /// Stable string key (`sa16`, `vm4x16`) used by the on-disk cache
+    /// and the Pareto JSON document.
+    pub fn key(&self) -> String {
+        match *self {
+            DesignPoint::Sa { dim } => format!("sa{dim}"),
+            DesignPoint::Vm {
+                units,
+                local_buf_kib,
+            } => format!("vm{units}x{local_buf_kib}"),
+        }
+    }
+
+    /// Inverse of [`DesignPoint::key`]; `None` for malformed keys.
+    pub fn parse(key: &str) -> Option<DesignPoint> {
+        if let Some(rest) = key.strip_prefix("sa") {
+            return rest.parse().ok().map(|dim| DesignPoint::Sa { dim });
+        }
+        let rest = key.strip_prefix("vm")?;
+        let (units, kib) = rest.split_once('x')?;
+        Some(DesignPoint::Vm {
+            units: units.parse().ok()?,
+            local_buf_kib: kib.parse().ok()?,
+        })
+    }
+
+    /// The full SA configuration, when this is an SA point.
+    pub fn sa_config(&self) -> Option<SaConfig> {
+        match *self {
+            DesignPoint::Sa { dim } => Some(SaConfig::with_dim(dim)),
+            DesignPoint::Vm { .. } => None,
+        }
+    }
+
+    /// The full VM configuration, when this is a VM point.
+    ///
+    /// 16 KiB points keep the paper's global buffers; deeper local
+    /// buffers trade global weight-buffer capacity for reduction
+    /// depth, mirroring [`VmConfig::resnet_variant`].
+    pub fn vm_config(&self) -> Option<VmConfig> {
+        match *self {
+            DesignPoint::Sa { .. } => None,
+            DesignPoint::Vm {
+                units,
+                local_buf_kib,
+            } => {
+                let mut cfg = VmConfig::paper();
+                cfg.units = units;
+                cfg.local_buf_bytes = local_buf_kib * 1024;
+                if local_buf_kib > 16 {
+                    cfg.global_weight_buf = BramArray::new(8, 8, 128 * 1024);
+                }
+                Some(cfg)
+            }
+        }
+    }
+
+    /// Modeled post-synthesis footprint of one instance.
+    pub fn resources(&self) -> Resources {
+        match *self {
+            DesignPoint::Sa { .. } => sa_resources(&self.sa_config().expect("sa point")),
+            DesignPoint::Vm { .. } => vm_resources(&self.vm_config().expect("vm point")),
+        }
+    }
+
+    /// Whether one instance fits the given fabric budget.
+    pub fn fits(&self, budget: &Resources) -> bool {
+        self.resources().fits_in(budget)
+    }
+
+    /// A driver-wrapped simulator instance of this design.
+    pub fn handle(&self, id: usize, cfg: DriverConfig) -> DriverHandle {
+        match *self {
+            DesignPoint::Sa { .. } => {
+                DriverHandle::sa_with(id, cfg, self.sa_config().expect("sa point"))
+            }
+            DesignPoint::Vm { .. } => {
+                DriverHandle::vm_with(id, cfg, self.vm_config().expect("vm point"))
+            }
+        }
+    }
+}
+
+/// Candidate SA array dimensions: the §IV-E3 sweep plus one oversized
+/// probe the feasibility gate must reject (DSP overflow).
+const SA_DIMS: [usize; 4] = [4, 8, 16, 32];
+/// Candidate VM unit counts around the paper's 4.
+const VM_UNITS: [usize; 4] = [1, 2, 4, 8];
+/// Candidate VM per-unit local-buffer depths (KiB).
+const VM_BUF_KIB: [usize; 2] = [16, 32];
+
+/// Enumerate every candidate design that fits a Zynq-7020 fabric, in
+/// canonical (deterministic) order: SA points by dimension, then VM
+/// points by unit count then buffer depth.
+///
+/// Infeasible grid corners (e.g. a 32x32 array needing 576 DSPs on a
+/// 220-DSP part) are filtered here, so downstream layers never see a
+/// design that could not be synthesized.
+pub fn design_space() -> Vec<DesignPoint> {
+    let budget = Resources::zynq7020();
+    let mut space = Vec::new();
+    for dim in SA_DIMS {
+        let p = DesignPoint::Sa { dim };
+        if p.fits(&budget) {
+            space.push(p);
+        }
+    }
+    for units in VM_UNITS {
+        for local_buf_kib in VM_BUF_KIB {
+            let p = DesignPoint::Vm {
+                units,
+                local_buf_kib,
+            };
+            if p.fits(&budget) {
+                space.push(p);
+            }
+        }
+    }
+    space
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_round_trip_across_the_space() {
+        for p in design_space() {
+            assert_eq!(DesignPoint::parse(&p.key()), Some(p), "key {}", p.key());
+        }
+        assert_eq!(DesignPoint::parse("sa16"), Some(DesignPoint::Sa { dim: 16 }));
+        assert_eq!(
+            DesignPoint::parse("vm4x16"),
+            Some(DesignPoint::Vm {
+                units: 4,
+                local_buf_kib: 16
+            })
+        );
+        assert_eq!(DesignPoint::parse("nope"), None);
+        assert_eq!(DesignPoint::parse("vm4"), None);
+    }
+
+    #[test]
+    fn space_is_feasible_and_contains_the_paper_designs() {
+        let space = design_space();
+        let budget = Resources::zynq7020();
+        assert!(space.iter().all(|p| p.fits(&budget)));
+        assert!(space.contains(&DesignPoint::Sa { dim: 16 }));
+        assert!(space.contains(&DesignPoint::Vm {
+            units: 4,
+            local_buf_kib: 16
+        }));
+        // The oversized SA probe must be gated out: 32x32 needs more
+        // DSPs than the whole part carries.
+        assert!(!space.contains(&DesignPoint::Sa { dim: 32 }));
+        assert!(!DesignPoint::Sa { dim: 32 }.fits(&budget));
+    }
+
+    #[test]
+    fn paper_points_expand_to_the_paper_configs() {
+        let sa = DesignPoint::Sa { dim: 16 }.sa_config().unwrap();
+        assert_eq!(sa.array.dim, SaConfig::paper().array.dim);
+        let vm = DesignPoint::Vm {
+            units: 4,
+            local_buf_kib: 16,
+        }
+        .vm_config()
+        .unwrap();
+        assert_eq!(vm.units, VmConfig::paper().units);
+        assert_eq!(vm.local_buf_bytes, VmConfig::paper().local_buf_bytes);
+        assert_eq!(vm.max_k(), VmConfig::paper().max_k());
+    }
+}

@@ -1,0 +1,83 @@
+//! Workload profiles a campaign evaluates designs against.
+//!
+//! A profile is a named GEMM-shape demand histogram — the same
+//! representation the elastic estimator derives from live traffic
+//! ([`crate::elastic::TrafficProfile::demand`]), so campaign results
+//! speak the serving stack's language directly.
+
+use crate::coordinator::GemmShape;
+use crate::framework::models;
+
+/// A named demand histogram over GEMM shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadProfile {
+    /// Profile name (a model name, or a scenario label).
+    pub name: String,
+    /// Per-shape demand in first-seen order: how many times each
+    /// distinct GEMM shape one pass of the workload issues.
+    pub demand: Vec<(GemmShape, u64)>,
+}
+
+impl WorkloadProfile {
+    /// A profile from an explicit demand histogram.
+    pub fn new(name: impl Into<String>, demand: Vec<(GemmShape, u64)>) -> Self {
+        WorkloadProfile {
+            name: name.into(),
+            demand,
+        }
+    }
+
+    /// The demand histogram of one forward pass of a bundled model
+    /// (`mobilenet_v1`, `resnet18`, ...); `None` for unknown names.
+    pub fn from_model(name: &str) -> Option<WorkloadProfile> {
+        let g = models::by_name(name)?;
+        let mut demand: Vec<(GemmShape, u64)> = Vec::new();
+        for (m, k, n) in models::gemm_shapes(&g) {
+            let shape = GemmShape { m, k, n };
+            match demand.iter_mut().find(|(s, _)| *s == shape) {
+                Some(entry) => entry.1 += 1,
+                None => demand.push((shape, 1)),
+            }
+        }
+        Some(WorkloadProfile::new(name, demand))
+    }
+
+    /// One profile per bundled model, in [`models::ALL`] order.
+    pub fn all_models() -> Vec<WorkloadProfile> {
+        models::ALL
+            .iter()
+            .filter_map(|name| WorkloadProfile::from_model(name))
+            .collect()
+    }
+
+    /// Total GEMM invocations one pass of this workload issues.
+    pub fn total_demand(&self) -> u64 {
+        self.demand.iter().map(|(_, c)| c).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_bundled_model_yields_a_nonempty_profile() {
+        let profiles = WorkloadProfile::all_models();
+        assert_eq!(profiles.len(), models::ALL.len());
+        for p in &profiles {
+            assert!(!p.demand.is_empty(), "{} has no GEMM demand", p.name);
+            assert!(p.total_demand() > 0);
+        }
+    }
+
+    #[test]
+    fn demand_is_a_histogram_of_distinct_shapes() {
+        let p = WorkloadProfile::from_model("mobilenet_v1").unwrap();
+        for (i, (s, _)) in p.demand.iter().enumerate() {
+            assert!(
+                !p.demand[i + 1..].iter().any(|(o, _)| o == s),
+                "duplicate shape in demand"
+            );
+        }
+    }
+}

@@ -57,13 +57,37 @@ impl ElasticController {
     /// given per-offload sync overhead (the same parameters the pool's
     /// own cost models use, so estimates line up).
     pub fn new(cfg: ElasticConfig, threads: usize, sync_overhead: SimTime) -> Self {
+        Self::with_designs(
+            cfg,
+            threads,
+            sync_overhead,
+            &crate::accel::SaConfig::paper(),
+            &crate::accel::VmConfig::paper(),
+        )
+    }
+
+    /// A controller planning over explicit SA/VM designs: the planner
+    /// prices compositions and reconfigurations with these designs'
+    /// fabric footprints, and the per-design cost priors run their
+    /// cycle models. This is how a DSE-discovered frontier design
+    /// ([`crate::dse::ProfileReport::best_sa`]/`best_vm`, threaded
+    /// through [`crate::coordinator::CoordinatorConfig::sa_design`])
+    /// reaches serving-time reprovisioning. Identical to
+    /// [`ElasticController::new`] on the paper configurations.
+    pub fn with_designs(
+        cfg: ElasticConfig,
+        threads: usize,
+        sync_overhead: SimTime,
+        sa: &crate::accel::SaConfig,
+        vm: &crate::accel::VmConfig,
+    ) -> Self {
         let estimator = WorkloadEstimator::new(cfg.window);
-        let planner = CompositionPlanner::new(cfg.budget);
+        let planner = CompositionPlanner::with_designs(cfg.budget, sa, vm);
         ElasticController {
             cfg,
             estimator,
             planner,
-            costs: DesignCosts::new(threads, sync_overhead),
+            costs: DesignCosts::for_designs(threads, sync_overhead, sa, vm),
             last_eval: None,
             last_profile: None,
             history: Vec::new(),

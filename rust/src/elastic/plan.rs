@@ -106,9 +106,26 @@ impl DesignCosts {
     /// Fresh per-design models (analytic priors only) for workers with
     /// `threads` CPU threads and the given offload sync overhead.
     pub fn new(threads: usize, sync_overhead: SimTime) -> Self {
+        Self::for_designs(
+            threads,
+            sync_overhead,
+            &SaConfig::paper(),
+            &VmConfig::paper(),
+        )
+    }
+
+    /// Per-design models whose SA/VM priors run explicit (e.g.
+    /// DSE-discovered) designs. Identical to [`DesignCosts::new`] on
+    /// the paper configurations.
+    pub fn for_designs(
+        threads: usize,
+        sync_overhead: SimTime,
+        sa: &SaConfig,
+        vm: &VmConfig,
+    ) -> Self {
         DesignCosts {
-            sa: CostModel::new(threads, sync_overhead),
-            vm: CostModel::new(threads, sync_overhead),
+            sa: CostModel::for_sa_design(sa, threads, sync_overhead),
+            vm: CostModel::for_vm_design(vm, threads, sync_overhead),
             cpu: CostModel::new(threads, sync_overhead),
         }
     }
@@ -175,11 +192,31 @@ impl CompositionPlanner {
     /// A planner gated by the given device budget (normally
     /// [`Resources::zynq7020`]).
     pub fn new(budget: Resources) -> Self {
+        Self::with_designs(budget, &SaConfig::paper(), &VmConfig::paper())
+    }
+
+    /// A planner whose per-instance footprints come from explicit SA
+    /// and VM designs — the hand-off point for DSE-discovered
+    /// frontiers ([`crate::dse::ProfileReport::best_sa`]/`best_vm`):
+    /// registering a frontier design here makes every enumerated
+    /// composition, score and reconfiguration cost price that design's
+    /// fabric, not the paper's. Identical to [`CompositionPlanner::new`]
+    /// on the paper configurations.
+    pub fn with_designs(budget: Resources, sa: &SaConfig, vm: &VmConfig) -> Self {
         CompositionPlanner {
             budget,
-            sa_unit: synth::sa_resources(&SaConfig::paper()),
-            vm_unit: synth::vm_resources(&VmConfig::paper()),
+            sa_unit: synth::sa_resources(sa),
+            vm_unit: synth::vm_resources(vm),
         }
+    }
+
+    /// `comp`'s fabric footprint under this planner's registered
+    /// per-instance designs (unlike [`Composition::resources`], which
+    /// always prices the paper designs).
+    pub fn composition_resources(&self, comp: &Composition) -> Resources {
+        self.sa_unit
+            .scaled(comp.sa as u32)
+            .add(&self.vm_unit.scaled(comp.vm as u32))
     }
 
     /// Every composition whose fabric footprint fits the budget, with

@@ -20,7 +20,9 @@
 //!   holds to match the observed traffic, the fleet tier ([`fleet`])
 //!   that shards the coordinator across N modeled boards behind a
 //!   gossip-fed cost-model router with fleet-wide bitstream-portfolio
-//!   planning, and the observability
+//!   planning, the design-space exploration engine ([`dse`]) that runs
+//!   parallel memoized simulation campaigns over the SA/VM candidate
+//!   space and hands Pareto-optimal designs to the planner, and the observability
 //!   layer ([`obs`]) — structured spans, streaming histograms, and
 //!   Perfetto-loadable trace export across the whole serving stack.
 //! * **Layer 2 (python/compile/model.py)** — the accelerated subgraph
@@ -44,6 +46,7 @@ pub mod accel;
 pub mod cli;
 pub mod coordinator;
 pub mod driver;
+pub mod dse;
 pub mod elastic;
 pub mod fleet;
 pub mod framework;

@@ -10,6 +10,7 @@
 //! secda simulate <vm|sa> M K N   TLM-simulate one GEMM, per-component report
 //! secda sa-sizes                 §IV-E3 systolic-array size sweep
 //! secda devtime                  Eq. 1-3 development-time model
+//! secda dse [flags]              parallel design-space exploration campaign
 //! secda runtime-check            PJRT artifact numerics vs CPU gemm
 //! secda trace-validate <trace.json> [metrics.json]
 //!                                check an exported observability file
@@ -34,6 +35,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args[1..]),
         "sa-sizes" => cmd_sa_sizes(),
         "devtime" => cmd_devtime(),
+        "dse" => cmd_dse(&args[1..]),
         "runtime-check" => cmd_runtime_check(),
         "trace-validate" => cmd_trace_validate(&args[1..]),
         "help" | "--help" | "-h" => {
@@ -59,6 +61,13 @@ COMMANDS:
   simulate <vm|sa> M K N  TLM-simulate one GEMM with per-component stats
   sa-sizes                §IV-E3 systolic array size sweep (4/8/16)
   devtime                 Eq. 1-3 development-time comparison
+  dse [--budget N] [--threads N] [--cache FILE] [--out FILE] [--assert-warm]
+                          run a design-space exploration campaign over the
+                          bundled model workloads; --cache persists the memo
+                          cache across runs, --out writes the Pareto JSON,
+                          --assert-warm fails if any fresh simulation ran
+  dse --validate <pareto.json>
+                          validate a Pareto document written by --out
   runtime-check           verify PJRT artifacts against the CPU gemm
   trace-validate <trace.json> [metrics.json]
                           validate exported Chrome-trace / metrics JSON
@@ -257,6 +266,161 @@ fn cmd_devtime() -> ExitCode {
             e2.as_secs_f64() / e1.as_secs_f64(),
             e3.as_secs_f64() / 3600.0
         );
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_dse(args: &[String]) -> ExitCode {
+    use secda::dse::{
+        design_space, run_campaign, validate_pareto_json, CampaignConfig, MemoCache,
+        WorkloadProfile,
+    };
+
+    if args.first().map(String::as_str) == Some("--validate") {
+        let Some(path) = args.get(1) else {
+            eprintln!("usage: secda dse --validate <pareto.json>");
+            return ExitCode::FAILURE;
+        };
+        let doc = match std::fs::read_to_string(path) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        return match validate_pareto_json(&doc) {
+            Ok(()) => {
+                println!("{path}: OK");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("{path}: INVALID — {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let mut budget: Option<usize> = None;
+    let mut threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut cache_path: Option<String> = None;
+    let mut out_path: Option<String> = None;
+    let mut assert_warm = false;
+    fn value<'a>(args: &'a [String], i: usize, name: &str) -> Option<&'a String> {
+        let v = args.get(i + 1);
+        if v.is_none() {
+            eprintln!("flag {name} needs a value");
+        }
+        v
+    }
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--budget" => match value(args, i, "--budget").and_then(|s| s.parse().ok()) {
+                Some(b) => {
+                    budget = Some(b);
+                    i += 2;
+                }
+                None => return ExitCode::FAILURE,
+            },
+            "--threads" => match value(args, i, "--threads").and_then(|s| s.parse().ok()) {
+                Some(t) => {
+                    threads = t;
+                    i += 2;
+                }
+                None => return ExitCode::FAILURE,
+            },
+            "--cache" => match value(args, i, "--cache") {
+                Some(p) => {
+                    cache_path = Some(p.clone());
+                    i += 2;
+                }
+                None => return ExitCode::FAILURE,
+            },
+            "--out" => match value(args, i, "--out") {
+                Some(p) => {
+                    out_path = Some(p.clone());
+                    i += 2;
+                }
+                None => return ExitCode::FAILURE,
+            },
+            "--assert-warm" => {
+                assert_warm = true;
+                i += 1;
+            }
+            other => {
+                eprintln!("unknown dse flag `{other}` (see `secda help`)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let cache = match cache_path.as_deref().map(std::fs::read_to_string) {
+        Some(Ok(doc)) => match MemoCache::from_json(&doc) {
+            Ok(c) => {
+                println!("loaded {} cached simulations", c.len());
+                c
+            }
+            Err(e) => {
+                eprintln!("corrupt cache file: {e}");
+                return ExitCode::FAILURE;
+            }
+        },
+        // a missing cache file is a cold start, not an error
+        Some(Err(_)) | None => MemoCache::new(),
+    };
+
+    let profiles = WorkloadProfile::all_models();
+    let space = design_space();
+    let cfg = CampaignConfig {
+        threads,
+        budget,
+        ..CampaignConfig::default()
+    };
+    let start = std::time::Instant::now();
+    let report = run_campaign(&cfg, &profiles, &space, &cache);
+    let secs = start.elapsed().as_secs_f64();
+    println!(
+        "campaign: {} designs x {} profiles -> {} (design, shape) pairs",
+        space.len(),
+        profiles.len(),
+        report.pairs
+    );
+    println!(
+        "  fresh simulations {} | cache hits {} | {secs:.2}s wall on {threads} thread(s)",
+        report.fresh_sims, report.cache_hits
+    );
+    for p in &report.profiles {
+        println!("  {} frontier:", p.workload);
+        for e in &p.frontier {
+            println!(
+                "    {:<8} latency {:>14} energy {:>10.4} J  util {:>3.0}%",
+                e.design.key(),
+                e.latency.to_string(),
+                e.energy_j,
+                e.utilization * 100.0
+            );
+        }
+    }
+    if let Some(p) = &cache_path {
+        if let Err(e) = std::fs::write(p, cache.to_json()) {
+            eprintln!("cannot write {p}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    if let Some(p) = &out_path {
+        if let Err(e) = std::fs::write(p, report.pareto_json()) {
+            eprintln!("cannot write {p}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    if assert_warm && report.fresh_sims > 0 {
+        eprintln!(
+            "--assert-warm: expected a fully warm cache, but {} fresh simulation(s) ran",
+            report.fresh_sims
+        );
+        return ExitCode::FAILURE;
     }
     ExitCode::SUCCESS
 }

@@ -274,6 +274,33 @@ mod tests {
         assert!(!sa.add(&vm).fits_in(&budget), "SA+VM must not co-reside");
         assert!(!sa.scaled(2).fits_in(&budget), "2x SA must not fit");
         assert!(!vm.scaled(2).fits_in(&budget), "2x VM must not fit");
+        // The same holds with non-paper designs from the registered
+        // DSE candidate space: whatever frontier pair the campaign
+        // hands the planner, every composition it enumerates must fit
+        // the fabric — the feasibility gate, end to end.
+        let space = crate::dse::design_space();
+        for sa_point in space.iter().filter(|p| p.sa_config().is_some()) {
+            for vm_point in space.iter().filter(|p| p.vm_config().is_some()) {
+                let planner = crate::elastic::CompositionPlanner::with_designs(
+                    budget,
+                    &sa_point.sa_config().unwrap(),
+                    &vm_point.vm_config().unwrap(),
+                );
+                let comps = planner.enumerate(2);
+                assert!(!comps.is_empty());
+                for c in &comps {
+                    assert!(
+                        planner.composition_resources(c).fits_in(&budget),
+                        "{c} with {}/{} exceeds the fabric",
+                        sa_point.key(),
+                        vm_point.key()
+                    );
+                }
+                // every registered design is individually servable
+                assert!(comps.iter().any(|c| c.sa == 1));
+                assert!(comps.iter().any(|c| c.vm == 1));
+            }
+        }
     }
 
     #[test]

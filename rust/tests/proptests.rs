@@ -1327,3 +1327,119 @@ fn prop_event_budget_contains_livelock() {
     sim.run_with_limit(10_000);
     assert_eq!(sim.events_dispatched(), 10_000);
 }
+
+/// Property: a DSE campaign's full result — the Pareto set AND every
+/// per-design modeled number behind it — is invariant to the worker
+/// thread count. Threads decide who simulates a `(design, shape)`
+/// pair, never what the pair evaluates to or how results reduce.
+#[test]
+fn prop_dse_is_thread_count_invariant() {
+    use secda::coordinator::GemmShape;
+    use secda::dse::{design_space, run_campaign, CampaignConfig, MemoCache, WorkloadProfile};
+
+    let space = design_space();
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed * 0xd5e);
+        let profiles: Vec<WorkloadProfile> = (0..rng.range(1, 2))
+            .map(|p| {
+                let demand = (0..rng.range(1, 3))
+                    .map(|_| {
+                        let shape = GemmShape {
+                            m: rng.range(1, 24),
+                            k: rng.range(1, 48),
+                            n: rng.range(1, 24),
+                        };
+                        (shape, rng.range(1, 4) as u64)
+                    })
+                    .collect();
+                WorkloadProfile::new(format!("w{p}"), demand)
+            })
+            .collect();
+        let run = |threads: usize| {
+            let cfg = CampaignConfig {
+                threads,
+                ..CampaignConfig::default()
+            };
+            run_campaign(&cfg, &profiles, &space, &MemoCache::new())
+        };
+        let baseline = run(1);
+        for threads in [2usize, 8] {
+            let other = run(threads);
+            assert_eq!(
+                baseline.pareto_json(),
+                other.pareto_json(),
+                "seed {seed}: frontier diverged at {threads} threads"
+            );
+            assert_eq!(baseline.pairs, other.pairs, "seed {seed}");
+            for (a, b) in baseline.profiles.iter().zip(&other.profiles) {
+                for (ea, eb) in a.evals.iter().zip(&b.evals) {
+                    assert_eq!(ea.design, eb.design, "seed {seed}");
+                    assert_eq!(
+                        ea.latency, eb.latency,
+                        "seed {seed}: {} latency diverged at {threads} threads",
+                        ea.design.key()
+                    );
+                    assert_eq!(
+                        ea.energy_j.to_bits(),
+                        eb.energy_j.to_bits(),
+                        "seed {seed}: {} energy diverged at {threads} threads",
+                        ea.design.key()
+                    );
+                    assert_eq!(
+                        ea.utilization.to_bits(),
+                        eb.utilization.to_bits(),
+                        "seed {seed}: {} utilization diverged",
+                        ea.design.key()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: every design a campaign puts on a frontier fits the
+/// Zynq-7020 budget and is dominated by no other frontier member, for
+/// ANY random workload profile.
+#[test]
+fn prop_dse_frontier_is_feasible_and_nondominated() {
+    use secda::coordinator::GemmShape;
+    use secda::dse::{design_space, run_campaign, CampaignConfig, MemoCache, WorkloadProfile};
+    use secda::synth::Resources;
+
+    let space = design_space();
+    let budget = Resources::zynq7020();
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed * 0xace1);
+        let demand = (0..rng.range(1, 3))
+            .map(|_| {
+                let shape = GemmShape {
+                    m: rng.range(1, 24),
+                    k: rng.range(1, 48),
+                    n: rng.range(1, 24),
+                };
+                (shape, rng.range(1, 5) as u64)
+            })
+            .collect();
+        let profiles = [WorkloadProfile::new("random", demand)];
+        let cfg = CampaignConfig {
+            threads: 2,
+            ..CampaignConfig::default()
+        };
+        let report = run_campaign(&cfg, &profiles, &space, &MemoCache::new());
+        for p in &report.profiles {
+            assert!(!p.frontier.is_empty(), "seed {seed}: empty frontier");
+            for e in &p.frontier {
+                assert!(
+                    e.design.fits(&budget),
+                    "seed {seed}: frontier design {} does not fit",
+                    e.design.key()
+                );
+                assert!(
+                    !p.frontier.iter().any(|o| o.dominates(e)),
+                    "seed {seed}: frontier member {} is dominated",
+                    e.design.key()
+                );
+            }
+        }
+    }
+}
