@@ -25,13 +25,24 @@
 //! does not matter, which is exactly when a reconfiguration is not
 //! worth its cost.
 //!
+//! The second act pits **reactive** against **predictive**
+//! reprovisioning on a regime-shift stream: the reactive controller
+//! only evaluates on its interval cadence, while the predictive run
+//! feeds the telemetry change-point trend into the controller
+//! ([`TelemetryConfig::feed_trend`]) so the shift's onset itself
+//! triggers the evaluation — the swap lands at least one full eval
+//! interval earlier, and the main conv wave runs on the right
+//! bitstream.
+//!
 //! Run: `cargo run --release --example elastic_serving`
 //!
 //! Observability: `--trace-out trace.json` records the elastic pool's
 //! run as a Chrome trace (Perfetto-loadable) — the estimator windows,
 //! plan decisions and the VM→SA bitstream reload show up as events on
 //! the elastic track. `--metrics-out metrics.json` writes the elastic
-//! pool's flat metrics snapshot.
+//! pool's flat metrics snapshot. `--series-out series.json` writes the
+//! predictive run's time-series document (validated by
+//! `secda trace-validate`), and `--alerts` prints every fired alert.
 
 use std::sync::Arc;
 
@@ -41,7 +52,8 @@ use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
 use secda::framework::quant::QParams;
 use secda::framework::tensor::Tensor;
-use secda::obs::export::{chrome_trace, metrics_json};
+use secda::obs::export::{chrome_trace, metrics_json, timeseries_json};
+use secda::obs::TelemetryConfig;
 use secda::sysc::SimTime;
 
 fn xorshift(st: &mut u64) -> u64 {
@@ -183,6 +195,51 @@ fn serve_stream(label: &str, cfg: CoordinatorConfig, verbose: bool) -> RunResult
     }
 }
 
+/// One run of the regime-shift stream: fabric-neutral night FC bursts
+/// establish the baseline, a trigger burst of deep-K convs shifts the
+/// regime, a lull of one eval interval passes, then the main conv
+/// wave lands. The reactive controller cannot evaluate at the trigger
+/// drain (its interval has not elapsed since the night evaluation);
+/// the predictive one can, because the telemetry change-point trend
+/// arms a one-shot bypass of the rate limit.
+fn serve_shift(cfg: CoordinatorConfig, eval_interval: SimTime) -> Coordinator {
+    let day = Arc::new(day_cam());
+    let night = Arc::new(night_mlp());
+    let mut coord = Coordinator::new(cfg);
+    let mut st = 0xf00du64;
+    // night: five FC bursts; the first drain runs (and stamps) the
+    // reactive evaluation, the rest are rate-limited
+    for _ in 0..5 {
+        for _ in 0..5 {
+            coord
+                .submit(night.clone(), image(&night, &mut st))
+                .expect("queue sized");
+            coord.advance(SimTime::ms(20));
+        }
+        coord.run_until_idle();
+    }
+    // the regime shifts: deep-K convs the VM only serves at
+    // CPU-fallback speed
+    for _ in 0..12 {
+        coord
+            .submit(day.clone(), image(&day, &mut st))
+            .expect("queue sized");
+        coord.advance(SimTime::ms(20));
+    }
+    coord.run_until_idle();
+    // a lull long enough for the reactive interval to elapse, then
+    // the main conv wave
+    coord.advance(eval_interval);
+    for _ in 0..12 {
+        coord
+            .submit(day.clone(), image(&day, &mut st))
+            .expect("queue sized");
+        coord.advance(SimTime::ms(20));
+    }
+    coord.run_until_idle();
+    coord
+}
+
 /// Strip a `--flag <value>` pair from the arg vector.
 fn take_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
     let i = args.iter().position(|a| a == flag)?;
@@ -192,10 +249,23 @@ fn take_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
     Some(v)
 }
 
+/// Strip a bare `--flag` switch from the arg vector.
+fn take_switch(args: &mut Vec<String>, flag: &str) -> bool {
+    match args.iter().position(|a| a == flag) {
+        Some(i) => {
+            args.remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let trace_out = take_flag(&mut args, "--trace-out");
     let metrics_out = take_flag(&mut args, "--metrics-out");
+    let series_out = take_flag(&mut args, "--series-out");
+    let show_alerts = take_switch(&mut args, "--alerts");
     println!("=== elastic serving: diurnal conv->fc shift on one Zynq-7020 ===\n");
 
     let elastic_cfg = ElasticConfig {
@@ -303,5 +373,83 @@ fn main() {
         let metrics = elastic.metrics.as_ref().expect("tracing was enabled");
         std::fs::write(path, metrics).expect("write metrics");
         println!("metrics snapshot -> {path}");
+    }
+
+    // --- act two: reactive vs predictive reprovisioning -------------
+    println!("\n=== predictive reprovisioning: telemetry trend vs interval cadence ===\n");
+    let shift_elastic = ElasticConfig {
+        eval_interval: SimTime::ms(5_000),
+        window: SimTime::ms(2_500),
+        min_samples: 4,
+        hysteresis: SimTime::ms(10),
+        max_swaps: 1,
+        cpu_max: 0,
+        ..ElasticConfig::default()
+    };
+    let eval_interval = shift_elastic.eval_interval;
+    let shift_base = CoordinatorConfig {
+        queue_depth: 64,
+        sa_workers: 0,
+        vm_workers: 1,
+        cpu_workers: 0,
+        elastic: Some(shift_elastic),
+        ..CoordinatorConfig::default()
+    };
+    let reactive = serve_shift(shift_base.clone(), eval_interval);
+    let predictive = serve_shift(
+        shift_base.with_telemetry(TelemetryConfig {
+            feed_trend: true,
+            ..TelemetryConfig::default()
+        }),
+        eval_interval,
+    );
+    let react_at = reactive
+        .elastic_history()
+        .first()
+        .expect("reactive controller must swap once the interval elapses")
+        .at;
+    let pred_at = predictive
+        .elastic_history()
+        .first()
+        .expect("predictive controller must swap at the regime shift")
+        .at;
+    let lead = react_at.saturating_sub(pred_at);
+    let (p99_react, p99_pred) = (
+        reactive.metrics().latency_pct(0.99),
+        predictive.metrics().latency_pct(0.99),
+    );
+    println!(
+        "reactive swap at   {react_at} (interval cadence)\n\
+         predictive swap at {pred_at} (change-point trend)\n\
+         lead: {lead} (eval interval {eval_interval}); p99 {p99_pred} vs {p99_react}"
+    );
+    assert!(
+        lead >= eval_interval,
+        "predictive swap must lead the reactive one by >= one eval \
+         interval (lead {lead}, interval {eval_interval})"
+    );
+    assert!(
+        p99_pred <= p99_react,
+        "predictive p99 {p99_pred} must not regress reactive p99 {p99_react}"
+    );
+    if show_alerts {
+        println!("\nfired alerts (predictive run):");
+        for a in predictive.alerts() {
+            println!(
+                "  t={} {} on `{}`: value {:.3} vs threshold {:.3} (window {})",
+                a.at,
+                a.kind.name(),
+                a.series,
+                a.value,
+                a.threshold,
+                a.window
+            );
+        }
+    }
+    if let Some(path) = &series_out {
+        let bank = predictive.telemetry_series().expect("predictive run has telemetry");
+        let doc = timeseries_json(bank, predictive.alerts());
+        std::fs::write(path, doc).expect("write series");
+        println!("time-series document -> {path} (validate: secda trace-validate {path})");
     }
 }

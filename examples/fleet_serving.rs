@@ -22,6 +22,10 @@
 //! the per-board request/batch/GEMM tracks side by side.
 //! `--metrics-out metrics.json` writes the fleet metrics snapshot
 //! (`fleet.*` aggregates plus `board{N}.*` breakdowns).
+//! `--series-out series.json` enables fleet telemetry on the portfolio
+//! run and writes the merged fleet-level time-series document
+//! (validated by `secda trace-validate`); `--alerts` prints every
+//! fleet-level alert the burn-rate/change-point engine fired.
 
 use std::sync::Arc;
 
@@ -32,7 +36,8 @@ use secda::framework::graph::{Graph, GraphBuilder};
 use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
 use secda::framework::quant::QParams;
 use secda::framework::tensor::Tensor;
-use secda::obs::export::metrics_json;
+use secda::obs::export::{metrics_json, timeseries_json};
+use secda::obs::TelemetryConfig;
 use secda::sysc::SimTime;
 
 fn xorshift(st: &mut u64) -> u64 {
@@ -165,10 +170,23 @@ fn take_flag(args: &mut Vec<String>, flag: &str) -> Option<String> {
     Some(v)
 }
 
+/// Strip a bare `--flag` switch from the arg vector.
+fn take_switch(args: &mut Vec<String>, flag: &str) -> bool {
+    match args.iter().position(|a| a == flag) {
+        Some(i) => {
+            args.remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let trace_out = take_flag(&mut args, "--trace-out");
     let metrics_out = take_flag(&mut args, "--metrics-out");
+    let series_out = take_flag(&mut args, "--series-out");
+    let show_alerts = take_switch(&mut args, "--alerts");
     println!("=== fleet serving: one serving stack, N modeled boards ===\n");
 
     // --- scaling: mixed burst across 1/2/4 boards -------------------
@@ -222,6 +240,9 @@ fn main() {
         });
     if trace_out.is_some() || metrics_out.is_some() {
         fcfg = fcfg.with_tracing(1 << 16);
+    }
+    if series_out.is_some() || show_alerts {
+        fcfg = fcfg.with_telemetry(TelemetryConfig::default());
     }
     let deep = Arc::new(deep_cam());
     let mut fleet = Fleet::new(fcfg);
@@ -283,5 +304,29 @@ fn main() {
         let json = metrics_json(&m.registry());
         std::fs::write(path, &json).expect("write metrics");
         println!("fleet metrics snapshot -> {path}");
+    }
+    if show_alerts {
+        println!("\nfleet-level alerts:");
+        let alerts = fleet.fleet_alerts();
+        if alerts.is_empty() {
+            println!("  (none fired — the fleet stayed inside its error budget)");
+        }
+        for a in alerts {
+            println!(
+                "  t={} {} on `{}`: value {:.3} vs threshold {:.3} (window {})",
+                a.at,
+                a.kind.name(),
+                a.series,
+                a.value,
+                a.threshold,
+                a.window
+            );
+        }
+    }
+    if let Some(path) = &series_out {
+        let bank = fleet.fleet_series().expect("telemetry enabled for --series-out");
+        let doc = timeseries_json(bank, fleet.fleet_alerts());
+        std::fs::write(path, doc).expect("write series");
+        println!("fleet time-series document -> {path} (validate: secda trace-validate {path})");
     }
 }

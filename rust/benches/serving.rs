@@ -51,6 +51,7 @@ use secda::framework::models;
 use secda::framework::ops::{Activation, Conv2d, FullyConnected, GlobalAvgPool, Op, SoftmaxOp};
 use secda::framework::quant::QParams;
 use secda::framework::tensor::Tensor;
+use secda::obs::TelemetryConfig;
 use secda::sysc::SimTime;
 
 fn xorshift(st: &mut u64) -> u64 {
@@ -436,9 +437,12 @@ fn serve_phase_shift(cfg: CoordinatorConfig, slo: SimTime) -> ElasticStats {
     }
 }
 
-/// The three pool configurations of the elastic sweep (shared by the
-/// human table and the `json` mode).
-fn elastic_runs() -> [(&'static str, CoordinatorConfig); 3] {
+/// The pool configurations of the elastic sweep (shared by the human
+/// table and the `json` mode). The `elastic+trend` row is the same
+/// elastic pool with telemetry's change-point trend feeding the
+/// controller, so the reprovisioning evaluation can fire ahead of the
+/// interval cadence.
+fn elastic_runs() -> [(&'static str, CoordinatorConfig); 4] {
     let base = CoordinatorConfig {
         queue_depth: 64,
         ..CoordinatorConfig::default()
@@ -468,9 +472,23 @@ fn elastic_runs() -> [(&'static str, CoordinatorConfig); 3] {
                 sa_workers: 0,
                 vm_workers: 1,
                 cpu_workers: 0,
-                elastic: Some(elastic_cfg),
+                elastic: Some(elastic_cfg.clone()),
                 ..base.clone()
             },
+        ),
+        (
+            "elastic+trend (pred)",
+            CoordinatorConfig {
+                sa_workers: 0,
+                vm_workers: 1,
+                cpu_workers: 0,
+                elastic: Some(elastic_cfg),
+                ..base.clone()
+            }
+            .with_telemetry(TelemetryConfig {
+                feed_trend: true,
+                ..TelemetryConfig::default()
+            }),
         ),
         (
             "static 1xVM (worst)",

@@ -184,6 +184,15 @@ pub struct CoordinatorConfig {
     /// (`Arc`) because under [`ExecMode::Threaded`] every worker
     /// thread records into the same instance.
     pub spans: Arc<SpanRecorder>,
+    /// Streaming telemetry ([`crate::obs::timeseries`]): when set, the
+    /// coordinator samples ring-buffer time series at every drain
+    /// boundary and evaluates SLO burn-rate / change-point alert rules
+    /// over them. `None` (the default) records nothing. Telemetry is
+    /// inert like tracing — sampling only reads already-computed state
+    /// (pinned by `prop_telemetry_is_inert`); only the opt-in
+    /// [`crate::obs::TelemetryConfig::feed_trend`] closes the loop
+    /// into the elastic controller.
+    pub telemetry: Option<crate::obs::TelemetryConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -204,6 +213,7 @@ impl Default for CoordinatorConfig {
             policy: Arc::new(FifoPolicy),
             elastic: None,
             spans: Arc::new(SpanRecorder::disabled()),
+            telemetry: None,
         }
     }
 }
@@ -247,6 +257,16 @@ impl CoordinatorConfig {
     pub fn with_tracing(mut self, cap: usize) -> Self {
         self.spans = Arc::new(SpanRecorder::enabled(cap));
         self.driver.sim_trace = 32;
+        self
+    }
+
+    /// The same configuration with streaming telemetry enabled
+    /// ([`crate::obs::TelemetryConfig`]): drain-boundary time series,
+    /// burn-rate and change-point alerting, and — when the config opts
+    /// into `feed_trend` — the predictive trend signal into the
+    /// elastic controller.
+    pub fn with_telemetry(mut self, telemetry: crate::obs::TelemetryConfig) -> Self {
+        self.telemetry = Some(telemetry);
         self
     }
 }
@@ -379,10 +399,80 @@ pub struct Coordinator {
     metrics: ServingMetrics,
     /// Traffic-aware reprovisioning, when configured.
     elastic: Option<crate::elastic::ElasticController>,
+    /// Streaming telemetry (series bank + alert engine), when
+    /// configured.
+    telemetry: Option<Telemetry>,
     /// The modeled "now": arrivals are stamped with it; `advance`
     /// moves it (load generation), `run_until_idle` never rewinds it.
     now: SimTime,
     next_id: u64,
+}
+
+/// Streaming telemetry state for one coordinator: the series bank the
+/// drain boundary samples into, and the alert engine evaluated over
+/// it. Sampling only *reads* serving state, so telemetry can never
+/// perturb the modeled timeline.
+struct Telemetry {
+    cfg: crate::obs::TelemetryConfig,
+    series: crate::obs::SeriesBank,
+    engine: crate::obs::AlertEngine,
+}
+
+impl Telemetry {
+    fn new(cfg: crate::obs::TelemetryConfig) -> Self {
+        let series = crate::obs::SeriesBank::new(cfg.capacity);
+        let engine = crate::obs::AlertEngine::new(&cfg);
+        Telemetry { cfg, series, engine }
+    }
+
+    /// Take one drain-boundary sample of every canonical series.
+    fn sample(
+        &mut self,
+        now: SimTime,
+        m: &ServingMetrics,
+        pool: &WorkerPool,
+        done: &[Completion],
+    ) {
+        use crate::obs::timeseries::names;
+        let s = &mut self.series;
+        s.counter(names::SUBMITTED).push_counter(now, m.submitted);
+        s.counter(names::COMPLETED).push_counter(now, m.completed);
+        s.counter(names::SHED).push_counter(now, m.shed_predicted);
+        s.counter(names::STEALS).push_counter(now, m.steals);
+        s.counter(names::SLO_ATTAINED).push_counter(now, m.slo_attained);
+        s.counter(names::SLO_MISSED).push_counter(now, m.slo_missed);
+        s.gauge(names::QUEUE_PEAK).push_gauge(now, m.queue_peak as f64);
+        s.gauge(names::REQ_S).push_gauge(now, m.throughput_rps());
+        s.gauge(names::LATENCY_P99_MS).push_gauge(now, m.latency_pct(0.99).as_ms_f64());
+        s.gauge(names::SLO_ATTAINMENT).push_gauge(now, m.slo_attainment());
+        s.gauge(names::DRAIN_REQUESTS).push_gauge(now, done.len() as f64);
+        // Per-drain mean latency via an order-independent integer sum:
+        // the threaded drain returns completions in id order, the
+        // modeled one in execution order, and the sample must be
+        // bit-identical across exec modes.
+        let mean_ms = if done.is_empty() {
+            0.0
+        } else {
+            let sum_ps: u128 = done.iter().map(|c| c.latency().as_ps() as u128).sum();
+            (sum_ps / done.len() as u128) as f64 / 1e9
+        };
+        s.gauge(names::DRAIN_LATENCY_MS).push_gauge(now, mean_ms);
+        let makespan = m.makespan();
+        for w in &pool.workers {
+            s.gauge(&format!("util.{}", w.label())).push_gauge(now, w.utilization(makespan));
+        }
+    }
+}
+
+/// The instant span recorded for one fired telemetry alert.
+fn alert_span(a: &crate::obs::Alert) -> Span {
+    let mut s = Span::instant(Stage::Alert, a.at);
+    s.attrs.push(("kind", a.kind.name().to_string()));
+    s.attrs.push(("series", a.series.clone()));
+    s.attrs.push(("value", format!("{:.3}", a.value)));
+    s.attrs.push(("threshold", format!("{:.3}", a.threshold)));
+    s.attrs.push(("window", a.window.to_string()));
+    s
 }
 
 impl Coordinator {
@@ -406,6 +496,7 @@ impl Coordinator {
                 &cfg.vm_design,
             )
         });
+        let telemetry = cfg.telemetry.clone().map(Telemetry::new);
         Coordinator {
             cfg,
             pool,
@@ -413,6 +504,7 @@ impl Coordinator {
             check,
             metrics: ServingMetrics::default(),
             elastic,
+            telemetry,
             now: SimTime::ZERO,
             next_id: 0,
         }
@@ -631,12 +723,29 @@ impl Coordinator {
         if let Some(last) = done.iter().map(|c| c.finished).max() {
             self.now = self.now.max(last);
         }
+        // telemetry sampling at the drain boundary: reads metrics the
+        // drain already computed, so the modeled timeline is untouched
+        // (pinned by prop_telemetry_is_inert)
+        let mut trend = None;
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.sample(self.now, &self.metrics, &self.pool, &done);
+            let fired = tel.engine.evaluate(self.now, &tel.series);
+            for a in &fired {
+                self.cfg.spans.record(|| alert_span(a));
+            }
+            if tel.cfg.feed_trend {
+                trend = Some(tel.engine.trend());
+            }
+        }
         // elastic evaluation at the drain boundary: the pool is idle
         // (threaded workers have joined), so a reconfiguration never
         // races in-flight work in either exec mode
         if let Some(mut ctrl) = self.elastic.take() {
             for c in &done {
                 ctrl.observe(c);
+            }
+            if let Some(t) = trend {
+                ctrl.note_trend(t);
             }
             let plan = ctrl.evaluate(self.now, self.composition(), &self.pool);
             if let Some(profile) = ctrl.take_last_profile() {
@@ -735,6 +844,42 @@ impl Coordinator {
     /// Export a drained run with [`crate::obs::export::chrome_trace`].
     pub fn spans(&self) -> &SpanRecorder {
         &self.cfg.spans
+    }
+
+    /// The telemetry series bank sampled at every drain boundary
+    /// (`None` without a telemetry config).
+    pub fn telemetry_series(&self) -> Option<&crate::obs::SeriesBank> {
+        self.telemetry.as_ref().map(|t| &t.series)
+    }
+
+    /// Every telemetry alert fired so far, in firing order (empty
+    /// without a telemetry config).
+    pub fn alerts(&self) -> &[crate::obs::Alert] {
+        self.telemetry
+            .as_ref()
+            .map(|t| t.engine.alerts())
+            .unwrap_or(&[])
+    }
+
+    /// The serving metrics registry, with every telemetry series
+    /// registered alongside (`series.<name>.*` entries) when telemetry
+    /// is configured.
+    pub fn metrics_registry(&self) -> crate::obs::MetricsRegistry {
+        let mut reg = self.metrics.registry();
+        if let Some(tel) = &self.telemetry {
+            tel.series.register_into(&mut reg);
+        }
+        reg
+    }
+
+    /// Chrome-trace export of this coordinator's spans, with telemetry
+    /// counter tracks merged in when telemetry is configured.
+    pub fn chrome_trace(&self) -> String {
+        let spans = self.cfg.spans.snapshot();
+        match &self.telemetry {
+            Some(tel) => crate::obs::export::chrome_trace_with_series(&spans, &tel.series),
+            None => crate::obs::export::chrome_trace(&spans),
+        }
     }
 
     /// The shared executable-cache model (compiles / hits / buckets).

@@ -45,6 +45,11 @@ pub struct ElasticController {
     planner: CompositionPlanner,
     costs: DesignCosts,
     last_eval: Option<SimTime>,
+    /// Armed by a non-zero telemetry trend signal: the next evaluate
+    /// bypasses the eval-interval rate limit once, so a detected
+    /// regime shift is planned against one interval earlier than the
+    /// reactive cadence would allow.
+    pending_eval: bool,
     /// The window summary the most recent full evaluation ran against
     /// (set once the `min_samples` gate passes, whether or not a plan
     /// came out) — drained by the coordinator's observability layer.
@@ -89,6 +94,7 @@ impl ElasticController {
             planner,
             costs: DesignCosts::for_designs(threads, sync_overhead, sa, vm),
             last_eval: None,
+            pending_eval: false,
             last_profile: None,
             history: Vec::new(),
         }
@@ -97,6 +103,19 @@ impl ElasticController {
     /// Fold one completion into the traffic window.
     pub fn observe(&mut self, c: &Completion) {
         self.estimator.observe(c);
+    }
+
+    /// Feed the telemetry change-point trend signal
+    /// ([`crate::obs::AlertEngine::trend`]). A non-zero trend stamps
+    /// the next profile ([`TrafficProfile::trend`]) and arms a one-shot
+    /// bypass of the evaluation rate limit — the predictive half of
+    /// reprovisioning: react to the shift's onset, not to the next
+    /// scheduled window.
+    pub fn note_trend(&mut self, trend: f64) {
+        self.estimator.set_trend(trend);
+        if trend != 0.0 {
+            self.pending_eval = true;
+        }
     }
 
     /// Evaluate the planner against the current traffic window.
@@ -109,9 +128,12 @@ impl ElasticController {
         current: Composition,
         pool: &WorkerPool,
     ) -> Option<ReconfigPlan> {
-        if let Some(last) = self.last_eval {
-            if now.saturating_sub(last) < self.cfg.eval_interval {
-                return None;
+        let pending = std::mem::take(&mut self.pending_eval);
+        if !pending {
+            if let Some(last) = self.last_eval {
+                if now.saturating_sub(last) < self.cfg.eval_interval {
+                    return None;
+                }
             }
         }
         self.last_eval = Some(now);
@@ -200,5 +222,41 @@ mod tests {
         assert!(ctrl.evaluate(SimTime::ms(150), current, pool).is_none());
         assert_eq!(ctrl.last_eval, Some(SimTime::ms(150)));
         assert!(ctrl.history().is_empty());
+    }
+
+    #[test]
+    fn trend_signal_bypasses_the_rate_limit_once() {
+        let drv = DriverConfig::default();
+        let cfg = ElasticConfig {
+            eval_interval: SimTime::ms(100),
+            min_samples: 3,
+            cpu_max: 0,
+            ..ElasticConfig::default()
+        };
+        let mut ctrl = ElasticController::new(cfg, drv.threads, drv.sync_overhead);
+        let coord = Coordinator::new(CoordinatorConfig::sa_pool(1));
+        let pool = coord.pool();
+        let current = Composition::new(1, 0, 0);
+        let g = Arc::new(convnet("net", 16, 3));
+
+        assert!(ctrl.evaluate(SimTime::ms(0), current, pool).is_none());
+        for i in 1..=3u64 {
+            ctrl.estimator
+                .observe_request(&g, SimTime::ms(i), SimTime::ms(i + 1), None);
+        }
+        // in-regime trend does not arm the bypass
+        ctrl.note_trend(0.0);
+        assert!(ctrl.evaluate(SimTime::ms(40), current, pool).is_none());
+        assert_eq!(ctrl.last_eval, Some(SimTime::ms(0)));
+        // a regime shift does: the evaluation runs inside the interval
+        // and the profile carries the trend
+        ctrl.note_trend(2.5);
+        assert!(ctrl.evaluate(SimTime::ms(50), current, pool).is_none());
+        assert_eq!(ctrl.last_eval, Some(SimTime::ms(50)));
+        let profile = ctrl.take_last_profile().expect("gate passed");
+        assert_eq!(profile.trend, 2.5);
+        // the bypass is one-shot: the next call rate-limits again
+        assert!(ctrl.evaluate(SimTime::ms(60), current, pool).is_none());
+        assert_eq!(ctrl.last_eval, Some(SimTime::ms(50)));
     }
 }

@@ -37,6 +37,13 @@ pub struct TrafficProfile {
     pub slo_carrying: usize,
     /// Deadline-carrying samples that finished past their deadline.
     pub slo_missed: usize,
+    /// Change-point trend signal from the telemetry layer
+    /// ([`crate::obs::AlertEngine::trend`]): 0.0 in-regime, else the
+    /// signed sigma-normalized deviation of the shifted latency or
+    /// arrival gauge. Early warning only — the planner still prices
+    /// compositions from the windowed demand; the controller uses a
+    /// non-zero trend to evaluate ahead of its rate limit.
+    pub trend: f64,
 }
 
 impl TrafficProfile {
@@ -70,6 +77,7 @@ pub struct WorkloadEstimator {
     window: SimTime,
     samples: VecDeque<Sample>,
     shape_memo: ShapeMemo,
+    trend: f64,
 }
 
 impl WorkloadEstimator {
@@ -80,7 +88,21 @@ impl WorkloadEstimator {
             window,
             samples: VecDeque::new(),
             shape_memo: Vec::new(),
+            trend: 0.0,
         }
+    }
+
+    /// Set the change-point trend signal the next profile will carry
+    /// (see [`TrafficProfile::trend`]). The telemetry layer feeds this
+    /// every drain; it decays to whatever the caller last set, never
+    /// on its own.
+    pub fn set_trend(&mut self, trend: f64) {
+        self.trend = trend;
+    }
+
+    /// The trend signal currently staged for the next profile.
+    pub fn trend(&self) -> f64 {
+        self.trend
     }
 
     /// Fold one completion into the window.
@@ -183,6 +205,7 @@ impl WorkloadEstimator {
             demand,
             slo_carrying,
             slo_missed,
+            trend: self.trend,
         })
     }
 }

@@ -395,6 +395,7 @@ mod tests {
             demand: vec![(GemmShape { m: 96, k: 4608, n: 196 }, requests as u64)],
             slo_carrying: 0,
             slo_missed: 0,
+            trend: 0.0,
         }
     }
 
@@ -484,6 +485,7 @@ mod tests {
             demand: vec![(shape, 8)],
             slo_carrying: 0,
             slo_missed: 0,
+            trend: 0.0,
         };
         let mut c = costs();
         let sa_prior = p.score(&Composition::new(1, 0, 0), &profile, &c);

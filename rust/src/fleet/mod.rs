@@ -90,6 +90,11 @@ pub struct FleetConfig {
     /// from `board.elastic`, which re-plans each board against only
     /// its own traffic; enable one or the other, not both.
     pub portfolio: Option<ElasticConfig>,
+    /// Streaming telemetry, fleet-wide: every board gets its own
+    /// series bank + alert engine
+    /// ([`CoordinatorConfig::with_telemetry`]), and the fleet keeps a
+    /// merged fleet-level bank sampled at fleet drain boundaries.
+    pub telemetry: Option<crate::obs::TelemetryConfig>,
     /// Per-board span-recorder capacity, when tracing.
     trace_cap: Option<usize>,
 }
@@ -102,6 +107,7 @@ impl Default for FleetConfig {
             ingress: IngressModel::default(),
             gossip: GossipConfig::default(),
             portfolio: None,
+            telemetry: None,
             trace_cap: None,
         }
     }
@@ -135,6 +141,14 @@ impl FleetConfig {
     /// Enable fleet-wide portfolio planning.
     pub fn with_portfolio(mut self, cfg: ElasticConfig) -> Self {
         self.portfolio = Some(cfg);
+        self
+    }
+
+    /// Enable streaming telemetry on every board plus the fleet-level
+    /// merged series ([`Fleet::fleet_series`]) and alert engine
+    /// ([`Fleet::fleet_alerts`]).
+    pub fn with_telemetry(mut self, telemetry: crate::obs::TelemetryConfig) -> Self {
+        self.telemetry = Some(telemetry);
         self
     }
 
@@ -231,6 +245,7 @@ impl Portfolio {
             // misses round *down*: phantom misses would overstate SLO
             // pressure on every board
             slo_missed: profile.slo_missed / n,
+            trend: profile.trend,
         }
     }
 
@@ -275,6 +290,82 @@ impl Portfolio {
     }
 }
 
+/// Fleet-level streaming telemetry: one merged series bank + alert
+/// engine over the whole fleet's traffic, sampled at fleet drain
+/// boundaries (each board additionally samples its own bank at its
+/// own drain boundaries). Sampling only reads already-aggregated
+/// state, so the modeled timeline is untouched.
+struct FleetTelemetry {
+    series: crate::obs::SeriesBank,
+    engine: crate::obs::AlertEngine,
+}
+
+impl FleetTelemetry {
+    fn new(cfg: crate::obs::TelemetryConfig) -> Self {
+        FleetTelemetry {
+            series: crate::obs::SeriesBank::new(cfg.capacity),
+            engine: crate::obs::AlertEngine::new(&cfg),
+        }
+    }
+
+    /// One fleet drain-boundary sample: counters summed across boards,
+    /// gauges from the aggregate fleet view, per-board utilization.
+    fn sample(
+        &mut self,
+        now: SimTime,
+        fm: &FleetMetrics,
+        boards: &[Coordinator],
+        done: &[BoardCompletion],
+    ) {
+        use crate::obs::timeseries::names;
+        let mut submitted = 0u64;
+        let mut steals = 0u64;
+        let mut slo_attained = 0u64;
+        let mut slo_missed = 0u64;
+        let mut queue_peak = 0usize;
+        for b in boards {
+            let sm = b.metrics();
+            submitted += sm.submitted;
+            steals += sm.steals;
+            slo_attained += sm.slo_attained;
+            slo_missed += sm.slo_missed;
+            queue_peak = queue_peak.max(sm.queue_peak);
+        }
+        let s = &mut self.series;
+        s.counter(names::SUBMITTED).push_counter(now, submitted);
+        s.counter(names::COMPLETED).push_counter(now, fm.completed);
+        s.counter(names::SHED).push_counter(now, fm.shed_predicted);
+        s.counter(names::STEALS).push_counter(now, steals);
+        s.counter(names::SLO_ATTAINED).push_counter(now, slo_attained);
+        s.counter(names::SLO_MISSED).push_counter(now, slo_missed);
+        s.gauge(names::QUEUE_PEAK).push_gauge(now, queue_peak as f64);
+        s.gauge(names::REQ_S).push_gauge(now, fm.throughput_rps());
+        s.gauge(names::LATENCY_P99_MS).push_gauge(now, fm.latency_pct(0.99).as_ms_f64());
+        let attainment = if slo_attained + slo_missed == 0 {
+            1.0
+        } else {
+            slo_attained as f64 / (slo_attained + slo_missed) as f64
+        };
+        s.gauge(names::SLO_ATTAINMENT).push_gauge(now, attainment);
+        s.gauge(names::DRAIN_REQUESTS).push_gauge(now, done.len() as f64);
+        // order-independent integer mean, exactly as the per-board
+        // sampler computes it (bit-identical across exec modes)
+        let mean_ms = if done.is_empty() {
+            0.0
+        } else {
+            let sum_ps: u128 = done
+                .iter()
+                .map(|bc| bc.completion.latency().as_ps() as u128)
+                .sum();
+            (sum_ps / done.len() as u128) as f64 / 1e9
+        };
+        s.gauge(names::DRAIN_LATENCY_MS).push_gauge(now, mean_ms);
+        for b in &fm.boards {
+            s.gauge(&format!("util.board{}", b.board)).push_gauge(now, b.utilization);
+        }
+    }
+}
+
 /// N board replicas behind a gossip-fed, cost-model router.
 ///
 /// The API mirrors [`Coordinator`]: submit, advance the modeled
@@ -287,6 +378,7 @@ pub struct Fleet {
     router: Router,
     gossip: GossipTable,
     portfolio: Option<Portfolio>,
+    telemetry: Option<FleetTelemetry>,
     ingress: IngressModel,
     placements: Vec<Placement>,
     now: SimTime,
@@ -305,6 +397,9 @@ impl Fleet {
                 if let Some(cap) = cfg.trace_cap {
                     bc = bc.with_tracing(cap);
                 }
+                if let Some(tel) = &cfg.telemetry {
+                    bc = bc.with_telemetry(tel.clone());
+                }
                 Coordinator::new(bc)
             })
             .collect();
@@ -313,11 +408,13 @@ impl Fleet {
         let router = Router::new(cfg.ingress, threads, sync);
         let gossip = GossipTable::new(cfg.gossip, &boards, SimTime::ZERO);
         let portfolio = cfg.portfolio.map(|p| Portfolio::new(p, threads, sync));
+        let telemetry = cfg.telemetry.map(FleetTelemetry::new);
         Fleet {
             boards,
             router,
             gossip,
             portfolio,
+            telemetry,
             ingress: cfg.ingress,
             placements: Vec::new(),
             now: SimTime::ZERO,
@@ -455,6 +552,15 @@ impl Fleet {
             p.evaluate(self.now, &mut self.boards);
             self.portfolio = Some(p);
         }
+        // fleet-level telemetry sample + alert evaluation (after the
+        // portfolio block, so a portfolio swap is visible in this
+        // drain's composition-dependent gauges)
+        if let Some(mut tel) = self.telemetry.take() {
+            let fm = self.metrics();
+            tel.sample(self.now, &fm, &self.boards, &out);
+            tel.engine.evaluate(self.now, &tel.series);
+            self.telemetry = Some(tel);
+        }
         self.gossip.refresh_all(self.now, &self.boards);
         out
     }
@@ -503,12 +609,42 @@ impl Fleet {
         FleetMetrics::aggregate(&self.boards, self.makespan())
     }
 
+    /// The fleet-level telemetry series bank, sampled at every fleet
+    /// drain boundary (`None` without [`FleetConfig::with_telemetry`];
+    /// per-board banks live on each board,
+    /// [`Coordinator::telemetry_series`]).
+    pub fn fleet_series(&self) -> Option<&crate::obs::SeriesBank> {
+        self.telemetry.as_ref().map(|t| &t.series)
+    }
+
+    /// Fleet-level alerts fired so far, in firing order (empty without
+    /// a telemetry config; per-board alerts live on each board,
+    /// [`Coordinator::alerts`]).
+    pub fn fleet_alerts(&self) -> &[crate::obs::Alert] {
+        self.telemetry
+            .as_ref()
+            .map(|t| t.engine.alerts())
+            .unwrap_or(&[])
+    }
+
     /// Export the whole fleet run as one Chrome trace: one process per
     /// board, each with the full per-board track layout (requires
-    /// [`FleetConfig::with_tracing`]). Validates under
+    /// [`FleetConfig::with_tracing`]). With telemetry configured, each
+    /// board's counter tracks ride under its pid and the fleet-level
+    /// bank becomes its own `fleet` process. Validates under
     /// [`crate::obs::export::validate_chrome_trace`].
     pub fn chrome_trace(&self) -> String {
         let per_board: Vec<_> = self.boards.iter().map(|b| b.spans().snapshot()).collect();
-        crate::obs::export::fleet_chrome_trace(&per_board)
+        match &self.telemetry {
+            Some(tel) => {
+                let banks: Vec<_> = self.boards.iter().map(|b| b.telemetry_series()).collect();
+                crate::obs::export::fleet_chrome_trace_with_series(
+                    &per_board,
+                    &banks,
+                    Some(&tel.series),
+                )
+            }
+            None => crate::obs::export::fleet_chrome_trace(&per_board),
+        }
     }
 }

@@ -12,8 +12,10 @@
 //! secda devtime                  Eq. 1-3 development-time model
 //! secda dse [flags]              parallel design-space exploration campaign
 //! secda runtime-check            PJRT artifact numerics vs CPU gemm
-//! secda trace-validate <trace.json> [metrics.json]
-//!                                check an exported observability file
+//! secda trace-validate <file...>  check exported observability files
+//! secda report <file> [--profile <trace.json>]
+//!                                summarize a metrics / time-series export
+//! secda bench-diff <old> <new>   perf-regression gate over bench snapshots
 //! ```
 
 use std::process::ExitCode;
@@ -38,6 +40,8 @@ fn main() -> ExitCode {
         "dse" => cmd_dse(&args[1..]),
         "runtime-check" => cmd_runtime_check(),
         "trace-validate" => cmd_trace_validate(&args[1..]),
+        "report" => cmd_report(&args[1..]),
+        "bench-diff" => cmd_bench_diff(&args[1..]),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             ExitCode::SUCCESS
@@ -69,10 +73,20 @@ COMMANDS:
   dse --validate <pareto.json>
                           validate a Pareto document written by --out
   runtime-check           verify PJRT artifacts against the CPU gemm
-  trace-validate <trace.json> [metrics.json]
-                          validate exported Chrome-trace / metrics JSON
-                          (files written by the examples' --trace-out /
-                          --metrics-out flags)
+  trace-validate <file...>
+                          validate exported observability JSON (Chrome
+                          trace, metrics snapshot or time-series document;
+                          the schema is auto-detected per file)
+  report <file> [--profile <trace.json>] [--top N] [--collapsed FILE]
+                          summarize a metrics snapshot or time-series
+                          document: per-series stats, fired alerts, and
+                          (with --profile) the top-N self-time frames
+                          folded from a Chrome trace; --collapsed writes
+                          flamegraph-ready collapsed stacks
+  bench-diff <committed.json> <new.json> [--tol FRACTION]
+                          diff two serving-bench snapshots with per-metric
+                          tolerance (default 0.10): fail on throughput /
+                          tail-latency regressions beyond the tolerance
 ";
 
 fn cmd_table2(args: &[String]) -> ExitCode {
@@ -426,45 +440,391 @@ fn cmd_dse(args: &[String]) -> ExitCode {
 }
 
 fn cmd_trace_validate(args: &[String]) -> ExitCode {
-    use secda::obs::export::{validate_chrome_trace, validate_metrics_json};
-    let Some(trace_path) = args.first() else {
-        eprintln!("usage: secda trace-validate <trace.json> [metrics.json]");
+    use secda::obs::export::{
+        validate_chrome_trace, validate_metrics_json, validate_timeseries_json,
+        METRICS_SCHEMA, TIMESERIES_SCHEMA,
+    };
+    if args.is_empty() {
+        eprintln!("usage: secda trace-validate <file...>");
         return ExitCode::FAILURE;
-    };
-    let trace = match std::fs::read_to_string(trace_path) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("cannot read {trace_path}: {e}");
-            return ExitCode::FAILURE;
-        }
-    };
-    match validate_chrome_trace(&trace) {
-        Ok(c) => println!(
-            "{trace_path}: OK — {} events ({} slices, {} instants, {} tracks, {} flows)",
-            c.events, c.slices, c.instants, c.tracks, c.flows
-        ),
-        Err(e) => {
-            eprintln!("{trace_path}: INVALID — {e}");
-            return ExitCode::FAILURE;
-        }
     }
-    if let Some(metrics_path) = args.get(1) {
-        let metrics = match std::fs::read_to_string(metrics_path) {
-            Ok(m) => m,
+    for path in args {
+        let doc = match std::fs::read_to_string(path) {
+            Ok(t) => t,
             Err(e) => {
-                eprintln!("cannot read {metrics_path}: {e}");
+                eprintln!("cannot read {path}: {e}");
                 return ExitCode::FAILURE;
             }
         };
-        match validate_metrics_json(&metrics) {
-            Ok(n) => println!("{metrics_path}: OK — {n} metrics"),
+        // schema sniff: exported documents carry their tag inline; a
+        // Chrome trace has no tag, so it is the fallback
+        let result = if doc.contains(METRICS_SCHEMA) {
+            validate_metrics_json(&doc).map(|n| format!("{n} metrics"))
+        } else if doc.contains(TIMESERIES_SCHEMA) {
+            validate_timeseries_json(&doc).map(|(s, a)| format!("{s} series, {a} alerts"))
+        } else {
+            validate_chrome_trace(&doc).map(|c| {
+                format!(
+                    "{} events ({} slices, {} instants, {} tracks, {} flows, {} counters)",
+                    c.events, c.slices, c.instants, c.tracks, c.flows, c.counters
+                )
+            })
+        };
+        match result {
+            Ok(what) => println!("{path}: OK — {what}"),
             Err(e) => {
-                eprintln!("{metrics_path}: INVALID — {e}");
+                eprintln!("{path}: INVALID — {e}");
                 return ExitCode::FAILURE;
             }
         }
     }
     ExitCode::SUCCESS
+}
+
+fn cmd_report(args: &[String]) -> ExitCode {
+    use secda::obs::export::{METRICS_SCHEMA, TIMESERIES_SCHEMA};
+    let Some(path) = args.first() else {
+        eprintln!(
+            "usage: secda report <file> [--profile <trace.json>] [--top N] [--collapsed FILE]"
+        );
+        return ExitCode::FAILURE;
+    };
+    let mut profile_path: Option<String> = None;
+    let mut top = 10usize;
+    let mut collapsed_out: Option<String> = None;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--profile" => match args.get(i + 1) {
+                Some(p) => {
+                    profile_path = Some(p.clone());
+                    i += 2;
+                }
+                None => {
+                    eprintln!("flag --profile needs a value");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--top" => match args.get(i + 1).and_then(|s| s.parse().ok()) {
+                Some(n) => {
+                    top = n;
+                    i += 2;
+                }
+                None => {
+                    eprintln!("flag --top needs a number");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--collapsed" => match args.get(i + 1) {
+                Some(p) => {
+                    collapsed_out = Some(p.clone());
+                    i += 2;
+                }
+                None => {
+                    eprintln!("flag --collapsed needs a value");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("unknown report flag `{other}` (see `secda help`)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let doc = match std::fs::read_to_string(path) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let summarized = if doc.contains(TIMESERIES_SCHEMA) {
+        report_timeseries(path, &doc)
+    } else if doc.contains(METRICS_SCHEMA) {
+        report_metrics(path, &doc)
+    } else {
+        Err("not a secda metrics or time-series document (no schema tag)".into())
+    };
+    if let Err(e) = summarized {
+        eprintln!("{path}: {e}");
+        return ExitCode::FAILURE;
+    }
+    if let Some(tp) = profile_path {
+        if let Err(e) = report_profile(&tp, top, collapsed_out.as_deref()) {
+            eprintln!("{tp}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+/// Per-series summary + fired alerts of a `secda-timeseries-v1` file.
+fn report_timeseries(path: &str, doc: &str) -> Result<(), String> {
+    use secda::obs::export::validate_timeseries_json;
+    use secda::obs::json::Json;
+    let (ns, na) = validate_timeseries_json(doc)?;
+    let j = Json::parse(doc)?;
+    println!("{path}: time-series document ({ns} series, {na} alerts)");
+    println!(
+        "  {:<22} {:>7} {:>7} {:>7} {:>12} {:>12} {:>12}",
+        "series", "kind", "samples", "dropped", "last", "min", "max"
+    );
+    for s in j.get("series").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = s.get("name").and_then(Json::as_str).unwrap_or("?");
+        let kind = s.get("kind").and_then(Json::as_str).unwrap_or("?");
+        let dropped = s.get("dropped").and_then(Json::as_f64).unwrap_or(0.0);
+        let mut last = 0.0f64;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let points = s.get("points").and_then(Json::as_arr).unwrap_or(&[]);
+        for p in points {
+            if let Some(v) = p.as_arr().and_then(|a| a.get(1)).and_then(Json::as_f64) {
+                last = v;
+                min = min.min(v);
+                max = max.max(v);
+            }
+        }
+        if points.is_empty() {
+            min = 0.0;
+            max = 0.0;
+        }
+        println!(
+            "  {:<22} {:>7} {:>7} {:>7} {:>12.3} {:>12.3} {:>12.3}",
+            name,
+            kind,
+            points.len(),
+            dropped,
+            last,
+            min,
+            max
+        );
+    }
+    let alerts = j.get("alerts").and_then(Json::as_arr).unwrap_or(&[]);
+    if alerts.is_empty() {
+        println!("  no alerts fired");
+    } else {
+        println!("  alerts:");
+        for a in alerts {
+            let num = |k: &str| a.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "    t={:.3} ms  {} on `{}`: value {:.3} vs threshold {:.3} (window {:.0} ms)",
+                num("at_us") / 1e3,
+                a.get("kind").and_then(Json::as_str).unwrap_or("?"),
+                a.get("series").and_then(Json::as_str).unwrap_or("?"),
+                num("value"),
+                num("threshold"),
+                num("window_us") / 1e3,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Counters / gauges / histograms of a `secda-metrics-v1` snapshot.
+fn report_metrics(path: &str, doc: &str) -> Result<(), String> {
+    use secda::obs::export::validate_metrics_json;
+    use secda::obs::json::Json;
+    let n = validate_metrics_json(doc)?;
+    let j = Json::parse(doc)?;
+    println!("{path}: metrics snapshot ({n} metrics)");
+    for section in ["counters", "gauges"] {
+        if let Some(obj) = j.get(section).and_then(Json::as_obj) {
+            if !obj.is_empty() {
+                println!("  {section}:");
+                for (name, v) in obj {
+                    println!("    {:<36} {}", name, v.as_f64().unwrap_or(0.0));
+                }
+            }
+        }
+    }
+    if let Some(obj) = j.get("histograms").and_then(Json::as_obj) {
+        if !obj.is_empty() {
+            println!("  histograms:");
+            for (name, h) in obj {
+                let num = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                println!(
+                    "    {:<36} count {} mean {:.1} p50 {} p99 {}",
+                    name,
+                    num("count"),
+                    num("mean"),
+                    num("p50"),
+                    num("p99"),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fold a Chrome trace into the self-time attribution profile and
+/// print the top-N frames (optionally writing collapsed stacks).
+fn report_profile(trace_path: &str, top: usize, collapsed_out: Option<&str>) -> Result<(), String> {
+    let trace = std::fs::read_to_string(trace_path)
+        .map_err(|e| format!("cannot read {trace_path}: {e}"))?;
+    let prof = secda::obs::AttributionProfile::from_chrome_trace(&trace)?;
+    println!(
+        "{trace_path}: profile — {} stacks, {:.3} ms total self time",
+        prof.len(),
+        prof.total_ns() as f64 / 1e6
+    );
+    let total = prof.total_ns().max(1) as f64;
+    println!("  {:<44} {:>12} {:>7}", "frame", "self ms", "share");
+    for (frame, ns) in prof.top(top) {
+        println!(
+            "  {:<44} {:>12.3} {:>6.1}%",
+            frame,
+            ns as f64 / 1e6,
+            100.0 * ns as f64 / total
+        );
+    }
+    if let Some(out) = collapsed_out {
+        std::fs::write(out, prof.collapsed())
+            .map_err(|e| format!("cannot write {out}: {e}"))?;
+        println!("  collapsed stacks -> {out} (flamegraph.pl / speedscope ready)");
+    }
+    Ok(())
+}
+
+/// Row identity within a bench sweep: the non-metric keys that name
+/// the configuration a row measured.
+const BENCH_ID_KEYS: [&str; 5] = ["pool", "window_ms", "policy", "load", "boards"];
+/// Metrics where bigger is better (regression = drop beyond tolerance).
+const BENCH_HIGHER: [&str; 4] = ["req_s", "speedup", "slo_attainment", "util_mean"];
+/// Metrics where smaller is better (regression = rise beyond tolerance).
+const BENCH_LOWER: [&str; 2] = ["p50_us", "p99_us"];
+
+fn bench_row_identity(row: &secda::obs::json::Json) -> String {
+    use secda::obs::json::Json;
+    let mut s = String::new();
+    for k in BENCH_ID_KEYS {
+        if let Some(v) = row.get(k) {
+            if !s.is_empty() {
+                s.push(' ');
+            }
+            match v.as_str() {
+                Some(st) => s.push_str(&format!("{k}={st}")),
+                None => s.push_str(&format!("{k}={}", v.as_f64().unwrap_or(f64::NAN))),
+            }
+        }
+    }
+    s
+}
+
+fn cmd_bench_diff(args: &[String]) -> ExitCode {
+    use secda::obs::json::Json;
+    let (Some(committed_path), Some(new_path)) = (args.first(), args.get(1)) else {
+        eprintln!("usage: secda bench-diff <committed.json> <new.json> [--tol FRACTION]");
+        return ExitCode::FAILURE;
+    };
+    let mut tol = 0.10f64;
+    if let Some(flag) = args.get(2) {
+        if flag != "--tol" {
+            eprintln!("unknown bench-diff flag `{flag}` (see `secda help`)");
+            return ExitCode::FAILURE;
+        }
+        match args.get(3).and_then(|s| s.parse().ok()) {
+            Some(t) => tol = t,
+            None => {
+                eprintln!("flag --tol needs a fraction (e.g. 0.10)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let read = |p: &str| std::fs::read_to_string(p).map_err(|e| format!("cannot read {p}: {e}"));
+    let (committed_doc, new_doc) = match (read(committed_path), read(new_path)) {
+        (Ok(c), Ok(n)) => (c, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let parse = |p: &str, d: &str| -> Result<Json, String> {
+        let j = Json::parse(d).map_err(|e| format!("{p}: {e}"))?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some("secda-bench-serving-v1") => Ok(j),
+            other => Err(format!("{p}: bad schema tag {other:?}")),
+        }
+    };
+    let (cj, nj) = match (parse(committed_path, &committed_doc), parse(new_path, &new_doc)) {
+        (Ok(c), Ok(n)) => (c, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let committed_sweeps = cj.get("sweeps").and_then(Json::as_arr).unwrap_or(&[]);
+    let new_sweeps = nj.get("sweeps").and_then(Json::as_arr).unwrap_or(&[]);
+    if committed_sweeps.is_empty() {
+        // bootstrap: nothing committed yet — surface the regenerated
+        // snapshot so it can be committed, and pass
+        println!(
+            "{committed_path}: bootstrap placeholder (no sweeps committed); \
+             commit the regenerated snapshot printed below as {committed_path}"
+        );
+        print!("{new_doc}");
+        return ExitCode::SUCCESS;
+    }
+    let sweep_name = |s: &Json| s.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+    let mut compared = 0usize;
+    let mut regressions = 0usize;
+    for sweep in committed_sweeps {
+        let name = sweep_name(sweep);
+        let Some(new_sweep) = new_sweeps.iter().find(|s| sweep_name(s) == name) else {
+            eprintln!(
+                "sweep `{name}` missing from {new_path} — the bench matrix changed; \
+                 refresh the committed snapshot"
+            );
+            return ExitCode::FAILURE;
+        };
+        let new_rows = new_sweep.get("rows").and_then(Json::as_arr).unwrap_or(&[]);
+        for row in sweep.get("rows").and_then(Json::as_arr).unwrap_or(&[]) {
+            let id = bench_row_identity(row);
+            let Some(new_row) = new_rows.iter().find(|r| bench_row_identity(r) == id) else {
+                eprintln!(
+                    "{name}[{id}] missing from {new_path} — the bench matrix \
+                     changed; refresh the committed snapshot"
+                );
+                return ExitCode::FAILURE;
+            };
+            let Some(fields) = row.as_obj() else { continue };
+            for (key, v) in fields {
+                if BENCH_ID_KEYS.contains(&key.as_str()) {
+                    continue;
+                }
+                let Some(old) = v.as_f64() else { continue };
+                let Some(new) = new_row.get(key).and_then(Json::as_f64) else {
+                    eprintln!("{name}[{id}]: metric `{key}` missing from {new_path}");
+                    return ExitCode::FAILURE;
+                };
+                let worse = if BENCH_HIGHER.contains(&key.as_str()) {
+                    new < old * (1.0 - tol)
+                } else if BENCH_LOWER.contains(&key.as_str()) {
+                    new > old * (1.0 + tol)
+                } else {
+                    continue; // informational column (counts etc.)
+                };
+                compared += 1;
+                if worse {
+                    regressions += 1;
+                    eprintln!(
+                        "REGRESSION {name}[{id}]: {key} {old} -> {new} \
+                         (beyond {:.0}% tolerance)",
+                        tol * 100.0
+                    );
+                }
+            }
+        }
+    }
+    if regressions > 0 {
+        eprintln!("bench-diff: {regressions} regression(s) across {compared} gated metrics");
+        ExitCode::FAILURE
+    } else {
+        println!(
+            "bench-diff: OK — {compared} gated metrics within ±{:.0}% of {committed_path}",
+            tol * 100.0
+        );
+        ExitCode::SUCCESS
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]

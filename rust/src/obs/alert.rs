@@ -1,0 +1,455 @@
+//! SLO burn-rate alerting and change-point detection over the
+//! telemetry series.
+//!
+//! The [`AlertEngine`] is evaluated once per drain boundary, right
+//! after the [`super::timeseries::SeriesBank`] was sampled, and emits
+//! typed [`Alert`] records. Two rule families:
+//!
+//! * **Multi-window error-budget burn rate** (the SRE formulation):
+//!   with objective `o`, the error budget is `1 - o`; the burn rate of
+//!   a window is `windowed_error_rate / (1 - o)` computed from the
+//!   `slo_attained` / `slo_missed` counter deltas. The alert fires
+//!   when BOTH a fast and a slow window burn above the configured
+//!   factor — the fast window catches the burn early, the slow window
+//!   filters one-drain blips. The rule is latched: it re-arms only
+//!   after the fast window drops back below the factor, so a sustained
+//!   burn yields one alert, not one per drain.
+//! * **EWMA/CUSUM change-point detection** on the per-drain latency
+//!   and arrival-rate gauges: an exponentially-weighted mean/variance
+//!   tracks the regime; a sample deviating by more than `k` sigma, or
+//!   a CUSUM excursion beyond `h` sigma, fires a shift alert (also
+//!   latched). The *unlatched* deviation magnitude is exposed as
+//!   [`AlertEngine::trend`] — a continuous early-warning signal the
+//!   elastic controller's estimator can consume
+//!   ([`crate::elastic::TrafficProfile::trend`]) to begin a planned
+//!   swap one eval-interval before the reactive window catches up.
+//!
+//! Everything here is pure arithmetic over already-sampled series:
+//! evaluating alerts never touches the modeled timeline.
+
+use crate::sysc::SimTime;
+
+use super::timeseries::{names, SeriesBank, TelemetryConfig};
+
+/// What kind of rule fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertKind {
+    /// Multi-window SLO error-budget burn.
+    BurnRate,
+    /// Change-point on the per-drain latency gauge.
+    LatencyShift,
+    /// Change-point on the per-drain arrival-rate gauge.
+    ArrivalShift,
+}
+
+impl AlertKind {
+    /// Stable exported name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertKind::BurnRate => "burn_rate",
+            AlertKind::LatencyShift => "latency_shift",
+            AlertKind::ArrivalShift => "arrival_shift",
+        }
+    }
+
+    /// Inverse of [`AlertKind::name`], for schema validation.
+    pub fn from_name(s: &str) -> Option<AlertKind> {
+        match s {
+            "burn_rate" => Some(AlertKind::BurnRate),
+            "latency_shift" => Some(AlertKind::LatencyShift),
+            "arrival_shift" => Some(AlertKind::ArrivalShift),
+            _ => None,
+        }
+    }
+}
+
+/// One fired alert: when, which rule, over which series, and the
+/// window evidence that crossed the threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    /// Modeled firing time (the drain boundary that evaluated it).
+    pub at: SimTime,
+    /// Rule family.
+    pub kind: AlertKind,
+    /// Series the rule evaluated.
+    pub series: String,
+    /// Observed value: burn rate (BurnRate) or sigma-normalized
+    /// deviation (shift alerts).
+    pub value: f64,
+    /// Threshold the value crossed (burn factor, or 1.0 for the
+    /// normalized shift deviation).
+    pub threshold: f64,
+    /// Evidence window (the slow burn window, or the EWMA horizon for
+    /// shifts).
+    pub window: SimTime,
+}
+
+/// EWMA mean/variance tracker with a CUSUM excursion detector.
+///
+/// `observe` feeds one sample; [`ChangePoint::deviation`] then reports
+/// the sigma-normalized shift magnitude of that sample, normalized so
+/// 1.0 is exactly at threshold: `max(|z|/k, s+/h, s-/h)`.
+#[derive(Debug, Clone)]
+pub struct ChangePoint {
+    alpha: f64,
+    k: f64,
+    h: f64,
+    drift: f64,
+    warmup: usize,
+    seen: usize,
+    mean: f64,
+    var: f64,
+    s_pos: f64,
+    s_neg: f64,
+    deviation: f64,
+    direction: f64,
+}
+
+impl ChangePoint {
+    /// A detector with EWMA weight `alpha`, a `k`-sigma point
+    /// threshold, a CUSUM decision interval of `h` sigma (with half a
+    /// sigma of slack), and `warmup` samples of pure learning before
+    /// anything can fire.
+    pub fn new(alpha: f64, k: f64, h: f64, warmup: usize) -> Self {
+        ChangePoint {
+            alpha,
+            k,
+            h,
+            drift: 0.5,
+            warmup: warmup.max(1),
+            seen: 0,
+            mean: 0.0,
+            var: 0.0,
+            s_pos: 0.0,
+            s_neg: 0.0,
+            deviation: 0.0,
+            direction: 0.0,
+        }
+    }
+
+    /// Feed one sample; true when it crosses the EWMA or CUSUM
+    /// threshold (after warmup).
+    pub fn observe(&mut self, x: f64) -> bool {
+        if self.seen < self.warmup {
+            // Pure learning: seed the mean with a plain running
+            // average so the first samples don't anchor at zero.
+            self.seen += 1;
+            let n = self.seen as f64;
+            let prev = self.mean;
+            self.mean += (x - self.mean) / n;
+            self.var += (x - prev) * (x - self.mean);
+            if self.seen == self.warmup {
+                self.var /= n;
+            }
+            self.deviation = 0.0;
+            self.direction = 0.0;
+            return false;
+        }
+        // Sigma floor: a perfectly flat warmup must not make every
+        // later sample an infinite-sigma shift.
+        let sigma = self.var.sqrt().max(self.mean.abs() * 0.05).max(1e-9);
+        let z = (x - self.mean) / sigma;
+        self.s_pos = (self.s_pos + z - self.drift).max(0.0);
+        self.s_neg = (self.s_neg - z - self.drift).max(0.0);
+        self.deviation = (z.abs() / self.k)
+            .max(self.s_pos / self.h)
+            .max(self.s_neg / self.h);
+        self.direction = if z >= 0.0 { 1.0 } else { -1.0 };
+        let fired = self.deviation >= 1.0;
+        // Keep adapting so the tracker converges onto the new regime
+        // and the deviation decays once the shift is absorbed.
+        let d = x - self.mean;
+        self.mean += self.alpha * d;
+        self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+        fired
+    }
+
+    /// Sigma-normalized deviation of the last sample (1.0 = exactly at
+    /// threshold); 0.0 during warmup.
+    pub fn deviation(&self) -> f64 {
+        self.deviation
+    }
+
+    /// Sign of the last deviation: +1.0 upward, -1.0 downward.
+    pub fn direction(&self) -> f64 {
+        self.direction
+    }
+}
+
+/// Latching state for one rule.
+#[derive(Debug, Clone, Default)]
+struct Latch {
+    armed_off: bool,
+}
+
+impl Latch {
+    /// Returns true exactly once per excursion: on the first `hot`
+    /// after a cool period.
+    fn fire(&mut self, hot: bool) -> bool {
+        let fresh = hot && !self.armed_off;
+        self.armed_off = hot;
+        fresh
+    }
+}
+
+/// The per-scope alert evaluator: burn-rate over the SLO counters,
+/// change-points over the drain gauges.
+#[derive(Debug, Clone)]
+pub struct AlertEngine {
+    cfg: TelemetryConfig,
+    latency_cp: ChangePoint,
+    arrival_cp: ChangePoint,
+    burn_latch: Latch,
+    latency_latch: Latch,
+    arrival_latch: Latch,
+    alerts: Vec<Alert>,
+    trend: f64,
+}
+
+impl AlertEngine {
+    /// An engine with the scope's telemetry configuration.
+    pub fn new(cfg: &TelemetryConfig) -> Self {
+        AlertEngine {
+            cfg: cfg.clone(),
+            latency_cp: ChangePoint::new(0.2, 4.0, 5.0, 3),
+            arrival_cp: ChangePoint::new(0.2, 4.0, 5.0, 3),
+            burn_latch: Latch::default(),
+            latency_latch: Latch::default(),
+            arrival_latch: Latch::default(),
+            alerts: Vec::new(),
+            trend: 0.0,
+        }
+    }
+
+    /// Burn rate of the error budget over `(now - window, now]`:
+    /// `error_rate / (1 - objective)`. 0.0 when the window carried no
+    /// SLO traffic.
+    fn burn_rate(&self, bank: &SeriesBank, now: SimTime, window: SimTime) -> f64 {
+        let since = now.saturating_sub(window);
+        let att = bank
+            .get(names::SLO_ATTAINED)
+            .map(|s| s.sum_since(since))
+            .unwrap_or(0.0);
+        let miss = bank
+            .get(names::SLO_MISSED)
+            .map(|s| s.sum_since(since))
+            .unwrap_or(0.0);
+        let total = att + miss;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let budget = (1.0 - self.cfg.slo_objective).max(1e-9);
+        (miss / total) / budget
+    }
+
+    /// Evaluate every rule against the freshly-sampled bank. Returns
+    /// the alerts that fired at this boundary (also appended to
+    /// [`AlertEngine::alerts`]).
+    pub fn evaluate(&mut self, now: SimTime, bank: &SeriesBank) -> Vec<Alert> {
+        let mut fired = Vec::new();
+
+        // Multi-window burn rate: both windows must burn.
+        let fast = self.burn_rate(bank, now, self.cfg.burn_fast);
+        let slow = self.burn_rate(bank, now, self.cfg.burn_slow);
+        let hot = fast > self.cfg.burn_factor && slow > self.cfg.burn_factor;
+        if self.burn_latch.fire(hot) {
+            fired.push(Alert {
+                at: now,
+                kind: AlertKind::BurnRate,
+                series: names::SLO_MISSED.to_string(),
+                value: fast.min(slow),
+                threshold: self.cfg.burn_factor,
+                window: self.cfg.burn_slow,
+            });
+        }
+
+        // Change-points on the per-drain gauges. Each drain pushes
+        // exactly one sample, so the latest point is the new one.
+        let mut shift = |cp: &mut ChangePoint,
+                         latch: &mut Latch,
+                         series: &str,
+                         kind: AlertKind,
+                         window: SimTime|
+         -> (f64, Option<Alert>) {
+            let Some((_, x)) = bank.get(series).and_then(|s| s.last()) else {
+                return (0.0, None);
+            };
+            let hot = cp.observe(x);
+            let alert = latch.fire(hot).then(|| Alert {
+                at: now,
+                kind,
+                series: series.to_string(),
+                value: cp.deviation(),
+                threshold: 1.0,
+                window,
+            });
+            (cp.deviation() * cp.direction(), alert)
+        };
+        let horizon = self.cfg.burn_slow;
+        let (lat_dev, lat_alert) = shift(
+            &mut self.latency_cp,
+            &mut self.latency_latch,
+            names::DRAIN_LATENCY_MS,
+            AlertKind::LatencyShift,
+            horizon,
+        );
+        let (arr_dev, arr_alert) = shift(
+            &mut self.arrival_cp,
+            &mut self.arrival_latch,
+            names::DRAIN_REQUESTS,
+            AlertKind::ArrivalShift,
+            horizon,
+        );
+        fired.extend(lat_alert);
+        fired.extend(arr_alert);
+
+        // The trend signal stays continuous (unlatched): it reports
+        // the regime deviation every drain while the shift persists,
+        // so a rate-limited elastic evaluation can still catch it on
+        // the next boundary. Only above-threshold deviations count —
+        // in-regime noise must not trigger early evaluations.
+        let dom = if lat_dev.abs() >= arr_dev.abs() {
+            lat_dev
+        } else {
+            arr_dev
+        };
+        self.trend = if dom.abs() >= 1.0 { dom } else { 0.0 };
+
+        self.alerts.extend(fired.iter().cloned());
+        fired
+    }
+
+    /// Every alert fired so far, in firing order.
+    pub fn alerts(&self) -> &[Alert] {
+        &self.alerts
+    }
+
+    /// Continuous change-point trend signal: 0.0 in-regime, else the
+    /// signed sigma-normalized deviation (>= 1.0 in magnitude) of the
+    /// dominant shifted gauge.
+    pub fn trend(&self) -> f64 {
+        self.trend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo_bank(phases: &[(u64, u64, u64)]) -> (SeriesBank, SimTime) {
+        // phases: (at_ms, cumulative attained, cumulative missed)
+        let mut b = SeriesBank::new(64);
+        let mut last = SimTime::ZERO;
+        for &(at, att, miss) in phases {
+            last = SimTime::ms(at);
+            b.counter(names::SLO_ATTAINED).push_counter(last, att);
+            b.counter(names::SLO_MISSED).push_counter(last, miss);
+        }
+        (b, last)
+    }
+
+    #[test]
+    fn burn_rate_fires_once_and_rearms_after_cooling() {
+        let cfg = TelemetryConfig {
+            slo_objective: 0.9,
+            burn_fast: SimTime::ms(50),
+            burn_slow: SimTime::ms(200),
+            burn_factor: 2.0,
+            ..TelemetryConfig::default()
+        };
+        let mut eng = AlertEngine::new(&cfg);
+
+        // Healthy traffic: no burn.
+        let (bank, now) = slo_bank(&[(10, 10, 0), (20, 20, 0)]);
+        assert!(eng.evaluate(now, &bank).is_empty());
+
+        // Full-miss drain: both windows burn at 10x the budget.
+        let (bank, now) = slo_bank(&[(10, 10, 0), (20, 20, 0), (30, 20, 8)]);
+        let fired = eng.evaluate(now, &bank);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AlertKind::BurnRate);
+        assert_eq!(fired[0].at, SimTime::ms(30));
+        assert!(fired[0].value > cfg.burn_factor);
+        assert_eq!(fired[0].window, cfg.burn_slow);
+
+        // Still burning: latched, no second alert.
+        let (bank, now) = slo_bank(&[(10, 10, 0), (20, 20, 0), (30, 20, 8), (40, 20, 16)]);
+        assert!(eng.evaluate(now, &bank).is_empty());
+
+        // Cool (healthy window) then burn again: re-fires.
+        let (bank, now) = slo_bank(&[(240, 200, 16), (260, 400, 16)]);
+        assert!(eng.evaluate(now, &bank).is_empty());
+        let (bank, now) = slo_bank(&[(240, 200, 16), (260, 400, 16), (280, 400, 440)]);
+        let fired = eng.evaluate(now, &bank);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(eng.alerts().len(), 2);
+    }
+
+    #[test]
+    fn change_point_fires_on_regime_shift_and_trend_is_continuous() {
+        let mut cp = ChangePoint::new(0.2, 4.0, 5.0, 3);
+        for _ in 0..6 {
+            assert!(!cp.observe(10.0));
+            assert!(cp.deviation() < 1.0);
+        }
+        // 10x jump: immediate k-sigma violation.
+        assert!(cp.observe(100.0));
+        assert!(cp.deviation() >= 1.0);
+        assert_eq!(cp.direction(), 1.0);
+        // The tracker adapts: after enough samples at the new level
+        // the deviation decays back under threshold.
+        let mut calmed = false;
+        for _ in 0..64 {
+            cp.observe(100.0);
+            if cp.deviation() < 1.0 {
+                calmed = true;
+                break;
+            }
+        }
+        assert!(calmed, "EWMA never absorbed the new regime");
+    }
+
+    #[test]
+    fn engine_latency_shift_sets_trend_then_alert_latches() {
+        let cfg = TelemetryConfig::default();
+        let mut eng = AlertEngine::new(&cfg);
+        let mut bank = SeriesBank::new(64);
+        for i in 0..6u64 {
+            bank.gauge(names::DRAIN_LATENCY_MS)
+                .push_gauge(SimTime::ms(10 * (i + 1)), 5.0);
+            bank.gauge(names::DRAIN_REQUESTS)
+                .push_gauge(SimTime::ms(10 * (i + 1)), 4.0);
+            let fired = eng.evaluate(SimTime::ms(10 * (i + 1)), &bank);
+            assert!(fired.is_empty());
+            assert_eq!(eng.trend(), 0.0);
+        }
+        bank.gauge(names::DRAIN_LATENCY_MS)
+            .push_gauge(SimTime::ms(70), 80.0);
+        bank.gauge(names::DRAIN_REQUESTS)
+            .push_gauge(SimTime::ms(70), 4.0);
+        let fired = eng.evaluate(SimTime::ms(70), &bank);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AlertKind::LatencyShift);
+        assert!(eng.trend() >= 1.0, "trend = {}", eng.trend());
+        // Latched alert, but the trend stays continuous while hot.
+        bank.gauge(names::DRAIN_LATENCY_MS)
+            .push_gauge(SimTime::ms(80), 80.0);
+        bank.gauge(names::DRAIN_REQUESTS)
+            .push_gauge(SimTime::ms(80), 4.0);
+        let fired = eng.evaluate(SimTime::ms(80), &bank);
+        assert!(fired.is_empty());
+        assert!(eng.trend() >= 1.0);
+    }
+
+    #[test]
+    fn alert_kind_names_round_trip() {
+        for k in [
+            AlertKind::BurnRate,
+            AlertKind::LatencyShift,
+            AlertKind::ArrivalShift,
+        ] {
+            assert_eq!(AlertKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(AlertKind::from_name("nope"), None);
+    }
+}

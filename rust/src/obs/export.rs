@@ -17,8 +17,10 @@ use std::fmt::Write as _;
 
 use crate::sysc::trace::TraceEntry;
 
+use super::alert::{Alert, AlertKind};
 use super::metrics::{MetricValue, MetricsRegistry};
 use super::span::{Span, Stage};
+use super::timeseries::SeriesBank;
 
 /// Track ids within pid 0.
 const TID_COORD: u64 = 0;
@@ -171,6 +173,13 @@ impl ChromeTraceBuilder {
         e.push_str(",\"s\":\"t\"");
         Self::args_into(&mut e, args);
         e.push('}');
+        self.events.push((ts_us, 1, e));
+    }
+
+    /// A counter (`C`) event: one sample of a numeric counter track.
+    pub fn counter(&mut self, name: &str, cat: &str, ts_us: f64, pid: u64, tid: u64, value: f64) {
+        let mut e = Self::head(name, cat, 'C', ts_us, pid, tid);
+        let _ = write!(e, ",\"args\":{{\"value\":{}}}}}", fmt_f64(value));
         self.events.push((ts_us, 1, e));
     }
 
@@ -348,8 +357,57 @@ fn emit_serving_spans(b: &mut ChromeTraceBuilder, pid: u64, id_base: u64, spans:
                 b.instant("reconfigure!", "elastic", ts, pid, TID_ELASTIC, &args);
                 b.complete("reconfigure", "elastic", ts, dur, pid, TID_ELASTIC, &args);
             }
+            Stage::Alert => b.instant("alert", "alert", ts, pid, TID_COORD, &args),
         }
     }
+}
+
+/// Emit one telemetry bank as Perfetto counter tracks under `pid`:
+/// one `C` track per series (named `ts.<series>`), one sample per
+/// retained point.
+fn emit_counter_tracks(b: &mut ChromeTraceBuilder, pid: u64, bank: &SeriesBank) {
+    for s in bank.iter() {
+        let name = format!("ts.{}", s.name());
+        for (t, v) in s.points() {
+            b.counter(&name, "telemetry", t.as_us_f64(), pid, TID_COORD, v);
+        }
+    }
+}
+
+/// [`chrome_trace`] plus the telemetry bank's series merged in as
+/// Perfetto counter tracks, so the load curves render above the same
+/// worker timeline.
+pub fn chrome_trace_with_series(spans: &[Span], bank: &SeriesBank) -> String {
+    let mut b = ChromeTraceBuilder::new();
+    emit_serving_spans(&mut b, 0, 0, spans);
+    emit_counter_tracks(&mut b, 0, bank);
+    b.finish()
+}
+
+/// [`fleet_chrome_trace`] plus telemetry: per-board counter tracks
+/// under each board's pid (`series[i]`, when present), and the merged
+/// fleet-level bank as its own `fleet` process after the boards.
+pub fn fleet_chrome_trace_with_series(
+    boards: &[Vec<Span>],
+    series: &[Option<&SeriesBank>],
+    fleet: Option<&SeriesBank>,
+) -> String {
+    let mut b = ChromeTraceBuilder::new();
+    for (i, spans) in boards.iter().enumerate() {
+        let pid = i as u64;
+        b.process_name(pid, &format!("board{i}"));
+        emit_serving_spans(&mut b, pid, (pid + 1) << 32, spans);
+        if let Some(Some(bank)) = series.get(i) {
+            emit_counter_tracks(&mut b, pid, bank);
+        }
+    }
+    if let Some(bank) = fleet {
+        let pid = boards.len() as u64;
+        b.process_name(pid, "fleet");
+        b.thread_name(pid, TID_COORD, "fleet telemetry");
+        emit_counter_tracks(&mut b, pid, bank);
+    }
+    b.finish()
 }
 
 /// Export a simulator [`crate::sysc::Trace`]'s entries as Chrome
@@ -429,6 +487,125 @@ pub fn metrics_json(reg: &MetricsRegistry) -> String {
     )
 }
 
+/// Schema tag for time-series documents, checked by the validator.
+pub const TIMESERIES_SCHEMA: &str = "secda-timeseries-v1";
+
+/// Export a telemetry bank (and the alerts its engine fired) as a
+/// `secda-timeseries-v1` JSON document: per series the kind, drop
+/// count and `[t_us, value]` points; per alert the firing time, rule
+/// kind, evaluated series and window evidence.
+pub fn timeseries_json(bank: &SeriesBank, alerts: &[Alert]) -> String {
+    let mut series = String::new();
+    for s in bank.iter() {
+        if !series.is_empty() {
+            series.push(',');
+        }
+        let _ = write!(
+            series,
+            "\n    {{\"name\": \"{}\", \"kind\": \"{}\", \"dropped\": {}, \"points\": [",
+            json_escape(s.name()),
+            s.kind().name(),
+            s.dropped()
+        );
+        for (i, (t, v)) in s.points().enumerate() {
+            if i > 0 {
+                series.push(',');
+            }
+            let _ = write!(series, "[{}, {}]", fmt_f64(t.as_us_f64()), fmt_f64(v));
+        }
+        series.push_str("]}");
+    }
+    let mut al = String::new();
+    for a in alerts {
+        if !al.is_empty() {
+            al.push(',');
+        }
+        let _ = write!(
+            al,
+            "\n    {{\"at_us\": {}, \"kind\": \"{}\", \"series\": \"{}\", \"value\": {}, \"threshold\": {}, \"window_us\": {}}}",
+            fmt_f64(a.at.as_us_f64()),
+            a.kind.name(),
+            json_escape(&a.series),
+            fmt_f64(a.value),
+            fmt_f64(a.threshold),
+            fmt_f64(a.window.as_us_f64())
+        );
+    }
+    format!(
+        "{{\n  \"schema\": \"{TIMESERIES_SCHEMA}\",\n  \"series\": [{series}\n  ],\n  \"alerts\": [{al}\n  ]\n}}\n"
+    )
+}
+
+/// Validate a `secda-timeseries-v1` document: schema tag, every series
+/// has a known kind and timestamp-sorted numeric points, every alert a
+/// known rule kind and complete evidence fields. Returns
+/// `(series, alerts)` counts.
+pub fn validate_timeseries_json(json: &str) -> Result<(usize, usize), String> {
+    use super::json::Json;
+    let doc = Json::parse(json)?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == TIMESERIES_SCHEMA => {}
+        other => return Err(format!("bad schema tag {other:?} (want {TIMESERIES_SCHEMA})")),
+    }
+    let series = doc
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or("missing series array")?;
+    for s in series {
+        let name = s
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("series without name")?;
+        match s.get("kind").and_then(Json::as_str) {
+            Some("counter") | Some("gauge") => {}
+            other => return Err(format!("series {name}: unknown kind {other:?}")),
+        }
+        s.get("dropped")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("series {name}: missing dropped"))?;
+        let points = s
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("series {name}: missing points"))?;
+        let mut last = f64::NEG_INFINITY;
+        for p in points {
+            let pair = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| format!("series {name}: point is not a [ts, value] pair"))?;
+            let ts = pair[0]
+                .as_f64()
+                .ok_or_else(|| format!("series {name}: non-numeric ts"))?;
+            pair[1]
+                .as_f64()
+                .ok_or_else(|| format!("series {name}: non-numeric value"))?;
+            if ts < last {
+                return Err(format!("series {name}: timestamps not sorted"));
+            }
+            last = ts;
+        }
+    }
+    let alerts = doc
+        .get("alerts")
+        .and_then(Json::as_arr)
+        .ok_or("missing alerts array")?;
+    for (i, a) in alerts.iter().enumerate() {
+        match a.get("kind").and_then(Json::as_str) {
+            Some(k) if AlertKind::from_name(k).is_some() => {}
+            other => return Err(format!("alert {i}: unknown kind {other:?}")),
+        }
+        a.get("series")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("alert {i}: missing series"))?;
+        for field in ["at_us", "value", "threshold", "window_us"] {
+            a.get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("alert {i}: missing numeric {field}"))?;
+        }
+    }
+    Ok((series.len(), alerts.len()))
+}
+
 /// What [`validate_chrome_trace`] found in a well-formed trace.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TraceCheck {
@@ -442,6 +619,8 @@ pub struct TraceCheck {
     pub tracks: usize,
     /// Matched submit→execution flow arrows.
     pub flows: usize,
+    /// Counter (`C`) samples.
+    pub counters: usize,
 }
 
 /// Validate Chrome trace-event JSON produced by [`chrome_trace`] (or
@@ -461,6 +640,7 @@ pub fn validate_chrome_trace(json: &str) -> Result<TraceCheck, String> {
         instants: 0,
         tracks: 0,
         flows: 0,
+        counters: 0,
     };
     let mut last_ts = f64::NEG_INFINITY;
     let mut flow_starts: Vec<u64> = Vec::new();
@@ -503,6 +683,13 @@ pub fn validate_chrome_trace(json: &str) -> Result<TraceCheck, String> {
                 check.slices += 1;
             }
             "i" => check.instants += 1,
+            "C" => {
+                e.get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("event {i} ({name}): counter without numeric args.value"))?;
+                check.counters += 1;
+            }
             "s" => flow_starts.push(
                 e.get("id")
                     .and_then(Json::as_f64)
@@ -703,6 +890,51 @@ mod tests {
         ]}"#;
         assert!(validate_chrome_trace(bad).unwrap_err().contains("sorted"));
         assert!(validate_metrics_json("{\"schema\": \"nope\"}").is_err());
+    }
+
+    #[test]
+    fn counter_tracks_and_timeseries_schema_validate() {
+        use crate::obs::alert::{Alert, AlertKind};
+        use crate::obs::timeseries::SeriesBank;
+
+        let mut bank = SeriesBank::new(16);
+        bank.counter("completed").push_counter(SimTime::us(10), 3);
+        bank.counter("completed").push_counter(SimTime::us(20), 7);
+        bank.gauge("queue_peak").push_gauge(SimTime::us(20), 4.0);
+        let alerts = vec![Alert {
+            at: SimTime::us(20),
+            kind: AlertKind::BurnRate,
+            series: "slo_missed".into(),
+            value: 3.5,
+            threshold: 2.0,
+            window: SimTime::ms(2),
+        }];
+
+        // counter tracks merged into the chrome trace
+        let r = SpanRecorder::enabled(16);
+        r.record(|| {
+            let mut s = Span::new(Stage::Batch, SimTime::us(3), SimTime::us(9));
+            s.worker = Some(0);
+            s
+        });
+        let json = chrome_trace_with_series(&r.snapshot(), &bank);
+        let check = validate_chrome_trace(&json).expect("trace with counters validates");
+        assert_eq!(check.counters, 3, "{check:?}");
+        assert!(json.contains("ts.completed"), "{json}");
+
+        // fleet variant: per-board + fleet-level counter process
+        let fleet_json =
+            fleet_chrome_trace_with_series(&[r.snapshot()], &[Some(&bank)], Some(&bank));
+        let check = validate_chrome_trace(&fleet_json).expect("fleet trace validates");
+        assert_eq!(check.counters, 6, "{check:?}");
+        assert!(fleet_json.contains("\"fleet\""), "{fleet_json}");
+
+        // timeseries document round-trips through its validator
+        let doc = timeseries_json(&bank, &alerts);
+        assert_eq!(validate_timeseries_json(&doc), Ok((2, 1)));
+        assert!(validate_timeseries_json("{\"schema\": \"nope\"}").is_err());
+        let bad = doc.replace("burn_rate", "nonsense");
+        assert!(validate_timeseries_json(&bad).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! 100th percentiles are exact, which keeps the pre-existing
 //! `ServingMetrics` accessor contracts intact.
 
+use std::sync::Mutex;
+
 use crate::sysc::SimTime;
 
 /// Sub-bucket resolution: each octave splits into `2^SUB_BITS` buckets.
@@ -19,7 +21,6 @@ const SUB: usize = 1 << SUB_BITS;
 
 /// A streaming log-linear histogram over `u64` values (picoseconds,
 /// when used for [`SimTime`] samples).
-#[derive(Clone)]
 pub struct Histogram {
     /// Lazily allocated on first record so an empty histogram is free.
     buckets: Vec<u64>,
@@ -27,6 +28,28 @@ pub struct Histogram {
     sum: u128,
     min: u64,
     max: u64,
+    /// Bumped by every mutation ([`Histogram::record`],
+    /// [`Histogram::merge`]); pairs with `cached` below.
+    generation: u64,
+    /// The snapshot computed at `generation`, so repeated registry
+    /// reads between mutations (the fleet summary path samples every
+    /// board's registry at every drain) are O(1) instead of four
+    /// O(buckets) quantile scans each.
+    cached: Mutex<Option<(u64, HistogramSnapshot)>>,
+}
+
+impl Clone for Histogram {
+    fn clone(&self) -> Self {
+        Histogram {
+            buckets: self.buckets.clone(),
+            count: self.count,
+            sum: self.sum,
+            min: self.min,
+            max: self.max,
+            generation: self.generation,
+            cached: Mutex::new(self.cached.lock().expect("snapshot cache").clone()),
+        }
+    }
 }
 
 impl Default for Histogram {
@@ -58,6 +81,8 @@ impl Histogram {
             sum: 0,
             min: u64::MAX,
             max: 0,
+            generation: 0,
+            cached: Mutex::new(None),
         }
     }
 
@@ -94,6 +119,7 @@ impl Histogram {
         self.sum += v as u128;
         self.min = self.min.min(v);
         self.max = self.max.max(v);
+        self.generation += 1;
     }
 
     /// Record one [`SimTime`] sample (its picosecond count).
@@ -122,6 +148,7 @@ impl Histogram {
         self.sum += other.sum;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
+        self.generation += 1;
     }
 
     /// Number of recorded samples.
@@ -183,9 +210,17 @@ impl Histogram {
     }
 
     /// A fixed summary (count/min/max/mean and standard quantiles)
-    /// for the registry and the JSON exporter.
+    /// for the registry and the JSON exporter. Cached per mutation
+    /// generation: the first call after a `record`/`merge` pays the
+    /// four quantile scans, every repeated call is an O(1) clone.
     pub fn snapshot(&self) -> HistogramSnapshot {
-        HistogramSnapshot {
+        let mut cache = self.cached.lock().expect("snapshot cache");
+        if let Some((g, snap)) = cache.as_ref() {
+            if *g == self.generation {
+                return snap.clone();
+            }
+        }
+        let snap = HistogramSnapshot {
             count: self.count(),
             min: self.min(),
             max: self.max(),
@@ -194,7 +229,9 @@ impl Histogram {
             p90: self.quantile(0.90),
             p99: self.quantile(0.99),
             p999: self.quantile(0.999),
-        }
+        };
+        *cache = Some((self.generation, snap.clone()));
+        snap
     }
 }
 
@@ -392,6 +429,30 @@ mod tests {
         e.merge(&Histogram::new());
         assert_eq!(e.count(), 0);
         assert_eq!(e.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_cache_invalidates_on_mutation() {
+        let mut h = Histogram::new();
+        h.record(100);
+        let first = h.snapshot();
+        // repeated reads at the same generation come from the cache
+        // and must be identical
+        assert_eq!(h.snapshot(), first);
+        // a record invalidates: the next snapshot sees the new sample
+        h.record(1_000_000);
+        let second = h.snapshot();
+        assert_eq!(second.count, 2);
+        assert!(second.max >= 1_000_000);
+        // a merge invalidates too
+        let mut other = Histogram::new();
+        other.record(5);
+        h.merge(&other);
+        assert_eq!(h.snapshot().count, 3);
+        assert_eq!(h.snapshot().min, 5);
+        // clones carry the cache but stay independently consistent
+        let c = h.clone();
+        assert_eq!(c.snapshot(), h.snapshot());
     }
 
     #[test]

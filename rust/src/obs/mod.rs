@@ -23,15 +23,30 @@
 //!   submit to completion, reconfigurations as instant events) and a
 //!   flat metrics JSON snapshot, plus schema validators used by the
 //!   `secda trace-validate` subcommand and CI.
+//! * [`timeseries`] / [`alert`] — the streaming telemetry engine:
+//!   fixed-capacity ring-buffer series sampled at drain boundaries,
+//!   multi-window SLO burn-rate rules and EWMA/CUSUM change-point
+//!   detection over them, and a continuous trend signal the elastic
+//!   controller can consume for predictive reprovisioning.
+//! * [`profile`] — continuous-profiling attribution: fold batch/
+//!   request/GEMM/op slices into a per-(layer, route, worker kind)
+//!   self-time profile with collapsed-stack (flamegraph) export.
 //!
-//! Tracing is *provably inert*: span recording only reads values the
-//! coordinator already computed, so outputs are bit-identical with
-//! tracing on or off (pinned by `prop_tracing_is_inert`).
+//! Tracing and telemetry are *provably inert*: recording and sampling
+//! only read values the coordinator already computed, so outputs are
+//! bit-identical with them on or off (pinned by
+//! `prop_tracing_is_inert` / `prop_telemetry_is_inert`).
 
+pub mod alert;
 pub mod export;
 pub mod json;
 pub mod metrics;
+pub mod profile;
 pub mod span;
+pub mod timeseries;
 
+pub use alert::{Alert, AlertEngine, AlertKind, ChangePoint};
 pub use metrics::{Histogram, MetricValue, MetricsRegistry};
+pub use profile::AttributionProfile;
 pub use span::{Span, SpanRecorder, Stage};
+pub use timeseries::{SeriesBank, SeriesKind, TelemetryConfig, TimeSeries};

@@ -1,0 +1,400 @@
+//! Continuous-profiling attribution: fold recorded `Batch`/`Request`/
+//! `Gemm`/`Op` span slices into a self-time profile keyed by collapsed
+//! stacks, so "where did the modeled cycles go" is one command
+//! (`secda report --profile trace.json`) instead of a Perfetto
+//! session.
+//!
+//! Stacks follow the slice nesting the scheduler already guarantees —
+//! a worker's batches nest the requests they executed, which nest the
+//! per-layer GEMM/op slices — and frames carry the attribution axes:
+//! worker kind + design (from the batch's worker label), model, layer
+//! and route. Self time is a slice's duration minus its children, so
+//! the profile partitions modeled time with no double counting. The
+//! text export is flamegraph-collapsed format (`frame;frame;... N`,
+//! one stack per line, N in nanoseconds of modeled self time), which
+//! `inferno`/`flamegraph.pl`/speedscope all ingest directly.
+//!
+//! Two entry points: [`AttributionProfile::from_spans`] for in-process
+//! span snapshots, and [`AttributionProfile::from_chrome_trace`] for
+//! an exported trace JSON — both feed the same geometric-containment
+//! fold, so a post-hoc trace file attributes identically to a live
+//! run.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+use super::span::{Span, Stage};
+
+/// Nesting rank of an attributable slice: batches contain requests
+/// contain compute slices.
+fn stage_rank(stage: Stage) -> Option<u8> {
+    match stage {
+        Stage::Batch => Some(0),
+        Stage::Request => Some(1),
+        Stage::Gemm | Stage::Op => Some(2),
+        _ => None,
+    }
+}
+
+/// One attributable slice, normalized from either source.
+struct Slice {
+    /// Track key: `(pid, tid)` for traces, `(0, worker)` for spans.
+    key: (u64, u64),
+    start_ps: u64,
+    end_ps: u64,
+    rank: u8,
+    /// Root worker frame, used when this slice is stack-bottom.
+    root: String,
+    /// This slice's own frame label.
+    frame: String,
+}
+
+fn attr<'a>(attrs: &'a [(&'static str, String)], key: &str) -> Option<&'a str> {
+    attrs
+        .iter()
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v.as_str())
+}
+
+/// A self-time profile over collapsed stacks.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AttributionProfile {
+    /// `frame;frame;...` → modeled self time in nanoseconds.
+    stacks: BTreeMap<String, u64>,
+}
+
+impl AttributionProfile {
+    /// Fold an in-process span snapshot.
+    pub fn from_spans(spans: &[Span]) -> Self {
+        let mut slices = Vec::new();
+        for s in spans {
+            let Some(rank) = stage_rank(s.stage) else {
+                continue;
+            };
+            let Some(w) = s.worker else { continue };
+            if s.t_end <= s.t_start {
+                continue;
+            }
+            let root = match attr(&s.attrs, "worker") {
+                Some(l) => format!("worker:{l}"),
+                None => format!("worker:w{w}"),
+            };
+            let frame = match s.stage {
+                Stage::Batch => format!("batch:{}", attr(&s.attrs, "model").unwrap_or("?")),
+                Stage::Request => {
+                    format!("request:{}", attr(&s.attrs, "model").unwrap_or("?"))
+                }
+                Stage::Gemm => format!(
+                    "gemm:{}:{}",
+                    attr(&s.attrs, "layer").unwrap_or("?"),
+                    attr(&s.attrs, "route").unwrap_or("?")
+                ),
+                Stage::Op => format!("op:{}", attr(&s.attrs, "layer").unwrap_or("?")),
+                _ => unreachable!("stage_rank filtered"),
+            };
+            slices.push(Slice {
+                key: (0, w as u64),
+                start_ps: s.t_start.as_ps(),
+                end_ps: s.t_end.as_ps(),
+                rank,
+                root,
+                frame,
+            });
+        }
+        Self::fold(slices)
+    }
+
+    /// Fold an exported Chrome trace (the `X` slices of
+    /// [`super::export::chrome_trace`] or the fleet variant).
+    pub fn from_chrome_trace(json: &str) -> Result<Self, String> {
+        let doc = Json::parse(json)?;
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or("missing traceEvents array")?;
+        let mut slices = Vec::new();
+        for e in events {
+            if e.get("ph").and_then(Json::as_str) != Some("X") {
+                continue;
+            }
+            let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+            let sarg = |k: &str| -> Option<String> {
+                e.get("args")
+                    .and_then(|a| a.get(k))
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+            };
+            let (rank, frame, worker_label) = if name == "batch" {
+                (
+                    0u8,
+                    format!("batch:{}", sarg("model").unwrap_or_else(|| "?".into())),
+                    sarg("worker"),
+                )
+            } else if name == "request" || name.starts_with("request ") {
+                (
+                    1,
+                    format!("request:{}", sarg("model").unwrap_or_else(|| "?".into())),
+                    None,
+                )
+            } else if name == "gemm" {
+                (
+                    2,
+                    format!(
+                        "gemm:{}:{}",
+                        sarg("layer").unwrap_or_else(|| "?".into()),
+                        sarg("route").unwrap_or_else(|| "?".into())
+                    ),
+                    None,
+                )
+            } else if name == "op" {
+                (
+                    2,
+                    format!("op:{}", sarg("layer").unwrap_or_else(|| "?".into())),
+                    None,
+                )
+            } else {
+                continue;
+            };
+            let num = |k: &str| -> Result<f64, String> {
+                e.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("slice {name}: missing numeric {k}"))
+            };
+            let ts = num("ts")?;
+            let dur = num("dur")?;
+            if dur <= 0.0 {
+                continue;
+            }
+            let pid = num("pid")? as u64;
+            let tid = num("tid")? as u64;
+            let root = match worker_label {
+                Some(l) => format!("worker:{l}"),
+                None => format!("worker:p{pid}t{tid}"),
+            };
+            slices.push(Slice {
+                key: (pid, tid),
+                // trace timestamps are microseconds
+                start_ps: (ts * 1e6).round() as u64,
+                end_ps: ((ts + dur) * 1e6).round() as u64,
+                rank,
+                root,
+                frame,
+            });
+        }
+        Ok(Self::fold(slices))
+    }
+
+    /// The geometric-containment fold shared by both sources: per
+    /// track, sweep slices in start order keeping the stack of open
+    /// ancestors; a slice's self time is its duration minus the
+    /// durations of its direct children.
+    fn fold(mut slices: Vec<Slice>) -> Self {
+        slices.sort_by(|a, b| {
+            a.key
+                .cmp(&b.key)
+                .then(a.start_ps.cmp(&b.start_ps))
+                .then(b.end_ps.cmp(&a.end_ps))
+                .then(a.rank.cmp(&b.rank))
+                .then(a.frame.cmp(&b.frame))
+        });
+        struct Open {
+            end_ps: u64,
+            path: String,
+            dur_ps: u64,
+            child_ps: u64,
+        }
+        let mut stacks: BTreeMap<String, u64> = BTreeMap::new();
+        let mut flush = |o: Open| {
+            let self_ns = o.dur_ps.saturating_sub(o.child_ps) / 1_000;
+            if self_ns > 0 {
+                *stacks.entry(o.path).or_insert(0) += self_ns;
+            }
+        };
+        let mut open: Vec<Open> = Vec::new();
+        let mut cur_key = None;
+        for s in slices {
+            if cur_key != Some(s.key) {
+                while let Some(o) = open.pop() {
+                    flush(o);
+                }
+                cur_key = Some(s.key);
+            }
+            while open.last().is_some_and(|o| o.end_ps <= s.start_ps) {
+                let o = open.pop().expect("checked");
+                flush(o);
+            }
+            let dur_ps = s.end_ps - s.start_ps;
+            let path = match open.last_mut() {
+                Some(parent) => {
+                    parent.child_ps += dur_ps;
+                    format!("{};{}", parent.path, s.frame)
+                }
+                None => format!("{};{}", s.root, s.frame),
+            };
+            open.push(Open {
+                end_ps: s.end_ps,
+                path,
+                dur_ps,
+                child_ps: 0,
+            });
+        }
+        while let Some(o) = open.pop() {
+            flush(o);
+        }
+        AttributionProfile { stacks }
+    }
+
+    /// Collapsed-stack text: one `frame;frame;... self_ns` line per
+    /// stack, lexicographically ordered (deterministic).
+    pub fn collapsed(&self) -> String {
+        let mut out = String::new();
+        for (path, ns) in &self.stacks {
+            out.push_str(path);
+            out.push(' ');
+            out.push_str(&ns.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Top `n` leaf frames by aggregate self time (descending, name
+    /// tie-break ascending).
+    pub fn top(&self, n: usize) -> Vec<(String, u64)> {
+        let mut by_leaf: BTreeMap<&str, u64> = BTreeMap::new();
+        for (path, ns) in &self.stacks {
+            let leaf = path.rsplit(';').next().unwrap_or(path);
+            *by_leaf.entry(leaf).or_insert(0) += ns;
+        }
+        let mut v: Vec<(String, u64)> = by_leaf
+            .into_iter()
+            .map(|(k, ns)| (k.to_string(), ns))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// Total attributed self time, nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.stacks.values().sum()
+    }
+
+    /// Number of distinct stacks.
+    pub fn len(&self) -> usize {
+        self.stacks.len()
+    }
+
+    /// True when nothing was attributable.
+    pub fn is_empty(&self) -> bool {
+        self.stacks.is_empty()
+    }
+
+    /// Iterate `(stack, self_ns)` in stack order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.stacks.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::chrome_trace;
+    use crate::sysc::SimTime;
+
+    fn slice(
+        stage: Stage,
+        w: usize,
+        t0: u64,
+        t1: u64,
+        attrs: &[(&'static str, &str)],
+    ) -> Span {
+        let mut s = Span::new(stage, SimTime::us(t0), SimTime::us(t1));
+        s.worker = Some(w);
+        s.request_id = Some(0);
+        s.attrs = attrs.iter().map(|(k, v)| (*k, v.to_string())).collect();
+        s
+    }
+
+    fn golden_spans() -> Vec<Span> {
+        vec![
+            slice(
+                Stage::Batch,
+                0,
+                0,
+                100,
+                &[("worker", "sa0:SA"), ("model", "m"), ("size", "1")],
+            ),
+            slice(Stage::Request, 0, 10, 90, &[("model", "m")]),
+            slice(
+                Stage::Gemm,
+                0,
+                10,
+                50,
+                &[("layer", "m.c1"), ("route", "accel"), ("shape", "8x9x4")],
+            ),
+            slice(Stage::Op, 0, 50, 90, &[("layer", "m.gap")]),
+        ]
+    }
+
+    #[test]
+    fn self_time_partitions_the_batch() {
+        let p = AttributionProfile::from_spans(&golden_spans());
+        // batch 100us − request 80us = 20us; request 80 − 40 − 40 = 0
+        // (dropped); gemm and op keep their full 40us.
+        assert_eq!(
+            p.collapsed(),
+            "worker:sa0:SA;batch:m 20000\n\
+             worker:sa0:SA;batch:m;request:m;gemm:m.c1:accel 40000\n\
+             worker:sa0:SA;batch:m;request:m;op:m.gap 40000\n"
+        );
+        assert_eq!(p.total_ns(), 100_000);
+        let top = p.top(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].1, 40_000);
+    }
+
+    #[test]
+    fn trace_round_trip_attributes_identically() {
+        let spans = golden_spans();
+        let from_spans = AttributionProfile::from_spans(&spans);
+        let from_trace = AttributionProfile::from_chrome_trace(&chrome_trace(&spans))
+            .expect("trace parses");
+        assert_eq!(from_spans, from_trace);
+    }
+
+    #[test]
+    fn sibling_batches_do_not_nest() {
+        let spans = vec![
+            slice(
+                Stage::Batch,
+                0,
+                0,
+                10,
+                &[("worker", "sa0:SA"), ("model", "a")],
+            ),
+            // second batch starts exactly where the first ends
+            slice(
+                Stage::Batch,
+                0,
+                10,
+                30,
+                &[("worker", "sa0:SA"), ("model", "b")],
+            ),
+            // other worker overlaps in time but is its own track
+            slice(
+                Stage::Batch,
+                1,
+                0,
+                30,
+                &[("worker", "vm1:VM"), ("model", "c")],
+            ),
+        ];
+        let p = AttributionProfile::from_spans(&spans);
+        assert_eq!(
+            p.collapsed(),
+            "worker:sa0:SA;batch:a 10000\n\
+             worker:sa0:SA;batch:b 20000\n\
+             worker:vm1:VM;batch:c 30000\n"
+        );
+    }
+}

@@ -43,6 +43,9 @@ pub enum Stage {
     Plan,
     /// A fabric reconfiguration (bitstream load) in progress.
     Reconfigure,
+    /// A telemetry alert fired (instant; carries kind, series and the
+    /// window evidence as attributes).
+    Alert,
 }
 
 impl Stage {
@@ -60,6 +63,7 @@ impl Stage {
             Stage::EstimatorWindow => "estimator_window",
             Stage::Plan => "plan",
             Stage::Reconfigure => "reconfigure",
+            Stage::Alert => "alert",
         }
     }
 }

@@ -1,0 +1,363 @@
+//! Streaming time-series: fixed-capacity ring-buffer series sampled at
+//! modeled-time drain boundaries.
+//!
+//! Where [`super::metrics`] answers "what are the totals now", a
+//! [`TimeSeries`] answers "how did this signal move" — each sample is
+//! a `(SimTime, f64)` point taken by the coordinator (or the fleet
+//! router) at the end of a drain, in BOTH exec modes, so the series is
+//! as deterministic as the modeled timeline itself. Two kinds:
+//!
+//! * **counter** series store per-sample *deltas* of a monotonic
+//!   total (`push_counter` takes the cumulative value and diffs it
+//!   against the previous push), so windowed sums — the input of the
+//!   SLO burn-rate rules in [`super::alert`] — are a plain range sum;
+//! * **gauge** series store point-in-time readings (queue depth, p99,
+//!   per-worker utilization, per-drain arrival counts).
+//!
+//! A [`SeriesBank`] owns the series of one telemetry scope (one
+//! coordinator, one fleet) with deterministic get-or-create order, and
+//! knows how to fold last-values into a [`MetricsRegistry`] snapshot.
+//! JSON export (`secda-timeseries-v1`) and Perfetto counter tracks
+//! live in [`super::export`].
+//!
+//! Telemetry is inert by construction, like span tracing: sampling
+//! only reads values the serving layer already computed, so outputs
+//! and modeled timelines are bit-identical with telemetry on or off
+//! (pinned by `prop_telemetry_is_inert`).
+
+use std::collections::VecDeque;
+
+use crate::sysc::SimTime;
+
+use super::metrics::MetricsRegistry;
+
+/// Canonical series names sampled by the serving layers (coordinator
+/// and fleet use the same taxonomy so one alert engine reads both).
+pub mod names {
+    /// Counter: requests accepted into the queue.
+    pub const SUBMITTED: &str = "submitted";
+    /// Counter: requests completed.
+    pub const COMPLETED: &str = "completed";
+    /// Counter: requests shed by predictive admission control.
+    pub const SHED: &str = "shed";
+    /// Counter: work-stealing events.
+    pub const STEALS: &str = "steals";
+    /// Counter: SLO-carrying requests that met their deadline.
+    pub const SLO_ATTAINED: &str = "slo_attained";
+    /// Counter: SLO-carrying requests that missed their deadline.
+    pub const SLO_MISSED: &str = "slo_missed";
+    /// Gauge: peak queue depth seen so far.
+    pub const QUEUE_PEAK: &str = "queue_peak";
+    /// Gauge: modeled throughput (requests per modeled second).
+    pub const REQ_S: &str = "req_s";
+    /// Gauge: p99 end-to-end latency, milliseconds.
+    pub const LATENCY_P99_MS: &str = "latency_p99_ms";
+    /// Gauge: fraction of SLO-carrying requests that met the deadline.
+    pub const SLO_ATTAINMENT: &str = "slo_attainment";
+    /// Gauge: requests completed by the drain that took this sample —
+    /// the arrival-rate signal the change-point detector watches.
+    pub const DRAIN_REQUESTS: &str = "drain_requests";
+    /// Gauge: mean end-to-end latency of that drain's completions, in
+    /// milliseconds — the latency-shift signal.
+    pub const DRAIN_LATENCY_MS: &str = "drain_latency_ms";
+}
+
+/// Configuration of the streaming telemetry engine
+/// ([`crate::coordinator::CoordinatorConfig::telemetry`],
+/// [`crate::fleet::FleetConfig::with_telemetry`]).
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Ring capacity per series; the oldest points drop beyond it
+    /// (the drop count is kept, nothing else is lost silently).
+    pub capacity: usize,
+    /// SLO attainment objective the burn-rate rules guard: the target
+    /// fraction of SLO-carrying requests that meet their deadline.
+    pub slo_objective: f64,
+    /// Fast burn-rate evidence window (catches sharp burns).
+    pub burn_fast: SimTime,
+    /// Slow burn-rate evidence window (filters blips: both windows
+    /// must burn before the alert fires).
+    pub burn_slow: SimTime,
+    /// Error-budget burn factor both windows must exceed to fire
+    /// (1.0 = burning exactly the budget).
+    pub burn_factor: f64,
+    /// Feed the change-point trend signal into the elastic
+    /// controller's estimator ([`crate::elastic::TrafficProfile::
+    /// trend`]), letting a planned swap begin one eval-interval early.
+    /// Off by default so telemetry stays a pure observer.
+    pub feed_trend: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            capacity: 1024,
+            slo_objective: 0.99,
+            burn_fast: SimTime::ms(250),
+            burn_slow: SimTime::ms(2_000),
+            burn_factor: 2.0,
+            feed_trend: false,
+        }
+    }
+}
+
+/// What a series' points mean.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeriesKind {
+    /// Per-sample deltas of a monotonic total.
+    Counter,
+    /// Point-in-time readings.
+    Gauge,
+}
+
+impl SeriesKind {
+    /// Stable exported name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeriesKind::Counter => "counter",
+            SeriesKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One fixed-capacity ring-buffer series.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    name: String,
+    kind: SeriesKind,
+    cap: usize,
+    points: VecDeque<(SimTime, f64)>,
+    dropped: u64,
+    /// Counters only: the cumulative total of the previous push, so
+    /// the stored point is the delta.
+    last_total: u64,
+}
+
+impl TimeSeries {
+    fn new(name: &str, kind: SeriesKind, cap: usize) -> Self {
+        TimeSeries {
+            name: name.to_string(),
+            kind,
+            cap: cap.max(1),
+            points: VecDeque::new(),
+            dropped: 0,
+            last_total: 0,
+        }
+    }
+
+    /// Series name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Counter or gauge.
+    pub fn kind(&self) -> SeriesKind {
+        self.kind
+    }
+
+    /// Number of retained points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no point has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Points evicted by the ring capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained points, oldest first.
+    pub fn points(&self) -> impl Iterator<Item = (SimTime, f64)> + '_ {
+        self.points.iter().copied()
+    }
+
+    /// The most recent point.
+    pub fn last(&self) -> Option<(SimTime, f64)> {
+        self.points.back().copied()
+    }
+
+    /// Counters only: the cumulative total as of the last push.
+    pub fn total(&self) -> u64 {
+        self.last_total
+    }
+
+    fn push(&mut self, at: SimTime, v: f64) {
+        if self.points.len() == self.cap {
+            self.points.pop_front();
+            self.dropped += 1;
+        }
+        self.points.push_back((at, v));
+    }
+
+    /// Record a gauge reading.
+    pub fn push_gauge(&mut self, at: SimTime, v: f64) {
+        debug_assert_eq!(self.kind, SeriesKind::Gauge);
+        self.push(at, v);
+    }
+
+    /// Record a counter sample from its *cumulative* total; the stored
+    /// point is the delta since the previous push (the first push
+    /// stores the whole total). Totals are monotonic, so a saturating
+    /// diff never goes negative.
+    pub fn push_counter(&mut self, at: SimTime, total: u64) {
+        debug_assert_eq!(self.kind, SeriesKind::Counter);
+        let delta = total.saturating_sub(self.last_total);
+        self.last_total = total;
+        self.push(at, delta as f64);
+    }
+
+    /// Sum of retained point values stamped after `since` (exclusive)
+    /// — for a counter, the total increment over the window
+    /// `(since, latest]`.
+    pub fn sum_since(&self, since: SimTime) -> f64 {
+        self.points
+            .iter()
+            .filter(|(t, _)| *t > since)
+            .map(|(_, v)| v)
+            .sum()
+    }
+}
+
+/// The series of one telemetry scope, with deterministic get-or-create
+/// order (insertion order is preserved, so exports and registry folds
+/// are stable).
+#[derive(Debug, Clone)]
+pub struct SeriesBank {
+    cap: usize,
+    series: Vec<TimeSeries>,
+}
+
+impl SeriesBank {
+    /// An empty bank whose series retain `capacity` points each.
+    pub fn new(capacity: usize) -> Self {
+        SeriesBank {
+            cap: capacity.max(1),
+            series: Vec::new(),
+        }
+    }
+
+    fn get_or_create(&mut self, name: &str, kind: SeriesKind) -> &mut TimeSeries {
+        if let Some(i) = self.series.iter().position(|s| s.name == name) {
+            debug_assert_eq!(self.series[i].kind, kind, "series {name} kind changed");
+            return &mut self.series[i];
+        }
+        self.series.push(TimeSeries::new(name, kind, self.cap));
+        self.series.last_mut().expect("just pushed")
+    }
+
+    /// The counter series `name`, created on first use.
+    pub fn counter(&mut self, name: &str) -> &mut TimeSeries {
+        self.get_or_create(name, SeriesKind::Counter)
+    }
+
+    /// The gauge series `name`, created on first use.
+    pub fn gauge(&mut self, name: &str) -> &mut TimeSeries {
+        self.get_or_create(name, SeriesKind::Gauge)
+    }
+
+    /// Look up a series by name.
+    pub fn get(&self, name: &str) -> Option<&TimeSeries> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// All series, in creation order.
+    pub fn iter(&self) -> impl Iterator<Item = &TimeSeries> {
+        self.series.iter()
+    }
+
+    /// Number of series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    /// True when no series has been created.
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Fold the bank into a metrics snapshot: per series, the running
+    /// total (counters) or last reading (gauges) plus the retained
+    /// sample count, under `series.<name>.*`.
+    pub fn register_into(&self, reg: &mut MetricsRegistry) {
+        for s in &self.series {
+            match s.kind {
+                SeriesKind::Counter => {
+                    reg.counter(&format!("series.{}.total", s.name), s.total());
+                }
+                SeriesKind::Gauge => {
+                    reg.gauge(
+                        &format!("series.{}.last", s.name),
+                        s.last().map(|(_, v)| v).unwrap_or(0.0),
+                    );
+                }
+            }
+            reg.counter(&format!("series.{}.samples", s.name), s.len() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_stores_deltas_of_the_cumulative_total() {
+        let mut s = TimeSeries::new("completed", SeriesKind::Counter, 8);
+        s.push_counter(SimTime::ms(10), 4);
+        s.push_counter(SimTime::ms(20), 9);
+        s.push_counter(SimTime::ms(30), 9);
+        let pts: Vec<_> = s.points().collect();
+        assert_eq!(
+            pts,
+            vec![
+                (SimTime::ms(10), 4.0),
+                (SimTime::ms(20), 5.0),
+                (SimTime::ms(30), 0.0)
+            ]
+        );
+        assert_eq!(s.total(), 9);
+        // window sums over the deltas
+        assert_eq!(s.sum_since(SimTime::ms(10)), 5.0);
+        assert_eq!(s.sum_since(SimTime::ZERO), 9.0);
+    }
+
+    #[test]
+    fn ring_capacity_drops_oldest_and_counts_it() {
+        let mut s = TimeSeries::new("q", SeriesKind::Gauge, 3);
+        for i in 0..5u64 {
+            s.push_gauge(SimTime::ms(i), i as f64);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dropped(), 2);
+        let pts: Vec<_> = s.points().collect();
+        assert_eq!(pts[0], (SimTime::ms(2), 2.0));
+        assert_eq!(s.last(), Some((SimTime::ms(4), 4.0)));
+    }
+
+    #[test]
+    fn bank_is_get_or_create_in_stable_order() {
+        let mut b = SeriesBank::new(16);
+        b.counter(names::COMPLETED).push_counter(SimTime::ms(1), 2);
+        b.gauge(names::QUEUE_PEAK).push_gauge(SimTime::ms(1), 3.0);
+        b.counter(names::COMPLETED).push_counter(SimTime::ms(2), 5);
+        assert_eq!(b.len(), 2);
+        let order: Vec<&str> = b.iter().map(|s| s.name()).collect();
+        assert_eq!(order, vec![names::COMPLETED, names::QUEUE_PEAK]);
+        assert_eq!(b.get(names::COMPLETED).unwrap().len(), 2);
+
+        let mut reg = MetricsRegistry::new();
+        b.register_into(&mut reg);
+        assert_eq!(
+            reg.get("series.completed.total"),
+            Some(&crate::obs::MetricValue::Counter(5))
+        );
+        assert_eq!(
+            reg.get("series.queue_peak.last"),
+            Some(&crate::obs::MetricValue::Gauge(3.0))
+        );
+    }
+}

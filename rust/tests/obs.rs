@@ -222,6 +222,121 @@ fn golden_metrics_snapshot_validates() {
     assert!(json.contains("latency_ps"), "latency histogram missing");
 }
 
+/// Golden burn-rate run: a phase of SLO-attaining traffic followed by
+/// an all-miss regime. The multi-window burn-rate rule must fire while
+/// the *cumulative* SLO attainment still sits above the objective —
+/// the early warning the rule exists for — the alert must land in the
+/// span stream, and every telemetry export must validate.
+#[test]
+fn golden_burn_rate_fires_before_attainment_drops() {
+    use secda::obs::export::{timeseries_json, validate_timeseries_json};
+    use secda::obs::timeseries::names;
+    use secda::obs::{AlertKind, TelemetryConfig};
+
+    let objective = 0.7;
+    let tel = TelemetryConfig {
+        slo_objective: objective,
+        burn_fast: SimTime::ms(50),
+        burn_slow: SimTime::ms(200),
+        burn_factor: 2.0,
+        ..TelemetryConfig::default()
+    };
+    let cfg = CoordinatorConfig {
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    }
+    .with_tracing(1 << 14)
+    .with_telemetry(tel);
+    let g = Arc::new(convnet("alert_net"));
+    let mut coord = Coordinator::new(cfg);
+    let n: usize = g.input_shape.iter().product();
+    let input = Tensor::new(g.input_shape.clone(), vec![3i8; n], g.input_qp);
+    // phase 1: 50 requests with a generous SLO, all attained
+    for _ in 0..25 {
+        for _ in 0..2 {
+            coord
+                .submit_with_slo(g.clone(), input.clone(), SimTime::ms(5_000))
+                .expect("queue sized");
+        }
+        coord.advance(SimTime::ms(20));
+        coord.run_until_idle();
+    }
+    assert_eq!(coord.metrics().slo_attained, 50, "phase 1 must attain");
+    // phase 2: the regime shifts — every request misses its (already
+    // elapsed) deadline
+    for _ in 0..15 {
+        for _ in 0..2 {
+            coord
+                .submit_with_slo(g.clone(), input.clone(), SimTime::ns(1))
+                .expect("fifo never sheds");
+        }
+        coord.advance(SimTime::ms(20));
+        coord.run_until_idle();
+    }
+    let burn = coord
+        .alerts()
+        .iter()
+        .find(|a| a.kind == AlertKind::BurnRate)
+        .cloned()
+        .expect("burn-rate alert must fire");
+    // the firing instant precedes the cumulative attainment gauge
+    // first dipping under the objective
+    let bank = coord.telemetry_series().expect("telemetry configured");
+    let attainment = bank.get(names::SLO_ATTAINMENT).expect("gauge sampled");
+    let t_drop = attainment
+        .points()
+        .find(|(_, v)| *v < objective)
+        .map(|(t, _)| t)
+        .expect("the all-miss regime must eventually sink the average");
+    assert!(
+        burn.at < t_drop,
+        "burn rate fired at {} but attainment only dropped at {t_drop}",
+        burn.at
+    );
+    // the alert is in the span stream, and the merged trace (counter
+    // tracks included) still validates
+    let spans = coord.spans().snapshot();
+    assert!(
+        spans.iter().any(|s| s.stage == Stage::Alert),
+        "alert span missing from the stream"
+    );
+    let check = validate_chrome_trace(&coord.chrome_trace()).expect("merged trace validates");
+    assert!(check.counters > 0, "counter tracks missing");
+    // and the time-series document round-trips its validator
+    let doc = timeseries_json(bank, coord.alerts());
+    let (series, alerts) = validate_timeseries_json(&doc).expect("timeseries validates");
+    assert!(series >= 12, "canonical series missing (got {series})");
+    assert!(alerts >= 1, "fired alerts missing from the export");
+}
+
+/// Golden profile run: folding the span stream of a known graph yields
+/// a well-formed collapsed-stack profile — every line parses, stacks
+/// are rooted at a worker frame, and the graph's layers appear as
+/// gemm/op frames under their request.
+#[test]
+fn golden_collapsed_stack_profile() {
+    use secda::obs::AttributionProfile;
+
+    let (coord, _) = traced_serve(CoordinatorConfig::default());
+    let spans = coord.spans().snapshot();
+    let prof = AttributionProfile::from_spans(&spans);
+    assert!(!prof.is_empty(), "profile folded nothing");
+    assert!(prof.total_ns() > 0);
+    for line in prof.collapsed().lines() {
+        let (path, ns) = line.rsplit_once(' ').expect("`path self_ns` line shape");
+        assert!(
+            path.starts_with("worker:"),
+            "stack not rooted at a worker frame: {path}"
+        );
+        ns.parse::<u64>().expect("integer self-time ns");
+    }
+    let has = |needle: &str| prof.iter().any(|(k, _)| k.contains(needle));
+    assert!(has("batch:golden_net"), "batch frame missing");
+    assert!(has("request:golden_net"), "request frame missing");
+    assert!(has("gemm:golden_net.c1"), "conv GEMM frame missing");
+    assert!(has("op:gap"), "pooling op frame missing");
+}
+
 /// The simulator-level `Trace::to_chrome_json` reuses the same
 /// exporter shape and passes the same validator.
 #[test]

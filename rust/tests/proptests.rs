@@ -603,6 +603,7 @@ fn prop_elastic_planner_emits_only_feasible_compositions() {
             demand,
             slo_carrying: 0,
             slo_missed: 0,
+            trend: 0.0,
         };
         let mut costs = DesignCosts::new(rng.range(1, 2), SimTime::us(150));
         for _ in 0..rng.range(0, 6) {
@@ -906,6 +907,249 @@ fn prop_tracing_is_inert() {
                 }
             }
         }
+    }
+}
+
+/// Property: streaming telemetry is inert — serving ANY stream with
+/// the telemetry engine enabled (series sampling + alert evaluation at
+/// every drain boundary) produces bit-identical outputs to the
+/// untelemetered run, and in the deterministic modeled mode the exact
+/// same timeline, across both exec modes and two scheduling policies.
+/// The telemetry run must actually sample (the property is not
+/// vacuous).
+#[test]
+fn prop_telemetry_is_inert() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{
+        Completion, Coordinator, CoordinatorConfig, DeadlinePolicy, ExecMode, FifoPolicy,
+        SchedulePolicy,
+    };
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::obs::TelemetryConfig;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    fn serve(
+        nets: &[Arc<Graph>; 2],
+        inputs: &[(usize, Tensor, u64)],
+        mode: ExecMode,
+        policy: Arc<dyn SchedulePolicy>,
+        telemetry: bool,
+    ) -> (Vec<Completion>, usize) {
+        let mut cfg = CoordinatorConfig {
+            queue_depth: 64,
+            exec_mode: mode,
+            policy,
+            ..CoordinatorConfig::default()
+        };
+        if telemetry {
+            cfg = cfg.with_telemetry(TelemetryConfig::default());
+        }
+        let mut coord = Coordinator::new(cfg);
+        let mut all: Vec<Completion> = Vec::new();
+        // drain every few submits so the sampler sees several drain
+        // boundaries, and keep every drain's completions
+        for (i, (which, input, gap)) in inputs.iter().enumerate() {
+            coord
+                .submit_with_slo(nets[*which].clone(), input.clone(), SimTime::ms(5_000))
+                .expect("queue sized, SLO generous");
+            coord.advance(SimTime::us(*gap));
+            if i % 3 == 2 {
+                all.extend(coord.run_until_idle());
+            }
+        }
+        all.extend(coord.run_until_idle());
+        let samples = coord
+            .telemetry_series()
+            .map(|bank| bank.iter().map(|s| s.len()).sum())
+            .unwrap_or(0);
+        (all, samples)
+    }
+
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed * 0x7e1);
+        let nets = [
+            Arc::new(random_convnet(&mut rng, "net_a")),
+            Arc::new(random_convnet(&mut rng, "net_b")),
+        ];
+        let inputs: Vec<(usize, Tensor, u64)> = (0..6)
+            .map(|_| {
+                let which = (rng.next() % 2) as usize;
+                let g = &nets[which];
+                let n: usize = g.input_shape.iter().product();
+                let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+                (which, input, 50 + rng.next() % 3000)
+            })
+            .collect();
+        let policies: [Arc<dyn SchedulePolicy>; 2] =
+            [Arc::new(FifoPolicy), Arc::new(DeadlinePolicy)];
+        for policy in &policies {
+            for mode in [ExecMode::Modeled, ExecMode::Threaded] {
+                let run = |telemetry: bool| {
+                    let (mut done, samples) =
+                        serve(&nets, &inputs, mode, policy.clone(), telemetry);
+                    done.sort_by_key(|c| c.id);
+                    (done, samples)
+                };
+                let (plain, plain_samples) = run(false);
+                let (tele, tele_samples) = run(true);
+                assert_eq!(plain_samples, 0, "seed {seed}: plain run sampled");
+                assert!(
+                    tele_samples > 0,
+                    "seed {seed}: telemetry run sampled nothing under {mode}"
+                );
+                assert_eq!(plain.len(), tele.len(), "seed {seed}");
+                for (p, t) in plain.iter().zip(&tele) {
+                    assert_eq!(p.id, t.id, "seed {seed}");
+                    assert_eq!(
+                        p.output.data, t.output.data,
+                        "seed {seed}: request {} bits diverged with telemetry on ({mode})",
+                        p.id
+                    );
+                    if mode == ExecMode::Modeled {
+                        assert_eq!(
+                            (p.worker, p.started, p.finished),
+                            (t.worker, t.started, t.finished),
+                            "seed {seed}: request {} modeled timeline diverged \
+                             with telemetry on ({policy:?})",
+                            p.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: the telemetry series themselves are deterministic across
+/// exec modes — a 1×SA pool (the cross-mode-deterministic
+/// configuration the threaded pinning tests use) served under Modeled
+/// and Threaded produces byte-identical series banks: same series
+/// names in the same order, same kinds, and bit-identical (timestamp,
+/// value) points.
+#[test]
+fn prop_timeseries_deterministic_across_exec_modes() {
+    use std::sync::Arc;
+
+    use secda::coordinator::{Coordinator, CoordinatorConfig, ExecMode};
+    use secda::framework::graph::{Graph, GraphBuilder};
+    use secda::framework::ops::{Activation, Conv2d, GlobalAvgPool, Op, SoftmaxOp};
+    use secda::framework::quant::QParams;
+    use secda::framework::tensor::Tensor;
+    use secda::obs::TelemetryConfig;
+    use secda::sysc::SimTime;
+
+    fn random_convnet(rng: &mut Rng, name: &str) -> Graph {
+        let cin = rng.range(1, 4);
+        let cout = rng.range(8, 24);
+        let hw = rng.range(8, 14);
+        let mut b = GraphBuilder::new(name, vec![1, hw, hw, cin], QParams::new(0.05, 0));
+        let conv = Conv2d {
+            name: format!("{name}.c1"),
+            cout,
+            kh: 3,
+            kw: 3,
+            cin,
+            stride: 1,
+            pad: 1,
+            weights: rng.i8s(cout * 9 * cin),
+            bias: (0..cout).map(|_| (rng.next() % 200) as i32 - 100).collect(),
+            w_scales: vec![0.02; cout],
+            out_qp: QParams::new(0.05, 0),
+            act: Activation::Relu,
+            weights_resident: false,
+        };
+        let c = b.push(Op::Conv(conv), vec![b.input()]);
+        let g = b.push(Op::GlobalAvgPool(GlobalAvgPool { name: "gap".into() }), vec![c]);
+        let s = b.push(Op::Softmax(SoftmaxOp { name: "sm".into() }), vec![g]);
+        b.finish(s)
+    }
+
+    fn series_dump(coord: &Coordinator) -> Vec<(String, String, Vec<(u64, u64)>)> {
+        coord
+            .telemetry_series()
+            .expect("telemetry configured")
+            .iter()
+            .map(|s| {
+                (
+                    s.name().to_string(),
+                    s.kind().name().to_string(),
+                    // compare values by bit pattern: "identical" here
+                    // means bit-identical, not approximately equal
+                    s.points()
+                        .map(|(t, v)| (t.as_ps(), v.to_bits()))
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed * 0x5e1);
+        let g = Arc::new(random_convnet(&mut rng, "net"));
+        let inputs: Vec<(Tensor, u64)> = (0..8)
+            .map(|_| {
+                let n: usize = g.input_shape.iter().product();
+                let input = Tensor::new(g.input_shape.clone(), rng.i8s(n), g.input_qp);
+                (input, 100 + rng.next() % 2000)
+            })
+            .collect();
+        let run = |mode: ExecMode| {
+            let cfg = CoordinatorConfig::sa_pool(1)
+                .with_exec_mode(mode)
+                .with_telemetry(TelemetryConfig::default());
+            let mut coord = Coordinator::new(cfg);
+            // several drains so the series hold multiple points each
+            for chunk in inputs.chunks(2) {
+                for (input, gap) in chunk {
+                    coord
+                        .submit_with_slo(g.clone(), input.clone(), SimTime::ms(5_000))
+                        .expect("queue sized");
+                    coord.advance(SimTime::us(*gap));
+                }
+                coord.run_until_idle();
+            }
+            series_dump(&coord)
+        };
+        let modeled = run(ExecMode::Modeled);
+        let threaded = run(ExecMode::Threaded);
+        assert!(
+            modeled.iter().any(|(_, _, pts)| pts.len() >= 2),
+            "seed {seed}: expected multi-point series"
+        );
+        assert_eq!(
+            modeled, threaded,
+            "seed {seed}: telemetry series diverged across exec modes"
+        );
     }
 }
 
